@@ -1,0 +1,65 @@
+//! Co-location study: the full offline Hera pipeline on the simulated
+//! node — profile the model zoo, classify worker scalability, build the
+//! Algorithm-1 affinity matrix, and schedule a cluster (Algorithm 2),
+//! comparing against the DeepRecSys / Random baselines.
+//!
+//!     cargo run --release --example colocation_study
+
+use hera::baselines::SelectionPolicy;
+use hera::config::{ModelId, NodeConfig, N_MODELS};
+use hera::figures::emu_pair_analytic;
+use hera::hera::{AffinityMatrix, ClusterScheduler};
+use hera::profiler::ProfileStore;
+
+fn main() -> anyhow::Result<()> {
+    println!("profiling the 8-model zoo on the Table-II node...");
+    let store = ProfileStore::build(&NodeConfig::paper_default());
+    let (low, high) = store.partition_by_scalability();
+    println!(
+        "worker scalability: low = {:?}, high = {:?}",
+        low.iter().map(|m| m.name()).collect::<Vec<_>>(),
+        high.iter().map(|m| m.name()).collect::<Vec<_>>()
+    );
+
+    println!("\nco-location affinity (Algorithm 1), low-scalability rows:");
+    let matrix = AffinityMatrix::build(&store);
+    print!("{:10}", "");
+    for b in ModelId::all() {
+        print!("{:>8}", &b.name()[..b.name().len().min(7)]);
+    }
+    println!();
+    for &a in &low {
+        print!("{:10}", a.name());
+        for b in ModelId::all() {
+            if a == b {
+                print!("{:>8}", "-");
+            } else {
+                print!("{:>8.3}", matrix.get(a, b).system);
+            }
+        }
+        println!();
+    }
+
+    println!("\nbest partners + pair EMU:");
+    for &a in &low {
+        let b = matrix.best_partner(a, &high).unwrap();
+        let emu = emu_pair_analytic(&store, a, b);
+        println!(
+            "  {} -> {}  (affinity {:.3}, EMU {:.0}%)",
+            a.name(),
+            b.name(),
+            matrix.get(a, b).system,
+            emu
+        );
+    }
+
+    println!("\ncluster scheduling (Algorithm 2) @ 1000 QPS per model:");
+    let targets = [1000.0; N_MODELS];
+    let hera_plan = ClusterScheduler::new(&store, &matrix).schedule(&targets)?;
+    for policy in [SelectionPolicy::DeepRecSys, SelectionPolicy::Random] {
+        let plan = policy.schedule(&store, &matrix, &targets, 42)?;
+        println!("  {:12} {:3} servers", policy.name(), plan.num_servers());
+    }
+    println!("  {:12} {:3} servers", "Hera", hera_plan.num_servers());
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Fluctuating-load scenario (paper Fig. 14): DLRM(D) + NCF co-located
+//! while query arrival rates ramp, drop at T1 and spike at T2; compares
+//! how Hera's RMU and PARTIES track the changes.
+//!
+//!     cargo run --release --example fluctuating_load
+
+use hera::baselines::PartiesController;
+use hera::config::{ModelId, NodeConfig};
+use hera::hera::HeraRmu;
+use hera::profiler::ProfileStore;
+use hera::server_sim::{Controller, SimulatedTenant, Simulation};
+
+fn main() -> anyhow::Result<()> {
+    let store = ProfileStore::build(&NodeConfig::paper_default());
+    let d = ModelId::from_name("dlrm_d").unwrap();
+    let n = ModelId::from_name("ncf").unwrap();
+    let dur = 60.0;
+
+    for use_parties in [false, true] {
+        let name = if use_parties { "PARTIES" } else { "Hera RMU" };
+        let tenants = [
+            SimulatedTenant {
+                model: d,
+                workers: 8,
+                ways: 5,
+                arrival_qps: store.profile(d).max_load(),
+            },
+            SimulatedTenant {
+                model: n,
+                workers: 8,
+                ways: 6,
+                arrival_qps: store.profile(n).max_load(),
+            },
+        ];
+        let mut sim = Simulation::new(NodeConfig::paper_default(), &tenants, 99);
+        sim.set_monitor_interval(0.5);
+        sim.set_load_trace(vec![
+            (0.0, vec![0.3, 0.3]),
+            (9.0, vec![0.5, 0.4]),
+            (17.0, vec![0.7, 0.5]),
+            (24.0, vec![0.7, 0.2]),  // T1: NCF load drops
+            (42.0, vec![0.1, 0.6]),  // T2: NCF spikes, DLRM(D) collapses
+        ]);
+        let mut hera_rmu;
+        let mut parties;
+        let controller: &mut dyn Controller = if use_parties {
+            parties = PartiesController::new(NodeConfig::paper_default());
+            &mut parties
+        } else {
+            hera_rmu = HeraRmu::new(&store);
+            &mut hera_rmu
+        };
+        sim.run(dur, 0.0, controller);
+
+        let mut violations = 0;
+        let mut windows = 0;
+        let mut worst: f64 = 0.0;
+        for &(_, _, norm) in &sim.latency_timeline {
+            windows += 1;
+            if norm > 1.0 {
+                violations += 1;
+            }
+            worst = worst.max(norm);
+        }
+        println!("=== {name} ===");
+        println!(
+            "  SLA-violating monitor windows: {violations}/{windows} ({:.1}%), worst p95 = {:.2}x SLA",
+            100.0 * violations as f64 / windows as f64,
+            worst
+        );
+        println!("  allocation changes: {}", sim.alloc_timeline.len());
+        // Show the allocation trajectory around the T2 spike.
+        let around_t2: Vec<_> = sim
+            .alloc_timeline
+            .iter()
+            .filter(|(t, _, _, _)| (40.0..50.0).contains(t))
+            .collect();
+        for (t, tenant, w, k) in around_t2.iter().take(8) {
+            let m = if *tenant == 0 { "dlrm_d" } else { "ncf" };
+            println!("    t={t:5.1}s  {m:7} -> {w} workers / {k} ways");
+        }
+    }
+    Ok(())
+}

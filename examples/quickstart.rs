@@ -1,0 +1,40 @@
+//! Quickstart: load one AOT-compiled recommendation model and run a few
+//! inferences through the PJRT runtime — the smallest possible tour of
+//! the L1/L2 (Pallas/JAX, build time) -> L3 (rust, serving time) stack.
+//!
+//! Run `make artifacts` first, then:
+//!     cargo run --release --example quickstart
+
+use hera::runtime::{manifest::default_artifact_dir, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    println!("loading NCF from {} ...", dir.display());
+    let engine = Engine::load(&dir, Some(&["ncf"]), Some(&[1, 16, 64]))?;
+
+    // Verify the end-to-end numerics against the python-recorded golden.
+    let err = engine.verify_golden("ncf")?;
+    println!("golden verified (max abs err {err:.2e})");
+
+    // Rank a batch of 16 candidate items for one user.
+    let (dense, indices) = engine.example_inputs("ncf", 16);
+    let out = engine.infer("ncf", 16, &dense, &indices)?;
+    println!("bucket used: {}  exec time: {:.3} ms", out.bucket, out.exec_s * 1e3);
+    let mut ranked: Vec<(usize, f32)> =
+        out.probs.iter().copied().enumerate().collect();
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("top-5 recommended items (index, CTR):");
+    for (idx, p) in ranked.iter().take(5) {
+        println!("  item {idx:2}  p(click) = {p:.4}");
+    }
+
+    // Odd batch sizes pad into the nearest bucket transparently.
+    let (dense5, idx5) = engine.example_inputs("ncf", 5);
+    let out5 = engine.infer("ncf", 5, &dense5, &idx5)?;
+    println!(
+        "batch 5 -> bucket {} ({} probabilities returned)",
+        out5.bucket,
+        out5.probs.len()
+    );
+    Ok(())
+}

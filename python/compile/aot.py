@@ -1,0 +1,149 @@
+"""AOT compile path: lower every model x batch-bucket to HLO text.
+
+Run once by `make artifacts`; python never runs at serving time.  Emits:
+
+    artifacts/<model>_b<batch>.hlo.txt   HLO *text* (NOT .serialize() -- the
+                                         image's xla_extension 0.5.1 rejects
+                                         jax>=0.5 64-bit-id protos; the text
+                                         parser reassigns ids, see
+                                         /opt/xla-example/README.md)
+    artifacts/golden/<model>.{dense,indices,output}.bin
+                                         raw little-endian tensors for the
+                                         rust-side numeric round-trip test
+    artifacts/manifest.json              parameter ABI (seed/shape/scale per
+                                         tensor), input layouts, buckets,
+                                         golden shapes -- everything the rust
+                                         runtime needs to regenerate weights
+                                         and drive the executables.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import params as pinit
+
+DEFAULT_BUCKETS = (1, 16, 64, 256)
+GOLDEN_BATCH = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg: M.ModelConfig, batch: int) -> str:
+    """Lower one model at one batch bucket to HLO text."""
+    specs = M.param_specs(cfg)
+    param_structs = [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in specs]
+    dense_s = jax.ShapeDtypeStruct((batch, M.DENSE_DIM), jnp.float32)
+    idx_s = jax.ShapeDtypeStruct((batch, cfg.total_lookups), jnp.int32)
+
+    def fn(plist, dense, idx):
+        return M.forward(cfg, plist, dense, idx)
+
+    # keep_unused=True: NCF/DIN/DIEN/WnD have no bottom MLP so `dense` would
+    # otherwise be DCE'd out of the entry signature, breaking the uniform
+    # (params..., dense, indices) ABI the rust runtime relies on.
+    lowered = jax.jit(fn, keep_unused=True).lower(param_structs, dense_s, idx_s)
+    return to_hlo_text(lowered)
+
+
+def write_golden(cfg: M.ModelConfig, out_dir: str) -> dict:
+    """Run the model in python and dump input/output binaries for rust."""
+    golden_dir = os.path.join(out_dir, "golden")
+    os.makedirs(golden_dir, exist_ok=True)
+    dense, idx = M.example_inputs(cfg, GOLDEN_BATCH)
+    out = M.run(cfg, GOLDEN_BATCH)
+    paths = {}
+    for tag, arr in (("dense", dense), ("indices", idx), ("output", out)):
+        rel = os.path.join("golden", f"{cfg.name}.{tag}.bin")
+        arr.tofile(os.path.join(out_dir, rel))
+        paths[tag] = rel
+    return {
+        "batch": GOLDEN_BATCH,
+        "files": paths,
+        "output_shape": list(out.shape),
+    }
+
+
+def build_manifest(buckets: tuple[int, ...]) -> dict:
+    manifest: dict = {
+        "version": 1,
+        "rows_per_table": M.ROWS_PER_TABLE,
+        "dense_dim": M.DENSE_DIM,
+        "buckets": list(buckets),
+        "models": {},
+    }
+    for name, cfg in M.MODELS.items():
+        manifest["models"][name] = {
+            "domain": cfg.domain,
+            "sla_ms": cfg.sla_ms,
+            "table_gb": cfg.table_gb,
+            "fc_mb": cfg.fc_mb,
+            "n_tables": cfg.n_tables,
+            "dim": cfg.dim,
+            "lookups": cfg.lookups,
+            "pooling": cfg.pooling,
+            "seq_len": cfg.seq_len,
+            "total_lookups": cfg.total_lookups,
+            "bottom_mlp": list(cfg.bottom_mlp),
+            "top_mlp": list(cfg.top_mlp),
+            "params": [
+                {"name": s.name, "shape": list(s.shape), "seed": s.seed,
+                 "scale": s.scale}
+                for s in M.param_specs(cfg)
+            ],
+            "artifacts": {str(b): f"{name}_b{b}.hlo.txt" for b in buckets},
+        }
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--models", default="all",
+                    help="comma-separated model names (default: all)")
+    ap.add_argument("--buckets", default=",".join(map(str, DEFAULT_BUCKETS)))
+    args = ap.parse_args()
+
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    names = list(M.MODELS) if args.models == "all" else args.models.split(",")
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = build_manifest(buckets)
+    total = 0
+    for name in names:
+        cfg = M.MODELS[name]
+        for b in buckets:
+            t0 = time.time()
+            text = lower_model(cfg, b)
+            path = os.path.join(args.out, f"{name}_b{b}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            total += len(text)
+            print(f"  {name:8s} b={b:<4d} {len(text)/1e3:8.1f} KB "
+                  f"({time.time() - t0:.1f}s)")
+        manifest["models"][name]["golden"] = write_golden(cfg, args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(names)} models x {len(buckets)} buckets "
+          f"({total / 1e6:.1f} MB HLO text) -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO artifacts)."""
+
+from .sls import sls
+from .interaction import dot_interaction
+from . import ref
+
+__all__ = ["sls", "dot_interaction", "ref"]

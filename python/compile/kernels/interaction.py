@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: dot-product feature interaction (batched Gram matrix).
+
+The DLRM feature-interaction stage computes all pairwise dot products
+between the bottom-MLP output and the pooled embedding vectors — a batched
+GEMM (paper §II-A, "BatchGEMM" in Fig. 3).
+
+TPU mapping: each grid step loads one sample's (T, D) feature stack into
+VMEM and issues a single (T,D)x(D,T) MXU matmul, accumulating in f32.
+T+1 <= 44 and D <= 256 for every Table-I model, so the whole stack plus
+the (T,T) product fits comfortably in VMEM (worst case DIEN:
+44*32*4B + 44*44*4B ≈ 13 KB per step).
+
+The strict-lower-triangle extraction stays at L2 (model.take_tril): it is
+a cheap static gather that XLA fuses, and keeping the kernel output
+rectangular keeps the MXU tiling dense.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _interaction_kernel(x_ref, o_ref):
+    """One grid step: Gram matrix of one sample's feature stack."""
+    x = x_ref[0, :, :].astype(jnp.float32)  # (T, D)
+    z = jax.lax.dot_general(
+        x,
+        x,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (T, T)
+    o_ref[0, :, :] = z.astype(o_ref.dtype)
+
+
+@jax.jit
+def dot_interaction(x: jnp.ndarray) -> jnp.ndarray:
+    """Pallas batched self-interaction: z[b] = x[b] @ x[b]^T.
+
+    Args:
+      x: (batch, vectors, dim) stacked feature vectors (bottom-MLP output
+         plus one pooled embedding per table).
+
+    Returns:
+      (batch, vectors, vectors) Gram matrices, in the input dtype.
+    """
+    batch, t, d = x.shape
+    return pl.pallas_call(
+        _interaction_kernel,
+        grid=(batch,),
+        in_specs=[pl.BlockSpec((1, t, d), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, t, t), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, t, t), x.dtype),
+        interpret=True,
+    )(x)

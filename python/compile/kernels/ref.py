@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references the L1 kernels are validated against
+(python/tests/test_kernels.py).  They intentionally use only standard jnp
+gather / matmul primitives so any discrepancy points at the kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sls_ref(table: jnp.ndarray, indices: jnp.ndarray, mode: str = "sum") -> jnp.ndarray:
+    """SparseLengthsSum reference: gather rows of `table` and pool.
+
+    Args:
+      table:   (rows, dim) embedding table.
+      indices: (batch, lookups) int32 row ids.
+      mode:    "sum" or "mean" pooling over the lookup axis.
+
+    Returns:
+      (batch, dim) pooled embeddings, in table dtype.
+    """
+    rows = jnp.take(table, indices, axis=0)  # (batch, lookups, dim)
+    out = rows.sum(axis=1)
+    if mode == "mean":
+        out = out / jnp.asarray(indices.shape[1], dtype=table.dtype)
+    return out.astype(table.dtype)
+
+
+def dot_interaction_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Batched self-interaction reference: z[b] = x[b] @ x[b]^T.
+
+    Args:
+      x: (batch, vectors, dim) stacked feature vectors.
+
+    Returns:
+      (batch, vectors, vectors) full Gram matrix per sample (the model layer
+      extracts the strict lower triangle, see model.take_tril).
+    """
+    return jnp.einsum("btd,bsd->bts", x, x)
+
+
+def attention_pool_ref(history: jnp.ndarray, query: jnp.ndarray) -> jnp.ndarray:
+    """Dot-product attention pooling reference (DIN-style).
+
+    Args:
+      history: (batch, seq, dim) behaviour-sequence embeddings.
+      query:   (batch, dim) target-item embedding.
+
+    Returns:
+      (batch, dim) attention-weighted sum of the history.
+    """
+    scores = jnp.einsum("bsd,bd->bs", history, query)
+    scores = scores / jnp.sqrt(jnp.asarray(history.shape[-1], history.dtype))
+    weights = jnp.exp(scores - scores.max(axis=1, keepdims=True))
+    weights = weights / weights.sum(axis=1, keepdims=True)
+    return jnp.einsum("bs,bsd->bd", weights, history)

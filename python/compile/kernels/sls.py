@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: SparseLengthsSum (embedding gather + pooling).
+
+This is the paper's compute hot-spot (Fig. 3: DLRM(A,B,D) spend the
+majority of their inference time in Caffe2's SparseLengthsSum operator).
+
+TPU mapping of the paper's CPU insight (DESIGN.md §Hardware-Adaptation):
+the CPU implementation is bottlenecked on irregular DRAM reads that the
+LLC cannot capture; the TPU analogue keeps the *output* accumulator tile
+resident in VMEM while streaming gathered rows HBM -> VMEM one dynamic
+slice at a time.  The grid iterates over the batch (each grid step owns
+one pooled output row); the embedding dimension is a single VMEM-resident
+tile (dim <= 256 for every Table-I model, well under the 128-lane x
+8-sublane VREG budget per row).
+
+VMEM footprint per grid step (see DESIGN.md §Perf):
+    table block:    streamed, 1 row (dim * 4B) live at a time
+    indices block:  lookups * 4B
+    output block:   dim * 4B
+so the kernel is trivially double-bufferable on real hardware.
+
+interpret=True is REQUIRED on this image: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute; interpret mode lowers to
+plain HLO (dynamic-slice + while) that round-trips through the rust
+loader.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sls_kernel(idx_ref, table_ref, o_ref, *, lookups: int, inv_count: float):
+    """One grid step: pool `lookups` gathered rows into one output row."""
+    dim = o_ref.shape[-1]
+
+    def body(j, acc):
+        row_id = idx_ref[0, j]
+        # Dynamic one-row slice of the table: HBM -> VMEM stream.
+        row = pl.load(table_ref, (pl.dslice(row_id, 1), slice(None)))
+        return acc + row.reshape((dim,)).astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(0, lookups, body, jnp.zeros((dim,), jnp.float32))
+    if inv_count != 1.0:
+        acc = acc * inv_count
+    o_ref[0, :] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def sls(table: jnp.ndarray, indices: jnp.ndarray, mode: str = "sum") -> jnp.ndarray:
+    """Pallas SparseLengthsSum: gather rows of `table` by `indices` and pool.
+
+    Args:
+      table:   (rows, dim) embedding table (float dtype).
+      indices: (batch, lookups) int32 row ids in [0, rows).
+      mode:    "sum" or "mean" pooling.
+
+    Returns:
+      (batch, dim) pooled embeddings in the table dtype.
+    """
+    if mode not in ("sum", "mean"):
+        raise ValueError(f"unsupported pooling mode {mode!r}")
+    batch, lookups = indices.shape
+    rows, dim = table.shape
+    inv_count = 1.0 / lookups if mode == "mean" else 1.0
+
+    kernel = functools.partial(_sls_kernel, lookups=lookups, inv_count=inv_count)
+    return pl.pallas_call(
+        kernel,
+        grid=(batch,),
+        in_specs=[
+            # One sample's index list per grid step.
+            pl.BlockSpec((1, lookups), lambda b: (b, 0)),
+            # Whole table visible to every step; rows are streamed by
+            # dynamic slice inside the kernel rather than pre-blocked
+            # (the access pattern is data-dependent).
+            pl.BlockSpec((rows, dim), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dim), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, dim), table.dtype),
+        interpret=True,
+    )(indices, table)

@@ -1,0 +1,344 @@
+"""L2: JAX forward passes for the eight Table-I recommendation models.
+
+Every model is expressed over the same generic skeleton (Fig. 1 of the
+paper): optional bottom MLP over dense features, per-table embedding
+pooling through the L1 Pallas SLS kernel, a pooling/interaction stage
+(sum+dot-product for the DLRMs, concat for NCF/WnD, attention for DIN,
+attention+GRU for DIEN), and a top/predict MLP producing one CTR logit.
+
+Embedding tables are architecturally faithful but capacity-scaled
+(ROWS_PER_TABLE rows instead of millions): the serving artifacts prove the
+stack composes and calibrate per-batch compute time, while the L3 node
+model accounts for full Table-I byte counts (DESIGN.md substitution log).
+
+Parameters are *arguments* of the jitted forward (not baked constants), in
+the deterministic order produced by `param_specs`; rust regenerates them
+from the manifest via the scheme in params.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import params as pinit
+from .kernels import sls, dot_interaction
+from .kernels.ref import attention_pool_ref
+
+# Rows per embedding table in the *serving artifacts* (capacity-scaled).
+ROWS_PER_TABLE = 2048
+# Dense (continuous) feature count, Criteo-style.
+DENSE_DIM = 13
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one Table-I model (paper-scale numbers included).
+
+    Attributes mirror Table I; `table_gb`, `size_mb_fc` and `sla_ms` feed
+    the L3 node model, the rest defines the servable JAX graph.
+    """
+
+    name: str
+    domain: str
+    bottom_mlp: tuple[int, ...]          # Dense-FC widths ("" -> empty)
+    top_mlp: tuple[int, ...]             # Predict-FC widths (last is logits dim)
+    n_tables: int
+    lookups: int                         # lookups per table (Table I "Lookup")
+    dim: int                             # embedding dimension
+    pooling: str                         # sum | concat | attention | attention_rnn
+    sla_ms: float
+    table_gb: float                      # paper-scale total embedding bytes
+    fc_mb: float                         # paper-scale FC bytes
+    seq_len: int = 0                     # behaviour-sequence length (DIN/DIEN)
+    wide: bool = False                   # WnD wide (linear) path
+
+    @property
+    def seq_tables(self) -> int:
+        """Number of leading tables treated as the behaviour sequence."""
+        return 1 if self.pooling in ("attention", "attention_rnn") else 0
+
+    @property
+    def lookups_per_table(self) -> tuple[int, ...]:
+        """Index-tensor layout: lookups for each table, in order."""
+        out = []
+        for t in range(self.n_tables):
+            if t < self.seq_tables:
+                out.append(self.seq_len)
+            else:
+                out.append(self.lookups)
+        return tuple(out)
+
+    @property
+    def total_lookups(self) -> int:
+        return sum(self.lookups_per_table)
+
+
+def _cfg(**kw) -> ModelConfig:
+    return ModelConfig(**kw)
+
+
+# The eight Table-I models.  bottom/top widths, table counts, lookups,
+# dims, pooling and SLA are verbatim from the paper; seq_len for DIN/DIEN
+# picks a representative behaviour-history length.
+MODELS: dict[str, ModelConfig] = {
+    "dlrm_a": _cfg(name="dlrm_a", domain="social", bottom_mlp=(128, 64, 64),
+                   top_mlp=(256, 64, 1), n_tables=8, lookups=80, dim=64,
+                   pooling="sum", sla_ms=100.0, table_gb=2.0, fc_mb=0.2),
+    "dlrm_b": _cfg(name="dlrm_b", domain="social", bottom_mlp=(256, 128, 64),
+                   top_mlp=(128, 64, 1), n_tables=40, lookups=120, dim=64,
+                   pooling="sum", sla_ms=400.0, table_gb=25.0, fc_mb=0.5),
+    "dlrm_c": _cfg(name="dlrm_c", domain="social",
+                   bottom_mlp=(2560, 1024, 256, 32), top_mlp=(512, 256, 1),
+                   n_tables=10, lookups=20, dim=32, pooling="sum",
+                   sla_ms=100.0, table_gb=2.5, fc_mb=12.0),
+    "dlrm_d": _cfg(name="dlrm_d", domain="social", bottom_mlp=(256, 256, 256),
+                   top_mlp=(256, 64, 1), n_tables=8, lookups=80, dim=256,
+                   pooling="sum", sla_ms=100.0, table_gb=8.0, fc_mb=0.2),
+    "ncf": _cfg(name="ncf", domain="movies", bottom_mlp=(),
+                top_mlp=(256, 256, 128, 1), n_tables=4, lookups=1, dim=64,
+                pooling="concat", sla_ms=5.0, table_gb=0.1, fc_mb=0.6),
+    "dien": _cfg(name="dien", domain="ecommerce", bottom_mlp=(),
+                 top_mlp=(200, 80, 1), n_tables=43, lookups=1, dim=32,
+                 pooling="attention_rnn", sla_ms=35.0, table_gb=3.9,
+                 fc_mb=0.2, seq_len=16),
+    "din": _cfg(name="din", domain="ecommerce", bottom_mlp=(),
+                top_mlp=(200, 80, 1), n_tables=4, lookups=3, dim=32,
+                pooling="attention", sla_ms=100.0, table_gb=2.7, fc_mb=0.2,
+                seq_len=12),
+    "wnd": _cfg(name="wnd", domain="playstore", bottom_mlp=(),
+                top_mlp=(1024, 512, 256, 1), n_tables=27, lookups=1, dim=32,
+                pooling="concat", sla_ms=25.0, table_gb=3.5, fc_mb=8.0,
+                wide=True),
+}
+
+MODEL_NAMES: tuple[str, ...] = tuple(MODELS)
+
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """One parameter tensor: deterministic seed + shape + init scale."""
+
+    name: str
+    shape: tuple[int, ...]
+    seed: int
+    scale: float
+
+
+def _fnv1a(s: str) -> int:
+    h = 0xCBF29CE484222325
+    for ch in s.encode():
+        h = ((h ^ ch) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def _mlp_specs(model: str, prefix: str, in_dim: int,
+               widths: tuple[int, ...]) -> list[ParamSpec]:
+    specs = []
+    d = in_dim
+    for i, w in enumerate(widths):
+        scale = float(np.sqrt(2.0 / d))
+        specs.append(ParamSpec(f"{prefix}.w{i}", (d, w),
+                               _fnv1a(f"{model}/{prefix}/w{i}") & 0x7FFFFFFF, scale))
+        specs.append(ParamSpec(f"{prefix}.b{i}", (w,),
+                               _fnv1a(f"{model}/{prefix}/b{i}") & 0x7FFFFFFF, 0.01))
+        d = w
+    return specs
+
+
+def _interaction_width(cfg: ModelConfig) -> int:
+    """Feature width entering the top MLP."""
+    if cfg.pooling == "sum":
+        t = cfg.n_tables + (1 if cfg.bottom_mlp else 0)
+        return t * (t - 1) // 2 + (cfg.dim if cfg.bottom_mlp else 0)
+    if cfg.pooling == "concat":
+        return cfg.n_tables * cfg.dim + (cfg.bottom_mlp[-1] if cfg.bottom_mlp else 0)
+    if cfg.pooling == "attention":
+        # [attended history, query item, other context tables]
+        return cfg.dim * (1 + (cfg.n_tables - 1))
+    if cfg.pooling == "attention_rnn":
+        # [GRU-attended history, other tables]
+        return cfg.dim * (1 + (cfg.n_tables - 1))
+    raise ValueError(cfg.pooling)
+
+
+def param_specs(cfg: ModelConfig) -> list[ParamSpec]:
+    """Ordered parameter list for `forward` (order is the ABI with rust)."""
+    specs: list[ParamSpec] = []
+    # Embedding tables first, in table order.
+    emb_scale = float(1.0 / np.sqrt(cfg.dim))
+    for t in range(cfg.n_tables):
+        specs.append(ParamSpec(f"emb.{t}", (ROWS_PER_TABLE, cfg.dim),
+                               _fnv1a(f"{cfg.name}/emb/{t}") & 0x7FFFFFFF,
+                               emb_scale))
+    if cfg.bottom_mlp:
+        specs += _mlp_specs(cfg.name, "bot", DENSE_DIM, cfg.bottom_mlp)
+    if cfg.pooling == "attention_rnn":
+        # Minimal GRU cell: update/reset/candidate kernels over [h, x].
+        for gate in ("z", "r", "h"):
+            specs.append(ParamSpec(
+                f"gru.w{gate}", (2 * cfg.dim, cfg.dim),
+                _fnv1a(f"{cfg.name}/gru/{gate}") & 0x7FFFFFFF,
+                float(np.sqrt(1.0 / (2 * cfg.dim)))))
+    if cfg.wide:
+        specs.append(ParamSpec("wide.w", (cfg.n_tables, 1),
+                               _fnv1a(f"{cfg.name}/wide/w") & 0x7FFFFFFF, 0.1))
+    specs += _mlp_specs(cfg.name, "top", _interaction_width(cfg), cfg.top_mlp)
+    return specs
+
+
+def materialize_params(cfg: ModelConfig) -> list[np.ndarray]:
+    """Deterministic parameter tensors (matches rust runtime/params.rs)."""
+    return [pinit.fill_uniform(s.seed, s.shape, s.scale) for s in param_specs(cfg)]
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def take_tril(z: jnp.ndarray) -> jnp.ndarray:
+    """Strict lower triangle of a (batch, T, T) Gram stack -> (batch, T(T-1)/2).
+
+    Implemented with static slices + concat (row-major tril order, matching
+    np.tril_indices) instead of a gather: the `jnp.take` lowering produces a
+    gather that xla_extension 0.5.1 (the rust runtime's XLA) miscompiles for
+    some shapes, while static slicing round-trips exactly.
+    """
+    t = z.shape[-1]
+    parts = [z[:, i, :i] for i in range(1, t)]
+    return jnp.concatenate(parts, axis=1)
+
+
+def _mlp(x: jnp.ndarray, ps: list[jnp.ndarray], n_layers: int,
+         final_relu: bool = False) -> jnp.ndarray:
+    """Apply n_layers of (w, b) pairs consumed from the front of `ps`."""
+    for i in range(n_layers):
+        w, b = ps[2 * i], ps[2 * i + 1]
+        x = x @ w + b
+        if i + 1 < n_layers or final_relu:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _gru_attention(seq: jnp.ndarray, query: jnp.ndarray,
+                   wz: jnp.ndarray, wr: jnp.ndarray,
+                   wh: jnp.ndarray) -> jnp.ndarray:
+    """DIEN-style interest evolution: GRU over the sequence, then attention."""
+
+    def cell(h, x):
+        hx = jnp.concatenate([h, x], axis=-1)
+        z = jax.nn.sigmoid(hx @ wz)
+        r = jax.nn.sigmoid(hx @ wr)
+        cand = jnp.tanh(jnp.concatenate([r * h, x], axis=-1) @ wh)
+        h_new = (1.0 - z) * h + z * cand
+        return h_new, h_new
+
+    batch, _, dim = seq.shape
+    h0 = jnp.zeros((batch, dim), seq.dtype)
+    _, states = jax.lax.scan(cell, h0, jnp.swapaxes(seq, 0, 1))
+    states = jnp.swapaxes(states, 0, 1)  # (batch, seq, dim)
+    return attention_pool_ref(states, query)
+
+
+def forward(cfg: ModelConfig, param_list: list[jnp.ndarray],
+            dense: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+    """CTR probability for a batch of requests.
+
+    Args:
+      cfg:        model architecture.
+      param_list: tensors in `param_specs(cfg)` order.
+      dense:      (batch, DENSE_DIM) continuous features.
+      indices:    (batch, cfg.total_lookups) int32, laid out per
+                  `cfg.lookups_per_table`.
+
+    Returns:
+      (batch, 1) click probability.
+    """
+    ps = list(param_list)
+    tables = [ps.pop(0) for _ in range(cfg.n_tables)]
+
+    # --- per-table embedding pooling (L1 Pallas SLS kernel) ---
+    pooled: list[jnp.ndarray] = []
+    seq_emb = None
+    off = 0
+    for t, lk in enumerate(cfg.lookups_per_table):
+        idx_t = jax.lax.dynamic_slice_in_dim(indices, off, lk, axis=1)
+        off += lk
+        if t < cfg.seq_tables:
+            # Behaviour sequence: keep per-position embeddings (lookups=1
+            # per position, gathered as one SLS call per position would be
+            # wasteful; a single gather reshaped keeps the kernel hot).
+            rows = sls(tables[t], idx_t.reshape(-1, 1))  # (batch*seq, dim)
+            seq_emb = rows.reshape(dense.shape[0], lk, cfg.dim)
+        else:
+            pooled.append(sls(tables[t], idx_t))
+
+    # --- bottom MLP ---
+    bot = None
+    if cfg.bottom_mlp:
+        n = len(cfg.bottom_mlp)
+        bot = _mlp(dense, ps[: 2 * n], n, final_relu=True)
+        ps = ps[2 * n:]
+
+    # --- pooling / feature interaction ---
+    if cfg.pooling == "sum":
+        stack = pooled + ([bot] if bot is not None else [])
+        x = jnp.stack(stack, axis=1)               # (batch, T, dim)
+        gram = dot_interaction(x)                  # L1 Pallas kernel
+        feats = take_tril(gram)
+        if bot is not None:
+            feats = jnp.concatenate([bot, feats], axis=1)
+    elif cfg.pooling == "concat":
+        parts = pooled + ([bot] if bot is not None else [])
+        feats = jnp.concatenate(parts, axis=1)
+    elif cfg.pooling == "attention":
+        query = pooled[0]                          # first ctx table = target item
+        att = attention_pool_ref(seq_emb, query)
+        feats = jnp.concatenate([att] + pooled, axis=1)
+    elif cfg.pooling == "attention_rnn":
+        wz, wr, wh = ps[0], ps[1], ps[2]
+        ps = ps[3:]
+        query = pooled[0]
+        att = _gru_attention(seq_emb, query, wz, wr, wh)
+        feats = jnp.concatenate([att] + pooled, axis=1)
+    else:  # pragma: no cover
+        raise ValueError(cfg.pooling)
+
+    # --- wide path (WnD) ---
+    wide_logit = None
+    if cfg.wide:
+        ww = ps.pop(0)
+        # Linear model over per-table pooled-embedding means (a cheap,
+        # faithful stand-in for the one-hot cross-product wide features).
+        means = jnp.stack([p.mean(axis=1) for p in pooled], axis=1)  # (b, T)
+        wide_logit = means @ ww  # (batch, 1)
+
+    # --- top MLP ---
+    n_top = len(cfg.top_mlp)
+    logit = _mlp(feats, ps[: 2 * n_top], n_top)
+    if wide_logit is not None:
+        logit = logit + wide_logit
+    return jax.nn.sigmoid(logit)
+
+
+def example_inputs(cfg: ModelConfig, batch: int,
+                   seed: int = 7) -> tuple[np.ndarray, np.ndarray]:
+    """Deterministic example (dense, indices) pair for lowering & goldens."""
+    dense = pinit.fill_uniform(seed * 1000003 + 1, (batch, DENSE_DIM), 1.0)
+    idx = pinit.fill_indices(seed * 1000003 + 2, (batch, cfg.total_lookups),
+                             ROWS_PER_TABLE)
+    return dense, idx
+
+
+def run(cfg: ModelConfig, batch: int) -> np.ndarray:
+    """Convenience: materialize params + inputs and run the forward."""
+    plist = [jnp.asarray(p) for p in materialize_params(cfg)]
+    dense, idx = example_inputs(cfg, batch)
+    return np.asarray(forward(cfg, plist, jnp.asarray(dense), jnp.asarray(idx)))

@@ -1,0 +1,57 @@
+"""Deterministic, language-portable parameter initialization.
+
+The rust runtime (rust/src/runtime/params.rs) regenerates every model
+parameter from the (seed, shape, scale) triples recorded in
+artifacts/manifest.json, using the *same* SplitMix64-based counter scheme
+implemented here.  This keeps multi-megabyte weight blobs out of the
+artifact directory entirely: python and rust independently materialize
+bit-identical f32 tensors, so the golden input/output pair produced by
+aot.py verifies the whole AOT chain numerically.
+
+Scheme (must match rust/src/runtime/params.rs exactly):
+
+    h      = splitmix64(seed * GOLDEN + element_index)      (u64, wrapping)
+    mant   = h >> 40                                        (top 24 bits)
+    value  = (mant / 2^24) * 2*scale - scale                (f32 in [-scale, scale))
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_M64 = np.uint64(0xFFFFFFFFFFFFFFFF)
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized SplitMix64 finalizer over a uint64 array."""
+    with np.errstate(over="ignore"):
+        z = (x + _GOLDEN) & _M64
+        z = ((z ^ (z >> np.uint64(30))) * _MIX1) & _M64
+        z = ((z ^ (z >> np.uint64(27))) * _MIX2) & _M64
+        return z ^ (z >> np.uint64(31))
+
+
+def fill_uniform(seed: int, shape: tuple[int, ...], scale: float) -> np.ndarray:
+    """Deterministic f32 tensor with values uniform in [-scale, scale)."""
+    n = int(np.prod(shape)) if shape else 1
+    idx = np.arange(n, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        base = (np.uint64(seed) * _GOLDEN) & _M64
+        h = splitmix64((base + idx) & _M64)
+    mant = (h >> np.uint64(40)).astype(np.float64)  # 24 bits
+    vals = (mant / float(1 << 24)) * (2.0 * scale) - scale
+    return vals.astype(np.float32).reshape(shape)
+
+
+def fill_indices(seed: int, shape: tuple[int, ...], rows: int) -> np.ndarray:
+    """Deterministic int32 index tensor with values uniform in [0, rows)."""
+    n = int(np.prod(shape)) if shape else 1
+    idx = np.arange(n, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        base = (np.uint64(seed) * _GOLDEN) & _M64
+        h = splitmix64((base + idx) & _M64)
+    vals = (h % np.uint64(rows)).astype(np.int32)
+    return vals.reshape(shape)

@@ -1,0 +1,77 @@
+"""AOT path checks: HLO text validity, manifest completeness, goldens."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLowering:
+    def test_hlo_text_structure(self):
+        text = aot.lower_model(M.MODELS["ncf"], batch=2)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # params (12) + dense + indices = 14 entry parameters (0..13); nested
+        # computations re-number from 0, so check the max ordinal instead.
+        assert "parameter(13)" in text
+        assert "parameter(14)" not in text
+
+    def test_hlo_has_single_tuple_root(self):
+        text = aot.lower_model(M.MODELS["din"], batch=1)
+        # return_tuple=True wraps the single output; rust uses to_tuple1().
+        assert "ROOT" in text and "tuple(" in text
+
+    def test_batch_appears_in_shapes(self):
+        text = aot.lower_model(M.MODELS["ncf"], batch=5)
+        assert "f32[5,13]" in text        # dense input
+        assert "s32[5,4]" in text         # indices input
+        assert "f32[5,1]" in text         # output
+
+    def test_manifest_covers_all_models(self):
+        man = aot.build_manifest((1, 16))
+        assert set(man["models"]) == set(M.MODELS)
+        for name, entry in man["models"].items():
+            cfg = M.MODELS[name]
+            assert entry["total_lookups"] == cfg.total_lookups
+            assert len(entry["params"]) == len(M.param_specs(cfg))
+            assert set(entry["artifacts"]) == {"1", "16"}
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+class TestArtifactsOnDisk:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_every_artifact_exists(self, manifest):
+        for entry in manifest["models"].values():
+            for rel in entry["artifacts"].values():
+                assert os.path.exists(os.path.join(ART, rel)), rel
+
+    def test_goldens_roundtrip(self, manifest):
+        """Re-running the model in python must reproduce the stored golden."""
+        for name, entry in manifest["models"].items():
+            g = entry["golden"]
+            out_path = os.path.join(ART, g["files"]["output"])
+            stored = np.fromfile(out_path, np.float32).reshape(g["output_shape"])
+            fresh = M.run(M.MODELS[name], g["batch"])
+            np.testing.assert_allclose(fresh, stored, rtol=1e-5, atol=1e-6)
+
+    def test_golden_inputs_match_example_inputs(self, manifest):
+        for name, entry in manifest["models"].items():
+            cfg = M.MODELS[name]
+            g = entry["golden"]
+            dense, idx = M.example_inputs(cfg, g["batch"])
+            d2 = np.fromfile(os.path.join(ART, g["files"]["dense"]),
+                             np.float32).reshape(dense.shape)
+            i2 = np.fromfile(os.path.join(ART, g["files"]["indices"]),
+                             np.int32).reshape(idx.shape)
+            np.testing.assert_array_equal(dense, d2)
+            np.testing.assert_array_equal(idx, i2)

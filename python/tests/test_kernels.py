@@ -1,0 +1,174 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; every test asserts allclose against
+kernels.ref.  This is the core build-time correctness signal for the HLO
+artifacts (the same kernel instances are lowered into them).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import sls, dot_interaction, ref
+from compile import params as pinit
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+def _table(rows, dim, dtype, seed=1):
+    return jnp.asarray(pinit.fill_uniform(seed, (rows, dim), 1.0), dtype)
+
+
+def _indices(batch, lookups, rows, seed=2):
+    return jnp.asarray(pinit.fill_indices(seed, (batch, lookups), rows))
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == BF16 else dict(rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- SLS ----
+
+class TestSls:
+    def test_basic_sum(self):
+        t, ix = _table(64, 16, F32), _indices(4, 5, 64)
+        np.testing.assert_allclose(sls(t, ix), ref.sls_ref(t, ix), rtol=1e-5)
+
+    def test_basic_mean(self):
+        t, ix = _table(64, 16, F32), _indices(4, 5, 64)
+        np.testing.assert_allclose(
+            sls(t, ix, mode="mean"), ref.sls_ref(t, ix, mode="mean"), rtol=1e-5)
+
+    def test_single_lookup_is_gather(self):
+        t, ix = _table(32, 8, F32), _indices(6, 1, 32)
+        out = np.asarray(sls(t, ix))
+        exp = np.asarray(t)[np.asarray(ix)[:, 0]]
+        np.testing.assert_allclose(out, exp, rtol=1e-6)
+
+    def test_batch_one(self):
+        t, ix = _table(128, 32, F32), _indices(1, 9, 128)
+        np.testing.assert_allclose(sls(t, ix), ref.sls_ref(t, ix), rtol=1e-5)
+
+    def test_repeated_indices(self):
+        t = _table(16, 4, F32)
+        ix = jnp.asarray([[3, 3, 3, 3]], jnp.int32)
+        exp = 4.0 * np.asarray(t)[3]
+        np.testing.assert_allclose(np.asarray(sls(t, ix))[0], exp, rtol=1e-5)
+
+    def test_zero_table_gives_zero(self):
+        t = jnp.zeros((8, 8), F32)
+        ix = _indices(3, 4, 8)
+        assert float(np.abs(np.asarray(sls(t, ix))).max()) == 0.0
+
+    def test_first_and_last_row(self):
+        t = _table(50, 8, F32)
+        ix = jnp.asarray([[0, 49]], jnp.int32)
+        exp = np.asarray(t)[0] + np.asarray(t)[49]
+        np.testing.assert_allclose(np.asarray(sls(t, ix))[0], exp, rtol=1e-5)
+
+    def test_bf16(self):
+        t, ix = _table(64, 16, BF16), _indices(4, 5, 64)
+        out = np.asarray(sls(t, ix), np.float32)
+        exp = np.asarray(ref.sls_ref(t, ix), np.float32)
+        np.testing.assert_allclose(out, exp, **_tol(BF16))
+
+    def test_bad_mode_raises(self):
+        t, ix = _table(8, 4, F32), _indices(1, 1, 8)
+        with pytest.raises(ValueError):
+            sls(t, ix, mode="max")
+
+    def test_dtype_preserved(self):
+        t, ix = _table(8, 4, BF16), _indices(2, 3, 8)
+        assert sls(t, ix).dtype == BF16
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        batch=st.integers(1, 33),
+        lookups=st.integers(1, 40),
+        rows=st.integers(2, 300),
+        dim=st.sampled_from([4, 8, 16, 32, 64, 128, 256]),
+        dtype=st.sampled_from([F32, BF16]),
+        mode=st.sampled_from(["sum", "mean"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, batch, lookups, rows, dim, dtype,
+                                    mode, seed):
+        t = _table(rows, dim, dtype, seed=seed)
+        ix = _indices(batch, lookups, rows, seed=seed + 1)
+        out = np.asarray(sls(t, ix, mode=mode), np.float32)
+        exp = np.asarray(ref.sls_ref(t, ix, mode=mode), np.float32)
+        # Pooling error grows with lookup count for bf16.
+        tol = _tol(dtype)
+        if dtype == BF16:
+            tol = dict(rtol=2e-2, atol=2e-2 * max(1, lookups // 4))
+        np.testing.assert_allclose(out, exp, **tol)
+
+
+# -------------------------------------------------------- interaction ----
+
+class TestDotInteraction:
+    def test_basic(self):
+        x = jnp.asarray(pinit.fill_uniform(3, (4, 9, 16), 1.0))
+        np.testing.assert_allclose(
+            dot_interaction(x), ref.dot_interaction_ref(x), rtol=1e-4, atol=1e-4)
+
+    def test_symmetry(self):
+        x = jnp.asarray(pinit.fill_uniform(4, (2, 5, 8), 1.0))
+        z = np.asarray(dot_interaction(x))
+        np.testing.assert_allclose(z, np.swapaxes(z, 1, 2), rtol=1e-5)
+
+    def test_diagonal_is_squared_norm(self):
+        x = jnp.asarray(pinit.fill_uniform(5, (3, 4, 8), 1.0))
+        z = np.asarray(dot_interaction(x))
+        xs = np.asarray(x)
+        for b in range(3):
+            np.testing.assert_allclose(
+                np.diag(z[b]), (xs[b] ** 2).sum(-1), rtol=1e-5)
+
+    def test_identity_vectors(self):
+        x = jnp.broadcast_to(jnp.eye(4, dtype=F32), (2, 4, 4))
+        z = np.asarray(dot_interaction(x))
+        np.testing.assert_allclose(z[0], np.eye(4), atol=1e-6)
+
+    def test_single_vector(self):
+        x = jnp.asarray(pinit.fill_uniform(6, (2, 1, 16), 1.0))
+        z = np.asarray(dot_interaction(x))
+        assert z.shape == (2, 1, 1)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        batch=st.integers(1, 17),
+        t=st.integers(1, 44),
+        dim=st.sampled_from([4, 8, 16, 32, 64, 128, 256]),
+        dtype=st.sampled_from([F32, BF16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, batch, t, dim, dtype, seed):
+        x = jnp.asarray(pinit.fill_uniform(seed, (batch, t, dim), 1.0), dtype)
+        out = np.asarray(dot_interaction(x), np.float32)
+        exp = np.asarray(ref.dot_interaction_ref(x), np.float32)
+        tol = dict(rtol=3e-2, atol=3e-2) if dtype == BF16 else dict(rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(out, exp, **tol)
+
+
+# ------------------------------------------------------ attention ref ----
+
+class TestAttentionRef:
+    def test_weights_sum_to_one_effect(self):
+        # Uniform history rows -> attention returns that row regardless of query.
+        row = pinit.fill_uniform(9, (8,), 1.0)
+        hist = jnp.asarray(np.broadcast_to(row, (2, 5, 8)).copy())
+        q = jnp.asarray(pinit.fill_uniform(10, (2, 8), 1.0))
+        out = np.asarray(ref.attention_pool_ref(hist, q))
+        np.testing.assert_allclose(out, np.broadcast_to(row, (2, 8)), rtol=1e-5)
+
+    def test_sharp_attention_picks_aligned_row(self):
+        hist = np.zeros((1, 3, 4), np.float32)
+        hist[0, 0] = [100, 0, 0, 0]
+        hist[0, 1] = [0, 1, 0, 0]
+        hist[0, 2] = [0, 0, 1, 0]
+        q = np.asarray([[1.0, 0, 0, 0]], np.float32)
+        out = np.asarray(ref.attention_pool_ref(jnp.asarray(hist), jnp.asarray(q)))
+        np.testing.assert_allclose(out[0], hist[0, 0], rtol=1e-4, atol=1e-6)

@@ -1,0 +1,69 @@
+//! Benchmarks for the paper's §VII-E design-overhead claims:
+//! Algorithm 1 (affinity matrix) in < 1 s for hundreds of models,
+//! Algorithm 2 (cluster schedule) in < 100 ms, RMU step latency.
+
+use hera::bench_harness::Bench;
+use hera::config::{NodeConfig, N_MODELS};
+use hera::hera::{AffinityMatrix, ClusterScheduler, HeraRmu};
+use hera::profiler::ProfileStore;
+use hera::server_sim::{Controller, TenantStats};
+
+fn main() {
+    let store = ProfileStore::build(&NodeConfig::paper_default());
+    let matrix = AffinityMatrix::build(&store);
+    let mut b = Bench::new("affinity");
+
+    b.run("profile_store_build_8_models", || {
+        ProfileStore::build(&NodeConfig::paper_default())
+    });
+
+    b.run("affinity_matrix_8x8", || AffinityMatrix::build(&store));
+
+    // The §VII-E claim scales quadratically: extrapolate 8x8 -> 100x100.
+    let r = b.run("affinity_single_pair", || {
+        hera::hera::affinity::co_location_affinity(
+            &store,
+            hera::config::ModelId(1),
+            hera::config::ModelId(4),
+        )
+    });
+    let pairs_100 = 100.0 * 100.0;
+    println!(
+        "  -> extrapolated 100x100 matrix: {:.1} ms (paper bound: < 1 s)",
+        r.mean_ns * pairs_100 / 1e6
+    );
+
+    b.run("cluster_schedule_uniform_1000qps", || {
+        ClusterScheduler::new(&store, &matrix)
+            .schedule(&[1000.0; N_MODELS])
+            .unwrap()
+    });
+
+    // RMU monitor step (Algorithm 3) on a two-tenant node.
+    let stats = vec![
+        TenantStats {
+            model: hera::config::ModelId(3),
+            workers: 8,
+            ways: 5,
+            window_p95_s: 0.12,
+            window_completed: 400,
+            window_arrival_qps: 500.0,
+            queue_depth: 3,
+        },
+        TenantStats {
+            model: hera::config::ModelId(4),
+            workers: 8,
+            ways: 6,
+            window_p95_s: 0.004,
+            window_completed: 3000,
+            window_arrival_qps: 6000.0,
+            queue_depth: 0,
+        },
+    ];
+    b.run("rmu_monitor_step", || {
+        let mut rmu = HeraRmu::new(&store);
+        rmu.on_monitor(1.0, &stats)
+    });
+
+    b.report();
+}

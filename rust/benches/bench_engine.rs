@@ -1,0 +1,34 @@
+//! PJRT engine benchmarks: per-model inference latency by batch bucket
+//! (the real serving hot path), plus dispatch overhead decomposition.
+//! Skips gracefully when artifacts are not built.
+
+use std::path::PathBuf;
+
+use hera::bench_harness::Bench;
+use hera::runtime::Engine;
+
+fn main() {
+    let dir = std::env::var_os("HERA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    if !dir.join("manifest.json").exists() {
+        println!("bench_engine: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    let models = ["ncf", "din", "wnd", "dlrm_a", "dlrm_c", "dlrm_d"];
+    let engine = Engine::load(&dir, Some(&models), None).expect("engine load");
+    let mut b = Bench::new("engine");
+    for m in models {
+        for batch in [1usize, 64, 256] {
+            let (dense, idx) = engine.example_inputs(m, batch);
+            // One warm call outside the timed region.
+            engine.infer(m, batch, &dense, &idx).unwrap();
+            let r = b.run(&format!("{m}_b{batch}"), || {
+                engine.infer(m, batch, &dense, &idx).unwrap()
+            });
+            let items_per_s = batch as f64 / (r.mean_ns / 1e9);
+            println!("  -> {items_per_s:>12.0} items/s");
+        }
+    }
+    b.report();
+}

@@ -1,0 +1,52 @@
+//! End-to-end figure-regeneration benchmarks — one per paper-evaluation
+//! group, mirroring the DESIGN.md experiment index.  These are the
+//! "tables" of the reproduction: each benchmark regenerates the data
+//! behind a figure family and reports how long the pipeline takes.
+
+use hera::bench_harness::Bench;
+use hera::config::{ModelId, NodeConfig};
+use hera::figures::{emu_pair_analytic, FigureContext};
+use hera::profiler::ProfileStore;
+
+fn main() {
+    let dir = std::env::temp_dir().join("hera_bench_figs");
+    let ctx = FigureContext::new(&dir, true); // fast mode for benches
+    let store = ProfileStore::build(&NodeConfig::paper_default());
+    let mut b = Bench::new("figures");
+    b.target_time_s = 0.5;
+
+    b.run("fig3_4_operator_breakdown", || {
+        ctx.run("3").unwrap();
+        ctx.run("4").unwrap();
+    });
+    b.run("fig5_6_worker_scaling_tables", || {
+        ctx.run("5").unwrap();
+        ctx.run("6").unwrap();
+    });
+    b.run("fig7_llc_sensitivity", || ctx.run("7").unwrap());
+    b.run("fig9_colocation_examples", || ctx.run("9").unwrap());
+    b.run("fig11_emu_distributions", || ctx.run("11").unwrap());
+    b.run("fig15_cluster_scaling", || ctx.run("15").unwrap());
+    b.run("fig16_skewed_targets", || ctx.run("16").unwrap());
+    b.run("fig17_sensitivity", || ctx.run("17").unwrap());
+    b.run("emu_single_pair_sweep", || {
+        emu_pair_analytic(
+            &store,
+            ModelId::from_name("dlrm_d").unwrap(),
+            ModelId::from_name("ncf").unwrap(),
+        )
+    });
+    // Figs. 10 and 12-14 are simulation-heavy; run them once (not in the
+    // timing loop) so `cargo bench` still exercises the full surface.
+    let t0 = std::time::Instant::now();
+    ctx.run("10").unwrap();
+    ctx.run("12").unwrap();
+    ctx.run("13").unwrap();
+    ctx.run("14").unwrap();
+    println!(
+        "figures/sim_heavy_fig10_12_13_14 (single pass)  {:.2} s",
+        t0.elapsed().as_secs_f64()
+    );
+    b.report();
+    let _ = std::fs::remove_dir_all(dir);
+}

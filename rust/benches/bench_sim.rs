@@ -1,0 +1,71 @@
+//! Simulation-engine benchmarks: event throughput and max-load search
+//! cost — these dominate figure-regeneration time (§Perf L3 target:
+//! >= 1M events/s through the discrete-event core).
+
+use hera::bench_harness::Bench;
+use hera::config::{ModelId, NodeConfig};
+use hera::server_sim::{
+    max_load_analytic, MaxLoadOpts, NullController, SimulatedTenant, Simulation,
+};
+use hera::simkernel::EventQueue;
+
+fn main() {
+    let node = NodeConfig::paper_default();
+    let mut b = Bench::new("sim");
+
+    // Raw event-queue throughput.
+    b.run("event_queue_push_pop_1k", || {
+        let mut q = EventQueue::new();
+        for i in 0..1000 {
+            q.schedule(i as f64 * 0.001, i);
+        }
+        let mut sum = 0u64;
+        while let Some((_, v)) = q.pop() {
+            sum += v as u64;
+        }
+        sum
+    });
+
+    // One second of simulated serving at high arrival rate.
+    let tenant = SimulatedTenant {
+        model: ModelId::from_name("ncf").unwrap(),
+        workers: 16,
+        ways: 11,
+        arrival_qps: 10_000.0,
+    };
+    let r = b.run("simulate_1s_at_10kqps", || {
+        let mut sim = Simulation::new(node.clone(), &[tenant.clone()], 7);
+        sim.run(1.0, 0.0, &mut NullController)
+    });
+    // ~2 events per query (arrival + completion) + monitor ticks.
+    let events_per_s = 20_000.0 / (r.mean_ns / 1e9);
+    println!("  -> ~{:.2} M events/s through the DES core", events_per_s / 1e6);
+
+    // Two-tenant co-located step (adds contention + friction math).
+    let pair = [
+        SimulatedTenant {
+            model: ModelId::from_name("dlrm_d").unwrap(),
+            workers: 8,
+            ways: 5,
+            arrival_qps: 400.0,
+        },
+        SimulatedTenant {
+            model: ModelId::from_name("ncf").unwrap(),
+            workers: 8,
+            ways: 6,
+            arrival_qps: 6000.0,
+        },
+    ];
+    b.run("simulate_1s_colocated_pair", || {
+        let mut sim = Simulation::new(node.clone(), &pair, 7);
+        sim.run(1.0, 0.0, &mut NullController)
+    });
+
+    // Analytic max-load search (a profiler table cell).
+    let opts = MaxLoadOpts::default();
+    b.run("max_load_analytic_cell", || {
+        max_load_analytic(&node, ModelId::from_name("din").unwrap(), 8, 6, &opts)
+    });
+
+    b.report();
+}

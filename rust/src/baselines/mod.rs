@@ -1,0 +1,16 @@
+//! Baseline systems the paper compares against (§VII):
+//!
+//! * [`selection`] — cluster-level model-selection baselines:
+//!   **DeepRecSys** (homogeneous single-model servers, Gupta et al.),
+//!   **Random** (any heterogeneous pair), and **Hera (Random)**
+//!   (scalability-aware but affinity-blind pairing).
+//! * [`parties`] — **PARTIES** (Chen et al., ASPLOS'19): the generic
+//!   QoS-aware intra-node resource manager, reimplemented as a
+//!   [`crate::server_sim::Controller`] with its characteristic
+//!   one-resource-at-a-time upsize/downsize feedback loop.
+
+pub mod parties;
+pub mod selection;
+
+pub use parties::PartiesController;
+pub use selection::{allowed_pairs_hera_random, SelectionPolicy};

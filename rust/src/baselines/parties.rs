@@ -1,0 +1,242 @@
+//! PARTIES (Chen, Delimitrou, Martínez — ASPLOS'19), reimplemented as a
+//! [`Controller`] for comparison with Hera's RMU (paper §VII-A2, §VII-B).
+//!
+//! PARTIES is application-agnostic: it has no model profiles, only a
+//! feedback FSM per latency-critical service.  Each monitoring interval
+//! it classifies every service by SLA slack and moves ONE resource unit
+//! at a time:
+//!
+//! * slack > upsize threshold  -> grant one unit (cores, then LLC ways —
+//!   round-robin over resource types, the paper's "try a different
+//!   resource if the last adjustment did not help");
+//! * slack < downsize threshold -> release one unit back to the pool.
+//!
+//! Units come from the free pool first, then from the most-comfortable
+//! co-runner.  The single-step increments are what make PARTIES converge
+//! slowly compared to Hera's table lookup — exactly the effect Fig. 12-14
+//! measure.
+
+use crate::config::NodeConfig;
+use crate::server_sim::{AllocChange, Controller, TenantStats};
+
+/// Which knob a PARTIES step adjusts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Knob {
+    Cores,
+    Ways,
+}
+
+impl Knob {
+    fn next(self) -> Knob {
+        match self {
+            Knob::Cores => Knob::Ways,
+            Knob::Ways => Knob::Cores,
+        }
+    }
+}
+
+/// PARTIES feedback controller over a (up to) two-tenant node.
+pub struct PartiesController {
+    node: NodeConfig,
+    /// Per-tenant: which knob the next upsizing will try.
+    next_knob: Vec<Knob>,
+    /// Slack thresholds (fractions of SLA).
+    upsize_at: f64,
+    downsize_at: f64,
+    /// Consecutive comfortable windows per tenant (downsizing hysteresis:
+    /// PARTIES probes a downsize only after sustained comfort, and
+    /// reverts if QoS degrades — without this the FSM oscillates around
+    /// the threshold).
+    comfort_streak: Vec<u32>,
+    /// Windows of sustained comfort required before a downsize probe.
+    downsize_patience: u32,
+    /// Decision log (time, tenant, workers, ways) for Fig. 13/14.
+    pub decisions: Vec<(f64, usize, usize, usize)>,
+}
+
+impl PartiesController {
+    pub fn new(node: NodeConfig) -> Self {
+        PartiesController {
+            node,
+            next_knob: vec![Knob::Cores; 8],
+            upsize_at: 0.9,
+            downsize_at: 0.4,
+            comfort_streak: vec![0; 8],
+            downsize_patience: 3,
+            decisions: Vec::new(),
+        }
+    }
+}
+
+impl Controller for PartiesController {
+    fn on_monitor(&mut self, now: f64, stats: &[TenantStats]) -> Vec<AllocChange> {
+        let mut workers: Vec<usize> = stats.iter().map(|s| s.workers).collect();
+        let mut ways: Vec<usize> = stats.iter().map(|s| s.ways).collect();
+        let slacks: Vec<f64> = stats
+            .iter()
+            .map(|s| s.window_p95_s / (s.model.spec().sla_ms / 1e3))
+            .collect();
+
+        let free_cores =
+            self.node.cores.saturating_sub(workers.iter().sum::<usize>());
+        let free_ways =
+            self.node.llc_ways.saturating_sub(ways.iter().sum::<usize>());
+        let mut pool_cores = free_cores;
+        let mut pool_ways = free_ways;
+
+        // Handle the most-suffering service first (PARTIES prioritizes by
+        // slack severity).
+        let mut order: Vec<usize> = (0..stats.len()).collect();
+        order.sort_by(|&a, &b| slacks[b].partial_cmp(&slacks[a]).unwrap());
+
+        for &i in &order {
+            let s = &stats[i];
+            if s.window_completed == 0 && s.queue_depth == 0 {
+                continue;
+            }
+            if slacks[i] > self.upsize_at {
+                self.comfort_streak[i] = 0;
+                // Upsize one unit of the current knob.
+                let knob = self.next_knob[i];
+                match knob {
+                    Knob::Cores => {
+                        if pool_cores > 0 {
+                            workers[i] += 1;
+                            pool_cores -= 1;
+                        } else if let Some(victim) = victim(i, &slacks, &workers, 2) {
+                            workers[victim] -= 1;
+                            workers[i] += 1;
+                        }
+                    }
+                    Knob::Ways => {
+                        if pool_ways > 0 {
+                            ways[i] += 1;
+                            pool_ways -= 1;
+                        } else if let Some(victim) = victim(i, &slacks, &ways, 2) {
+                            ways[victim] -= 1;
+                            ways[i] += 1;
+                        }
+                    }
+                }
+                // Alternate the knob for the next adjustment.
+                self.next_knob[i] = knob.next();
+            } else if slacks[i] < self.downsize_at && slacks[i] > 0.0 {
+                // Downsize only after sustained comfort (hysteresis).
+                self.comfort_streak[i] += 1;
+                if self.comfort_streak[i] >= self.downsize_patience {
+                    self.comfort_streak[i] = 0;
+                    let knob = self.next_knob[i];
+                    match knob {
+                        Knob::Cores if workers[i] > 1 => workers[i] -= 1,
+                        Knob::Ways if ways[i] > 1 => ways[i] -= 1,
+                        _ => {}
+                    }
+                    self.next_knob[i] = knob.next();
+                }
+            } else {
+                self.comfort_streak[i] = 0;
+            }
+        }
+
+        let mut changes = Vec::new();
+        for i in 0..stats.len() {
+            if workers[i] != stats[i].workers || ways[i] != stats[i].ways {
+                self.decisions.push((now, i, workers[i], ways[i]));
+                changes.push(AllocChange {
+                    tenant: i,
+                    workers: workers[i],
+                    ways: ways[i],
+                });
+            }
+        }
+        changes
+    }
+}
+
+/// Pick the co-runner with the lowest slack that still has > `min` units.
+fn victim(me: usize, slacks: &[f64], units: &[usize], min: usize) -> Option<usize> {
+    (0..slacks.len())
+        .filter(|&j| j != me && units[j] > min)
+        .min_by(|&a, &b| slacks[a].partial_cmp(&slacks[b]).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelId;
+
+    fn stats(name: &str, workers: usize, ways: usize, p95_s: f64) -> TenantStats {
+        TenantStats {
+            model: ModelId::from_name(name).unwrap(),
+            workers,
+            ways,
+            window_p95_s: p95_s,
+            window_completed: 100,
+            window_arrival_qps: 100.0,
+            queue_depth: 0,
+        }
+    }
+
+    #[test]
+    fn upsizes_one_unit_at_a_time() {
+        let mut p = PartiesController::new(NodeConfig::paper_default());
+        // din violating (SLA 100ms, p95 200ms), pool has free cores.
+        let s = vec![stats("din", 4, 4, 0.200), stats("ncf", 4, 4, 0.002)];
+        let c1 = p.on_monitor(1.0, &s);
+        assert_eq!(c1.len(), 1, "din upsized by one core (ncf hysteresis holds)");
+        let din = c1.iter().find(|c| c.tenant == 0).unwrap();
+        assert_eq!((din.workers, din.ways), (5, 4), "one core added");
+        // Next interval: alternates to the ways knob.
+        let s2 = vec![stats("din", 5, 4, 0.200), stats("ncf", 4, 4, 0.09)];
+        let c2 = p.on_monitor(2.0, &s2);
+        let din2 = c2.iter().find(|c| c.tenant == 0).unwrap();
+        assert_eq!((din2.workers, din2.ways), (5, 5), "one way added");
+    }
+
+    #[test]
+    fn steals_from_comfortable_corunner_when_pool_empty() {
+        let mut p = PartiesController::new(NodeConfig::paper_default());
+        // All 16 cores allocated; din suffering, ncf comfortable.
+        let s = vec![stats("din", 8, 5, 0.500), stats("ncf", 8, 6, 0.001)];
+        let ch = p.on_monitor(1.0, &s);
+        let din = ch.iter().find(|c| c.tenant == 0).unwrap();
+        let ncf = ch.iter().find(|c| c.tenant == 1).unwrap();
+        assert_eq!(din.workers, 9);
+        assert!(ncf.workers <= 7, "victim loses a core (and may downsize)");
+    }
+
+    #[test]
+    fn no_changes_when_everyone_is_in_band() {
+        let mut p = PartiesController::new(NodeConfig::paper_default());
+        let s = vec![stats("din", 8, 5, 0.080), stats("ncf", 8, 6, 0.004)];
+        assert!(p.on_monitor(1.0, &s).is_empty());
+    }
+
+    #[test]
+    fn downsizes_only_after_sustained_comfort() {
+        let mut p = PartiesController::new(NodeConfig::paper_default());
+        let s = vec![stats("din", 8, 5, 0.001)];
+        // Two comfortable windows: hysteresis holds the allocation.
+        assert!(p.on_monitor(1.0, &s).is_empty());
+        assert!(p.on_monitor(2.0, &s).is_empty());
+        // Third window: one unit released.
+        let ch = p.on_monitor(3.0, &s);
+        assert_eq!(ch.len(), 1);
+        assert!(ch[0].workers < 8 || ch[0].ways < 5);
+    }
+
+    #[test]
+    fn never_drops_below_one_unit() {
+        let mut p = PartiesController::new(NodeConfig::paper_default());
+        let mut w = 1;
+        let mut k = 1;
+        for t in 0..10 {
+            let s = vec![stats("din", w, k, 0.0001)];
+            for c in p.on_monitor(t as f64, &s) {
+                w = c.workers;
+                k = c.ways;
+            }
+        }
+        assert!(w >= 1 && k >= 1);
+    }
+}

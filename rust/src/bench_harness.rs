@@ -1,0 +1,134 @@
+//! Micro-benchmark harness (criterion is unavailable in the offline
+//! vendor set — DESIGN.md substitution log).
+//!
+//! Usage in a `harness = false` bench target:
+//!
+//! ```ignore
+//! let mut b = Bench::new("affinity");
+//! b.run("matrix_build", || { AffinityMatrix::build(&store); });
+//! b.report();
+//! ```
+
+use std::time::Instant;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+/// Bench group runner: auto-calibrated iteration counts, warmup,
+/// percentile reporting.
+pub struct Bench {
+    group: String,
+    results: Vec<BenchResult>,
+    /// Target wall time per benchmark (s).
+    pub target_time_s: f64,
+    /// Lower bound on measured iterations.
+    pub min_iters: u64,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        Bench {
+            group: group.to_string(),
+            results: Vec::new(),
+            target_time_s: std::env::var("HERA_BENCH_SECS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(1.0),
+            min_iters: 10,
+        }
+    }
+
+    /// Benchmark a closure; its return value is black-boxed.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration: time a single call.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let single = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_time_s / single) as u64)
+            .clamp(self.min_iters, 1_000_000);
+
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64() * 1e9);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: samples[samples.len() / 2],
+            p99_ns: samples[(samples.len() * 99 / 100).min(samples.len() - 1)],
+            min_ns: samples[0],
+        };
+        println!(
+            "{}/{:<36} {:>12}/iter  (p50 {:>10}, p99 {:>10}, {} iters)",
+            self.group,
+            result.name,
+            fmt_ns(result.mean_ns),
+            fmt_ns(result.p50_ns),
+            fmt_ns(result.p99_ns),
+            iters
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print the summary table (call at the end of the bench main).
+    pub fn report(&self) {
+        println!("\n== {} summary ==", self.group);
+        for r in &self.results {
+            println!("  {:<38} mean {:>12}", r.name, fmt_ns(r.mean_ns));
+        }
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut b = Bench::new("test");
+        b.target_time_s = 0.02;
+        let r = b.run("noop_sum", || (0..100u64).sum::<u64>());
+        assert!(r.iters >= 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+        assert!(r.min_ns <= r.mean_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.1e9), "3.10 s");
+    }
+}

@@ -1,0 +1,124 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `hera <subcommand> [--flag value] [--switch]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Args> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut out = Args {
+            command,
+            ..Default::default()
+        };
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else {
+                anyhow::bail!("unexpected positional argument {a:?}");
+            };
+            anyhow::ensure!(!name.is_empty(), "empty flag name");
+            // A flag followed by a value not starting with "--" is a
+            // key-value flag; otherwise it's a boolean switch.
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                }
+                _ => out.switches.push(name.to_string()),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn basic_grammar() {
+        let a = parse("figures --fig 10 --out results --fast");
+        assert_eq!(a.command, "figures");
+        assert_eq!(a.get("fig"), Some("10"));
+        assert_eq!(a.get_or("out", "x"), "results");
+        assert!(a.has("fast"));
+        assert!(!a.has("slow"));
+    }
+
+    #[test]
+    fn numbers_and_lists() {
+        let a = parse("serve --qps 123.5 --workers 4 --models ncf,din");
+        assert_eq!(a.get_f64("qps", 0.0).unwrap(), 123.5);
+        assert_eq!(a.get_usize("workers", 0).unwrap(), 4);
+        assert_eq!(
+            a.get_list("models").unwrap(),
+            vec!["ncf".to_string(), "din".to_string()]
+        );
+        assert_eq!(a.get_f64("missing", 7.5).unwrap(), 7.5);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Args::parse(["cmd".into(), "positional".into()]).is_err());
+        assert!(parse("cmd --num x").get_f64("num", 0.0).is_err());
+    }
+
+    #[test]
+    fn empty_is_ok() {
+        let a = Args::parse(std::iter::empty::<String>()).unwrap();
+        assert_eq!(a.command, "");
+    }
+}

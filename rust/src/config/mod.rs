@@ -1,0 +1,59 @@
+//! Configuration: the Table-I model zoo and Table-II node configuration.
+//!
+//! These are the inputs of every experiment. `ModelSpec` carries both the
+//! *paper-scale* numbers (embedding GB, FC MB — used by the node model to
+//! reproduce capacity/bandwidth behaviour) and the architecture needed to
+//! account FLOPs and bytes per query.
+
+mod models;
+mod node;
+
+pub use models::{ModelId, ModelSpec, Pooling, DENSE_DIM, MODELS, N_MODELS};
+pub use node::NodeConfig;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_eight_models() {
+        assert_eq!(MODELS.len(), 8);
+        assert_eq!(N_MODELS, 8);
+    }
+
+    #[test]
+    fn ids_roundtrip() {
+        for (i, spec) in MODELS.iter().enumerate() {
+            let id = ModelId::from_index(i).unwrap();
+            assert_eq!(id.index(), i);
+            assert_eq!(ModelId::from_name(spec.name), Some(id));
+            assert_eq!(id.spec().name, spec.name);
+        }
+        assert!(ModelId::from_index(8).is_none());
+        assert!(ModelId::from_name("nope").is_none());
+    }
+
+    #[test]
+    fn table1_spot_checks() {
+        let b = ModelId::from_name("dlrm_b").unwrap().spec();
+        assert_eq!(b.n_tables, 40);
+        assert_eq!(b.lookups, 120);
+        assert_eq!(b.emb_gb, 25.0);
+        assert_eq!(b.sla_ms, 400.0);
+        let d = ModelId::from_name("dlrm_d").unwrap().spec();
+        assert_eq!(d.emb_dim, 256);
+        assert_eq!(d.emb_gb, 8.0);
+        let ncf = ModelId::from_name("ncf").unwrap().spec();
+        assert_eq!(ncf.sla_ms, 5.0);
+    }
+
+    #[test]
+    fn default_node_is_table2() {
+        let n = NodeConfig::paper_default();
+        assert_eq!(n.cores, 16);
+        assert_eq!(n.llc_ways, 11);
+        assert!((n.llc_mb - 22.0).abs() < 1e-9);
+        assert!((n.dram_bw_gbs - 128.0).abs() < 1e-9);
+        assert!((n.dram_capacity_gb - 201.0).abs() < 1e-9);
+    }
+}

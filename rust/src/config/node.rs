@@ -1,0 +1,107 @@
+//! Table-II CPU server node configuration (+ Fig. 17b variants).
+
+/// Hardware configuration of one inference-server node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeConfig {
+    /// Worker cores available to inference (one worker per core, Fig. 2).
+    pub cores: usize,
+    /// LLC ways available for CAT partitioning.
+    pub llc_ways: usize,
+    /// Total shared LLC capacity (MB).
+    pub llc_mb: f64,
+    /// Peak DRAM bandwidth (GB/s), socket level.
+    pub dram_bw_gbs: f64,
+    /// Usable DRAM capacity for worker working sets (GB). The paper's node
+    /// has 192 GB/socket (384 GB total); we use 201 GB usable for worker
+    /// working sets so that DLRM(B) at 25 GB/worker hosts exactly 8
+    /// workers and OOMs beyond, matching Fig. 5/6.
+    pub dram_capacity_gb: f64,
+    /// Per-core sustained compute throughput (GFLOP/s) for the dense ops.
+    /// AVX-512 fp32 FMA peak on a 2.8 GHz core is ~179 GFLOP/s; 130 is a
+    /// realistic sustained GEMM efficiency (~73% of peak).
+    pub core_gflops: f64,
+    /// Network bandwidth (Gbps). Never a bottleneck (paper: < 1.9 Gbps
+    /// observed out of 10 Gbps) — modeled for completeness.
+    pub net_gbps: f64,
+}
+
+impl NodeConfig {
+    /// Table II: Xeon Gold 6242, one socket's worth of worker resources.
+    pub fn paper_default() -> Self {
+        NodeConfig {
+            cores: 16,
+            llc_ways: 11,
+            llc_mb: 22.0,
+            dram_bw_gbs: 128.0,
+            dram_capacity_gb: 201.0,
+            core_gflops: 130.0,
+            net_gbps: 10.0,
+        }
+    }
+
+    /// Fig. 17b sensitivity variants: (cores, ways, GB/s). LLC capacity
+    /// scales with way count (2 MB/way as on the 6242) and DRAM capacity
+    /// with the core count (an 8-core slice of a socket carries half the
+    /// socket's DIMMs).
+    pub fn variant(cores: usize, ways: usize, bw_gbs: f64) -> Self {
+        let base = Self::paper_default();
+        NodeConfig {
+            cores,
+            llc_ways: ways,
+            llc_mb: 2.0 * ways as f64,
+            dram_bw_gbs: bw_gbs,
+            dram_capacity_gb: base.dram_capacity_gb * cores as f64 / 16.0,
+            ..base
+        }
+    }
+
+    /// LLC bytes per way.
+    pub fn way_bytes(&self) -> f64 {
+        self.llc_mb * 1e6 / self.llc_ways as f64
+    }
+
+    /// Max workers of a model this node can host within DRAM capacity.
+    pub fn capacity_limit(&self, worker_bytes: f64) -> usize {
+        if worker_bytes <= 0.0 {
+            return self.cores;
+        }
+        let fit = (self.dram_capacity_gb * 1e9 / worker_bytes).floor() as usize;
+        fit.min(self.cores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelId;
+
+    #[test]
+    fn dlrm_b_capacity_limit_is_8() {
+        // Reproduces the paper's OOM beyond 8 workers (Fig. 5 caption).
+        let node = NodeConfig::paper_default();
+        let b = ModelId::from_name("dlrm_b").unwrap().spec();
+        assert_eq!(node.capacity_limit(b.worker_bytes()), 8);
+    }
+
+    #[test]
+    fn small_models_fill_all_cores() {
+        let node = NodeConfig::paper_default();
+        let ncf = ModelId::from_name("ncf").unwrap().spec();
+        assert_eq!(node.capacity_limit(ncf.worker_bytes()), 16);
+    }
+
+    #[test]
+    fn variant_scales_llc() {
+        let v = NodeConfig::variant(8, 8, 64.0);
+        assert_eq!(v.cores, 8);
+        assert_eq!(v.llc_ways, 8);
+        assert!((v.llc_mb - 16.0).abs() < 1e-9);
+        assert!((v.dram_bw_gbs - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn way_bytes() {
+        let n = NodeConfig::paper_default();
+        assert!((n.way_bytes() - 2e6).abs() < 1.0);
+    }
+}

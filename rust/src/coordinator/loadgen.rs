@@ -1,0 +1,90 @@
+//! Open-loop load generator: Poisson arrivals with the DeepRecInfra
+//! heavy-tail batch-size distribution (paper §IV), driving the
+//! coordinator like the paper's query traffic generator drives its
+//! inference server.
+
+use std::time::{Duration, Instant};
+
+use crate::rng::{BatchSizeDist, Exponential, Xoshiro256};
+
+use super::server::Coordinator;
+
+/// One tenant's load specification.
+#[derive(Debug, Clone)]
+pub struct LoadGenSpec {
+    pub model: String,
+    pub arrival_qps: f64,
+    /// Cap batch sizes (keeps tiny-SLA models inside their bucket range).
+    pub max_batch: u32,
+}
+
+/// Outcome of a load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadGenReport {
+    pub model: String,
+    pub offered: u64,
+    pub completed: u64,
+    pub duration_s: f64,
+    pub achieved_qps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub violation_rate: f64,
+}
+
+/// Drive `coord` with open-loop Poisson traffic for `duration`.
+/// One generator thread per tenant; returns per-tenant reports after the
+/// queues drain.
+pub fn run_load(
+    coord: &Coordinator,
+    specs: &[LoadGenSpec],
+    duration: Duration,
+    seed: u64,
+) -> anyhow::Result<Vec<LoadGenReport>> {
+    std::thread::scope(|scope| -> anyhow::Result<Vec<u64>> {
+        let mut handles = Vec::new();
+        for (i, spec) in specs.iter().enumerate() {
+            let coord_ref = &*coord;
+            let spec = spec.clone();
+            handles.push(scope.spawn(move || -> u64 {
+                let mut rng = Xoshiro256::seed_from(seed ^ (i as u64) << 32);
+                let batch_dist = BatchSizeDist::new(130.0_f64.ln(), 1.05, spec.max_batch);
+                let inter = Exponential::new(spec.arrival_qps.max(1e-9));
+                let t_end = Instant::now() + duration;
+                let mut offered = 0u64;
+                while Instant::now() < t_end {
+                    let gap = inter.sample(&mut rng);
+                    std::thread::sleep(Duration::from_secs_f64(gap.min(1.0)));
+                    if Instant::now() >= t_end {
+                        break;
+                    }
+                    let batch = batch_dist.sample(&mut rng) as usize;
+                    if coord_ref.submit_synthetic(&spec.model, batch).is_ok() {
+                        offered += 1;
+                    }
+                }
+                offered
+            }));
+        }
+        Ok(handles.into_iter().map(|h| h.join().unwrap()).collect())
+    })
+    .and_then(|offered| {
+        coord.drain(Duration::from_secs(30));
+        let mut out = Vec::new();
+        for (spec, off) in specs.iter().zip(offered) {
+            let snap = coord.snapshot(&spec.model)?;
+            out.push(LoadGenReport {
+                model: spec.model.clone(),
+                offered: off,
+                completed: snap.completed,
+                duration_s: duration.as_secs_f64(),
+                achieved_qps: snap.completed as f64 / duration.as_secs_f64(),
+                p50_ms: snap.p50_ms,
+                p95_ms: snap.p95_ms,
+                p99_ms: snap.p99_ms,
+                violation_rate: snap.violation_rate,
+            });
+        }
+        Ok(out)
+    })
+}

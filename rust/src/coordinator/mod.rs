@@ -1,0 +1,18 @@
+//! The multi-tenant serving coordinator — the L3 request path.
+//!
+//! Mirrors the paper's server architecture (Fig. 2): each co-located
+//! model (tenant) owns a FIFO query queue and a pool of worker threads
+//! (one worker ≈ one core); queries are routed by model id, served by the
+//! PJRT [`Engine`](crate::runtime::Engine), and tracked against the
+//! model's SLA.  The RMU hook adjusts per-tenant worker counts at
+//! runtime, exactly like Algorithm 3's `adjust_workers` (LLC way
+//! decisions are recorded but not enforced — this substrate has no CAT;
+//! on an Intel host they would map to `resctrl` groups, see DESIGN.md).
+
+mod loadgen;
+mod server;
+mod stats;
+
+pub use loadgen::{run_load, LoadGenReport, LoadGenSpec};
+pub use server::{Coordinator, TenantConfig};
+pub use stats::TenantSnapshot;

@@ -1,0 +1,275 @@
+//! The coordinator proper: router, per-tenant queues, worker pools.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::metrics::LatencyStats;
+use crate::runtime::Engine;
+
+use super::stats::TenantSnapshot;
+
+/// Configuration of one served model.
+#[derive(Debug, Clone)]
+pub struct TenantConfig {
+    pub model: String,
+    /// Initial worker count (adjustable at runtime).
+    pub workers: usize,
+    /// SLA target (ms); defaults to the Table-I value from the manifest.
+    pub sla_ms: Option<f64>,
+}
+
+/// One enqueued query.
+struct Query {
+    batch: usize,
+    dense: Vec<f32>,
+    indices: Vec<i32>,
+    t_enqueue: Instant,
+}
+
+struct TenantShared {
+    model: String,
+    sla_s: f64,
+    queue: Mutex<VecDeque<Query>>,
+    cv: Condvar,
+    /// Active worker gate: workers with id >= limit park (RMU downsizing).
+    worker_limit: AtomicUsize,
+    max_workers: usize,
+    arrivals: AtomicU64,
+    completed: AtomicU64,
+    violations: AtomicU64,
+    shutdown: AtomicBool,
+    stats: Mutex<LatencyStats>,
+    window: Mutex<(LatencyStats, u64, u64, Instant)>, // (lat, completed, arrivals, since)
+}
+
+/// Multi-tenant inference server over a shared PJRT engine.
+pub struct Coordinator {
+    engine: Arc<Engine>,
+    tenants: Vec<Arc<TenantShared>>,
+    handles: Vec<JoinHandle<()>>,
+    started: Instant,
+}
+
+impl Coordinator {
+    /// Spawn worker pools for `tenants` over `engine`.
+    pub fn start(engine: Arc<Engine>, tenants: &[TenantConfig]) -> anyhow::Result<Self> {
+        anyhow::ensure!(!tenants.is_empty(), "no tenants configured");
+        let mut shared = Vec::new();
+        let mut handles = Vec::new();
+        for cfg in tenants {
+            let manifest = engine
+                .manifest(&cfg.model)
+                .ok_or_else(|| anyhow::anyhow!("model {} not loaded", cfg.model))?;
+            let sla_ms = cfg.sla_ms.unwrap_or(manifest.sla_ms);
+            anyhow::ensure!(cfg.workers >= 1, "{}: need >= 1 worker", cfg.model);
+            let t = Arc::new(TenantShared {
+                model: cfg.model.clone(),
+                sla_s: sla_ms / 1e3,
+                queue: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+                worker_limit: AtomicUsize::new(cfg.workers),
+                max_workers: cfg.workers.max(16),
+                arrivals: AtomicU64::new(0),
+                completed: AtomicU64::new(0),
+                violations: AtomicU64::new(0),
+                shutdown: AtomicBool::new(false),
+                stats: Mutex::new(LatencyStats::new()),
+                window: Mutex::new((LatencyStats::new(), 0, 0, Instant::now())),
+            });
+            for wid in 0..t.max_workers {
+                let t2 = t.clone();
+                let e2 = engine.clone();
+                handles.push(std::thread::spawn(move || worker_loop(wid, t2, e2)));
+            }
+            shared.push(t);
+        }
+        Ok(Coordinator {
+            engine,
+            tenants: shared,
+            handles,
+            started: Instant::now(),
+        })
+    }
+
+    fn tenant(&self, model: &str) -> anyhow::Result<&Arc<TenantShared>> {
+        self.tenants
+            .iter()
+            .find(|t| t.model == model)
+            .ok_or_else(|| anyhow::anyhow!("unknown tenant {model}"))
+    }
+
+    /// Route one query (caller-provided tensors).
+    pub fn submit(
+        &self,
+        model: &str,
+        batch: usize,
+        dense: Vec<f32>,
+        indices: Vec<i32>,
+    ) -> anyhow::Result<()> {
+        let t = self.tenant(model)?;
+        t.arrivals.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut w = t.window.lock().unwrap();
+            w.2 += 1;
+        }
+        let mut q = t.queue.lock().unwrap();
+        q.push_back(Query {
+            batch,
+            dense,
+            indices,
+            t_enqueue: Instant::now(),
+        });
+        drop(q);
+        t.cv.notify_one();
+        Ok(())
+    }
+
+    /// Convenience: submit a deterministic synthetic query of `batch` items.
+    pub fn submit_synthetic(&self, model: &str, batch: usize) -> anyhow::Result<()> {
+        let (dense, idx) = self.engine.example_inputs(model, batch);
+        self.submit(model, batch, dense, idx)
+    }
+
+    /// RMU hook: resize a tenant's active worker pool.
+    pub fn set_workers(&self, model: &str, workers: usize) -> anyhow::Result<()> {
+        let t = self.tenant(model)?;
+        let w = workers.clamp(1, t.max_workers);
+        t.worker_limit.store(w, Ordering::SeqCst);
+        t.cv.notify_all();
+        Ok(())
+    }
+
+    /// Cumulative + last-window statistics; resets the window.
+    pub fn snapshot(&self, model: &str) -> anyhow::Result<TenantSnapshot> {
+        let t = self.tenant(model)?;
+        let stats = t.stats.lock().unwrap();
+        let (p50, p95, p99, mean) =
+            (stats.p50(), stats.p95(), stats.p99(), stats.mean());
+        drop(stats);
+        let mut w = t.window.lock().unwrap();
+        let elapsed = w.3.elapsed().as_secs_f64().max(1e-9);
+        let snap = TenantSnapshot {
+            model: t.model.clone(),
+            workers: t.worker_limit.load(Ordering::SeqCst),
+            arrivals: t.arrivals.load(Ordering::Relaxed),
+            completed: t.completed.load(Ordering::Relaxed),
+            p50_ms: p50 * 1e3,
+            p95_ms: p95 * 1e3,
+            p99_ms: p99 * 1e3,
+            mean_ms: mean * 1e3,
+            violation_rate: {
+                let c = t.completed.load(Ordering::Relaxed);
+                if c == 0 {
+                    0.0
+                } else {
+                    t.violations.load(Ordering::Relaxed) as f64 / c as f64
+                }
+            },
+            queue_depth: t.queue.lock().unwrap().len(),
+            window_completed: w.1,
+            window_p95_ms: w.0.p95() * 1e3,
+            window_arrival_qps: w.2 as f64 / elapsed,
+        };
+        w.0.clear();
+        w.1 = 0;
+        w.2 = 0;
+        w.3 = Instant::now();
+        Ok(snap)
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.tenants.iter().map(|t| t.model.clone()).collect()
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Block until every tenant's queue is empty and workers are idle.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let drained = self.tenants.iter().all(|t| {
+                t.queue.lock().unwrap().is_empty()
+                    && t.completed.load(Ordering::Relaxed)
+                        >= t.arrivals.load(Ordering::Relaxed)
+            });
+            if drained {
+                return true;
+            }
+            if Instant::now() > deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Stop all workers and join the pool.
+    pub fn shutdown(mut self) {
+        for t in &self.tenants {
+            t.shutdown.store(true, Ordering::SeqCst);
+            t.cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(wid: usize, t: Arc<TenantShared>, engine: Arc<Engine>) {
+    loop {
+        if t.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        // Inactive workers (beyond the RMU's limit) park.
+        if wid >= t.worker_limit.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+        let query = {
+            let mut q = t.queue.lock().unwrap();
+            loop {
+                if t.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if wid >= t.worker_limit.load(Ordering::SeqCst) {
+                    break None; // re-check the gate outside the lock
+                }
+                if let Some(query) = q.pop_front() {
+                    break Some(query);
+                }
+                let (guard, _timeout) = t
+                    .cv
+                    .wait_timeout(q, Duration::from_millis(5))
+                    .unwrap();
+                q = guard;
+            }
+        };
+        let Some(query) = query else { continue };
+        match engine.infer(&t.model, query.batch, &query.dense, &query.indices) {
+            Ok(_) => {
+                let latency = query.t_enqueue.elapsed().as_secs_f64();
+                t.completed.fetch_add(1, Ordering::Relaxed);
+                if latency > t.sla_s {
+                    t.violations.fetch_add(1, Ordering::Relaxed);
+                }
+                t.stats.lock().unwrap().record(latency);
+                let mut w = t.window.lock().unwrap();
+                w.0.record(latency);
+                w.1 += 1;
+            }
+            Err(e) => {
+                // Count as completed to keep drain() live; surfaces in logs.
+                t.completed.fetch_add(1, Ordering::Relaxed);
+                eprintln!("worker {}/{wid}: inference error: {e:#}", t.model);
+            }
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Per-tenant serving statistics.
+
+/// Snapshot of one tenant's serving stats (cumulative unless noted).
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    pub model: String,
+    pub workers: usize,
+    pub arrivals: u64,
+    pub completed: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    /// Fraction of completed queries over the model SLA.
+    pub violation_rate: f64,
+    /// Current queue depth.
+    pub queue_depth: usize,
+    /// Completions in the last monitor window.
+    pub window_completed: u64,
+    /// p95 of the last monitor window (ms).
+    pub window_p95_ms: f64,
+    /// Arrival rate observed in the last monitor window (QPS).
+    pub window_arrival_qps: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_is_plain_data() {
+        let s = TenantSnapshot {
+            model: "ncf".into(),
+            workers: 4,
+            arrivals: 10,
+            completed: 9,
+            p50_ms: 1.0,
+            p95_ms: 2.0,
+            p99_ms: 3.0,
+            mean_ms: 1.2,
+            violation_rate: 0.0,
+            queue_depth: 1,
+            window_completed: 5,
+            window_p95_ms: 2.0,
+            window_arrival_qps: 100.0,
+        };
+        let c = s.clone();
+        assert_eq!(c.model, "ncf");
+        assert_eq!(c.completed, 9);
+    }
+}

@@ -1,0 +1,242 @@
+//! Cluster-scale figures: Figs. 15-17 (server counts + sensitivity).
+
+use crate::baselines::SelectionPolicy;
+use crate::config::{ModelId, NodeConfig, N_MODELS};
+use crate::hera::AffinityMatrix;
+use crate::profiler::ProfileStore;
+
+use super::emu::emu_pair_analytic;
+use super::{fmt, FigureContext};
+
+const POLICIES: [SelectionPolicy; 4] = [
+    SelectionPolicy::DeepRecSys,
+    SelectionPolicy::Random,
+    SelectionPolicy::HeraRandom,
+    SelectionPolicy::Hera,
+];
+
+fn servers_for(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    policy: SelectionPolicy,
+    targets: &[f64; N_MODELS],
+) -> f64 {
+    if matches!(policy, SelectionPolicy::Random | SelectionPolicy::HeraRandom) {
+        // Random policies: average over seeds.
+        let n = 5;
+        (0..n)
+            .map(|s| {
+                policy
+                    .schedule(store, matrix, targets, 1000 + s)
+                    .map(|p| p.num_servers() as f64)
+                    .unwrap_or(f64::NAN)
+            })
+            .sum::<f64>()
+            / n as f64
+    } else {
+        policy
+            .schedule(store, matrix, targets, 0)
+            .map(|p| p.num_servers() as f64)
+            .unwrap_or(f64::NAN)
+    }
+}
+
+/// Fig. 15: servers required vs target QPS (identical target per model).
+pub fn fig15(ctx: &FigureContext) -> anyhow::Result<()> {
+    let levels: Vec<f64> = if ctx.fast {
+        vec![500.0, 2000.0]
+    } else {
+        vec![250.0, 500.0, 1000.0, 2000.0, 4000.0]
+    };
+    let mut rows = Vec::new();
+    for &level in &levels {
+        let targets = [level; N_MODELS];
+        let mut per_policy = Vec::new();
+        for policy in POLICIES {
+            let n = servers_for(&ctx.store, &ctx.matrix, policy, &targets);
+            per_policy.push((policy.name(), n));
+            rows.push(vec![fmt(level), policy.name().into(), fmt(n)]);
+        }
+        let drs = per_policy[0].1;
+        let hera = per_policy[3].1;
+        println!(
+            "  target {level:6.0} QPS/model: {}  (Hera saves {:.0}% vs DeepRecSys)",
+            per_policy
+                .iter()
+                .map(|(n, v)| format!("{n}={v:.1}"))
+                .collect::<Vec<_>>()
+                .join("  "),
+            100.0 * (1.0 - hera / drs)
+        );
+    }
+    ctx.write_csv("fig15.csv", "target_qps_per_model,policy,servers", &rows)?;
+    Ok(())
+}
+
+/// Fig. 16: servers required when the low:high target-QPS ratio is skewed.
+pub fn fig16(ctx: &FigureContext) -> anyhow::Result<()> {
+    let store = &ctx.store;
+    let (low, high) = store.partition_by_scalability();
+    let total_qps = 16_000.0;
+    let ratios: Vec<f64> = if ctx.fast {
+        vec![0.0, 0.5, 1.0]
+    } else {
+        vec![0.0, 0.25, 0.5, 0.75, 1.0]
+    };
+    let mut rows = Vec::new();
+    for &r in &ratios {
+        let mut targets = [0.0; N_MODELS];
+        for &m in &low {
+            targets[m.index()] = r * total_qps / low.len() as f64;
+        }
+        for &m in &high {
+            targets[m.index()] = (1.0 - r) * total_qps / high.len() as f64;
+        }
+        let mut per_policy = Vec::new();
+        for policy in POLICIES {
+            let n = servers_for(store, &ctx.matrix, policy, &targets);
+            per_policy.push((policy.name(), n));
+            rows.push(vec![fmt(100.0 * r), policy.name().into(), fmt(n)]);
+        }
+        println!(
+            "  low:high {:3.0}:{:3.0}  {}",
+            100.0 * r,
+            100.0 * (1.0 - r),
+            per_policy
+                .iter()
+                .map(|(n, v)| format!("{n}={v:.1}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+    }
+    ctx.write_csv("fig16.csv", "low_share_pct,policy,servers", &rows)?;
+    Ok(())
+}
+
+/// Mean Hera-pair EMU on a given profile store (optionally with CAT
+/// partitioning disabled, forcing the even LLC split).
+fn hera_emu_mean(store: &ProfileStore, use_cat: bool) -> f64 {
+    let matrix = AffinityMatrix::build(store);
+    let (low, high) = store.partition_by_scalability();
+    if low.is_empty() {
+        return 100.0;
+    }
+    let mut sum = 0.0;
+    for &m in &low {
+        let p = matrix.best_partner(m, &high).unwrap();
+        let emu = if use_cat {
+            emu_pair_analytic(store, m, p)
+        } else {
+            emu_pair_even_split(store, m, p)
+        };
+        sum += emu;
+    }
+    sum / low.len() as f64
+}
+
+/// EMU sweep with the LLC forced to an even split (no CAT).
+fn emu_pair_even_split(store: &ProfileStore, a: ModelId, b: ModelId) -> f64 {
+    use crate::server_sim::analytic::{solve, AnalyticTenant};
+    let node = &store.node;
+    let half_w = node.llc_ways / 2;
+    let (wa, wb) = crate::hera::cluster::split_cores(store, a, b);
+    let ml_a = store.profile(a).max_load();
+    let ml_b = store.profile(b).max_load();
+    let mut best = 0.0f64;
+    for i in 1..=10 {
+        let fx = i as f64 / 10.0;
+        let feasible = |fy: f64| -> bool {
+            let tenants = [
+                AnalyticTenant { model: a, workers: wa, ways: half_w.max(1), arrival_qps: fx * ml_a },
+                AnalyticTenant { model: b, workers: wb, ways: (node.llc_ways - half_w).max(1), arrival_qps: fy * ml_b },
+            ];
+            solve(node, &tenants).tenants.iter().all(|t| t.feasible)
+        };
+        if !feasible(0.01) {
+            continue;
+        }
+        let mut lo = 0.01;
+        let mut hi = 1.2;
+        for _ in 0..10 {
+            let mid = 0.5 * (lo + hi);
+            if feasible(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        best = best.max(100.0 * (fx + lo));
+    }
+    best
+}
+
+/// Fig. 17: (a) ablation — co-location alone vs + CAT partitioning;
+/// (b) sensitivity to (cores, ways, memory bandwidth) variants.
+pub fn fig17(ctx: &FigureContext) -> anyhow::Result<()> {
+    let mut rows = Vec::new();
+
+    // (a) ablation on the paper-default node.
+    let emu_no_cat = hera_emu_mean(&ctx.store, false);
+    let emu_cat = hera_emu_mean(&ctx.store, true);
+    println!(
+        "  17a: Hera co-location alone {emu_no_cat:.1}%  (+{:.1}% vs DeepRecSys);  +CAT {emu_cat:.1}%  (further +{:.1}%)",
+        emu_no_cat - 100.0,
+        emu_cat - emu_no_cat
+    );
+    rows.push(vec!["17a".into(), "colocation_only".into(), fmt(emu_no_cat)]);
+    rows.push(vec!["17a".into(), "colocation_plus_cat".into(), fmt(emu_cat)]);
+
+    // (b) system-configuration sensitivity.
+    let variants = [
+        (8usize, 8usize, 64.0),
+        (16, 11, 128.0),
+        (32, 16, 256.0),
+    ];
+    for (cores, ways, bw) in variants {
+        let node = NodeConfig::variant(cores, ways, bw);
+        let store = ProfileStore::build(&node);
+        let emu = hera_emu_mean(&store, true);
+        println!(
+            "  17b: ({cores} cores, {ways} ways, {bw:.0} GB/s): Hera EMU {emu:.1}%  (+{:.1}% vs DeepRecSys)",
+            emu - 100.0
+        );
+        rows.push(vec![
+            "17b".into(),
+            format!("({cores}|{ways}|{bw:.0})"),
+            fmt(emu),
+        ]);
+    }
+    ctx.write_csv("fig17.csv", "panel,config,hera_emu_pct", &rows)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig17a_cat_adds_on_top_of_colocation() {
+        let store = ProfileStore::build(&NodeConfig::paper_default());
+        let without = hera_emu_mean(&store, false);
+        let with = hera_emu_mean(&store, true);
+        // Paper: co-location alone +22% EMU, CAT adds a further +8%.
+        assert!(without > 100.0, "co-location alone must beat DeepRecSys: {without}");
+        assert!(with >= without, "CAT must not hurt: {with} vs {without}");
+    }
+
+    #[test]
+    fn fig16_extremes_favor_no_pairing() {
+        // With 100% of traffic on high-scalability models, Hera == DeepRecSys
+        // (no low models to co-locate).
+        let store = ProfileStore::build(&NodeConfig::paper_default());
+        let matrix = AffinityMatrix::build(&store);
+        let (_, high) = store.partition_by_scalability();
+        let mut targets = [0.0; N_MODELS];
+        for &m in &high {
+            targets[m.index()] = 1000.0;
+        }
+        let drs = servers_for(&store, &matrix, SelectionPolicy::DeepRecSys, &targets);
+        let hera = servers_for(&store, &matrix, SelectionPolicy::Hera, &targets);
+        assert_eq!(drs, hera);
+    }
+}

@@ -1,0 +1,340 @@
+//! EMU machinery + Figs. 9-11 (co-location effectiveness).
+
+use crate::config::ModelId;
+use crate::hera::affinity::AffinityMatrix;
+use crate::hera::cluster::{evaluate_pair, split_cores, ServerAssignment};
+use crate::metrics::{pearson, EmuDistribution};
+use crate::node::enumerate_partitions;
+use crate::profiler::ProfileStore;
+use crate::server_sim::analytic::{solve, AnalyticTenant};
+use crate::server_sim::{NullController, SimulatedTenant, Simulation};
+
+use super::{fmt, FigureContext};
+
+/// Hera-style allocation for steady loads (qa, qb): workers from the
+/// scalability table (Algorithm 3's find_number_of_workers), leftover
+/// cores to the partner, ways chosen to satisfy A's target while
+/// maximizing B (the RMU's argmax restricted to feasible partitions).
+fn hera_alloc(
+    store: &ProfileStore,
+    a: ModelId,
+    b: ModelId,
+    qa: f64,
+) -> (usize, usize, usize, usize) {
+    let node = &store.node;
+    let pa = store.profile(a);
+    let pb = store.profile(b);
+    // Workers for A's target at full LLC, then give B the rest.
+    let wa = pa
+        .find_number_of_workers(node.llc_ways, qa)
+        .unwrap_or(pa.max_workers)
+        .max(1);
+    let wb = (node.cores - wa).min(pb.max_workers).max(1);
+    // Ways: satisfy A, maximize B.
+    let mut best = (node.llc_ways / 2, node.llc_ways - node.llc_ways / 2);
+    let mut best_qb = -1.0;
+    for part in enumerate_partitions(node.llc_ways) {
+        let qa_here = pa.qps_at(wa, part.ways_a);
+        let qb_here = pb.qps_at(wb, part.ways_b);
+        if qa_here >= qa && qb_here > best_qb {
+            best_qb = qb_here;
+            best = (part.ways_a, part.ways_b);
+        }
+    }
+    (wa, best.0, wb, best.1)
+}
+
+/// Max fraction of B's isolated max load sustainable while A runs at
+/// `fx` of its own max load, under Hera's allocation (analytic oracle).
+pub fn max_partner_load_analytic(
+    store: &ProfileStore,
+    a: ModelId,
+    b: ModelId,
+    fx: f64,
+) -> f64 {
+    let node = &store.node;
+    let qa = fx * store.profile(a).max_load();
+    let maxb = store.profile(b).max_load();
+    let feasible = |fy: f64| -> bool {
+        let (wa, ka, wb, kb) = hera_alloc(store, a, b, qa);
+        let tenants = [
+            AnalyticTenant { model: a, workers: wa, ways: ka, arrival_qps: qa },
+            AnalyticTenant { model: b, workers: wb, ways: kb, arrival_qps: fy * maxb },
+        ];
+        solve(node, &tenants).tenants.iter().all(|t| t.feasible)
+    };
+    if !feasible(0.01) {
+        return 0.0;
+    }
+    let mut lo = 0.01;
+    let mut hi = 1.5;
+    for _ in 0..12 {
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Fig. 12-style sweep: (fx, fy_max) pairs for fx in `xs`.
+pub fn emu_sweep_curve(
+    store: &ProfileStore,
+    a: ModelId,
+    b: ModelId,
+    xs: &[f64],
+) -> Vec<(f64, f64)> {
+    xs.iter()
+        .map(|&fx| (fx, max_partner_load_analytic(store, a, b, fx)))
+        .collect()
+}
+
+/// Pair EMU (%): best aggregate fraction over the load split sweep.
+pub fn emu_pair_analytic(store: &ProfileStore, a: ModelId, b: ModelId) -> f64 {
+    let xs: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+    emu_sweep_curve(store, a, b, &xs)
+        .into_iter()
+        .map(|(fx, fy)| 100.0 * (fx + fy))
+        .fold(0.0, f64::max)
+}
+
+/// Measured (discrete-event sim) joint proportional max for a pair,
+/// normalized to the sum of isolated max loads — the Fig. 10(b) metric.
+pub fn measured_pair_qps_sim(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    a: ModelId,
+    b: ModelId,
+    fast: bool,
+) -> f64 {
+    let node = store.node.clone();
+    let (wa, wb) = split_cores(store, a, b);
+    let (ka, kb) = matrix.get(a, b).best_partition;
+    let qa_iso = store.profile(a).qps_at(wa, node.llc_ways);
+    let qb_iso = store.profile(b).qps_at(wb, node.llc_ways);
+    let (dur, warm, steps) = if fast { (6.0, 1.5, 5) } else { (15.0, 3.0, 8) };
+    let feasible = |s: f64| -> bool {
+        let tenants = [
+            SimulatedTenant { model: a, workers: wa, ways: ka, arrival_qps: s * qa_iso },
+            SimulatedTenant { model: b, workers: wb, ways: kb, arrival_qps: s * qb_iso },
+        ];
+        let mut sim = Simulation::new(node.clone(), &tenants, 0xF1610);
+        let out = sim.run(dur, warm, &mut NullController);
+        out.iter().all(|o| {
+            o.p95_s <= o.model.spec().sla_ms / 1e3
+                && o.completed as f64 >= 0.9 * o.arrivals as f64
+        })
+    };
+    let mut lo = 0.0;
+    let mut hi = 1.0;
+    for _ in 0..steps {
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    // The retained fraction: measured co-located throughput normalized to
+    // the same allocation's contention-free (profiled) QPS — the exact
+    // quantity the Algorithm-1 affinity estimates.
+    lo
+}
+
+/// Fig. 9: the motivating co-location examples.
+pub fn fig9(ctx: &FigureContext) -> anyhow::Result<()> {
+    let ncf = ModelId::from_name("ncf").unwrap();
+    let dien = ModelId::from_name("dien").unwrap();
+    let dlrm_b = ModelId::from_name("dlrm_b").unwrap();
+    let mut rows = Vec::new();
+    for (a, b, label) in [
+        (ncf, dien, "(high,high): NCF+DIEN"),
+        (ncf, dlrm_b, "(high,low): NCF+DLRM(B)"),
+    ] {
+        let server = evaluate_pair(&ctx.store, &ctx.matrix, a, b);
+        if let ServerAssignment::Pair { qps, workers, ways, .. } = server {
+            let fa = qps.0 / ctx.store.profile(a).max_load();
+            let fb = qps.1 / ctx.store.profile(b).max_load();
+            let emu = emu_pair_analytic(&ctx.store, a, b);
+            println!(
+                "  {label}: {}@{:.0}% + {}@{:.0}%  (EMU {emu:.0}%)",
+                a.name(),
+                100.0 * fa,
+                b.name(),
+                100.0 * fb
+            );
+            rows.push(vec![
+                label.to_string(),
+                a.name().into(),
+                fmt(100.0 * fa),
+                b.name().into(),
+                fmt(100.0 * fb),
+                fmt(emu),
+                workers.0.to_string(),
+                workers.1.to_string(),
+                ways.0.to_string(),
+                ways.1.to_string(),
+            ]);
+        }
+    }
+    ctx.write_csv(
+        "fig9.csv",
+        "pair,model_a,frac_a_pct,model_b,frac_b_pct,emu_pct,workers_a,workers_b,ways_a,ways_b",
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Fig. 10: (a) estimated affinity matrix; (b) measured co-located QPS
+/// (sim), plus the Pearson correlation between the two.
+pub fn fig10(ctx: &FigureContext) -> anyhow::Result<()> {
+    let mut rows = Vec::new();
+    let mut est = Vec::new();
+    let mut meas = Vec::new();
+    for a in ModelId::all() {
+        for b in ModelId::all() {
+            if a.index() >= b.index() {
+                continue;
+            }
+            let aff = ctx.matrix.get(a, b).system;
+            let m = measured_pair_qps_sim(&ctx.store, &ctx.matrix, a, b, ctx.fast);
+            est.push(aff);
+            meas.push(m);
+            rows.push(vec![
+                a.name().into(),
+                b.name().into(),
+                fmt(aff),
+                fmt(m),
+            ]);
+        }
+    }
+    let r = pearson(&est, &meas);
+    println!("  Pearson(est. affinity, measured QPS) = {r:.3}  (paper: 0.95)");
+    rows.push(vec!["pearson".into(), "".into(), fmt(r), "".into()]);
+    ctx.write_csv("fig10.csv", "model_a,model_b,estimated_affinity,measured_norm_qps", &rows)?;
+    Ok(())
+}
+
+/// Fig. 11: EMU distribution per model-selection policy (constant load).
+pub fn fig11(ctx: &FigureContext) -> anyhow::Result<()> {
+    let store = &ctx.store;
+    let (low, high) = store.partition_by_scalability();
+
+    let all_pairs: Vec<(ModelId, ModelId)> = ModelId::all()
+        .flat_map(|a| {
+            ModelId::all()
+                .filter(move |b| a.index() < b.index())
+                .map(move |b| (a, b))
+        })
+        .collect();
+    let emu_of = |pairs: &[(ModelId, ModelId)]| -> Vec<f64> {
+        pairs
+            .iter()
+            .map(|&(a, b)| emu_pair_analytic(store, a, b))
+            .collect()
+    };
+
+    let random = emu_of(&all_pairs);
+    let hera_random_pairs = crate::baselines::allowed_pairs_hera_random(store);
+    let hera_random = emu_of(&hera_random_pairs);
+    // Hera: the pairs its cluster scheduler actually deploys (a Fig. 15
+    // style run at a demanding uniform target), like the paper's "all
+    // chosen pairs of co-located models".
+    let mut hera_pairs: Vec<(ModelId, ModelId)> = {
+        use crate::hera::cluster::ClusterScheduler;
+        let targets = [2000.0; crate::config::N_MODELS];
+        let plan = ClusterScheduler::new(store, &ctx.matrix)
+            .schedule(&targets)
+            .expect("hera schedule");
+        let mut pairs: Vec<(ModelId, ModelId)> = plan
+            .servers
+            .iter()
+            .filter_map(|s| match s {
+                crate::hera::ServerAssignment::Pair { a, b, .. } => Some((*a, *b)),
+                _ => None,
+            })
+            .collect();
+        pairs.sort();
+        pairs.dedup();
+        pairs
+    };
+    if hera_pairs.is_empty() {
+        hera_pairs = low
+            .iter()
+            .map(|&m| (m, ctx.matrix.best_partner(m, &high).unwrap()))
+            .collect();
+    }
+    let hera = emu_of(&hera_pairs);
+
+    let mut rows = Vec::new();
+    let mut summary = Vec::new();
+    for (name, values) in [
+        ("DeepRecSys", vec![100.0]),
+        ("Random", random),
+        ("Hera (Random)", hera_random),
+        ("Hera", hera),
+    ] {
+        let d = EmuDistribution::from_values(values.clone());
+        println!(
+            "  {name:14} min {:6.1}%  median {:6.1}%  max {:6.1}%  mean {:6.1}%",
+            d.min, d.median, d.max, d.mean
+        );
+        summary.push((name.to_string(), d.mean));
+        for v in &values {
+            rows.push(vec![name.to_string(), fmt(*v)]);
+        }
+    }
+    let drs = summary[0].1;
+    for (name, mean) in &summary[1..] {
+        println!("  {name} improvement vs DeepRecSys: {:+.1}%", mean - drs);
+    }
+    ctx.write_csv("fig11.csv", "policy,emu_pct", &rows)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NodeConfig;
+    use once_cell::sync::Lazy;
+
+    static STORE: Lazy<ProfileStore> =
+        Lazy::new(|| ProfileStore::build(&NodeConfig::paper_default()));
+
+    fn id(n: &str) -> ModelId {
+        ModelId::from_name(n).unwrap()
+    }
+
+    #[test]
+    fn partner_load_decreases_with_x() {
+        let f40 = max_partner_load_analytic(&STORE, id("dlrm_d"), id("ncf"), 0.4);
+        let f90 = max_partner_load_analytic(&STORE, id("dlrm_d"), id("ncf"), 0.9);
+        assert!(f40 >= f90, "partner load must shrink as x grows: {f40} vs {f90}");
+        assert!(f40 > 0.3, "partner should get real throughput: {f40}");
+    }
+
+    #[test]
+    fn hera_pairs_have_emu_at_least_100() {
+        // Paper: Hera variants guarantee EMU never falls below 100%.
+        let (low, high) = STORE.partition_by_scalability();
+        let matrix = AffinityMatrix::build(&STORE);
+        for &m in &low {
+            let p = matrix.best_partner(m, &high).unwrap();
+            let emu = emu_pair_analytic(&STORE, m, p);
+            assert!(emu >= 99.0, "{m}+{p}: EMU {emu}%");
+        }
+    }
+
+    #[test]
+    fn paper_fig12_shape_dlrm_d_plus_ncf() {
+        // Paper example: DLRM(D)@50% + NCF ~ 130% EMU under Hera.
+        let fy = max_partner_load_analytic(&STORE, id("dlrm_d"), id("ncf"), 0.5);
+        let emu = 100.0 * (0.5 + fy);
+        assert!(
+            (105.0..165.0).contains(&emu),
+            "DLRM(D)@50%+NCF EMU {emu}% should be near the paper's 130%"
+        );
+    }
+}

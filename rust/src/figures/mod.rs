@@ -1,0 +1,119 @@
+//! Figure/table regeneration harness — one function per table and figure
+//! of the paper's evaluation (see DESIGN.md §4 for the index).
+//!
+//! Every figure writes `results/figN.csv` (or `tableN.csv`) and prints a
+//! human-readable summary; EXPERIMENTS.md records paper-vs-measured.
+
+mod emu;
+mod static_figs;
+mod dynamic_figs;
+mod cluster_figs;
+
+pub use emu::{emu_pair_analytic, emu_sweep_curve, measured_pair_qps_sim};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::config::NodeConfig;
+use crate::hera::AffinityMatrix;
+use crate::profiler::ProfileStore;
+
+/// Shared context: profiled tables + output directory.
+pub struct FigureContext {
+    pub store: ProfileStore,
+    pub matrix: AffinityMatrix,
+    pub out_dir: PathBuf,
+    /// Reduced sweep sizes for tests/CI.
+    pub fast: bool,
+}
+
+impl FigureContext {
+    pub fn new(out_dir: &Path, fast: bool) -> Self {
+        let store = ProfileStore::build(&NodeConfig::paper_default());
+        let matrix = AffinityMatrix::build(&store);
+        std::fs::create_dir_all(out_dir).ok();
+        FigureContext {
+            store,
+            matrix,
+            out_dir: out_dir.to_path_buf(),
+            fast,
+        }
+    }
+
+    pub(crate) fn write_csv(
+        &self,
+        name: &str,
+        header: &str,
+        rows: &[Vec<String>],
+    ) -> anyhow::Result<PathBuf> {
+        let path = self.out_dir.join(name);
+        let mut text = String::from(header);
+        text.push('\n');
+        for row in rows {
+            text.push_str(&row.join(","));
+            text.push('\n');
+        }
+        std::fs::write(&path, text).with_context(|| path.display().to_string())?;
+        println!("  wrote {}", path.display());
+        Ok(path)
+    }
+
+    /// Run one figure by id ("3", "10", "17", "table1", ...).
+    pub fn run(&self, id: &str) -> anyhow::Result<()> {
+        match id {
+            "table1" => static_figs::table1(self),
+            "table2" => static_figs::table2(self),
+            "3" => static_figs::fig3(self),
+            "4" => static_figs::fig4(self),
+            "5" => static_figs::fig5(self),
+            "6" => static_figs::fig6(self),
+            "7" => static_figs::fig7(self),
+            "9" => emu::fig9(self),
+            "10" => emu::fig10(self),
+            "11" => emu::fig11(self),
+            "12" => dynamic_figs::fig12(self),
+            "13" => dynamic_figs::fig13(self),
+            "14" => dynamic_figs::fig14(self),
+            "15" => cluster_figs::fig15(self),
+            "16" => cluster_figs::fig16(self),
+            "17" => cluster_figs::fig17(self),
+            other => anyhow::bail!("unknown figure id {other:?}"),
+        }
+    }
+
+    pub fn run_all(&self) -> anyhow::Result<()> {
+        for id in [
+            "table1", "table2", "3", "4", "5", "6", "7", "9", "10", "11", "12",
+            "13", "14", "15", "16", "17",
+        ] {
+            println!("== figure {id} ==");
+            self.run(id)?;
+        }
+        Ok(())
+    }
+}
+
+pub(crate) fn fmt(v: f64) -> String {
+    if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_builds_and_runs_a_static_figure() {
+        let dir = std::env::temp_dir().join("hera_figs_test");
+        let ctx = FigureContext::new(&dir, true);
+        ctx.run("table1").unwrap();
+        ctx.run("6").unwrap();
+        assert!(dir.join("fig6.csv").exists());
+        assert!(ctx.run("99").is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,263 @@
+//! Static (profiling-derived) figures: Tables I-II and Figs. 3-7.
+
+use crate::config::{ModelId, NodeConfig, MODELS};
+use crate::node::ServiceProfile;
+
+use super::{fmt, FigureContext};
+
+/// Table I: the model zoo as configured.
+pub fn table1(ctx: &FigureContext) -> anyhow::Result<()> {
+    let mut rows = Vec::new();
+    for m in &MODELS {
+        rows.push(vec![
+            m.name.to_string(),
+            m.domain.to_string(),
+            format!("{:?}", m.bottom_mlp),
+            format!("{:?}", m.top_mlp),
+            m.n_tables.to_string(),
+            m.lookups.to_string(),
+            m.emb_dim.to_string(),
+            fmt(m.emb_gb),
+            fmt(m.fc_mb),
+            format!("{:?}", m.pooling),
+            fmt(m.sla_ms),
+        ]);
+    }
+    ctx.write_csv(
+        "table1.csv",
+        "model,domain,dense_fc,predict_fc,tables,lookups,dim,emb_gb,fc_mb,pooling,sla_ms",
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Table II: node configuration.
+pub fn table2(ctx: &FigureContext) -> anyhow::Result<()> {
+    let n = NodeConfig::paper_default();
+    let rows = vec![
+        vec!["cores".into(), n.cores.to_string()],
+        vec!["llc_ways".into(), n.llc_ways.to_string()],
+        vec!["llc_mb".into(), fmt(n.llc_mb)],
+        vec!["dram_bw_gbs".into(), fmt(n.dram_bw_gbs)],
+        vec!["dram_capacity_gb".into(), fmt(n.dram_capacity_gb)],
+        vec!["core_gflops".into(), fmt(n.core_gflops)],
+        vec!["net_gbps".into(), fmt(n.net_gbps)],
+    ];
+    ctx.write_csv("table2.csv", "parameter,value", &rows)?;
+    Ok(())
+}
+
+/// Fig. 3: single-worker inference time broken into operators (batch 220).
+/// The memory leg is the SLS (embedding) time; the compute leg is split
+/// across bottom-FC / interaction / top-FC by FLOP share.
+pub fn fig3(ctx: &FigureContext) -> anyhow::Result<()> {
+    let node = &ctx.store.node;
+    let mut rows = Vec::new();
+    for id in ModelId::all() {
+        let spec = id.spec();
+        let prof = ServiceProfile::build(spec, node, 1, node.llc_ways);
+        let (t_comp, t_mem) = prof.legs_per_item();
+        // FLOP split of the compute leg.
+        let f_bot = {
+            let mut d = crate::config::DENSE_DIM;
+            let mut f = 0.0;
+            for &w in spec.bottom_mlp {
+                f += 2.0 * d as f64 * w as f64;
+                d = w;
+            }
+            f
+        };
+        let f_total = spec.flops_per_item();
+        let f_top = {
+            let mut d = spec.top_in_width();
+            let mut f = 0.0;
+            for &w in spec.top_mlp {
+                f += 2.0 * d as f64 * w as f64;
+                d = w;
+            }
+            f
+        };
+        let f_inter = (f_total - f_bot - f_top).max(0.0);
+        let total = t_comp + t_mem;
+        let sls = t_mem / total;
+        let fc = t_comp * ((f_bot + f_top) / f_total) / total;
+        let inter = t_comp * (f_inter / f_total) / total;
+        rows.push(vec![
+            id.name().to_string(),
+            fmt(100.0 * sls),
+            fmt(100.0 * fc),
+            fmt(100.0 * inter),
+            fmt(1e3 * 220.0 * total),
+        ]);
+        println!(
+            "  {:8} SLS {:5.1}%  FC {:5.1}%  interaction/other {:5.1}%  ({:.2} ms @220)",
+            id.name(),
+            100.0 * sls,
+            100.0 * fc,
+            100.0 * inter,
+            1e3 * 220.0 * total
+        );
+    }
+    ctx.write_csv("fig3.csv", "model,sls_pct,fc_pct,interaction_pct,ms_at_220", &rows)?;
+    Ok(())
+}
+
+/// Fig. 4: single-worker LLC miss rate and DRAM bandwidth utility.
+pub fn fig4(ctx: &FigureContext) -> anyhow::Result<()> {
+    let node = &ctx.store.node;
+    let mut rows = Vec::new();
+    for id in ModelId::all() {
+        let prof = ServiceProfile::build(id.spec(), node, 1, node.llc_ways);
+        let bw_util = prof.per_worker_bw_demand() / (node.dram_bw_gbs * 1e9);
+        rows.push(vec![
+            id.name().to_string(),
+            fmt(100.0 * prof.miss_rate()),
+            fmt(100.0 * bw_util),
+        ]);
+    }
+    ctx.write_csv("fig4.csv", "model,llc_miss_pct,dram_bw_util_pct", &rows)?;
+    Ok(())
+}
+
+/// Fig. 5: LLC miss rate (a) and memory-bandwidth utilization (b) as the
+/// number of homogeneous workers scales 4/8/12/16.
+pub fn fig5(ctx: &FigureContext) -> anyhow::Result<()> {
+    let mut rows = Vec::new();
+    for id in ModelId::all() {
+        let p = ctx.store.profile(id);
+        for w in [4usize, 8, 12, 16] {
+            let (miss, bw) = if w <= p.max_workers {
+                (p.miss_by_workers[w - 1], p.bw_util_by_workers[w - 1])
+            } else {
+                (f64::NAN, f64::NAN) // OOM (paper: no bars for DLRM(B) 12/16)
+            };
+            rows.push(vec![
+                id.name().to_string(),
+                w.to_string(),
+                if miss.is_nan() { "OOM".into() } else { fmt(100.0 * miss) },
+                if bw.is_nan() { "OOM".into() } else { fmt(100.0 * bw) },
+            ]);
+        }
+    }
+    ctx.write_csv("fig5.csv", "model,workers,llc_miss_pct,dram_bw_util_pct", &rows)?;
+    Ok(())
+}
+
+/// Fig. 6: latency-bounded throughput (QPS) vs parallel workers, raw and
+/// normalized to the 16-worker point (the paper's worker scalability).
+pub fn fig6(ctx: &FigureContext) -> anyhow::Result<()> {
+    let node = &ctx.store.node;
+    let mut rows = Vec::new();
+    for id in ModelId::all() {
+        let p = ctx.store.profile(id);
+        let curve = p.scalability_curve();
+        let norm = curve[node.cores - 1].max(curve.iter().cloned().fold(0.0, f64::max));
+        for (w, q) in curve.iter().enumerate() {
+            rows.push(vec![
+                id.name().to_string(),
+                (w + 1).to_string(),
+                fmt(*q),
+                if norm > 0.0 { fmt(q / norm) } else { "0".into() },
+            ]);
+        }
+        println!(
+            "  {:8} scalability={:?} max_workers={} qps16={:.0}",
+            id.name(),
+            p.scalability,
+            p.max_workers,
+            curve[node.cores - 1]
+        );
+    }
+    ctx.write_csv("fig6.csv", "model,workers,qps,qps_norm_to_16", &rows)?;
+    Ok(())
+}
+
+/// Fig. 7: QPS vs LLC ways allocated (max workers), normalized to the
+/// full-LLC (11-way) configuration.
+pub fn fig7(ctx: &FigureContext) -> anyhow::Result<()> {
+    let mut rows = Vec::new();
+    for id in ModelId::all() {
+        let p = ctx.store.profile(id);
+        let curve = p.llc_sensitivity_curve();
+        let full = curve[curve.len() - 1];
+        for (k, q) in curve.iter().enumerate() {
+            rows.push(vec![
+                id.name().to_string(),
+                (k + 1).to_string(),
+                fmt(*q),
+                if full > 0.0 { fmt(q / full) } else { "0".into() },
+            ]);
+        }
+        println!(
+            "  {:8} 1-way {:4.0}%  2-way {:4.0}%  5-way {:4.0}% of full-LLC QPS",
+            id.name(),
+            100.0 * curve[0] / full,
+            100.0 * curve[1] / full,
+            100.0 * curve[4] / full
+        );
+    }
+    ctx.write_csv("fig7.csv", "model,ways,qps,qps_norm_to_full", &rows)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> FigureContext {
+        FigureContext::new(&std::env::temp_dir().join("hera_statfig_test"), true)
+    }
+
+    #[test]
+    fn fig3_memory_models_are_sls_dominated() {
+        // Generate and verify the paper's key Fig. 3 observation.
+        let c = ctx();
+        fig3(&c).unwrap();
+        let text = std::fs::read_to_string(c.out_dir.join("fig3.csv")).unwrap();
+        for line in text.lines().skip(1) {
+            let f: Vec<&str> = line.split(',').collect();
+            let sls: f64 = f[1].parse().unwrap();
+            match f[0] {
+                "dlrm_a" | "dlrm_b" | "dlrm_d" => {
+                    assert!(sls > 60.0, "{}: sls {sls}%", f[0])
+                }
+                "ncf" | "wnd" | "dlrm_c" => assert!(sls < 50.0, "{}: sls {sls}%", f[0]),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn fig5_dlrm_b_oom_markers() {
+        let c = ctx();
+        fig5(&c).unwrap();
+        let text = std::fs::read_to_string(c.out_dir.join("fig5.csv")).unwrap();
+        let oom: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("dlrm_b") && l.contains("OOM"))
+            .collect();
+        assert_eq!(oom.len(), 2, "12 and 16 workers OOM for DLRM(B)");
+    }
+
+    #[test]
+    fn fig7_paper_knees() {
+        let c = ctx();
+        fig7(&c).unwrap();
+        let text = std::fs::read_to_string(c.out_dir.join("fig7.csv")).unwrap();
+        let lookup = |model: &str, ways: usize| -> f64 {
+            text.lines()
+                .find(|l| {
+                    let f: Vec<&str> = l.split(',').collect();
+                    f[0] == model && f[1] == ways.to_string()
+                })
+                .map(|l| l.split(',').nth(3).unwrap().parse().unwrap())
+                .unwrap()
+        };
+        // Paper: DLRM(D) >= 90% at 1 way; DIEN/WnD >= ~80% at 2 ways;
+        // NCF clearly hurt at 1 way.
+        assert!(lookup("dlrm_d", 1) >= 0.88, "dlrm_d {}", lookup("dlrm_d", 1));
+        assert!(lookup("dien", 2) >= 0.75);
+        assert!(lookup("wnd", 2) >= 0.70);
+        assert!(lookup("ncf", 1) < 0.80, "ncf {}", lookup("ncf", 1));
+    }
+}

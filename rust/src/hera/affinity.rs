@@ -1,0 +1,202 @@
+//! Algorithm 1 — co-location affinity.
+//!
+//! For a model pair (A, B), each getting an equal share of the cores:
+//!
+//! * **Step A (LLC)**: sweep every CAT partition (i, max-i); for each,
+//!   read the profiled QPS of each model at its way share, normalize by
+//!   the model's QPS with the entire LLC, average over the two models,
+//!   and keep the best partition's score.
+//! * **Step B (DRAM)**: CoAff_DRAM = min(1, MemBW_system / (MemBW_A +
+//!   MemBW_B)), with MemBW_X the profiled demand of X given half the
+//!   cores and the whole LLC.
+//! * **Step C**: CoAff_system = min(CoAff_LLC, CoAff_DRAM).
+//!
+//! The full pairwise matrix (Fig. 10a) is computed offline and stored as
+//! a 2-D array indexed by model ids; the paper measures < 1 s for
+//! hundreds of models (see `benches/bench_affinity.rs`).
+
+use crate::config::{ModelId, N_MODELS};
+use crate::node::enumerate_partitions;
+use crate::profiler::ProfileStore;
+
+/// Affinity decomposition for one model pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoAff {
+    pub llc: f64,
+    pub dram: f64,
+    /// min(llc, dram) — the conservative system-level affinity.
+    pub system: f64,
+    /// The LLC partition (ways_a, ways_b) that achieved `llc`.
+    pub best_partition: (usize, usize),
+}
+
+/// Compute Algorithm 1 for one pair using the profiled tables.
+pub fn co_location_affinity(store: &ProfileStore, a: ModelId, b: ModelId) -> CoAff {
+    let node = &store.node;
+    let half = node.cores / 2;
+    let pa = store.profile(a);
+    let pb = store.profile(b);
+    // Each model gets an equal core partition, capped by its OOM wall.
+    let wa = half.min(pa.max_workers).max(1);
+    let wb = half.min(pb.max_workers).max(1);
+
+    // Step A: best normalized QPS over all CAT partitions.
+    let qa_full = pa.qps_at(wa, node.llc_ways);
+    let qb_full = pb.qps_at(wb, node.llc_ways);
+    let mut llc = 0.0;
+    let mut best_partition = (1, node.llc_ways - 1);
+    for part in enumerate_partitions(node.llc_ways) {
+        let qa = pa.qps_at(wa, part.ways_a);
+        let qb = pb.qps_at(wb, part.ways_b);
+        let score = 0.5
+            * (if qa_full > 0.0 { qa / qa_full } else { 0.0 }
+                + if qb_full > 0.0 { qb / qb_full } else { 0.0 });
+        if score > llc {
+            llc = score;
+            best_partition = (part.ways_a, part.ways_b);
+        }
+    }
+
+    // Step B: bandwidth-sharing affinity.
+    let demand = store.membw_half_cores(a) + store.membw_half_cores(b);
+    let dram = (node.dram_bw_gbs * 1e9 / demand).min(1.0);
+
+    CoAff {
+        llc,
+        dram,
+        system: llc.min(dram),
+        best_partition,
+    }
+}
+
+/// The offline pairwise affinity table (Fig. 10a), indexed by model ids.
+#[derive(Debug, Clone)]
+pub struct AffinityMatrix {
+    entries: Vec<Vec<CoAff>>,
+}
+
+impl AffinityMatrix {
+    /// Build the full matrix from profiled tables (done once, offline).
+    pub fn build(store: &ProfileStore) -> AffinityMatrix {
+        let entries = (0..N_MODELS)
+            .map(|i| {
+                (0..N_MODELS)
+                    .map(|j| {
+                        co_location_affinity(store, ModelId(i as u8), ModelId(j as u8))
+                    })
+                    .collect()
+            })
+            .collect();
+        AffinityMatrix { entries }
+    }
+
+    pub fn get(&self, a: ModelId, b: ModelId) -> CoAff {
+        self.entries[a.index()][b.index()]
+    }
+
+    /// `find_model_with_highest_colocation_affinity` (Algorithm 2 line 8):
+    /// the candidate in `candidates` with the best system affinity to `m`.
+    pub fn best_partner(&self, m: ModelId, candidates: &[ModelId]) -> Option<ModelId> {
+        candidates
+            .iter()
+            .copied()
+            .max_by(|&x, &y| {
+                self.get(m, x)
+                    .system
+                    .partial_cmp(&self.get(m, y).system)
+                    .unwrap()
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NodeConfig;
+    use once_cell::sync::Lazy;
+
+    static STORE: Lazy<ProfileStore> =
+        Lazy::new(|| ProfileStore::build(&NodeConfig::paper_default()));
+
+    fn id(name: &str) -> ModelId {
+        ModelId::from_name(name).unwrap()
+    }
+
+    #[test]
+    fn affinity_in_unit_range() {
+        let m = AffinityMatrix::build(&STORE);
+        for a in ModelId::all() {
+            for b in ModelId::all() {
+                let c = m.get(a, b);
+                assert!((0.0..=1.0).contains(&c.llc), "{a}/{b} llc={}", c.llc);
+                assert!((0.0..=1.0).contains(&c.dram), "{a}/{b} dram={}", c.dram);
+                assert!(c.system <= c.llc && c.system <= c.dram);
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_is_symmetric_in_system_affinity() {
+        let m = AffinityMatrix::build(&STORE);
+        for a in ModelId::all() {
+            for b in ModelId::all() {
+                let ab = m.get(a, b).system;
+                let ba = m.get(b, a).system;
+                assert!(
+                    (ab - ba).abs() < 1e-9,
+                    "{a}/{b}: {ab} vs {ba}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_pairs_have_low_dram_affinity() {
+        // Two bandwidth-hungry models must score poorly on CoAff_DRAM.
+        let c = co_location_affinity(&STORE, id("dlrm_d"), id("dlrm_a"));
+        assert!(c.dram < 0.95, "dlrm_d+dlrm_a dram affinity {}", c.dram);
+        // A bandwidth model plus a tiny compute model is nearly free.
+        let c2 = co_location_affinity(&STORE, id("dlrm_b"), id("ncf"));
+        assert!(c2.dram > c.dram);
+    }
+
+    #[test]
+    fn cache_pairs_have_low_llc_affinity() {
+        // Paper Fig. 9(a): NCF + DIEN (two cache-sensitive models)
+        // interfere at the LLC; NCF + DLRM(B) is the complementary pair.
+        let bad = co_location_affinity(&STORE, id("ncf"), id("dien"));
+        let good = co_location_affinity(&STORE, id("ncf"), id("dlrm_b"));
+        assert!(
+            good.system > bad.system,
+            "NCF+DLRM(B) ({}) must beat NCF+DIEN ({})",
+            good.system,
+            bad.system
+        );
+    }
+
+    #[test]
+    fn best_partner_picks_max_affinity() {
+        let m = AffinityMatrix::build(&STORE);
+        let candidates: Vec<ModelId> = ModelId::all().filter(|x| *x != id("dlrm_d")).collect();
+        let best = m.best_partner(id("dlrm_d"), &candidates).unwrap();
+        let best_aff = m.get(id("dlrm_d"), best).system;
+        for c in &candidates {
+            assert!(m.get(id("dlrm_d"), *c).system <= best_aff + 1e-12);
+        }
+    }
+
+    #[test]
+    fn best_partition_is_valid() {
+        let c = co_location_affinity(&STORE, id("ncf"), id("dlrm_d"));
+        let (a, b) = c.best_partition;
+        assert!(a >= 1 && b >= 1 && a + b == STORE.node.llc_ways);
+    }
+
+    #[test]
+    fn low_scalability_models_pair_well_with_compute_models() {
+        // Key observation of the paper: (low, high) pairs have high affinity.
+        let m = AffinityMatrix::build(&STORE);
+        let b_ncf = m.get(id("dlrm_b"), id("ncf")).system;
+        assert!(b_ncf > 0.8, "dlrm_b+ncf affinity {b_ncf}");
+    }
+}

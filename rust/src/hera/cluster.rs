@@ -1,0 +1,339 @@
+//! Algorithm 2 — Hera's cluster-level scheduling.
+//!
+//! Step A: for every *low* worker-scalability model, allocate co-located
+//! servers until its target QPS is met, choosing the *high*-scalability
+//! partner with the highest co-location affinity each time.
+//! Step B: remaining high-scalability models get dedicated servers with
+//! maximum workers.
+//!
+//! The same machinery (pair evaluation, plan accounting) is reused by the
+//! baseline selection policies in `crate::baselines`.
+
+use crate::config::{ModelId, NodeConfig, N_MODELS};
+use crate::profiler::ProfileStore;
+use crate::server_sim::analytic::{solve, AnalyticTenant};
+
+use super::affinity::AffinityMatrix;
+
+/// One allocated server in a cluster plan.
+#[derive(Debug, Clone)]
+pub enum ServerAssignment {
+    /// Dedicated server: one model, max workers, whole LLC.
+    Solo { model: ModelId, workers: usize, qps: f64 },
+    /// Co-located pair with its node allocation and sustained QPS.
+    Pair {
+        a: ModelId,
+        b: ModelId,
+        workers: (usize, usize),
+        ways: (usize, usize),
+        qps: (f64, f64),
+    },
+}
+
+impl ServerAssignment {
+    /// QPS this server contributes to `m`.
+    pub fn qps_for(&self, m: ModelId) -> f64 {
+        match self {
+            ServerAssignment::Solo { model, qps, .. } if *model == m => *qps,
+            ServerAssignment::Pair { a, qps, .. } if *a == m => qps.0,
+            ServerAssignment::Pair { b, qps, .. } if *b == m => qps.1,
+            _ => 0.0,
+        }
+    }
+}
+
+/// The scheduler's output: server list + per-model serviced QPS.
+#[derive(Debug, Clone)]
+pub struct ClusterPlan {
+    pub servers: Vec<ServerAssignment>,
+    pub serviced: [f64; N_MODELS],
+}
+
+impl ClusterPlan {
+    pub fn num_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn meets(&self, targets: &[f64; N_MODELS]) -> bool {
+        self.serviced
+            .iter()
+            .zip(targets)
+            .all(|(s, t)| s + 1e-9 >= *t)
+    }
+}
+
+/// Co-location evaluation: node allocation + sustained QPS for a pair.
+///
+/// Initialization follows §VI-C: cores split evenly; if one model's OOM
+/// wall prevents it from using its half, the other model takes the idle
+/// cores.  Ways come from the Algorithm-1 best partition.  The pair's
+/// sustained QPS is the largest proportional scaling of the two models'
+/// standalone allocations that keeps *both* SLAs feasible.
+pub fn evaluate_pair(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    a: ModelId,
+    b: ModelId,
+) -> ServerAssignment {
+    let node = &store.node;
+    let (wa, wb) = split_cores(store, a, b);
+    let (ka, kb) = matrix.get(a, b).best_partition;
+
+    let qa0 = store.qps(a, wa, ka);
+    let qb0 = store.qps(b, wb, kb);
+
+    // Proportional joint scaling, validated with the coupled analytic model.
+    let feasible = |s: f64| -> bool {
+        let tenants = [
+            AnalyticTenant {
+                model: a,
+                workers: wa,
+                ways: ka,
+                arrival_qps: s * qa0,
+            },
+            AnalyticTenant {
+                model: b,
+                workers: wb,
+                ways: kb,
+                arrival_qps: s * qb0,
+            },
+        ];
+        solve(node, &tenants).tenants.iter().all(|t| t.feasible)
+    };
+    let mut lo = 0.0;
+    let mut hi = 1.0;
+    if qa0 > 0.0 || qb0 > 0.0 {
+        for _ in 0..12 {
+            let mid = 0.5 * (lo + hi);
+            if feasible(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+    }
+    ServerAssignment::Pair {
+        a,
+        b,
+        workers: (wa, wb),
+        ways: (ka, kb),
+        qps: (lo * qa0, lo * qb0),
+    }
+}
+
+/// Even core split with idle-core donation across the OOM wall.
+pub fn split_cores(store: &ProfileStore, a: ModelId, b: ModelId) -> (usize, usize) {
+    let cores = store.node.cores;
+    let half = cores / 2;
+    let cap_a = store.profile(a).max_workers;
+    let cap_b = store.profile(b).max_workers;
+    let mut wa = half.min(cap_a).max(1);
+    let mut wb = (cores - wa).min(cap_b).max(1);
+    // Donate leftover cores back to A if B could not absorb them.
+    wa = (cores - wb).min(cap_a).max(1);
+    wb = (cores - wa).min(cap_b).max(1);
+    (wa, wb)
+}
+
+/// Dedicated-server assignment (Algorithm 2 step B / DeepRecSys).
+pub fn evaluate_solo(store: &ProfileStore, m: ModelId) -> ServerAssignment {
+    let p = store.profile(m);
+    let workers = p.max_workers.min(store.node.cores).max(1);
+    ServerAssignment::Solo {
+        model: m,
+        workers,
+        qps: p.max_load(),
+    }
+}
+
+/// Hera's cluster scheduler (Algorithm 2).
+pub struct ClusterScheduler<'a> {
+    pub store: &'a ProfileStore,
+    pub matrix: &'a AffinityMatrix,
+    /// Safety valve against unreachable targets.
+    pub max_servers: usize,
+}
+
+impl<'a> ClusterScheduler<'a> {
+    pub fn new(store: &'a ProfileStore, matrix: &'a AffinityMatrix) -> Self {
+        ClusterScheduler {
+            store,
+            matrix,
+            max_servers: 100_000,
+        }
+    }
+
+    /// Allocate servers until every model's target QPS is serviced.
+    pub fn schedule(&self, targets: &[f64; N_MODELS]) -> anyhow::Result<ClusterPlan> {
+        let (low, high) = self.store.partition_by_scalability();
+        let mut plan = ClusterPlan {
+            servers: Vec::new(),
+            serviced: [0.0; N_MODELS],
+        };
+
+        // Step A: low-scalability models first, best-affinity partners.
+        for &mi in &low {
+            while plan.serviced[mi.index()] < targets[mi.index()] {
+                anyhow::ensure!(
+                    plan.servers.len() < self.max_servers,
+                    "server budget exhausted for {mi}"
+                );
+                // Only co-locate with partners that still need QPS: a
+                // zero-demand partner would waste the low model's other
+                // half of the machine (a dedicated max-worker server
+                // serves it strictly better).
+                let needy: Vec<ModelId> = high
+                    .iter()
+                    .copied()
+                    .filter(|m| plan.serviced[m.index()] < targets[m.index()])
+                    .collect();
+                if needy.is_empty() {
+                    let server = evaluate_solo(self.store, mi);
+                    let q = server.qps_for(mi);
+                    anyhow::ensure!(q > 0.0, "model {mi} has zero isolated max load");
+                    plan.serviced[mi.index()] += q;
+                    plan.servers.push(server);
+                    continue;
+                }
+                let mj = self
+                    .matrix
+                    .best_partner(mi, &needy)
+                    .ok_or_else(|| anyhow::anyhow!("no partner for {mi}"))?;
+                let server = evaluate_pair(self.store, self.matrix, mi, mj);
+                let (qi, qj) = match &server {
+                    ServerAssignment::Pair { qps, .. } => *qps,
+                    _ => unreachable!(),
+                };
+                anyhow::ensure!(qi > 0.0, "pair ({mi},{mj}) cannot serve {mi}");
+                plan.serviced[mi.index()] += qi;
+                plan.serviced[mj.index()] += qj;
+                plan.servers.push(server);
+            }
+        }
+
+        // Step B: dedicated servers for remaining high-scalability demand.
+        for &m in &high {
+            while plan.serviced[m.index()] < targets[m.index()] {
+                anyhow::ensure!(
+                    plan.servers.len() < self.max_servers,
+                    "server budget exhausted for {m}"
+                );
+                let server = evaluate_solo(self.store, m);
+                let q = server.qps_for(m);
+                anyhow::ensure!(q > 0.0, "model {m} has zero isolated max load");
+                plan.serviced[m.index()] += q;
+                plan.servers.push(server);
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Convenience: a target vector with every model at `frac` of its
+/// isolated max load per server times `servers_worth` (the Fig. 15 x-axis
+/// is expressed in units of aggregate cluster QPS).
+pub fn uniform_targets(store: &ProfileStore, qps_per_model: f64) -> [f64; N_MODELS] {
+    let _ = store;
+    [qps_per_model; N_MODELS]
+}
+
+/// Normalized targets: each model at `frac` of its isolated max load,
+/// times `n_units` servers' worth of demand.
+pub fn scaled_targets(store: &ProfileStore, frac: f64) -> [f64; N_MODELS] {
+    let mut t = [0.0; N_MODELS];
+    for id in ModelId::all() {
+        t[id.index()] = frac * store.profile(id).max_load();
+    }
+    t
+}
+
+/// Paper-default node helper for tests and examples.
+pub fn default_node() -> NodeConfig {
+    NodeConfig::paper_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NodeConfig;
+    use once_cell::sync::Lazy;
+
+    static STORE: Lazy<ProfileStore> =
+        Lazy::new(|| ProfileStore::build(&NodeConfig::paper_default()));
+    static MATRIX: Lazy<AffinityMatrix> = Lazy::new(|| AffinityMatrix::build(&STORE));
+
+    fn id(name: &str) -> ModelId {
+        ModelId::from_name(name).unwrap()
+    }
+
+    #[test]
+    fn split_cores_donates_idle_cores() {
+        // DLRM(B) can host only 8 workers; NCF takes the rest.
+        let (wb, wn) = split_cores(&STORE, id("dlrm_b"), id("ncf"));
+        assert_eq!(wb, 8);
+        assert_eq!(wn, 8);
+        // Two small models split evenly.
+        let (wa, wd) = split_cores(&STORE, id("din"), id("wnd"));
+        assert_eq!(wa + wd, 16);
+        assert_eq!(wa, 8);
+    }
+
+    #[test]
+    fn pair_evaluation_produces_positive_qps() {
+        let s = evaluate_pair(&STORE, &MATRIX, id("dlrm_d"), id("ncf"));
+        if let ServerAssignment::Pair { qps, ways, .. } = &s {
+            assert!(qps.0 > 0.0 && qps.1 > 0.0);
+            assert_eq!(ways.0 + ways.1, STORE.node.llc_ways);
+        } else {
+            panic!("expected pair");
+        }
+    }
+
+    #[test]
+    fn schedule_meets_targets() {
+        let targets = scaled_targets(&STORE, 2.5);
+        let plan = ClusterScheduler::new(&STORE, &MATRIX)
+            .schedule(&targets)
+            .unwrap();
+        assert!(plan.meets(&targets));
+        assert!(plan.num_servers() > 0);
+    }
+
+    #[test]
+    fn low_models_get_colocated_servers() {
+        let targets = scaled_targets(&STORE, 1.0);
+        let plan = ClusterScheduler::new(&STORE, &MATRIX)
+            .schedule(&targets)
+            .unwrap();
+        let has_pair_with_b = plan.servers.iter().any(|s| {
+            matches!(s, ServerAssignment::Pair { a, b, .. }
+                if *a == id("dlrm_b") || *b == id("dlrm_b"))
+        });
+        assert!(has_pair_with_b, "DLRM(B) must be deployed co-located");
+    }
+
+    #[test]
+    fn zero_targets_need_zero_servers() {
+        let plan = ClusterScheduler::new(&STORE, &MATRIX)
+            .schedule(&[0.0; N_MODELS])
+            .unwrap();
+        assert_eq!(plan.num_servers(), 0);
+    }
+
+    #[test]
+    fn serviced_accounting_matches_server_list() {
+        let targets = scaled_targets(&STORE, 1.5);
+        let plan = ClusterScheduler::new(&STORE, &MATRIX)
+            .schedule(&targets)
+            .unwrap();
+        for m in ModelId::all() {
+            let from_servers: f64 =
+                plan.servers.iter().map(|s| s.qps_for(m)).sum();
+            assert!(
+                (from_servers - plan.serviced[m.index()]).abs() < 1e-6,
+                "{m}: {from_servers} vs {}",
+                plan.serviced[m.index()]
+            );
+        }
+    }
+}

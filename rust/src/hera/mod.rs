@@ -1,0 +1,20 @@
+//! Hera proper — the paper's contribution:
+//!
+//! * [`affinity`] — **Algorithm 1**: the analytical co-location affinity
+//!   model (CoAff_LLC from the profiled LLC-sensitivity tables,
+//!   CoAff_DRAM from profiled bandwidth demands, system affinity =
+//!   min of the two) and the full pairwise matrix of Fig. 10(a).
+//! * [`cluster`] — **Algorithm 2**: the cluster-level model selection /
+//!   server allocation scheduler (low-scalability models first, paired
+//!   with their highest-affinity high-scalability partner).
+//! * [`rmu`] — **Algorithm 3**: the node-level resource management unit —
+//!   the monitor-and-adjust feedback loop with urgency-scaled worker
+//!   provisioning and lookup-table LLC repartitioning.
+
+pub mod affinity;
+pub mod cluster;
+pub mod rmu;
+
+pub use affinity::{AffinityMatrix, CoAff};
+pub use cluster::{ClusterPlan, ClusterScheduler, ServerAssignment};
+pub use rmu::HeraRmu;

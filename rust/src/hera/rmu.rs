@@ -1,0 +1,307 @@
+//! Algorithm 3 — Hera's node-level resource management unit (RMU).
+//!
+//! Every T_monitor the RMU reads each co-located model's tail latency,
+//! QPS and arrival rate, computes the SLA slack, and when a model is
+//! under-provisioned (slack > 1.0) or over-provisioned (slack < 0.8):
+//!
+//! * `adjust_workers` — looks up the minimum worker count that sustains
+//!   `urgency x observed traffic` in the profiled scalability table
+//!   (urgency = tail/SLA when violating, else 1 — the paper's mechanism
+//!   for absorbing sudden load spikes);
+//! * `adjust_LLC_partition` — re-evaluates every CAT split against the
+//!   3-D QPS[model][workers][ways] table and applies the argmax.
+//!
+//! Implemented as a [`Controller`] so it plugs straight into the
+//! discrete-event simulation (and mirrors how the real coordinator calls
+//! it between batches).
+
+use crate::config::ModelId;
+use crate::node::enumerate_partitions;
+use crate::profiler::ProfileStore;
+use crate::server_sim::{AllocChange, Controller, TenantStats};
+
+/// Slack band: outside [LOW, HIGH] triggers adjustment (paper defaults).
+const SLACK_HIGH: f64 = 1.0;
+const SLACK_LOW: f64 = 0.8;
+
+/// Hera node-level RMU for a two-tenant (or single-tenant) node.
+pub struct HeraRmu<'a> {
+    store: &'a ProfileStore,
+    /// Headroom multiplier on observed traffic when sizing workers.
+    headroom: f64,
+    /// History of (time, tenant, workers, ways) decisions (for Fig. 13/14).
+    pub decisions: Vec<(f64, usize, usize, usize)>,
+}
+
+impl<'a> HeraRmu<'a> {
+    pub fn new(store: &'a ProfileStore) -> Self {
+        HeraRmu {
+            store,
+            headroom: 1.15,
+            decisions: Vec::new(),
+        }
+    }
+
+    /// `adjust_workers` (Algorithm 3 line 18): minimum workers sustaining
+    /// the urgency-scaled traffic at the tenant's current way allocation.
+    fn adjust_workers(&self, model: ModelId, ways: usize, stats: &TenantStats) -> usize {
+        let sla_s = model.spec().sla_ms / 1e3;
+        let slack = stats.window_p95_s / sla_s;
+        // Urgency scales the observed traffic when violating (paper line
+        // 19-23); capped so a deeply backlogged window cannot demand the
+        // whole machine in one step (over-provisioning is corrected by the
+        // next monitor phase anyway, per the paper).
+        let urgency = slack.clamp(1.0, 3.0);
+        let adjusted_traffic = urgency * stats.window_arrival_qps * self.headroom;
+        let profile = self.store.profile(model);
+        profile
+            .find_number_of_workers(ways, adjusted_traffic)
+            // Target unreachable: give everything the model can use.
+            .unwrap_or(profile.max_workers)
+            .max(1)
+    }
+
+    /// `adjust_LLC_partition` (Algorithm 3 line 28): argmax of aggregate
+    /// QPS over all CAT partitions at the *new* worker counts.
+    fn adjust_partition(&self, a: (ModelId, usize), b: (ModelId, usize)) -> (usize, usize) {
+        let total = self.store.node.llc_ways;
+        let pa = self.store.profile(a.0);
+        let pb = self.store.profile(b.0);
+        let mut best = (total / 2, total - total / 2);
+        let mut best_qps = -1.0;
+        for part in enumerate_partitions(total) {
+            let q = pa.qps_at(a.1, part.ways_a) + pb.qps_at(b.1, part.ways_b);
+            if q > best_qps {
+                best_qps = q;
+                best = (part.ways_a, part.ways_b);
+            }
+        }
+        best
+    }
+}
+
+impl Controller for HeraRmu<'_> {
+    fn on_monitor(&mut self, now: f64, stats: &[TenantStats]) -> Vec<AllocChange> {
+        // Compute desired workers per tenant where the slack band triggers.
+        let mut desired: Vec<usize> = stats.iter().map(|s| s.workers).collect();
+        let mut any_change = false;
+        for (i, s) in stats.iter().enumerate() {
+            if s.window_completed == 0 && s.queue_depth == 0 {
+                continue; // idle tenant, nothing to learn
+            }
+            let sla_s = s.model.spec().sla_ms / 1e3;
+            let slack = s.window_p95_s / sla_s;
+            if slack > SLACK_HIGH || slack < SLACK_LOW {
+                let w = self.adjust_workers(s.model, s.ways, s);
+                if w != s.workers {
+                    desired[i] = w;
+                    any_change = true;
+                }
+            }
+        }
+        if !any_change {
+            return Vec::new();
+        }
+
+        // Arbitrate the core budget: if over-subscribed, shrink every
+        // tenant proportionally (stable — avoids the flip-flop a
+        // winner-takes-all trim would cause between two violating models).
+        let cores = self.store.node.cores;
+        let total: usize = desired.iter().sum();
+        if total > cores {
+            let scale = cores as f64 / total as f64;
+            for w in desired.iter_mut() {
+                *w = ((*w as f64 * scale).floor() as usize).max(1);
+            }
+            // Distribute any cores freed by flooring to the largest asker.
+            let mut sum: usize = desired.iter().sum();
+            while sum < cores {
+                if let Some(w) = desired.iter_mut().max() {
+                    *w += 1;
+                }
+                sum += 1;
+            }
+        }
+
+        // Re-partition the LLC for the new worker counts (two-tenant node).
+        let mut changes = Vec::new();
+        if stats.len() == 2 {
+            let (ka, kb) = self.adjust_partition(
+                (stats[0].model, desired[0]),
+                (stats[1].model, desired[1]),
+            );
+            for (i, (w, k)) in [(desired[0], ka), (desired[1], kb)].iter().enumerate() {
+                if *w != stats[i].workers || *k != stats[i].ways {
+                    self.decisions.push((now, i, *w, *k));
+                    changes.push(AllocChange {
+                        tenant: i,
+                        workers: *w,
+                        ways: *k,
+                    });
+                }
+            }
+        } else {
+            for (i, w) in desired.iter().enumerate() {
+                if *w != stats[i].workers {
+                    self.decisions.push((now, i, *w, stats[i].ways));
+                    changes.push(AllocChange {
+                        tenant: i,
+                        workers: *w,
+                        ways: stats[i].ways,
+                    });
+                }
+            }
+        }
+        changes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NodeConfig;
+    use crate::server_sim::{NullController, SimulatedTenant, Simulation};
+    use once_cell::sync::Lazy;
+
+    static STORE: Lazy<ProfileStore> =
+        Lazy::new(|| ProfileStore::build(&NodeConfig::paper_default()));
+
+    fn id(name: &str) -> ModelId {
+        ModelId::from_name(name).unwrap()
+    }
+
+    fn stats(
+        model: ModelId,
+        workers: usize,
+        ways: usize,
+        p95_s: f64,
+        qps: f64,
+    ) -> TenantStats {
+        TenantStats {
+            model,
+            workers,
+            ways,
+            window_p95_s: p95_s,
+            window_completed: 100,
+            window_arrival_qps: qps,
+            queue_depth: 0,
+        }
+    }
+
+    #[test]
+    fn no_change_inside_slack_band() {
+        let mut rmu = HeraRmu::new(&STORE);
+        // slack 0.9: inside [0.8, 1.0] — keep allocation.
+        let s = vec![stats(id("din"), 8, 6, 0.09, 1000.0)];
+        assert!(rmu.on_monitor(1.0, &s).is_empty());
+    }
+
+    #[test]
+    fn violation_grows_workers() {
+        let mut rmu = HeraRmu::new(&STORE);
+        // din at 2 workers, heavily violating (p95 = 2x SLA), traffic high.
+        let s = vec![
+            stats(id("din"), 2, 6, 0.200, 8000.0),
+            stats(id("dlrm_d"), 12, 5, 0.050, 10.0),
+        ];
+        let changes = rmu.on_monitor(1.0, &s);
+        let din_change = changes.iter().find(|c| c.tenant == 0).expect("din grows");
+        assert!(din_change.workers > 2, "got {}", din_change.workers);
+    }
+
+    #[test]
+    fn overprovision_shrinks_workers() {
+        let mut rmu = HeraRmu::new(&STORE);
+        // din at 16 workers with tiny slack usage (p95 far below SLA band).
+        let s = vec![
+            stats(id("din"), 14, 6, 0.001, 50.0),
+            stats(id("ncf"), 2, 5, 0.004, 100.0),
+        ];
+        let changes = rmu.on_monitor(1.0, &s);
+        if let Some(c) = changes.iter().find(|c| c.tenant == 0) {
+            assert!(c.workers < 14, "should shrink, got {}", c.workers);
+        } else {
+            panic!("expected a shrink decision");
+        }
+    }
+
+    #[test]
+    fn core_budget_respected() {
+        let mut rmu = HeraRmu::new(&STORE);
+        // Both tenants violating hard and asking for many workers.
+        let s = vec![
+            stats(id("ncf"), 8, 5, 0.050, 20_000.0),
+            stats(id("din"), 8, 6, 1.000, 50_000.0),
+        ];
+        let changes = rmu.on_monitor(1.0, &s);
+        let mut w = [8usize, 8usize];
+        for c in &changes {
+            w[c.tenant] = c.workers;
+        }
+        assert!(w[0] + w[1] <= STORE.node.cores, "{w:?}");
+    }
+
+    #[test]
+    fn cache_sensitive_partner_gets_more_ways() {
+        let mut rmu = HeraRmu::new(&STORE);
+        // NCF (cache-sensitive) violating, DLRM(D) (insensitive) fine.
+        let s = vec![
+            stats(id("ncf"), 4, 2, 0.010, 5000.0),
+            stats(id("dlrm_d"), 12, 9, 0.050, 100.0),
+        ];
+        let changes = rmu.on_monitor(1.0, &s);
+        let ncf = changes.iter().find(|c| c.tenant == 0).expect("ncf adjusts");
+        assert!(
+            ncf.ways >= 6,
+            "cache-sensitive NCF should win most ways, got {}",
+            ncf.ways
+        );
+    }
+
+    #[test]
+    fn rmu_keeps_sla_in_simulation() {
+        // End-to-end: start under-provisioned; the RMU must converge to an
+        // allocation that meets both SLAs at moderate load.
+        let node = NodeConfig::paper_default();
+        let d = id("dlrm_d");
+        let n = id("ncf");
+        let tenants = [
+            SimulatedTenant {
+                model: d,
+                workers: 2,
+                ways: 5,
+                arrival_qps: 0.4 * STORE.profile(d).max_load(),
+            },
+            SimulatedTenant {
+                model: n,
+                workers: 2,
+                ways: 6,
+                arrival_qps: 0.4 * STORE.profile(n).max_load(),
+            },
+        ];
+        let mut rmu = HeraRmu::new(&STORE);
+        let mut sim = Simulation::new(node.clone(), &tenants, 11);
+        sim.set_monitor_interval(0.5);
+        let out = sim.run(30.0, 10.0, &mut rmu);
+        for o in &out {
+            let sla_s = o.model.spec().sla_ms / 1e3;
+            assert!(
+                o.p95_s <= 1.6 * sla_s,
+                "{}: post-convergence p95 {}s vs SLA {}s",
+                o.model.name(),
+                o.p95_s,
+                sla_s
+            );
+        }
+
+        // And it must outperform the static under-provisioned config.
+        let mut static_sim = Simulation::new(node, &tenants, 11);
+        let static_out = static_sim.run(30.0, 10.0, &mut NullController);
+        assert!(
+            out[1].p95_s < static_out[1].p95_s,
+            "RMU ({}) should beat static ({}) for NCF",
+            out[1].p95_s,
+            static_out[1].p95_s
+        );
+    }
+}

@@ -1,0 +1,238 @@
+//! Minimal HTTP/1.1 frontend for the coordinator — the paper's inference
+//! servers receive client queries "through the NIC over an HTTP/REST
+//! protocol" (§VI-B).  One endpoint:
+//!
+//!   POST /infer?model=<name>&batch=<n>     body ignored (synthetic inputs)
+//!   GET  /stats?model=<name>               JSON tenant snapshot
+//!   GET  /healthz                          liveness
+//!
+//! The paper also observes that network bandwidth is never the bottleneck
+//! (< 1.9 Gbps of 10 Gbps); this frontend exists to complete the serving
+//! architecture, not to carry tensor payloads — queries reference
+//! deterministic synthetic inputs by id, as DeepRecInfra's load generator
+//! does.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::Coordinator;
+use crate::json::Value;
+
+/// A running HTTP frontend.
+pub struct HttpFront {
+    addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl HttpFront {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve requests routed to
+    /// `coord` on a dedicated acceptor thread.
+    pub fn start(addr: &str, coord: Arc<Coordinator>) -> anyhow::Result<HttpFront> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stop = shutdown.clone();
+        let handle = std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let c = coord.clone();
+                        // One thread per connection: connection counts in
+                        // this serving architecture are small (the load
+                        // balancer fans in), so this stays simple.
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, &c);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(HttpFront {
+            addr: local,
+            shutdown,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: &Coordinator) -> anyhow::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // connection closed
+        }
+        let mut parts = line.split_whitespace();
+        let method = parts.next().unwrap_or("").to_string();
+        let target = parts.next().unwrap_or("").to_string();
+        // Drain headers; track content-length and keep-alive.
+        let mut content_length = 0usize;
+        let mut keep_alive = true;
+        loop {
+            let mut h = String::new();
+            if reader.read_line(&mut h)? == 0 {
+                return Ok(());
+            }
+            let h = h.trim();
+            if h.is_empty() {
+                break;
+            }
+            let lower = h.to_ascii_lowercase();
+            if let Some(v) = lower.strip_prefix("content-length:") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+            if lower == "connection: close" {
+                keep_alive = false;
+            }
+        }
+        // Drain the body (synthetic inputs are referenced, not carried).
+        if content_length > 0 {
+            let mut body = vec![0u8; content_length.min(1 << 20)];
+            reader.read_exact(&mut body)?;
+        }
+
+        let (status, payload) = route(&method, &target, coord);
+        let mut out = stream.try_clone()?;
+        let body = payload.to_string();
+        write!(
+            out,
+            "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
+            body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+            body
+        )?;
+        out.flush()?;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+fn query_param<'a>(target: &'a str, key: &str) -> Option<&'a str> {
+    let q = target.split_once('?')?.1;
+    q.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then_some(v)
+    })
+}
+
+fn route(method: &str, target: &str, coord: &Coordinator) -> (&'static str, Value) {
+    let path = target.split('?').next().unwrap_or("");
+    match (method, path) {
+        ("GET", "/healthz") => {
+            let mut v = Value::object();
+            v.set("ok", true)
+                .set("uptime_s", coord.uptime().as_secs_f64());
+            ("200 OK", v)
+        }
+        ("GET", "/stats") => {
+            let Some(model) = query_param(target, "model") else {
+                return bad_request("missing ?model=");
+            };
+            match coord.snapshot(model) {
+                Ok(s) => {
+                    let mut v = Value::object();
+                    v.set("model", s.model.as_str())
+                        .set("workers", s.workers)
+                        .set("completed", s.completed as usize)
+                        .set("p50_ms", s.p50_ms)
+                        .set("p95_ms", s.p95_ms)
+                        .set("p99_ms", s.p99_ms)
+                        .set("violation_rate", s.violation_rate)
+                        .set("queue_depth", s.queue_depth);
+                    ("200 OK", v)
+                }
+                Err(e) => bad_request(&e.to_string()),
+            }
+        }
+        ("POST", "/infer") => {
+            let Some(model) = query_param(target, "model") else {
+                return bad_request("missing ?model=");
+            };
+            let batch: usize = query_param(target, "batch")
+                .and_then(|b| b.parse().ok())
+                .unwrap_or(16);
+            if batch == 0 || batch > 1024 {
+                return bad_request("batch must be in 1..=1024");
+            }
+            match coord.submit_synthetic(model, batch) {
+                Ok(()) => {
+                    let mut v = Value::object();
+                    v.set("accepted", true).set("batch", batch);
+                    ("202 Accepted", v)
+                }
+                Err(e) => bad_request(&e.to_string()),
+            }
+        }
+        _ => {
+            let mut v = Value::object();
+            v.set("error", "not found");
+            ("404 Not Found", v)
+        }
+    }
+}
+
+fn bad_request(msg: &str) -> (&'static str, Value) {
+    let mut v = Value::object();
+    v.set("error", msg);
+    ("400 Bad Request", v)
+}
+
+/// Tiny blocking HTTP client for tests and examples.
+pub fn http_request(addr: std::net::SocketAddr, method: &str, target: &str) -> anyhow::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "{method} {target} HTTP/1.1\r\nHost: hera\r\nConnection: close\r\n\r\n"
+    )?;
+    stream.flush()?;
+    let mut buf = String::new();
+    BufReader::new(stream).read_to_string(&mut buf)?;
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("bad response: {buf:.60}"))?;
+    let body = buf
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_param_parsing() {
+        assert_eq!(query_param("/infer?model=ncf&batch=8", "model"), Some("ncf"));
+        assert_eq!(query_param("/infer?model=ncf&batch=8", "batch"), Some("8"));
+        assert_eq!(query_param("/infer?model=ncf", "batch"), None);
+        assert_eq!(query_param("/infer", "model"), None);
+    }
+
+    // Full loop tests (bind, POST /infer, GET /stats) live in
+    // rust/tests/integration_runtime.rs where an Engine is available.
+}

@@ -1,0 +1,75 @@
+//! Minimal JSON substrate (serde is unavailable in the offline vendor set).
+//!
+//! Covers the full JSON grammar needed by `artifacts/manifest.json`, the
+//! profiler lookup-table files and the figure-harness outputs: objects,
+//! arrays, strings with escapes, numbers, booleans, null.
+
+mod parse;
+mod value;
+
+pub use parse::{parse, ParseError};
+pub use value::Value;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_nested() {
+        let src = r#"{"a":[1,2.5,-3e2],"b":{"c":"x\ny","d":true,"e":null}}"#;
+        let v = parse(src).unwrap();
+        let re = parse(&v.to_string()).unwrap();
+        assert_eq!(v, re);
+    }
+
+    #[test]
+    fn parse_manifest_shape() {
+        let src = r#"{
+            "version": 1,
+            "models": {"ncf": {"sla_ms": 5.0, "params": [
+                {"name": "emb.0", "shape": [2048, 64], "seed": 123, "scale": 0.125}
+            ]}}
+        }"#;
+        let v = parse(src).unwrap();
+        let m = v.get("models").unwrap().get("ncf").unwrap();
+        assert_eq!(m.get("sla_ms").unwrap().as_f64().unwrap(), 5.0);
+        let p0 = &m.get("params").unwrap().as_array().unwrap()[0];
+        assert_eq!(p0.get("name").unwrap().as_str().unwrap(), "emb.0");
+        let shape: Vec<i64> = p0
+            .get("shape")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap())
+            .collect();
+        assert_eq!(shape, vec![2048, 64]);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#""a\"b\\cA\t""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\"b\\cA\t");
+        // And the writer escapes them back.
+        let out = v.to_string();
+        let back = parse(&out).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("nul").is_err());
+        assert!(parse(r#"{"a": }"#).is_err());
+        assert!(parse("1 2").is_err());
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(parse("42").unwrap().as_i64(), Some(42));
+        assert_eq!(parse("-7").unwrap().as_i64(), Some(-7));
+        assert_eq!(parse("2.5e3").unwrap().as_f64(), Some(2500.0));
+        assert_eq!(parse("0.125").unwrap().as_f64(), Some(0.125));
+    }
+}

@@ -1,0 +1,36 @@
+//! # Hera — heterogeneity-aware multi-tenant recommendation inference
+//!
+//! Reproduction of *"Hera: A Heterogeneity-Aware Multi-Tenant Inference
+//! Server for Personalized Recommendations"* (Choi, Kim, Rhu; 2023) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time)**: `python/compile/` lowers the eight Table-I
+//!   recommendation models (with Pallas SLS + interaction kernels) to HLO
+//!   text artifacts.
+//! * **L3 (this crate)**: the Hera system itself — co-location affinity
+//!   (Algorithm 1), the cluster scheduler (Algorithm 2), the node-level
+//!   resource management unit (Algorithm 3) — plus the substrates it
+//!   needs: an analytical CPU-node model, a discrete-event multi-tenant
+//!   server simulator, profiling tables, baselines (DeepRecSys, Random,
+//!   PARTIES) and a real serving path over PJRT-loaded artifacts.
+//!
+//! See DESIGN.md for the system inventory and the per-figure experiment
+//! index; EXPERIMENTS.md records reproduced results.
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod hera;
+pub mod httpfront;
+pub mod json;
+pub mod metrics;
+pub mod node;
+pub mod rng;
+pub mod runtime;
+pub mod profiler;
+pub mod server_sim;
+pub mod simkernel;
+pub mod testutil;

@@ -1,0 +1,306 @@
+//! `hera` — CLI for the Hera reproduction.
+//!
+//! Subcommands:
+//!   figures   regenerate the paper's tables/figures into results/
+//!   profile   build + save the offline profiling tables
+//!   golden    verify every model's python-vs-rust numeric golden
+//!   serve     run the real PJRT serving path under Poisson load
+//!   simulate  run one co-location scenario in the discrete-event sim
+//!   cluster   run the cluster scheduler for a target QPS level
+//!   bench-engine  measure per-model PJRT inference latency
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use hera::baselines::SelectionPolicy;
+use hera::cli::Args;
+use hera::config::{ModelId, NodeConfig, N_MODELS};
+use hera::coordinator::{run_load, Coordinator, LoadGenSpec, TenantConfig};
+use hera::figures::FigureContext;
+use hera::hera::AffinityMatrix;
+use hera::profiler::ProfileStore;
+use hera::runtime::{manifest::default_artifact_dir, Engine};
+use hera::server_sim::{NullController, SimulatedTenant, Simulation};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "figures" => cmd_figures(&args),
+        "profile" => cmd_profile(&args),
+        "golden" => cmd_golden(&args),
+        "serve" => cmd_serve(&args),
+        "simulate" => cmd_simulate(&args),
+        "cluster" => cmd_cluster(&args),
+        "bench-engine" => cmd_bench_engine(&args),
+        "" | "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown subcommand {other:?}"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "hera — heterogeneity-aware multi-tenant recommendation inference (reproduction)
+
+USAGE: hera <subcommand> [flags]
+
+  figures  [--fig ID|--all] [--out DIR] [--fast]   regenerate paper figures
+  profile  [--out FILE]                            build + save profiling tables
+  golden                                           verify python<->rust numerics
+  serve    --models a,b --workers n,m --qps x,y [--secs S] [--http 127.0.0.1:8080]
+  simulate --models a,b --workers n,m --ways p,q --qps x,y [--secs S]
+  cluster  [--target QPS] [--policy name]          run the cluster scheduler
+  bench-engine [--models a,b] [--batch B] [--iters N]"
+    );
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let out = Path::new(args.get_or("out", "results"));
+    let ctx = FigureContext::new(out, args.has("fast"));
+    match args.get("fig") {
+        Some(id) => ctx.run(id),
+        None => ctx.run_all(),
+    }
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let store = ProfileStore::build(&NodeConfig::paper_default());
+    let out = Path::new(args.get_or("out", "results/profile.json"));
+    if let Some(parent) = out.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    store.save(out)?;
+    let (low, high) = store.partition_by_scalability();
+    println!("profiled 8 models -> {}", out.display());
+    println!(
+        "low scalability:  {}",
+        low.iter().map(|m| m.name()).collect::<Vec<_>>().join(", ")
+    );
+    println!(
+        "high scalability: {}",
+        high.iter().map(|m| m.name()).collect::<Vec<_>>().join(", ")
+    );
+    for id in ModelId::all() {
+        println!(
+            "  {:8} max_load {:9.1} QPS  max_workers {:2}",
+            id.name(),
+            store.profile(id).max_load(),
+            store.profile(id).max_workers
+        );
+    }
+    Ok(())
+}
+
+fn cmd_golden(_args: &Args) -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    let engine = Engine::load(&dir, None, Some(&[16]))?;
+    for model in engine.model_names() {
+        let err = engine.verify_golden(model)?;
+        println!("{model:8} OK (max abs err {err:.2e})");
+    }
+    println!("all goldens verified");
+    Ok(())
+}
+
+fn parse_tenants(args: &Args) -> anyhow::Result<Vec<(String, usize, f64)>> {
+    let models = args
+        .get_list("models")
+        .ok_or_else(|| anyhow::anyhow!("--models is required"))?;
+    let workers: Vec<usize> = args
+        .get_list("workers")
+        .unwrap_or_else(|| vec!["4".into(); models.len()])
+        .iter()
+        .map(|w| w.parse().unwrap_or(4))
+        .collect();
+    let qps: Vec<f64> = args
+        .get_list("qps")
+        .unwrap_or_else(|| vec!["50".into(); models.len()])
+        .iter()
+        .map(|q| q.parse().unwrap_or(50.0))
+        .collect();
+    anyhow::ensure!(
+        workers.len() == models.len() && qps.len() == models.len(),
+        "--workers/--qps must match --models"
+    );
+    Ok(models
+        .into_iter()
+        .zip(workers)
+        .zip(qps)
+        .map(|((m, w), q)| (m, w, q))
+        .collect())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let tenants = parse_tenants(args)?;
+    let secs = args.get_f64("secs", 10.0)?;
+    let dir = default_artifact_dir();
+    let names: Vec<&str> = tenants.iter().map(|(m, _, _)| m.as_str()).collect();
+    println!("loading engine ({} models)...", names.len());
+    let engine = Arc::new(Engine::load(&dir, Some(&names), None)?);
+    let coord = Coordinator::start(
+        engine,
+        &tenants
+            .iter()
+            .map(|(m, w, _)| TenantConfig {
+                model: m.clone(),
+                workers: *w,
+                sla_ms: None,
+            })
+            .collect::<Vec<_>>(),
+    )?;
+    let specs: Vec<LoadGenSpec> = tenants
+        .iter()
+        .map(|(m, _, q)| LoadGenSpec {
+            model: m.clone(),
+            arrival_qps: *q,
+            max_batch: 256,
+        })
+        .collect();
+    // Optional HTTP frontend (paper §VI-B: queries arrive over HTTP/REST).
+    let coord = Arc::new(coord);
+    let front = match args.get("http") {
+        Some(addr) => {
+            let f = hera::httpfront::HttpFront::start(addr, coord.clone())?;
+            println!("HTTP frontend on http://{}", f.addr());
+            Some(f)
+        }
+        None => None,
+    };
+    println!("serving for {secs:.0}s...");
+    let reports = run_load(&coord, &specs, Duration::from_secs_f64(secs), 42)?;
+    println!(
+        "{:8} {:>8} {:>10} {:>9} {:>9} {:>9} {:>7}",
+        "model", "queries", "qps", "p50(ms)", "p95(ms)", "p99(ms)", "viol%"
+    );
+    for r in &reports {
+        println!(
+            "{:8} {:>8} {:>10.1} {:>9.2} {:>9.2} {:>9.2} {:>6.2}%",
+            r.model,
+            r.completed,
+            r.achieved_qps,
+            r.p50_ms,
+            r.p95_ms,
+            r.p99_ms,
+            100.0 * r.violation_rate
+        );
+    }
+    if let Some(f) = front {
+        f.stop();
+    }
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown(),
+        Err(_) => {} // frontend connections may still hold a reference
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let tenants = parse_tenants(args)?;
+    let ways: Vec<usize> = args
+        .get_list("ways")
+        .unwrap_or_else(|| vec!["5".into(); tenants.len()])
+        .iter()
+        .map(|w| w.parse().unwrap_or(5))
+        .collect();
+    let secs = args.get_f64("secs", 20.0)?;
+    let node = NodeConfig::paper_default();
+    let sim_tenants: Vec<SimulatedTenant> = tenants
+        .iter()
+        .zip(&ways)
+        .map(|((m, w, q), k)| {
+            Ok(SimulatedTenant {
+                model: ModelId::from_name(m)
+                    .ok_or_else(|| anyhow::anyhow!("unknown model {m}"))?,
+                workers: *w,
+                ways: *k,
+                arrival_qps: *q,
+            })
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let mut sim = Simulation::new(node, &sim_tenants, 42);
+    let out = sim.run(secs, secs * 0.2, &mut NullController);
+    for o in &out {
+        println!(
+            "{:8} qps {:8.1}  p95 {:7.2} ms (SLA {:.0} ms)  bw-util {:4.1}%  miss {:4.1}%",
+            o.model.name(),
+            o.qps,
+            o.p95_s * 1e3,
+            o.model.spec().sla_ms,
+            100.0 * o.avg_bw_util,
+            100.0 * o.miss_rate
+        );
+    }
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
+    let target = args.get_f64("target", 1000.0)?;
+    let policy = match args.get_or("policy", "hera") {
+        "deeprecsys" => SelectionPolicy::DeepRecSys,
+        "random" => SelectionPolicy::Random,
+        "hera-random" => SelectionPolicy::HeraRandom,
+        _ => SelectionPolicy::Hera,
+    };
+    let store = ProfileStore::build(&NodeConfig::paper_default());
+    let matrix = AffinityMatrix::build(&store);
+    let targets = [target; N_MODELS];
+    let t0 = std::time::Instant::now();
+    let plan = policy.schedule(&store, &matrix, &targets, 42)?;
+    println!(
+        "{}: {} servers for {target:.0} QPS/model (scheduled in {:.1} ms)",
+        policy.name(),
+        plan.num_servers(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    for (i, s) in plan.servers.iter().enumerate().take(20) {
+        match s {
+            hera::hera::ServerAssignment::Solo { model, workers, qps } => {
+                println!("  [{i:3}] solo {model} ({workers} workers, {qps:.0} QPS)")
+            }
+            hera::hera::ServerAssignment::Pair { a, b, workers, ways, qps } => println!(
+                "  [{i:3}] pair {a}({}w/{}k {:.0}qps) + {b}({}w/{}k {:.0}qps)",
+                workers.0, ways.0, qps.0, workers.1, ways.1, qps.1
+            ),
+        }
+    }
+    if plan.num_servers() > 20 {
+        println!("  ... {} more", plan.num_servers() - 20);
+    }
+    Ok(())
+}
+
+fn cmd_bench_engine(args: &Args) -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    let models = args
+        .get_list("models")
+        .unwrap_or_else(|| vec!["ncf".into(), "din".into(), "dlrm_a".into()]);
+    let batch = args.get_usize("batch", 64)?;
+    let iters = args.get_usize("iters", 30)?;
+    let names: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+    let engine = Engine::load(&dir, Some(&names), None)?;
+    for m in &models {
+        let t = engine.measure(m, batch, iters)?;
+        println!(
+            "{m:8} batch {batch:4}: {:8.3} ms/query  ({:8.1} items/s)",
+            t * 1e3,
+            batch as f64 / t
+        );
+    }
+    Ok(())
+}

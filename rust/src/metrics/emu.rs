@@ -1,0 +1,88 @@
+//! Effective Machine Utilization (paper §VII-A1, following PARTIES/CLITE):
+//! the max aggregate load of all co-located models, each expressed as a
+//! percentage of its isolated-execution *max load*.  Can exceed 100% when
+//! co-location bin-packs shared resources well.
+
+/// EMU for one co-location configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EmuStat {
+    /// Sum over co-located models of (sustained load / isolated max load), in percent.
+    pub emu_percent: f64,
+}
+
+/// Compute EMU from (sustained, isolated-max) load pairs.
+///
+/// `loads` holds one entry per co-located model: the load it sustains
+/// under co-location and its max load in isolation (same units, e.g. QPS
+/// or items/s).  A single-model entry at its own max load yields 100%.
+pub fn emu_percent(loads: &[(f64, f64)]) -> f64 {
+    loads
+        .iter()
+        .map(|&(sustained, max)| {
+            assert!(max > 0.0, "isolated max load must be positive");
+            100.0 * sustained / max
+        })
+        .sum()
+}
+
+/// Distribution summary used for the Fig. 11 violin rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EmuDistribution {
+    pub min: f64,
+    pub median: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub values: Vec<f64>,
+}
+
+impl EmuDistribution {
+    pub fn from_values(mut values: Vec<f64>) -> Self {
+        assert!(!values.is_empty());
+        values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = values.len();
+        let median = if n % 2 == 1 {
+            values[n / 2]
+        } else {
+            0.5 * (values[n / 2 - 1] + values[n / 2])
+        };
+        let mean = values.iter().sum::<f64>() / n as f64;
+        Self {
+            min: values[0],
+            median,
+            max: values[n - 1],
+            mean,
+            values,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isolated_model_is_100() {
+        assert!((emu_percent(&[(50.0, 50.0)]) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn colocated_pair_sums() {
+        // Paper Fig. 12 example: DLRM(D)@50% + NCF@80% = 130% EMU.
+        let emu = emu_percent(&[(0.5, 1.0), (0.8, 1.0)]);
+        assert!((emu - 130.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn distribution_summary() {
+        let d = EmuDistribution::from_values(vec![110.0, 100.0, 147.0, 82.0]);
+        assert_eq!(d.min, 82.0);
+        assert_eq!(d.max, 147.0);
+        assert!((d.median - 105.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_max_load() {
+        emu_percent(&[(1.0, 0.0)]);
+    }
+}

@@ -1,0 +1,177 @@
+//! Latency statistics: exact percentiles over a bounded sample buffer.
+//!
+//! The paper measures 95th-percentile tail latency against each model's
+//! SLA (§V-B).  We keep all samples up to a cap and then reservoir-sample,
+//! which preserves percentile accuracy for the run lengths the simulator
+//! and coordinator use (10^4..10^6 samples).
+
+use crate::rng::{Rng, SplitMix64};
+
+const DEFAULT_CAP: usize = 262_144;
+
+/// Streaming latency collector with percentile queries.
+#[derive(Debug, Clone)]
+pub struct LatencyStats {
+    samples: Vec<f64>,
+    seen: u64,
+    cap: usize,
+    rng: SplitMix64,
+    sum: f64,
+    max: f64,
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_CAP)
+    }
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            samples: Vec::new(),
+            seen: 0,
+            cap,
+            rng: SplitMix64::new(0x1a7e_c0de),
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        debug_assert!(v.is_finite() && v >= 0.0, "latency must be >= 0, got {v}");
+        self.seen += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            // Vitter's algorithm R.
+            let j = self.rng.next_below(self.seen);
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = v;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.sum / self.seen as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Percentile in `[0, 100]` by the nearest-rank (ceil) convention:
+    /// the smallest sample such that at least p% of samples are <= it.
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.percentiles(&[p])[0]
+    }
+
+    /// Several percentiles with a single sort — the simulation result
+    /// path asks for 8 quantiles per tenant, and cloning+sorting the
+    /// reservoir per call dominated long-run teardown (§Perf iteration 2).
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        if self.samples.is_empty() {
+            return vec![0.0; ps.len()];
+        }
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ps.iter()
+            .map(|p| {
+                let rank = ((p / 100.0) * xs.len() as f64).ceil() as usize;
+                xs[rank.saturating_sub(1).min(xs.len() - 1)]
+            })
+            .collect()
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn clear(&mut self) {
+        self.samples.clear();
+        self.seen = 0;
+        self.sum = 0.0;
+        self.max = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        let s = LatencyStats::new();
+        assert_eq!(s.p95(), 0.0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    fn exact_percentiles_small() {
+        let mut s = LatencyStats::new();
+        for i in 1..=100 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.p50(), 50.0);
+        assert_eq!(s.p95(), 95.0);
+        assert_eq!(s.p99(), 99.0);
+        assert_eq!(s.max(), 100.0);
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reservoir_keeps_percentiles_close() {
+        let mut s = LatencyStats::with_capacity(4096);
+        // Uniform 0..1000, 100k samples: p95 should be ~950.
+        let mut rng = crate::rng::Xoshiro256::seed_from(8);
+        use crate::rng::Rng;
+        for _ in 0..100_000 {
+            s.record(rng.next_f64() * 1000.0);
+        }
+        let p95 = s.p95();
+        assert!((930.0..970.0).contains(&p95), "p95={p95}");
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut s = LatencyStats::new();
+        s.record(5.0);
+        s.clear();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.p95(), 0.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut s = LatencyStats::new();
+        s.record(7.25);
+        assert_eq!(s.p50(), 7.25);
+        assert_eq!(s.p99(), 7.25);
+    }
+}

@@ -1,0 +1,82 @@
+//! Measurement substrate: latency percentiles, QPS accounting, Effective
+//! Machine Utilization (EMU, paper §VII-A1), Pearson correlation
+//! (paper §VI-B validates co-location affinity with r = 0.95).
+
+mod emu;
+mod latency;
+mod pearson;
+
+pub use emu::{emu_percent, EmuDistribution, EmuStat};
+pub use latency::LatencyStats;
+pub use pearson::pearson;
+
+/// Simple throughput counter over a time window (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct QpsCounter {
+    completed: u64,
+    violated: u64,
+    window_s: f64,
+}
+
+impl QpsCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, met_sla: bool) {
+        self.completed += 1;
+        if !met_sla {
+            self.violated += 1;
+        }
+    }
+
+    pub fn set_window(&mut self, seconds: f64) {
+        self.window_s = seconds;
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Fraction of completed queries that violated their SLA.
+    pub fn violation_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.violated as f64 / self.completed as f64
+        }
+    }
+
+    /// Queries per second over the recorded window.
+    pub fn qps(&self) -> f64 {
+        if self.window_s <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.window_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qps_counter_basics() {
+        let mut c = QpsCounter::new();
+        for i in 0..100 {
+            c.record(i % 10 != 0); // 10% violations
+        }
+        c.set_window(2.0);
+        assert_eq!(c.completed(), 100);
+        assert!((c.violation_rate() - 0.1).abs() < 1e-9);
+        assert!((c.qps() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn qps_zero_window_is_zero() {
+        let c = QpsCounter::new();
+        assert_eq!(c.qps(), 0.0);
+        assert_eq!(c.violation_rate(), 0.0);
+    }
+}

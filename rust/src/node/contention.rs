@@ -1,0 +1,79 @@
+//! DRAM bandwidth contention: proportional sharing with saturation.
+//!
+//! There is no practical way to partition memory bandwidth (paper §VI-B),
+//! so all busy workers contend.  When aggregate unconstrained demand
+//! exceeds the socket bandwidth every memory stream stretches by the same
+//! factor (fair-share saturation) — the standard bandwidth-contention
+//! model and the behaviour the paper measures in Fig. 5(b).
+
+/// Node-level bandwidth contention calculator.
+#[derive(Debug, Clone)]
+pub struct BandwidthModel {
+    /// Socket peak bandwidth (B/s).
+    capacity: f64,
+}
+
+impl BandwidthModel {
+    pub fn new(capacity_bytes_per_s: f64) -> Self {
+        assert!(capacity_bytes_per_s > 0.0);
+        BandwidthModel {
+            capacity: capacity_bytes_per_s,
+        }
+    }
+
+    /// Memory-leg slowdown given `(per_worker_demand_Bps, busy_workers)`
+    /// per co-located model. Returns >= 1.
+    pub fn slowdown(&self, demands: &[(f64, usize)]) -> f64 {
+        let total: f64 = demands
+            .iter()
+            .map(|&(d, n)| d * n as f64)
+            .sum();
+        (total / self.capacity).max(1.0)
+    }
+
+    /// Aggregate utilization in [0, 1] (for the Fig. 5(b) series).
+    pub fn utilization(&self, demands: &[(f64, usize)]) -> f64 {
+        let total: f64 = demands.iter().map(|&(d, n)| d * n as f64).sum();
+        (total / self.capacity).min(1.0)
+    }
+
+    pub fn capacity(&self) -> f64 {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn under_capacity_no_slowdown() {
+        let bw = BandwidthModel::new(128e9);
+        assert_eq!(bw.slowdown(&[(6e9, 10)]), 1.0);
+        assert!((bw.utilization(&[(6e9, 10)]) - 60e9 / 128e9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn over_capacity_scales_proportionally() {
+        let bw = BandwidthModel::new(100e9);
+        let s = bw.slowdown(&[(10e9, 15)]); // 150 GB/s demand
+        assert!((s - 1.5).abs() < 1e-12);
+        assert_eq!(bw.utilization(&[(10e9, 15)]), 1.0);
+    }
+
+    #[test]
+    fn multiple_models_sum() {
+        let bw = BandwidthModel::new(128e9);
+        let s = bw.slowdown(&[(11e9, 8), (1e9, 8)]); // 96 GB/s
+        assert_eq!(s, 1.0);
+        let s = bw.slowdown(&[(11e9, 12), (2e9, 4)]); // 140 GB/s
+        assert!(s > 1.09 && s < 1.10);
+    }
+
+    #[test]
+    fn empty_is_idle() {
+        let bw = BandwidthModel::new(128e9);
+        assert_eq!(bw.slowdown(&[]), 1.0);
+        assert_eq!(bw.utilization(&[]), 0.0);
+    }
+}

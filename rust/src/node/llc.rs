@@ -1,0 +1,88 @@
+//! Intel CAT-style LLC way partitioning between two co-located models.
+//!
+//! CAT cannot allocate zero ways to a process (paper Fig. 7 note), so a
+//! valid two-model partition gives each side at least one way.
+
+/// A two-way LLC partition: ways for model A and model B.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CatPartition {
+    pub ways_a: usize,
+    pub ways_b: usize,
+}
+
+impl CatPartition {
+    /// Construct a partition, validating against `total` ways.
+    pub fn new(ways_a: usize, ways_b: usize, total: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(ways_a >= 1 && ways_b >= 1, "CAT cannot allocate zero ways");
+        anyhow::ensure!(
+            ways_a + ways_b <= total,
+            "partition {ways_a}+{ways_b} exceeds {total} ways"
+        );
+        Ok(CatPartition { ways_a, ways_b })
+    }
+
+    /// Even split used at server bootstrap (paper §VI-C initialization).
+    pub fn even(total: usize) -> Self {
+        let a = (total / 2).max(1);
+        CatPartition {
+            ways_a: a,
+            ways_b: (total - a).max(1),
+        }
+    }
+
+    /// Single-model configuration: the model owns every way.
+    pub fn whole(total: usize) -> Self {
+        CatPartition {
+            ways_a: total,
+            ways_b: 0,
+        }
+    }
+}
+
+/// All valid (ways_a, ways_b = total - ways_a) splits of the LLC between
+/// two co-located models — the search space of Algorithm 1 step A and of
+/// `adjust_LLC_partition()` in Algorithm 3.
+pub fn enumerate_partitions(total: usize) -> impl Iterator<Item = CatPartition> {
+    assert!(total >= 2, "need at least 2 ways to partition between models");
+    (1..total).map(move |a| CatPartition {
+        ways_a: a,
+        ways_b: total - a,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enumerates_total_minus_one_partitions() {
+        let parts: Vec<_> = enumerate_partitions(11).collect();
+        assert_eq!(parts.len(), 10);
+        for p in &parts {
+            assert!(p.ways_a >= 1 && p.ways_b >= 1);
+            assert_eq!(p.ways_a + p.ways_b, 11);
+        }
+    }
+
+    #[test]
+    fn even_split() {
+        let p = CatPartition::even(11);
+        assert_eq!((p.ways_a, p.ways_b), (5, 6));
+        let p = CatPartition::even(2);
+        assert_eq!((p.ways_a, p.ways_b), (1, 1));
+    }
+
+    #[test]
+    fn new_validates() {
+        assert!(CatPartition::new(0, 5, 11).is_err());
+        assert!(CatPartition::new(6, 6, 11).is_err());
+        assert!(CatPartition::new(5, 6, 11).is_ok());
+    }
+
+    #[test]
+    fn whole_llc() {
+        let p = CatPartition::whole(11);
+        assert_eq!(p.ways_a, 11);
+        assert_eq!(p.ways_b, 0);
+    }
+}

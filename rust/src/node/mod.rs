@@ -1,0 +1,37 @@
+//! CPU node model — the hardware substrate the paper measured on a
+//! 2-socket Xeon testbed (Table II) and that we reproduce analytically
+//! (DESIGN.md substitution log).
+//!
+//! The model produces, for a (model, worker-count, LLC-way) allocation:
+//! per-query service times, LLC hit rates, DRAM traffic and per-worker
+//! bandwidth demand.  Everything downstream (simulator, profiler, Hera)
+//! consumes only these outputs, mirroring how the paper's algorithms
+//! consume only profiled lookup tables.
+
+mod contention;
+mod llc;
+mod perf;
+
+pub use contention::BandwidthModel;
+pub use llc::{enumerate_partitions, CatPartition};
+pub use perf::{
+    cross_tenant_friction, ServiceProfile, CROSS_TENANT_FRICTION, DISPATCH_OVERHEAD_S,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelId, NodeConfig};
+
+    #[test]
+    fn service_profile_composes_with_contention() {
+        let node = NodeConfig::paper_default();
+        let d = ModelId::from_name("dlrm_d").unwrap();
+        let prof = ServiceProfile::build(d.spec(), &node, 12, 5);
+        let bw = BandwidthModel::new(node.dram_bw_gbs * 1e9);
+        let slow = bw.slowdown(&[(prof.per_worker_bw_demand(), 12)]);
+        assert!(slow >= 1.0);
+        let t = prof.service_time_s(220, slow);
+        assert!(t > 0.0 && t < 1.0, "service time {t}s out of range");
+    }
+}

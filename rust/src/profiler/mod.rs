@@ -1,0 +1,26 @@
+//! Offline profiling (paper §VI-B / §VII-E).
+//!
+//! Hera is profiling-based: every runtime decision reads from lookup
+//! tables generated once per (model, server architecture):
+//!
+//! * **worker scalability curve** — QPS vs number of workers at full LLC
+//!   (Fig. 6); also classifies each model as high/low worker scalability.
+//! * **LLC sensitivity curve** — QPS vs allocated ways at max workers
+//!   (Fig. 7).
+//! * **3-D QPS table** — QPS\[model\]\[workers\]\[ways\], the structure
+//!   consumed by `adjust_LLC_partition()` (Algorithm 3 line 33) and by
+//!   the affinity model (Algorithm 1). The paper notes this table is
+//!   < 2 KB per model pair; ours is 16×11 f64 = 1.4 KB per model.
+//! * **memory-bandwidth table** — per-model demand at half the cores with
+//!   the whole LLC (Algorithm 1 step B input) and the per-worker-count
+//!   bandwidth/miss-rate series (Fig. 5).
+//!
+//! The paper measures these on hardware (T_worker < 1 min, T_LLC < 15 min
+//! per model); we generate them from the analytic node model in
+//! milliseconds (see `benches/bench_figures.rs` for the timing).
+
+mod store;
+mod tables;
+
+pub use store::ProfileStore;
+pub use tables::{ModelProfile, ScalabilityClass};

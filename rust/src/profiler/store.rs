@@ -1,0 +1,233 @@
+//! The profile store: all models' tables for one node architecture, with
+//! JSON persistence ("the profiled result only needs to be collected once
+//! for a target server architecture", paper §VI-B).
+
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::config::{ModelId, NodeConfig, N_MODELS};
+use crate::json::{parse, Value};
+
+use super::tables::{ModelProfile, ScalabilityClass};
+
+/// Profiled lookup tables for every Table-I model on one node config.
+#[derive(Debug, Clone)]
+pub struct ProfileStore {
+    pub node: NodeConfig,
+    pub models: Vec<ModelProfile>,
+}
+
+impl ProfileStore {
+    /// Profile all eight models (the paper's offline pass).
+    pub fn build(node: &NodeConfig) -> ProfileStore {
+        let models = ModelId::all()
+            .map(|id| ModelProfile::build(id, node))
+            .collect();
+        ProfileStore {
+            node: node.clone(),
+            models,
+        }
+    }
+
+    pub fn profile(&self, id: ModelId) -> &ModelProfile {
+        &self.models[id.index()]
+    }
+
+    pub fn qps(&self, id: ModelId, workers: usize, ways: usize) -> f64 {
+        self.profile(id).qps_at(workers, ways)
+    }
+
+    pub fn scalability(&self, id: ModelId) -> ScalabilityClass {
+        self.profile(id).scalability
+    }
+
+    /// Models classified low / high worker scalability (Algorithm 2 inputs).
+    pub fn partition_by_scalability(&self) -> (Vec<ModelId>, Vec<ModelId>) {
+        let mut low = Vec::new();
+        let mut high = Vec::new();
+        for id in ModelId::all() {
+            match self.scalability(id) {
+                ScalabilityClass::Low => low.push(id),
+                ScalabilityClass::High => high.push(id),
+            }
+        }
+        (low, high)
+    }
+
+    /// Memory-bandwidth demand (B/s) of a model given half the cores and
+    /// the entire LLC (Algorithm 1 step B's MemBW_A / MemBW_B).
+    pub fn membw_half_cores(&self, id: ModelId) -> f64 {
+        let p = self.profile(id);
+        let w = (self.node.cores / 2).min(p.max_workers);
+        w as f64 * p.bw_demand_per_worker
+    }
+
+    // ------------------------------------------------------------------
+    // Persistence
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        let mut root = Value::object();
+        root.set("cores", self.node.cores)
+            .set("llc_ways", self.node.llc_ways)
+            .set("llc_mb", self.node.llc_mb)
+            .set("dram_bw_gbs", self.node.dram_bw_gbs)
+            .set("dram_capacity_gb", self.node.dram_capacity_gb)
+            .set("core_gflops", self.node.core_gflops)
+            .set("net_gbps", self.node.net_gbps);
+        let mut models = Value::object();
+        for p in &self.models {
+            let mut m = Value::object();
+            m.set("max_workers", p.max_workers)
+                .set("bw_demand_per_worker", p.bw_demand_per_worker)
+                .set(
+                    "high_scalability",
+                    p.scalability == ScalabilityClass::High,
+                )
+                .set(
+                    "bw_util_by_workers",
+                    Value::Array(
+                        p.bw_util_by_workers.iter().map(|&v| v.into()).collect(),
+                    ),
+                )
+                .set(
+                    "miss_by_workers",
+                    Value::Array(p.miss_by_workers.iter().map(|&v| v.into()).collect()),
+                )
+                .set(
+                    "qps",
+                    Value::Array(
+                        p.qps
+                            .iter()
+                            .map(|row| {
+                                Value::Array(row.iter().map(|&v| v.into()).collect())
+                            })
+                            .collect(),
+                    ),
+                );
+            models.set(p.model.name(), m);
+        }
+        root.set("models", models);
+        root
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing profile store to {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<ProfileStore> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading profile store from {}", path.display()))?;
+        Self::from_json(&parse(&text)?)
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<ProfileStore> {
+        let node = NodeConfig {
+            cores: v.req("cores")?.as_usize().context("cores")?,
+            llc_ways: v.req("llc_ways")?.as_usize().context("llc_ways")?,
+            llc_mb: v.req("llc_mb")?.as_f64().context("llc_mb")?,
+            dram_bw_gbs: v.req("dram_bw_gbs")?.as_f64().context("dram_bw_gbs")?,
+            dram_capacity_gb: v
+                .req("dram_capacity_gb")?
+                .as_f64()
+                .context("dram_capacity_gb")?,
+            core_gflops: v.req("core_gflops")?.as_f64().context("core_gflops")?,
+            net_gbps: v.req("net_gbps")?.as_f64().context("net_gbps")?,
+        };
+        let models_v = v.req("models")?;
+        let mut models = Vec::with_capacity(N_MODELS);
+        for id in ModelId::all() {
+            let m = models_v.req(id.name())?;
+            let qps: Vec<Vec<f64>> = m
+                .req("qps")?
+                .as_array()
+                .context("qps")?
+                .iter()
+                .map(|row| {
+                    row.as_array()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(Value::as_f64)
+                        .collect()
+                })
+                .collect();
+            let floats = |key: &str| -> anyhow::Result<Vec<f64>> {
+                Ok(m.req(key)?
+                    .as_array()
+                    .context("array")?
+                    .iter()
+                    .filter_map(Value::as_f64)
+                    .collect())
+            };
+            models.push(ModelProfile {
+                model: id,
+                qps,
+                max_workers: m.req("max_workers")?.as_usize().context("max_workers")?,
+                bw_demand_per_worker: m
+                    .req("bw_demand_per_worker")?
+                    .as_f64()
+                    .context("bw_demand_per_worker")?,
+                bw_util_by_workers: floats("bw_util_by_workers")?,
+                miss_by_workers: floats("miss_by_workers")?,
+                scalability: if m.req("high_scalability")?.as_bool().unwrap_or(false) {
+                    ScalabilityClass::High
+                } else {
+                    ScalabilityClass::Low
+                },
+            });
+        }
+        Ok(ProfileStore { node, models })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_roundtrip() {
+        let store = ProfileStore::build(&NodeConfig::paper_default());
+        let json = store.to_json();
+        let back = ProfileStore::from_json(&json).unwrap();
+        assert_eq!(back.node, store.node);
+        for id in ModelId::all() {
+            assert_eq!(
+                back.scalability(id),
+                store.scalability(id),
+                "{}",
+                id.name()
+            );
+            assert_eq!(back.qps(id, 4, 6), store.qps(id, 4, 6));
+        }
+    }
+
+    #[test]
+    fn partition_matches_paper_classes() {
+        let store = ProfileStore::build(&NodeConfig::paper_default());
+        let (low, high) = store.partition_by_scalability();
+        let low_names: Vec<&str> = low.iter().map(|m| m.name()).collect();
+        assert_eq!(low_names, vec!["dlrm_b", "dlrm_d"]);
+        assert_eq!(high.len(), 6);
+    }
+
+    #[test]
+    fn membw_half_cores_ordering() {
+        // DLRM(D) must demand far more bandwidth than NCF.
+        let store = ProfileStore::build(&NodeConfig::paper_default());
+        let d = store.membw_half_cores(ModelId::from_name("dlrm_d").unwrap());
+        let n = store.membw_half_cores(ModelId::from_name("ncf").unwrap());
+        assert!(d > 10.0 * n, "dlrm_d {d:.2e} vs ncf {n:.2e}");
+    }
+
+    #[test]
+    fn save_load_file() {
+        let store = ProfileStore::build(&NodeConfig::paper_default());
+        let path = std::env::temp_dir().join("hera_profile_test.json");
+        store.save(&path).unwrap();
+        let back = ProfileStore::load(&path).unwrap();
+        assert_eq!(back.qps(ModelId(0), 16, 11), store.qps(ModelId(0), 16, 11));
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,213 @@
+//! Distributions used by the workload generator and the simulator.
+//!
+//! Query arrivals are Poisson (paper §IV, following DeepRecInfra and the
+//! MLPerf cloud inference suite); query working-set sizes follow a
+//! heavy-tail distribution over batch sizes 1..=1024 with mean ≈ 220
+//! (the paper's Fig. 3 caption uses 220 as the mean of the studied query
+//! size distribution).
+
+use super::Rng;
+
+/// Exponential(rate): inter-arrival times of a Poisson process.
+#[derive(Debug, Clone, Copy)]
+pub struct Exponential {
+    rate: f64,
+}
+
+impl Exponential {
+    /// `rate` in events per unit time; must be positive.
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0, "rate must be positive, got {rate}");
+        Self { rate }
+    }
+
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> f64 {
+        // Inverse CDF; 1-u avoids ln(0).
+        -(1.0 - rng.next_f64()).ln() / self.rate
+    }
+}
+
+/// Poisson(lambda) counts (Knuth for small lambda, normal approx for large).
+#[derive(Debug, Clone, Copy)]
+pub struct Poisson {
+    lambda: f64,
+}
+
+impl Poisson {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda > 0.0, "lambda must be positive, got {lambda}");
+        Self { lambda }
+    }
+
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> u64 {
+        if self.lambda < 30.0 {
+            let l = (-self.lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= rng.next_f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            // Normal approximation with continuity correction.
+            let g = normal(rng);
+            let v = self.lambda + self.lambda.sqrt() * g + 0.5;
+            if v < 0.0 {
+                0
+            } else {
+                v as u64
+            }
+        }
+    }
+}
+
+/// Standard normal via Box-Muller.
+fn normal<R: Rng>(rng: &mut R) -> f64 {
+    let u1 = (1.0 - rng.next_f64()).max(f64::MIN_POSITIVE);
+    let u2 = rng.next_f64();
+    (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+}
+
+/// LogNormal(mu, sigma) over the underlying normal.
+#[derive(Debug, Clone, Copy)]
+pub struct LogNormal {
+    mu: f64,
+    sigma: f64,
+}
+
+impl LogNormal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma > 0.0, "sigma must be positive, got {sigma}");
+        Self { mu, sigma }
+    }
+
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> f64 {
+        (self.mu + self.sigma * normal(rng)).exp()
+    }
+}
+
+/// DeepRecInfra-style heavy-tail query (batch) size distribution:
+/// lognormal clamped to `[1, 1024]`, mean ≈ 220 items per query.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchSizeDist {
+    inner: LogNormal,
+    max: u32,
+}
+
+impl BatchSizeDist {
+    /// The paper's configuration (mean ≈ 220, tail to 1024).
+    pub fn paper_default() -> Self {
+        Self::new(130.0_f64.ln(), 1.05, 1024)
+    }
+
+    pub fn new(mu: f64, sigma: f64, max: u32) -> Self {
+        assert!(max >= 1);
+        Self {
+            inner: LogNormal::new(mu, sigma),
+            max,
+        }
+    }
+
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> u32 {
+        let v = self.inner.sample(rng);
+        (v.round() as i64).clamp(1, self.max as i64) as u32
+    }
+
+    pub fn max(&self) -> u32 {
+        self.max
+    }
+
+    /// Empirical mean (used by the perf model to convert QPS <-> items/s).
+    pub fn mean(&self, seed: u64, samples: usize) -> f64 {
+        let mut rng = super::Xoshiro256::seed_from(seed);
+        let sum: f64 = (0..samples).map(|_| self.sample(&mut rng) as f64).sum();
+        sum / samples as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn exponential_mean_is_inverse_rate() {
+        let mut rng = Xoshiro256::seed_from(11);
+        let d = Exponential::new(4.0);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.005, "mean={mean}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn exponential_rejects_zero_rate() {
+        Exponential::new(0.0);
+    }
+
+    #[test]
+    fn poisson_small_lambda_mean() {
+        let mut rng = Xoshiro256::seed_from(12);
+        let d = Poisson::new(3.5);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| d.sample(&mut rng) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 3.5).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_large_lambda_mean_and_var() {
+        let mut rng = Xoshiro256::seed_from(13);
+        let d = Poisson::new(200.0);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| d.sample(&mut rng) as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 200.0).abs() < 2.0, "mean={mean}");
+        assert!((var - 200.0).abs() < 15.0, "var={var}");
+    }
+
+    #[test]
+    fn lognormal_median_is_exp_mu() {
+        let mut rng = Xoshiro256::seed_from(14);
+        let d = LogNormal::new(2.0, 0.7);
+        let n = 100_000;
+        let mut xs: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[n / 2];
+        assert!((median - 2.0_f64.exp()).abs() / 2.0_f64.exp() < 0.03);
+    }
+
+    #[test]
+    fn batch_dist_bounds_and_mean() {
+        let mut rng = Xoshiro256::seed_from(15);
+        let d = BatchSizeDist::paper_default();
+        let n = 200_000;
+        let mut sum = 0.0;
+        let mut max_seen = 0;
+        for _ in 0..n {
+            let b = d.sample(&mut rng);
+            assert!((1..=1024).contains(&b));
+            sum += b as f64;
+            max_seen = max_seen.max(b);
+        }
+        let mean = sum / n as f64;
+        // Paper: mean query size ~220, heavy tail reaching 1024.
+        assert!((180.0..260.0).contains(&mean), "mean={mean}");
+        assert_eq!(max_seen, 1024, "tail should reach the clamp");
+    }
+
+    #[test]
+    fn batch_dist_has_heavy_tail() {
+        let mut rng = Xoshiro256::seed_from(16);
+        let d = BatchSizeDist::paper_default();
+        let n = 100_000;
+        let mut xs: Vec<u32> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        xs.sort_unstable();
+        let p50 = xs[n / 2] as f64;
+        let p99 = xs[n * 99 / 100] as f64;
+        assert!(p99 / p50 > 5.0, "p99/p50={} should be heavy", p99 / p50);
+    }
+}

@@ -1,0 +1,72 @@
+//! Deterministic PRNG + distributions (substrate: `rand` is unavailable
+//! offline, and the workload generator needs Poisson arrivals and the
+//! DeepRecInfra-style heavy-tail batch-size distribution anyway).
+//!
+//! [`SplitMix64`] doubles as the language-portable parameter initializer
+//! shared with `python/compile/params.py` (see `runtime::params`).
+
+mod splitmix;
+mod xoshiro;
+mod dist;
+
+pub use dist::{BatchSizeDist, Exponential, LogNormal, Poisson};
+pub use splitmix::SplitMix64;
+pub use xoshiro::Xoshiro256;
+
+/// Common interface for the generators in this crate.
+pub trait Rng {
+    /// Next raw 64-bit output.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform f64 in `[0, 1)` using the top 53 bits.
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` (n > 0), via 128-bit multiply (unbiased
+    /// enough for simulation purposes; Lemire's method without rejection).
+    fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut r = Xoshiro256::seed_from(42);
+        for _ in 0..10_000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn next_below_in_range_and_covers() {
+        let mut r = Xoshiro256::seed_from(7);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let v = r.next_below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all buckets should be hit");
+    }
+
+    #[test]
+    fn range_f64_bounds() {
+        let mut r = Xoshiro256::seed_from(3);
+        for _ in 0..1000 {
+            let v = r.range_f64(-2.5, 7.5);
+            assert!((-2.5..7.5).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! The serving engine: compiled PJRT executables + cached parameter
+//! buffers, behind a thread-safe `infer()`.
+//!
+//! One executable per (model, batch bucket); requests are padded up to
+//! the nearest bucket (the classic serving trick to bound executable
+//! count while keeping shapes static for XLA).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Context;
+
+use super::manifest::{Manifest, ModelManifest};
+use super::params;
+
+/// Inference result for one query.
+#[derive(Debug, Clone)]
+pub struct InferOutput {
+    /// CTR probability per item (len == requested batch).
+    pub probs: Vec<f32>,
+    /// Bucket the query was padded to.
+    pub bucket: usize,
+    /// Pure execute() wall time.
+    pub exec_s: f64,
+}
+
+struct LoadedModel {
+    manifest: ModelManifest,
+    /// Parameter device buffers, uploaded once (in manifest order).
+    param_bufs: Vec<xla::PjRtBuffer>,
+    /// bucket -> compiled executable.
+    executables: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+/// Thread-safe serving engine over the artifact directory.
+///
+/// SAFETY: the underlying XLA PJRT CPU objects (client, loaded
+/// executables, device buffers) are internally synchronized C++ objects;
+/// `PjRtLoadedExecutable::Execute` is documented thread-compatible for
+/// concurrent calls with distinct arguments, which is how the worker pool
+/// uses it (each worker passes its own input buffers; parameter buffers
+/// are read-only).
+pub struct Engine {
+    client: xla::PjRtClient,
+    models: BTreeMap<String, LoadedModel>,
+    dense_dim: usize,
+    rows_per_table: usize,
+}
+
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load `model_names` (or all) from `dir`, compiling `buckets`
+    /// (or every bucket in the manifest).
+    pub fn load(
+        dir: &Path,
+        model_names: Option<&[&str]>,
+        buckets: Option<&[usize]>,
+    ) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut models = BTreeMap::new();
+        for (name, mm) in &manifest.models {
+            if let Some(filter) = model_names {
+                if !filter.contains(&name.as_str()) {
+                    continue;
+                }
+            }
+            models.insert(name.clone(), load_model(&client, mm, buckets)?);
+        }
+        anyhow::ensure!(!models.is_empty(), "no models loaded from {}", dir.display());
+        Ok(Engine {
+            client,
+            models,
+            dense_dim: manifest.dense_dim,
+            rows_per_table: manifest.rows_per_table,
+        })
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn manifest(&self, model: &str) -> Option<&ModelManifest> {
+        self.models.get(model).map(|m| &m.manifest)
+    }
+
+    pub fn dense_dim(&self) -> usize {
+        self.dense_dim
+    }
+
+    pub fn rows_per_table(&self) -> usize {
+        self.rows_per_table
+    }
+
+    /// Run one query: `dense` is `batch x dense_dim`, `indices` is
+    /// `batch x total_lookups` (row-major), both padded internally.
+    pub fn infer(
+        &self,
+        model: &str,
+        batch: usize,
+        dense: &[f32],
+        indices: &[i32],
+    ) -> anyhow::Result<InferOutput> {
+        let lm = self
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("model {model} not loaded"))?;
+        let lookups = lm.manifest.total_lookups;
+        anyhow::ensure!(batch > 0, "batch must be positive");
+        anyhow::ensure!(
+            dense.len() == batch * self.dense_dim,
+            "dense len {} != {batch} x {}",
+            dense.len(),
+            self.dense_dim
+        );
+        anyhow::ensure!(
+            indices.len() == batch * lookups,
+            "indices len {} != {batch} x {lookups}",
+            indices.len()
+        );
+
+        let bucket = lm.manifest.bucket_for(batch);
+        let exe = lm
+            .executables
+            .get(&bucket)
+            .ok_or_else(|| anyhow::anyhow!("bucket {bucket} not compiled for {model}"))?;
+        let eff = batch.min(bucket);
+
+        // Pad up to the bucket with zeros (index 0 is always valid).
+        let mut dense_p = vec![0.0f32; bucket * self.dense_dim];
+        dense_p[..eff * self.dense_dim].copy_from_slice(&dense[..eff * self.dense_dim]);
+        let mut idx_p = vec![0i32; bucket * lookups];
+        idx_p[..eff * lookups].copy_from_slice(&indices[..eff * lookups]);
+
+        let dense_buf = self
+            .client
+            .buffer_from_host_buffer(&dense_p, &[bucket, self.dense_dim], None)?;
+        let idx_buf = self
+            .client
+            .buffer_from_host_buffer(&idx_p, &[bucket, lookups], None)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = lm.param_bufs.iter().collect();
+        args.push(&dense_buf);
+        args.push(&idx_buf);
+
+        let t0 = Instant::now();
+        let result = exe.execute_b(&args)?;
+        let out = result[0][0].to_literal_sync()?.to_tuple1()?;
+        let exec_s = t0.elapsed().as_secs_f64();
+
+        let mut probs = out.to_vec::<f32>()?;
+        probs.truncate(batch.min(bucket));
+        Ok(InferOutput {
+            probs,
+            bucket,
+            exec_s,
+        })
+    }
+
+    /// End-to-end numeric verification against the python-recorded golden.
+    pub fn verify_golden(&self, model: &str) -> anyhow::Result<f32> {
+        let lm = self
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("model {model} not loaded"))?;
+        let g = lm
+            .manifest
+            .golden
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no golden for {model}"))?;
+        let dense = read_f32(&g.dense_path)?;
+        let idx = read_i32(&g.indices_path)?;
+        let expected = read_f32(&g.output_path)?;
+        let out = self.infer(model, g.batch, &dense, &idx)?;
+        anyhow::ensure!(
+            out.probs.len() == expected.len(),
+            "golden shape mismatch: {} vs {}",
+            out.probs.len(),
+            expected.len()
+        );
+        let mut max_err = 0.0f32;
+        for (a, b) in out.probs.iter().zip(&expected) {
+            max_err = max_err.max((a - b).abs());
+        }
+        anyhow::ensure!(
+            max_err < 1e-4,
+            "{model}: golden max abs error {max_err}"
+        );
+        Ok(max_err)
+    }
+
+    /// Deterministic benchmark inputs for a model at a batch size.
+    pub fn example_inputs(&self, model: &str, batch: usize) -> (Vec<f32>, Vec<i32>) {
+        let lookups = self
+            .manifest(model)
+            .map(|m| m.total_lookups)
+            .unwrap_or(1);
+        let dense = params::fill_uniform(0xD5E5, batch * self.dense_dim, 1.0);
+        let idx = params::fill_indices(
+            0x1D45,
+            batch * lookups,
+            self.rows_per_table as u32,
+        );
+        (dense, idx)
+    }
+
+    /// Mean execute latency (s) over `iters` runs at `batch`.
+    pub fn measure(&self, model: &str, batch: usize, iters: usize) -> anyhow::Result<f64> {
+        let (dense, idx) = self.example_inputs(model, batch);
+        // Warm up once (first execute pays one-time costs).
+        self.infer(model, batch, &dense, &idx)?;
+        let t0 = Instant::now();
+        for _ in 0..iters.max(1) {
+            self.infer(model, batch, &dense, &idx)?;
+        }
+        Ok(t0.elapsed().as_secs_f64() / iters.max(1) as f64)
+    }
+}
+
+fn load_model(
+    client: &xla::PjRtClient,
+    mm: &ModelManifest,
+    buckets: Option<&[usize]>,
+) -> anyhow::Result<LoadedModel> {
+    // Upload parameters once.
+    let mut param_bufs = Vec::with_capacity(mm.params.len());
+    for spec in &mm.params {
+        let data = params::fill_uniform(spec.seed, spec.elements(), spec.scale as f32);
+        let buf = client
+            .buffer_from_host_buffer(&data, &spec.shape, None)
+            .with_context(|| format!("uploading {}::{}", mm.name, spec.name))?;
+        param_bufs.push(buf);
+    }
+    // Compile requested buckets.
+    let mut executables = BTreeMap::new();
+    for (&bucket, path) in &mm.artifacts {
+        if let Some(filter) = buckets {
+            if !filter.contains(&bucket) {
+                continue;
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path utf8")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {} b={bucket}", mm.name))?;
+        executables.insert(bucket, exe);
+    }
+    anyhow::ensure!(
+        !executables.is_empty(),
+        "no buckets compiled for {}",
+        mm.name
+    );
+    Ok(LoadedModel {
+        manifest: mm.clone(),
+        param_bufs,
+        executables,
+    })
+}
+
+fn read_f32(path: &Path) -> anyhow::Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| path.display().to_string())?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "misaligned f32 file");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_i32(path: &Path) -> anyhow::Result<Vec<i32>> {
+    let bytes = std::fs::read(path).with_context(|| path.display().to_string())?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "misaligned i32 file");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+// Engine tests live in rust/tests/integration_runtime.rs (they need the
+// artifacts directory and a PJRT client, too heavy for unit tests).

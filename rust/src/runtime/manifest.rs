@@ -1,0 +1,228 @@
+//! `artifacts/manifest.json` — the ABI between the python compile path
+//! and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::json::{parse, Value};
+
+/// One parameter tensor's spec: regenerated from (seed, shape, scale).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub seed: u64,
+    pub scale: f64,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Golden input/output recording for end-to-end numeric verification.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub batch: usize,
+    pub dense_path: PathBuf,
+    pub indices_path: PathBuf,
+    pub output_path: PathBuf,
+    pub output_shape: Vec<usize>,
+}
+
+/// Everything the runtime needs to serve one model.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub sla_ms: f64,
+    pub n_tables: usize,
+    pub dim: usize,
+    pub total_lookups: usize,
+    pub pooling: String,
+    pub params: Vec<ParamSpec>,
+    /// batch bucket -> artifact file (relative to the artifact dir).
+    pub artifacts: BTreeMap<usize, PathBuf>,
+    pub golden: Option<Golden>,
+}
+
+impl ModelManifest {
+    /// Buckets in ascending order.
+    pub fn buckets(&self) -> Vec<usize> {
+        self.artifacts.keys().copied().collect()
+    }
+
+    /// Smallest bucket that fits `batch` (or the largest bucket if none).
+    pub fn bucket_for(&self, batch: usize) -> usize {
+        self.artifacts
+            .keys()
+            .copied()
+            .find(|&b| b >= batch)
+            .unwrap_or_else(|| *self.artifacts.keys().last().expect("no buckets"))
+    }
+}
+
+/// The full parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub rows_per_table: usize,
+    pub dense_dim: usize,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = parse(&text).context("parsing manifest.json")?;
+        Self::from_value(dir, &v)
+    }
+
+    fn from_value(dir: &Path, v: &Value) -> anyhow::Result<Manifest> {
+        let rows_per_table = v.req("rows_per_table")?.as_usize().context("rows")?;
+        let dense_dim = v.req("dense_dim")?.as_usize().context("dense_dim")?;
+        let models_v = v.req("models")?.as_object().context("models")?;
+        let mut models = BTreeMap::new();
+        for (name, m) in models_v {
+            let params = m
+                .req("params")?
+                .as_array()
+                .context("params")?
+                .iter()
+                .map(|p| -> anyhow::Result<ParamSpec> {
+                    Ok(ParamSpec {
+                        name: p.req("name")?.as_str().context("name")?.to_string(),
+                        shape: p
+                            .req("shape")?
+                            .as_array()
+                            .context("shape")?
+                            .iter()
+                            .filter_map(Value::as_usize)
+                            .collect(),
+                        seed: p.req("seed")?.as_i64().context("seed")? as u64,
+                        scale: p.req("scale")?.as_f64().context("scale")?,
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let mut artifacts = BTreeMap::new();
+            for (bucket, rel) in m.req("artifacts")?.as_object().context("artifacts")? {
+                let b: usize = bucket.parse().context("bucket key")?;
+                artifacts.insert(b, dir.join(rel.as_str().context("artifact path")?));
+            }
+            let golden = match m.get("golden") {
+                Some(g) => {
+                    let files = g.req("files")?;
+                    Some(Golden {
+                        batch: g.req("batch")?.as_usize().context("golden batch")?,
+                        dense_path: dir.join(files.req("dense")?.as_str().unwrap_or("")),
+                        indices_path: dir
+                            .join(files.req("indices")?.as_str().unwrap_or("")),
+                        output_path: dir.join(files.req("output")?.as_str().unwrap_or("")),
+                        output_shape: g
+                            .req("output_shape")?
+                            .as_array()
+                            .context("output_shape")?
+                            .iter()
+                            .filter_map(Value::as_usize)
+                            .collect(),
+                    })
+                }
+                None => None,
+            };
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    name: name.clone(),
+                    sla_ms: m.req("sla_ms")?.as_f64().context("sla_ms")?,
+                    n_tables: m.req("n_tables")?.as_usize().context("n_tables")?,
+                    dim: m.req("dim")?.as_usize().context("dim")?,
+                    total_lookups: m
+                        .req("total_lookups")?
+                        .as_usize()
+                        .context("total_lookups")?,
+                    pooling: m.req("pooling")?.as_str().unwrap_or("").to_string(),
+                    params,
+                    artifacts,
+                    golden,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            rows_per_table,
+            dense_dim,
+            models,
+        })
+    }
+}
+
+/// Default artifact directory: `$HERA_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("HERA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> Option<Manifest> {
+        let dir = default_artifact_dir();
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_all_eight_models() {
+        let Some(man) = artifacts_available() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(man.models.len(), 8);
+        assert_eq!(man.dense_dim, 13);
+        for (name, m) in &man.models {
+            assert!(!m.params.is_empty(), "{name} has params");
+            assert!(!m.artifacts.is_empty(), "{name} has artifacts");
+            assert!(m.golden.is_some(), "{name} has a golden");
+            for p in m.artifacts.values() {
+                assert!(p.exists(), "{} missing", p.display());
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(man) = artifacts_available() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = &man.models["ncf"];
+        let buckets = m.buckets();
+        assert_eq!(buckets, vec![1, 16, 64, 256]);
+        assert_eq!(m.bucket_for(1), 1);
+        assert_eq!(m.bucket_for(2), 16);
+        assert_eq!(m.bucket_for(64), 64);
+        assert_eq!(m.bucket_for(100), 256);
+        assert_eq!(m.bucket_for(5000), 256, "oversize clamps to largest");
+    }
+
+    #[test]
+    fn param_counts_match_table_structure() {
+        let Some(man) = artifacts_available() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = &man.models["dlrm_a"];
+        // 8 embedding tables + 3 bottom pairs + 3 top pairs = 8 + 6 + 6.
+        assert_eq!(m.params.len(), 20);
+        let emb: Vec<_> = m.params.iter().filter(|p| p.name.starts_with("emb.")).collect();
+        assert_eq!(emb.len(), 8);
+        for e in emb {
+            assert_eq!(e.shape, vec![man.rows_per_table, 64]);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime — loads the AOT artifacts produced by `make artifacts`
+//! (python is never on this path) and executes them on the CPU PJRT
+//! client.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json`: the parameter ABI
+//!   (seed/shape/scale per tensor), input layouts, batch buckets, goldens.
+//! * [`params`] — regenerates every model weight bit-identically to
+//!   `python/compile/params.py` from the manifest seeds, so no weight
+//!   blobs ever cross the language boundary.
+//! * [`engine`] — compiles one executable per (model, batch bucket),
+//!   uploads parameters to device buffers once, and serves `infer()`
+//!   calls with bucket padding. The golden check replays the
+//!   python-recorded inputs and asserts numeric equality end-to-end.
+
+pub mod engine;
+pub mod manifest;
+pub mod params;
+
+pub use engine::{Engine, InferOutput};
+pub use manifest::{Manifest, ModelManifest, ParamSpec};

@@ -1,0 +1,74 @@
+//! Deterministic parameter materialization — the rust half of the
+//! language-portable scheme in `python/compile/params.py`.
+//!
+//! Both sides compute, for element `i` of a tensor with seed `s`:
+//!
+//! ```text
+//! h     = splitmix64(s * GOLDEN + i)        (wrapping u64)
+//! mant  = h >> 40                           (top 24 bits)
+//! value = (mant / 2^24) * 2*scale - scale   (f32 in [-scale, scale))
+//! ```
+//!
+//! The pinned-value tests below mirror `python/tests/test_model.py::
+//! TestParamsPortability` exactly; if either side changes, both fail.
+
+use crate::rng::SplitMix64;
+
+/// Fill a tensor of `n` elements with deterministic uniforms in
+/// `[-scale, scale)`.
+pub fn fill_uniform(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+    (0..n as u64)
+        .map(|i| {
+            let h = SplitMix64::element(seed, i);
+            let mant = (h >> 40) as f64; // 24 bits
+            ((mant / (1u64 << 24) as f64) * (2.0 * scale as f64) - scale as f64) as f32
+        })
+        .collect()
+}
+
+/// Fill an index tensor with deterministic int32 values in `[0, rows)`.
+pub fn fill_indices(seed: u64, n: usize, rows: u32) -> Vec<i32> {
+    (0..n as u64)
+        .map(|i| (SplitMix64::element(seed, i) % rows as u64) as i32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mirrors python `test_fill_uniform_pinned_head`: seed 7, scale 1.0.
+    #[test]
+    fn pinned_values_match_python() {
+        let v = fill_uniform(7, 4, 1.0);
+        assert_eq!(
+            v,
+            vec![0.5430931, 0.046134353, 0.47817457, 0.77743685],
+            "cross-language ABI broken"
+        );
+    }
+
+    #[test]
+    fn range_and_determinism() {
+        let a = fill_uniform(42, 1000, 0.5);
+        let b = fill_uniform(42, 1000, 0.5);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&x| (-0.5..0.5).contains(&x)));
+        let mean: f32 = a.iter().sum::<f32>() / 1000.0;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn indices_in_range() {
+        let ix = fill_indices(3, 512, 100);
+        assert!(ix.iter().all(|&i| (0..100).contains(&i)));
+        // Should cover a good part of the range.
+        let distinct: std::collections::HashSet<i32> = ix.iter().copied().collect();
+        assert!(distinct.len() > 50);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(fill_uniform(1, 16, 1.0), fill_uniform(2, 16, 1.0));
+    }
+}

@@ -1,0 +1,248 @@
+//! Analytic steady-state engine: M/G/c approximation with bandwidth
+//! contention solved by fixed-point iteration.
+//!
+//! For each tenant: ρ = λ·E[S]/c must be < 1; queueing wait uses the
+//! Allen-Cunneen M/G/c approximation and an exponential wait tail; the
+//! p95 sojourn combines the service-time tail (driven by the heavy-tail
+//! batch distribution) with the wait tail.  Bandwidth contention couples
+//! tenants: busy workers follow Little's law, aggregate demand sets the
+//! memory-leg slowdown, which feeds back into E[S].
+
+use crate::config::{ModelId, NodeConfig};
+use crate::node::{cross_tenant_friction, BandwidthModel, ServiceProfile};
+
+use super::batch_moments::paper_moments;
+
+/// Analytic tenant descriptor.
+#[derive(Debug, Clone)]
+pub struct AnalyticTenant {
+    pub model: ModelId,
+    pub workers: usize,
+    pub ways: usize,
+    pub arrival_qps: f64,
+}
+
+/// Steady-state prediction for one tenant.
+#[derive(Debug, Clone)]
+pub struct SteadyState {
+    pub model: ModelId,
+    /// Offered utilization ρ (>= 1 means unstable).
+    pub rho: f64,
+    pub mean_service_s: f64,
+    pub p95_sojourn_s: f64,
+    /// Whether the system is stable and meets its SLA at p95.
+    pub feasible: bool,
+    /// This tenant's mean DRAM bandwidth demand (B/s).
+    pub bw_demand: f64,
+    pub miss_rate: f64,
+}
+
+/// Node-level prediction.
+#[derive(Debug, Clone)]
+pub struct NodeSteadyState {
+    pub tenants: Vec<SteadyState>,
+    /// DRAM bandwidth utilization in [0, 1].
+    pub bw_utilization: f64,
+    /// Memory-leg slowdown applied to all tenants.
+    pub slowdown: f64,
+}
+
+/// Erlang-C probability that an arrival waits (c servers, offered load a).
+fn erlang_c(c: usize, a: f64) -> f64 {
+    if a >= c as f64 {
+        return 1.0;
+    }
+    // Compute iteratively in log-safe form.
+    let mut inv_b = 1.0; // Erlang-B recurrence: B(0, a) = 1
+    for k in 1..=c {
+        inv_b = 1.0 + (k as f64 / a) * inv_b;
+    }
+    let b = 1.0 / inv_b;
+    let rho = a / c as f64;
+    b / (1.0 - rho + rho * b)
+}
+
+/// Predict the steady state of up to N co-located tenants.
+pub fn solve(node: &NodeConfig, tenants: &[AnalyticTenant]) -> NodeSteadyState {
+    let bm = paper_moments();
+    let bw = BandwidthModel::new(node.dram_bw_gbs * 1e9);
+    let profiles: Vec<ServiceProfile> = tenants
+        .iter()
+        .map(|t| ServiceProfile::build(t.model.spec(), node, t.workers.max(1), t.ways))
+        .collect();
+
+    // Fixed point on the contention slowdown + cross-tenant friction.
+    let mut slowdown = 1.0;
+    let mut busy: Vec<f64> = vec![0.0; tenants.len()];
+    let friction = |i: usize, busy: &[f64]| -> f64 {
+        let others: Vec<(f64, f64)> = profiles
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| *j != i)
+            .map(|(j, p)| (p.sensitivity(), busy[j]))
+            .collect();
+        cross_tenant_friction(profiles[i].sensitivity(), &others, node.cores)
+    };
+    for _ in 0..30 {
+        for (i, t) in tenants.iter().enumerate() {
+            let mean_s =
+                mean_service(&profiles[i], slowdown, bm.mean) * friction(i, &busy);
+            busy[i] = (t.arrival_qps * mean_s).min(t.workers as f64);
+        }
+        let demands: Vec<(f64, usize)> = profiles
+            .iter()
+            .zip(&busy)
+            .map(|(p, b)| (p.per_worker_bw_demand(), b.ceil() as usize))
+            .collect();
+        let next = bw.slowdown(&demands);
+        if (next - slowdown).abs() < 1e-6 {
+            slowdown = next;
+            break;
+        }
+        // Damped update for stability.
+        slowdown = 0.5 * slowdown + 0.5 * next;
+    }
+
+    let demands: Vec<(f64, usize)> = profiles
+        .iter()
+        .zip(&busy)
+        .map(|(p, b)| (p.per_worker_bw_demand(), b.ceil() as usize))
+        .collect();
+    let bw_utilization = bw.utilization(&demands);
+
+    let states = tenants
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let prof = &profiles[i];
+            let c = t.workers.max(1);
+            let fric = friction(i, &busy);
+            let mean_s = mean_service(prof, slowdown, bm.mean) * fric;
+            let rho = t.arrival_qps * mean_s / c as f64;
+            let sla_s = t.model.spec().sla_ms / 1e3;
+
+            let p95 = if rho >= 0.999 {
+                f64::INFINITY
+            } else {
+                // Service-time p95 from the batch tail.
+                let s_p95 = prof.service_time_s(bm.p95 as u32, slowdown) * fric;
+                // M/G/c wait: Allen-Cunneen scaling of M/M/c.
+                let a = t.arrival_qps * mean_s;
+                let pw = erlang_c(c, a);
+                let mu = 1.0 / mean_s;
+                let wq_mm = pw / (c as f64 * mu - t.arrival_qps);
+                let scv_s = service_scv(prof, slowdown, bm.mean, bm.second);
+                let wq = wq_mm * (1.0 + scv_s) / 2.0;
+                // Exponential wait tail: W = 0 w.p. (1-pw), Exp(theta) w.p.
+                // pw with pw*theta = wq; invert P(W > t) = 0.05.
+                let w95 = if pw <= 0.05 || wq <= 0.0 {
+                    0.0
+                } else {
+                    (wq / pw) * (pw / 0.05).ln()
+                };
+                s_p95 + w95
+            };
+
+            SteadyState {
+                model: t.model,
+                rho,
+                mean_service_s: mean_s,
+                p95_sojourn_s: p95,
+                feasible: rho < 0.999 && p95 <= sla_s,
+                bw_demand: prof.per_worker_bw_demand() * busy[i],
+                miss_rate: prof.miss_rate(),
+            }
+        })
+        .collect();
+
+    NodeSteadyState {
+        tenants: states,
+        bw_utilization,
+        slowdown,
+    }
+}
+
+fn mean_service(prof: &ServiceProfile, slowdown: f64, mean_batch: f64) -> f64 {
+    // Service time is affine in batch: interpolate between two points.
+    let t1 = prof.service_time_s(1, slowdown);
+    let t1001 = prof.service_time_s(1001, slowdown);
+    let per_item = (t1001 - t1) / 1000.0;
+    t1 + per_item * (mean_batch - 1.0)
+}
+
+fn service_scv(prof: &ServiceProfile, slowdown: f64, m1: f64, m2: f64) -> f64 {
+    let t1 = prof.service_time_s(1, slowdown);
+    let t1001 = prof.service_time_s(1001, slowdown);
+    let k = (t1001 - t1) / 1000.0;
+    let c0 = t1 - k; // constant term
+    let mean = c0 + k * m1;
+    let var = k * k * (m2 - m1 * m1);
+    (var / (mean * mean)).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tenant(name: &str, workers: usize, ways: usize, qps: f64) -> AnalyticTenant {
+        AnalyticTenant {
+            model: ModelId::from_name(name).unwrap(),
+            workers,
+            ways,
+            arrival_qps: qps,
+        }
+    }
+
+    #[test]
+    fn erlang_c_limits() {
+        assert!(erlang_c(1, 0.5) > 0.49 && erlang_c(1, 0.5) < 0.51); // M/M/1: pw = rho
+        assert_eq!(erlang_c(4, 4.5), 1.0); // overloaded
+        assert!(erlang_c(16, 1.0) < 1e-6); // nearly idle
+    }
+
+    #[test]
+    fn light_load_is_feasible() {
+        let node = NodeConfig::paper_default();
+        let out = solve(&node, &[tenant("ncf", 16, 11, 100.0)]);
+        assert!(out.tenants[0].feasible);
+        assert!(out.tenants[0].rho < 0.2);
+        assert_eq!(out.slowdown, 1.0);
+    }
+
+    #[test]
+    fn overload_is_infeasible() {
+        let node = NodeConfig::paper_default();
+        let out = solve(&node, &[tenant("ncf", 16, 11, 1e6)]);
+        assert!(!out.tenants[0].feasible);
+        assert!(out.tenants[0].p95_sojourn_s.is_infinite());
+    }
+
+    #[test]
+    fn memory_model_contention_couples_tenants() {
+        let node = NodeConfig::paper_default();
+        // DLRM(D) near saturation alone...
+        let solo = solve(&node, &[tenant("dlrm_d", 12, 5, 30.0)]);
+        // ...plus a bandwidth-hungry co-runner.
+        let duo = solve(
+            &node,
+            &[tenant("dlrm_d", 12, 5, 30.0), tenant("dlrm_a", 4, 6, 30.0)],
+        );
+        assert!(duo.slowdown >= solo.slowdown);
+        assert!(
+            duo.tenants[0].p95_sojourn_s >= solo.tenants[0].p95_sojourn_s,
+            "contention must not speed things up"
+        );
+    }
+
+    #[test]
+    fn p95_increases_with_load() {
+        let node = NodeConfig::paper_default();
+        let mut prev = 0.0;
+        for qps in [50.0, 200.0, 400.0, 600.0] {
+            let out = solve(&node, &[tenant("ncf", 16, 11, qps)]);
+            let p95 = out.tenants[0].p95_sojourn_s;
+            assert!(p95 >= prev, "p95 must grow with load");
+            prev = p95;
+        }
+    }
+}

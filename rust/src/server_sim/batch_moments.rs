@@ -1,0 +1,71 @@
+//! Cached moments of the query (batch) size distribution.
+//!
+//! The analytic engine needs E[b], E[b^2] and p95(b); they are estimated
+//! once by deterministic sampling and cached process-wide.
+
+use once_cell::sync::Lazy;
+
+use crate::rng::{BatchSizeDist, Xoshiro256};
+
+/// First/second moments + tail quantile of the batch-size distribution.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchMoments {
+    pub mean: f64,
+    pub second: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl BatchMoments {
+    /// Estimate moments by sampling `n` draws with a fixed seed.
+    pub fn estimate(dist: &BatchSizeDist, n: usize, seed: u64) -> Self {
+        assert!(n > 0);
+        let mut rng = Xoshiro256::seed_from(seed);
+        let mut xs: Vec<f64> = (0..n).map(|_| dist.sample(&mut rng) as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let second = xs.iter().map(|x| x * x).sum::<f64>() / n as f64;
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BatchMoments {
+            mean,
+            second,
+            p95: xs[((n as f64 * 0.95) as usize).min(n - 1)],
+            p99: xs[((n as f64 * 0.99) as usize).min(n - 1)],
+        }
+    }
+
+    /// Squared coefficient of variation.
+    pub fn scv(&self) -> f64 {
+        let var = self.second - self.mean * self.mean;
+        (var / (self.mean * self.mean)).max(0.0)
+    }
+}
+
+/// Paper-default distribution moments, computed once.
+pub fn paper_moments() -> &'static BatchMoments {
+    static M: Lazy<BatchMoments> = Lazy::new(|| {
+        BatchMoments::estimate(&BatchSizeDist::paper_default(), 200_000, 0xBA7C4)
+    });
+    &M
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_moments_match_expectations() {
+        let m = paper_moments();
+        assert!((180.0..260.0).contains(&m.mean), "mean={}", m.mean);
+        assert!(m.p95 > 500.0, "p95={}", m.p95);
+        assert!(m.scv() > 1.0, "heavy tail expected, scv={}", m.scv());
+    }
+
+    #[test]
+    fn estimate_is_deterministic() {
+        let d = BatchSizeDist::paper_default();
+        let a = BatchMoments::estimate(&d, 10_000, 1);
+        let b = BatchMoments::estimate(&d, 10_000, 1);
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.p95, b.p95);
+    }
+}

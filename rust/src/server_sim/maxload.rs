@@ -1,0 +1,188 @@
+//! Max-load search: the paper's §V-B procedure — "start from a low input
+//! query arrival rate and gradually inject higher request rates until the
+//! observed (95th percentile) tail latency starts violating the SLA."
+//!
+//! Implemented as a bracketed binary search over the arrival rate, with
+//! either the analytic engine (fast; profiler tables) or the full
+//! discrete-event simulation (validation) as the feasibility oracle.
+
+use crate::config::{ModelId, NodeConfig};
+
+use super::analytic::{solve, AnalyticTenant};
+use super::sim::{NullController, SimulatedTenant, Simulation};
+
+/// Search options.
+#[derive(Debug, Clone)]
+pub struct MaxLoadOpts {
+    /// Relative precision of the returned rate.
+    pub tol: f64,
+    /// Simulated seconds per feasibility probe (sim oracle only).
+    pub sim_duration_s: f64,
+    pub sim_warmup_s: f64,
+    pub seed: u64,
+}
+
+impl Default for MaxLoadOpts {
+    fn default() -> Self {
+        MaxLoadOpts {
+            tol: 0.01,
+            sim_duration_s: 30.0,
+            sim_warmup_s: 5.0,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Generic bracketed binary search over a feasibility predicate.
+fn search(mut feasible: impl FnMut(f64) -> bool, tol: f64) -> f64 {
+    // Bracket: grow until infeasible.
+    let mut lo = 0.0;
+    let mut hi = 1.0;
+    let mut grew = 0;
+    while feasible(hi) && grew < 40 {
+        lo = hi;
+        hi *= 2.0;
+        grew += 1;
+    }
+    if grew == 40 {
+        return lo; // effectively unbounded; report the last feasible rate
+    }
+    while (hi - lo) / hi.max(1e-9) > tol {
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Max sustainable QPS of `model` with `workers` workers and `ways` LLC
+/// ways, alone on the node (analytic oracle).
+pub fn max_load_analytic(
+    node: &NodeConfig,
+    model: ModelId,
+    workers: usize,
+    ways: usize,
+    opts: &MaxLoadOpts,
+) -> f64 {
+    search(
+        |qps| {
+            let t = AnalyticTenant {
+                model,
+                workers,
+                ways,
+                arrival_qps: qps,
+            };
+            solve(node, &[t]).tenants[0].feasible
+        },
+        opts.tol,
+    )
+}
+
+/// Max sustainable QPS of tenant `target` while the other tenants run at
+/// their fixed configured rates (analytic oracle). Feasibility requires
+/// *every* tenant to meet its SLA — co-location must not sacrifice the
+/// background model.
+pub fn max_load_analytic_colocated(
+    node: &NodeConfig,
+    fixed: &[AnalyticTenant],
+    target: &AnalyticTenant,
+    opts: &MaxLoadOpts,
+) -> f64 {
+    search(
+        |qps| {
+            let mut all = fixed.to_vec();
+            all.push(AnalyticTenant {
+                arrival_qps: qps,
+                ..target.clone()
+            });
+            solve(node, &all).tenants.iter().all(|t| t.feasible)
+        },
+        opts.tol,
+    )
+}
+
+/// Max sustainable QPS via the discrete-event simulation (slower, used to
+/// validate the analytic oracle and for measured figures).
+pub fn max_load_sim(
+    node: &NodeConfig,
+    model: ModelId,
+    workers: usize,
+    ways: usize,
+    opts: &MaxLoadOpts,
+) -> f64 {
+    let sla_s = model.spec().sla_ms / 1e3;
+    search(
+        |qps| {
+            let t = SimulatedTenant {
+                model,
+                workers,
+                ways,
+                arrival_qps: qps,
+            };
+            let mut sim = Simulation::new(node.clone(), &[t], opts.seed);
+            let out = &sim.run(opts.sim_duration_s, opts.sim_warmup_s, &mut NullController)[0];
+            // Require both SLA at p95 and queue stability.
+            out.p95_s <= sla_s && out.completed as f64 >= 0.95 * out.arrivals as f64
+        },
+        opts.tol.max(0.02),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_workers_more_load() {
+        let node = NodeConfig::paper_default();
+        let opts = MaxLoadOpts::default();
+        let m = ModelId::from_name("ncf").unwrap();
+        let q4 = max_load_analytic(&node, m, 4, 11, &opts);
+        let q16 = max_load_analytic(&node, m, 16, 11, &opts);
+        assert!(q16 > 2.0 * q4, "16 workers ({q16}) vs 4 ({q4})");
+    }
+
+    #[test]
+    fn dlrm_d_saturates_beyond_12_workers() {
+        // Paper: "QPS improvements in DLRM(D) levels off around 12 workers,
+        // only achieving a further 4% going from 12 to 16".
+        let node = NodeConfig::paper_default();
+        let opts = MaxLoadOpts::default();
+        let m = ModelId::from_name("dlrm_d").unwrap();
+        let q12 = max_load_analytic(&node, m, 12, 11, &opts);
+        let q16 = max_load_analytic(&node, m, 16, 11, &opts);
+        assert!(
+            q16 < 1.15 * q12,
+            "DLRM(D) should flatten: q12={q12:.1} q16={q16:.1}"
+        );
+    }
+
+    #[test]
+    fn compute_models_scale_near_linearly() {
+        let node = NodeConfig::paper_default();
+        let opts = MaxLoadOpts::default();
+        for name in ["din", "wnd"] {
+            let m = ModelId::from_name(name).unwrap();
+            let q8 = max_load_analytic(&node, m, 8, 11, &opts);
+            let q16 = max_load_analytic(&node, m, 16, 11, &opts);
+            assert!(
+                q16 > 1.6 * q8,
+                "{name} should scale: q8={q8:.1} q16={q16:.1}"
+            );
+        }
+    }
+
+    #[test]
+    fn positive_loads_for_all_models() {
+        let node = NodeConfig::paper_default();
+        let opts = MaxLoadOpts::default();
+        for id in ModelId::all() {
+            let w = node.capacity_limit(id.spec().worker_bytes());
+            let q = max_load_analytic(&node, id, w, 11, &opts);
+            assert!(q > 0.5, "{}: max load {q}", id.name());
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Multi-tenant inference-server engines.
+//!
+//! Two complementary engines over the same node model:
+//!
+//! * [`Simulation`] — discrete-event: Poisson arrivals, heavy-tail batch
+//!   sizes, FIFO per-tenant queues, per-dispatch bandwidth contention and
+//!   a pluggable [`Controller`] hook (the RMU / PARTIES feedback loops).
+//!   Used for the dynamic scenarios (Fig. 14), measured co-location QPS
+//!   (Fig. 10b) and the end-to-end examples.
+//!
+//! * [`analytic`] — an M/G/c fixed-point approximation of the same system.
+//!   Used by the profiler to build the (model × workers × ways) lookup
+//!   tables and by the EMU sweeps, where the full sim would be needlessly
+//!   slow.  `tests/integration_sim.rs` cross-validates the two engines.
+
+pub mod analytic;
+mod batch_moments;
+mod maxload;
+mod sim;
+
+pub use batch_moments::BatchMoments;
+pub use maxload::{max_load_analytic, max_load_analytic_colocated, max_load_sim, MaxLoadOpts};
+pub use sim::{
+    AllocChange, Controller, NullController, SimOutcome, SimulatedTenant, Simulation,
+    TenantStats,
+};

@@ -1,0 +1,541 @@
+//! Discrete-event multi-tenant inference-server simulation.
+//!
+//! One node hosts up to two tenants (co-located models).  Each tenant has
+//! a FIFO query queue and `workers` parallel workers; queries arrive
+//! Poisson with heavy-tail batch sizes; service times come from the node
+//! performance model with dispatch-time bandwidth contention.  A
+//! [`Controller`] is invoked every `monitor_interval` of simulated time
+//! and may resize worker counts and LLC partitions — this is the hook the
+//! Hera RMU (Algorithm 3) and the PARTIES baseline plug into.
+
+use crate::config::{ModelId, NodeConfig};
+use crate::metrics::LatencyStats;
+use crate::node::{BandwidthModel, ServiceProfile};
+use crate::rng::{BatchSizeDist, Exponential, Xoshiro256};
+use crate::simkernel::EventQueue;
+use std::collections::VecDeque;
+
+/// Tenant configuration for a simulation run.
+#[derive(Debug, Clone)]
+pub struct SimulatedTenant {
+    pub model: ModelId,
+    pub workers: usize,
+    pub ways: usize,
+    /// Mean query arrival rate (QPS). May be rescaled by a load trace.
+    pub arrival_qps: f64,
+}
+
+/// Allocation change requested by a controller.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AllocChange {
+    pub tenant: usize,
+    pub workers: usize,
+    pub ways: usize,
+}
+
+/// Rolling statistics handed to controllers at each monitor tick.
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    pub model: ModelId,
+    pub workers: usize,
+    pub ways: usize,
+    /// p95 latency over the last monitoring window (s); 0 if no completions.
+    pub window_p95_s: f64,
+    /// Queries completed in the window.
+    pub window_completed: u64,
+    /// Observed arrival rate in the window (QPS).
+    pub window_arrival_qps: f64,
+    /// Queue depth at the tick.
+    pub queue_depth: usize,
+}
+
+/// Feedback controller plugged into the monitor loop.
+pub trait Controller {
+    /// Called every monitor interval with per-tenant window stats;
+    /// returns allocation changes to apply (empty = keep).
+    fn on_monitor(&mut self, now_s: f64, stats: &[TenantStats]) -> Vec<AllocChange>;
+}
+
+/// No-op controller (static allocation).
+pub struct NullController;
+
+impl Controller for NullController {
+    fn on_monitor(&mut self, _now: f64, _stats: &[TenantStats]) -> Vec<AllocChange> {
+        Vec::new()
+    }
+}
+
+/// Piecewise-constant load multiplier: (start_time_s, scale per tenant).
+pub type LoadTrace = Vec<(f64, Vec<f64>)>;
+
+/// Upper bound on co-located tenants per node (the paper co-locates
+/// pairs; headroom for experiments).
+pub const MAX_TENANTS: usize = 8;
+
+enum Event {
+    Arrival { tenant: usize },
+    Completion { tenant: usize, t_arrival: f64 },
+    Monitor,
+}
+
+struct TenantState {
+    cfg: SimulatedTenant,
+    profile: ServiceProfile,
+    queue: VecDeque<(f64, u32)>, // (arrival time, batch)
+    busy: usize,
+    lat_all: LatencyStats,
+    lat_window: LatencyStats,
+    window_completed: u64,
+    window_arrivals: u64,
+    completed: u64,
+    arrivals: u64,
+    load_scale: f64,
+    rng_arrival: Xoshiro256,
+    rng_batch: Xoshiro256,
+    /// Sum over completions of (busy worker-seconds) for utilization.
+    busy_time: f64,
+    bw_util_sum: f64,
+    bw_util_n: u64,
+}
+
+/// Aggregate per-tenant outcome of a run.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    pub model: ModelId,
+    pub completed: u64,
+    pub arrivals: u64,
+    pub qps: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub mean_s: f64,
+    /// Fraction of completed queries exceeding the model SLA.
+    pub violation_rate: f64,
+    /// Mean worker utilization (busy time / workers / duration).
+    pub worker_util: f64,
+    /// Mean node DRAM bandwidth utilization sampled at dispatches.
+    pub avg_bw_util: f64,
+    /// LLC miss-rate estimate from the final profile.
+    pub miss_rate: f64,
+    pub final_workers: usize,
+    pub final_ways: usize,
+}
+
+/// The simulation engine.
+pub struct Simulation {
+    node: NodeConfig,
+    tenants: Vec<TenantState>,
+    batch_dist: BatchSizeDist,
+    bw: BandwidthModel,
+    monitor_interval_s: f64,
+    trace: LoadTrace,
+    /// Timeline of (t, tenant, workers, ways) after controller changes.
+    pub alloc_timeline: Vec<(f64, usize, usize, usize)>,
+    /// Timeline of (t, tenant, window p95 normalized to SLA).
+    pub latency_timeline: Vec<(f64, usize, f64)>,
+}
+
+impl Simulation {
+    pub fn new(node: NodeConfig, tenants: &[SimulatedTenant], seed: u64) -> Self {
+        assert!(!tenants.is_empty());
+        assert!(tenants.len() <= MAX_TENANTS, "at most {MAX_TENANTS} tenants");
+        let total_workers: usize = tenants.iter().map(|t| t.workers).sum();
+        assert!(
+            total_workers <= node.cores,
+            "allocated {total_workers} workers exceed {} cores",
+            node.cores
+        );
+        let mut base_rng = Xoshiro256::seed_from(seed);
+        let bw = BandwidthModel::new(node.dram_bw_gbs * 1e9);
+        let states = tenants
+            .iter()
+            .map(|t| {
+                let profile =
+                    ServiceProfile::build(t.model.spec(), &node, t.workers.max(1), t.ways);
+                TenantState {
+                    cfg: t.clone(),
+                    profile,
+                    queue: VecDeque::new(),
+                    busy: 0,
+                    lat_all: LatencyStats::new(),
+                    lat_window: LatencyStats::new(),
+                    window_completed: 0,
+                    window_arrivals: 0,
+                    completed: 0,
+                    arrivals: 0,
+                    load_scale: 1.0,
+                    rng_arrival: base_rng.split(),
+                    rng_batch: base_rng.split(),
+                    busy_time: 0.0,
+                    bw_util_sum: 0.0,
+                    bw_util_n: 0,
+                }
+            })
+            .collect();
+        Simulation {
+            node,
+            tenants: states,
+            batch_dist: BatchSizeDist::paper_default(),
+            bw,
+            monitor_interval_s: 1.0,
+            trace: Vec::new(),
+            alloc_timeline: Vec::new(),
+            latency_timeline: Vec::new(),
+        }
+    }
+
+    /// Set the controller monitor interval (paper's T_monitor).
+    pub fn set_monitor_interval(&mut self, s: f64) {
+        assert!(s > 0.0);
+        self.monitor_interval_s = s;
+    }
+
+    /// Install a piecewise load trace: entries (start_s, per-tenant scale).
+    pub fn set_load_trace(&mut self, trace: LoadTrace) {
+        self.trace = trace;
+    }
+
+    fn apply_trace(&mut self, now: f64) {
+        for (start, scales) in &self.trace {
+            if now >= *start {
+                for (i, s) in scales.iter().enumerate() {
+                    if let Some(t) = self.tenants.get_mut(i) {
+                        t.load_scale = *s;
+                    }
+                }
+            }
+        }
+    }
+
+    fn dispatch(&mut self, tenant: usize, q: &mut EventQueue<Event>) {
+        loop {
+            let free = {
+                let t = &self.tenants[tenant];
+                t.cfg.workers.saturating_sub(t.busy)
+            };
+            if free == 0 || self.tenants[tenant].queue.is_empty() {
+                return;
+            }
+            let (t_arr, batch) = self.tenants[tenant].queue.pop_front().unwrap();
+            // Contention snapshot including this dispatch. Stack arrays:
+            // this runs twice per query, heap allocation here costs ~8%
+            // of whole-sim wall time (EXPERIMENTS.md §Perf).
+            let n = self.tenants.len().min(MAX_TENANTS);
+            let mut demands = [(0.0f64, 0usize); MAX_TENANTS];
+            let mut pressure = 0.0;
+            for (i, t) in self.tenants.iter().take(n).enumerate() {
+                demands[i] = (t.profile.per_worker_bw_demand(), t.busy);
+                if i != tenant {
+                    pressure += t.profile.sensitivity() * t.busy as f64;
+                }
+            }
+            demands[tenant].1 += 1;
+            let slowdown = self.bw.slowdown(&demands[..n]);
+            let util = self.bw.utilization(&demands[..n]);
+            // Cross-tenant cache friction from co-runners' busy workers.
+            let friction = 1.0
+                + crate::node::CROSS_TENANT_FRICTION
+                    * self.tenants[tenant].profile.sensitivity()
+                    * (pressure / self.node.cores as f64);
+            let t = &mut self.tenants[tenant];
+            t.busy += 1;
+            t.bw_util_sum += util;
+            t.bw_util_n += 1;
+            let service = t.profile.service_time_s(batch, slowdown) * friction;
+            t.busy_time += service;
+            q.schedule_in(service, Event::Completion {
+                tenant,
+                t_arrival: t_arr,
+            });
+        }
+    }
+
+    fn schedule_next_arrival(&mut self, tenant: usize, q: &mut EventQueue<Event>) {
+        let t = &mut self.tenants[tenant];
+        let rate = t.cfg.arrival_qps * t.load_scale;
+        if rate <= 0.0 {
+            // Idle tenant: poll again in a second of sim time.
+            q.schedule_in(1.0, Event::Arrival { tenant });
+            return;
+        }
+        let gap = Exponential::new(rate).sample(&mut t.rng_arrival);
+        q.schedule_in(gap, Event::Arrival { tenant });
+    }
+
+    fn rebuild_profile(&mut self, tenant: usize) {
+        let t = &mut self.tenants[tenant];
+        t.profile = ServiceProfile::build(
+            t.cfg.model.spec(),
+            &self.node,
+            t.cfg.workers.max(1),
+            t.cfg.ways,
+        );
+    }
+
+    /// Run for `duration_s` of simulated time, discarding the first
+    /// `warmup_s` from the latency statistics.
+    pub fn run(
+        &mut self,
+        duration_s: f64,
+        warmup_s: f64,
+        controller: &mut dyn Controller,
+    ) -> Vec<SimOutcome> {
+        assert!(duration_s > warmup_s);
+        let mut q = EventQueue::new();
+        self.apply_trace(0.0);
+        for i in 0..self.tenants.len() {
+            self.schedule_next_arrival(i, &mut q);
+        }
+        q.schedule(self.monitor_interval_s, Event::Monitor);
+
+        while let Some((now, ev)) = q.pop() {
+            if now > duration_s {
+                break;
+            }
+            match ev {
+                Event::Arrival { tenant } => {
+                    self.apply_trace(now);
+                    let rate_on = {
+                        let t = &mut self.tenants[tenant];
+                        t.cfg.arrival_qps * t.load_scale > 0.0
+                    };
+                    if rate_on {
+                        let batch = {
+                            let t = &mut self.tenants[tenant];
+                            t.arrivals += 1;
+                            t.window_arrivals += 1;
+                            self.batch_dist.sample(&mut t.rng_batch)
+                        };
+                        self.tenants[tenant].queue.push_back((now, batch));
+                        self.dispatch(tenant, &mut q);
+                    }
+                    self.schedule_next_arrival(tenant, &mut q);
+                }
+                Event::Completion { tenant, t_arrival } => {
+                    let latency = now - t_arrival;
+                    let t = &mut self.tenants[tenant];
+                    t.busy -= 1;
+                    t.completed += 1;
+                    t.window_completed += 1;
+                    if now >= warmup_s {
+                        t.lat_all.record(latency);
+                    }
+                    t.lat_window.record(latency);
+                    self.dispatch(tenant, &mut q);
+                }
+                Event::Monitor => {
+                    let stats: Vec<TenantStats> = self
+                        .tenants
+                        .iter()
+                        .map(|t| TenantStats {
+                            model: t.cfg.model,
+                            workers: t.cfg.workers,
+                            ways: t.cfg.ways,
+                            window_p95_s: t.lat_window.p95(),
+                            window_completed: t.window_completed,
+                            window_arrival_qps: t.window_arrivals as f64
+                                / self.monitor_interval_s,
+                            queue_depth: t.queue.len(),
+                        })
+                        .collect();
+                    for (i, s) in stats.iter().enumerate() {
+                        let sla = s.model.spec().sla_ms / 1e3;
+                        self.latency_timeline.push((now, i, s.window_p95_s / sla));
+                    }
+                    let changes = controller.on_monitor(now, &stats);
+                    for c in changes {
+                        let total_other: usize = self
+                            .tenants
+                            .iter()
+                            .enumerate()
+                            .filter(|(i, _)| *i != c.tenant)
+                            .map(|(_, t)| t.cfg.workers)
+                            .sum();
+                        let workers =
+                            c.workers.min(self.node.cores.saturating_sub(total_other));
+                        let ways = c.ways.clamp(1, self.node.llc_ways);
+                        let t = &mut self.tenants[c.tenant];
+                        if t.cfg.workers != workers || t.cfg.ways != ways {
+                            t.cfg.workers = workers;
+                            t.cfg.ways = ways;
+                            self.rebuild_profile(c.tenant);
+                            self.alloc_timeline.push((now, c.tenant, workers, ways));
+                            self.dispatch(c.tenant, &mut q);
+                        }
+                    }
+                    for t in &mut self.tenants {
+                        t.lat_window.clear();
+                        t.window_completed = 0;
+                        t.window_arrivals = 0;
+                    }
+                    q.schedule_in(self.monitor_interval_s, Event::Monitor);
+                }
+            }
+        }
+
+        let measured = duration_s - warmup_s;
+        self.tenants
+            .iter()
+            .map(|t| {
+                let sla_s = t.cfg.model.spec().sla_ms / 1e3;
+                // All quantiles with one sort of the reservoir (§Perf).
+                let q = t
+                    .lat_all
+                    .percentiles(&[50.0, 90.0, 95.0, 99.0, 99.9]);
+                let viol = if t.lat_all.count() == 0 {
+                    0.0
+                } else {
+                    // Approximate via percentile inversion: fraction above SLA.
+                    let mut hi = 0u64;
+                    for (i, p) in [50.0, 90.0, 95.0, 99.0, 99.9].iter().enumerate() {
+                        if q[i] > sla_s {
+                            hi = (1000.0 - p * 10.0) as u64;
+                            break;
+                        }
+                    }
+                    hi as f64 / 1000.0
+                };
+                SimOutcome {
+                    model: t.cfg.model,
+                    completed: t.completed,
+                    arrivals: t.arrivals,
+                    qps: t.lat_all.count() as f64 / measured,
+                    p50_s: q[0],
+                    p95_s: q[2],
+                    p99_s: q[3],
+                    mean_s: t.lat_all.mean(),
+                    violation_rate: viol,
+                    worker_util: t.busy_time
+                        / (t.cfg.workers.max(1) as f64 * duration_s),
+                    avg_bw_util: if t.bw_util_n == 0 {
+                        0.0
+                    } else {
+                        t.bw_util_sum / t.bw_util_n as f64
+                    },
+                    miss_rate: t.profile.miss_rate(),
+                    final_workers: t.cfg.workers,
+                    final_ways: t.cfg.ways,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ncf_tenant(qps: f64) -> SimulatedTenant {
+        SimulatedTenant {
+            model: ModelId::from_name("ncf").unwrap(),
+            workers: 16,
+            ways: 11,
+            arrival_qps: qps,
+        }
+    }
+
+    #[test]
+    fn low_load_has_low_latency() {
+        let node = NodeConfig::paper_default();
+        let mut sim = Simulation::new(node, &[ncf_tenant(100.0)], 1);
+        let out = &mut sim.run(20.0, 2.0, &mut NullController)[0];
+        assert!(out.completed > 1000);
+        // At 100 QPS over 16 workers there is essentially no queueing:
+        // p95 should be close to raw service time (few ms).
+        assert!(out.p95_s < 0.005, "p95={}", out.p95_s);
+        assert!(out.violation_rate < 0.06);
+    }
+
+    #[test]
+    fn overload_explodes_latency() {
+        let node = NodeConfig::paper_default();
+        let mut sim = Simulation::new(node, &[ncf_tenant(100_000.0)], 2);
+        let out = &mut sim.run(10.0, 1.0, &mut NullController)[0];
+        let sla_s = 0.005;
+        assert!(out.p95_s > 10.0 * sla_s, "p95={}", out.p95_s);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let node = NodeConfig::paper_default();
+        let a = Simulation::new(node.clone(), &[ncf_tenant(500.0)], 7)
+            .run(10.0, 1.0, &mut NullController);
+        let b = Simulation::new(node, &[ncf_tenant(500.0)], 7)
+            .run(10.0, 1.0, &mut NullController);
+        assert_eq!(a[0].completed, b[0].completed);
+        assert_eq!(a[0].p95_s, b[0].p95_s);
+    }
+
+    #[test]
+    fn two_tenants_respect_core_budget() {
+        let node = NodeConfig::paper_default();
+        let t1 = SimulatedTenant {
+            model: ModelId::from_name("dlrm_d").unwrap(),
+            workers: 12,
+            ways: 5,
+            arrival_qps: 20.0,
+        };
+        let t2 = SimulatedTenant {
+            model: ModelId::from_name("ncf").unwrap(),
+            workers: 4,
+            ways: 6,
+            arrival_qps: 200.0,
+        };
+        let mut sim = Simulation::new(node, &[t1, t2], 3);
+        let out = sim.run(10.0, 1.0, &mut NullController);
+        assert_eq!(out.len(), 2);
+        assert!(out[0].completed > 0 && out[1].completed > 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn over_allocating_cores_panics() {
+        let node = NodeConfig::paper_default();
+        let t = SimulatedTenant {
+            model: ModelId::from_name("ncf").unwrap(),
+            workers: 17,
+            ways: 11,
+            arrival_qps: 1.0,
+        };
+        Simulation::new(node, &[t], 1);
+    }
+
+    #[test]
+    fn load_trace_changes_throughput() {
+        let node = NodeConfig::paper_default();
+        let mut sim = Simulation::new(node.clone(), &[ncf_tenant(1000.0)], 5);
+        sim.set_load_trace(vec![(0.0, vec![1.0]), (5.0, vec![0.1])]);
+        let low = sim.run(10.0, 0.0, &mut NullController)[0].completed;
+        let mut sim2 = Simulation::new(node, &[ncf_tenant(1000.0)], 5);
+        let full = sim2.run(10.0, 0.0, &mut NullController)[0].completed;
+        assert!(
+            (low as f64) < 0.8 * full as f64,
+            "trace should cut arrivals: {low} vs {full}"
+        );
+    }
+
+    #[test]
+    fn controller_changes_apply_and_are_clamped() {
+        struct Grower;
+        impl Controller for Grower {
+            fn on_monitor(&mut self, _n: f64, s: &[TenantStats]) -> Vec<AllocChange> {
+                vec![AllocChange {
+                    tenant: 0,
+                    workers: s[0].workers + 8,
+                    ways: 99,
+                }]
+            }
+        }
+        let node = NodeConfig::paper_default();
+        let t = SimulatedTenant {
+            model: ModelId::from_name("ncf").unwrap(),
+            workers: 2,
+            ways: 4,
+            arrival_qps: 100.0,
+        };
+        let mut sim = Simulation::new(node, &[t], 9);
+        let out = &sim.run(5.0, 1.0, &mut Grower)[0];
+        assert_eq!(out.final_workers, 16, "grown then clamped to cores");
+        assert_eq!(out.final_ways, 11, "ways clamped to llc_ways");
+    }
+}

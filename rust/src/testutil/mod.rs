@@ -1,0 +1,81 @@
+//! Seeded property-testing driver (proptest is unavailable in the
+//! offline vendor set — DESIGN.md substitution log).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` independently seeded
+//! RNGs; on failure it reports the exact seed so the case can be replayed
+//! with `check_one(seed, f)`.  `HERA_PROP_CASES` scales case counts.
+
+use crate::rng::Xoshiro256;
+
+/// Number of cases per property (override with HERA_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("HERA_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `f` on `cases` seeded RNGs; panic with the failing seed.
+pub fn check<F: FnMut(&mut Xoshiro256) -> Result<(), String>>(
+    name: &str,
+    cases: usize,
+    mut f: F,
+) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 + case as u64;
+        let mut rng = Xoshiro256::seed_from(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property {name:?} failed (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn check_one<F: FnMut(&mut Xoshiro256) -> Result<(), String>>(seed: u64, mut f: F) {
+    let mut rng = Xoshiro256::seed_from(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replay of seed {seed:#x} failed: {msg}");
+    }
+}
+
+/// Assertion helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("unit_interval", 16, |rng| {
+            let v = rng.next_f64();
+            if (0.0..1.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn check_reports_seed_on_failure() {
+        check("always_fails", 4, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn check_one_replays() {
+        check_one(0x5EED_0001, |rng| {
+            let _ = rng.next_u64();
+            Ok(())
+        });
+    }
+}

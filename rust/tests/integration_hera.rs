@@ -1,0 +1,163 @@
+//! End-to-end Hera algorithm tests: Algorithm 1 + 2 + 3 working together
+//! on the simulated node, reproducing the paper's headline orderings.
+
+use hera::baselines::{PartiesController, SelectionPolicy};
+use hera::config::{ModelId, NodeConfig, N_MODELS};
+use hera::figures::emu_pair_analytic;
+use hera::hera::{AffinityMatrix, ClusterScheduler, HeraRmu};
+use hera::profiler::ProfileStore;
+use hera::server_sim::{SimulatedTenant, Simulation};
+use once_cell::sync::Lazy;
+
+static STORE: Lazy<ProfileStore> =
+    Lazy::new(|| ProfileStore::build(&NodeConfig::paper_default()));
+static MATRIX: Lazy<AffinityMatrix> = Lazy::new(|| AffinityMatrix::build(&STORE));
+
+fn id(name: &str) -> ModelId {
+    ModelId::from_name(name).unwrap()
+}
+
+#[test]
+fn headline_emu_ordering_hera_beats_baselines() {
+    // Paper §VII-A1: Hera > Hera(Random) > Random > DeepRecSys on mean EMU.
+    let all_pairs: Vec<(ModelId, ModelId)> = ModelId::all()
+        .flat_map(|a| {
+            ModelId::all()
+                .filter(move |b| a.index() < b.index())
+                .map(move |b| (a, b))
+        })
+        .collect();
+    let mean = |pairs: &[(ModelId, ModelId)]| -> f64 {
+        pairs
+            .iter()
+            .map(|&(a, b)| emu_pair_analytic(&STORE, a, b))
+            .sum::<f64>()
+            / pairs.len() as f64
+    };
+    let random = mean(&all_pairs);
+    let hera_random = mean(&hera::baselines::allowed_pairs_hera_random(&STORE));
+    let (low, high) = STORE.partition_by_scalability();
+    let hera_pairs: Vec<(ModelId, ModelId)> = low
+        .iter()
+        .map(|&m| (m, MATRIX.best_partner(m, &high).unwrap()))
+        .collect();
+    let hera = mean(&hera_pairs);
+
+    assert!(hera > 100.0, "hera EMU {hera}");
+    assert!(hera_random > random, "{hera_random} vs {random}");
+    assert!(hera >= hera_random - 8.0, "hera {hera} vs hera_random {hera_random}");
+    assert!(random > 100.0, "random mean should still beat DeepRecSys: {random}");
+}
+
+#[test]
+fn headline_server_reduction() {
+    // Paper §VII-C: ~26% fewer servers than DeepRecSys, ~11% fewer than
+    // Random, on even per-model targets. Require >= 15% / >= 0%.
+    let targets = [1500.0; N_MODELS];
+    let drs = SelectionPolicy::DeepRecSys
+        .schedule(&STORE, &MATRIX, &targets, 1)
+        .unwrap()
+        .num_servers() as f64;
+    let rand: f64 = (0..5)
+        .map(|s| {
+            SelectionPolicy::Random
+                .schedule(&STORE, &MATRIX, &targets, s)
+                .unwrap()
+                .num_servers() as f64
+        })
+        .sum::<f64>()
+        / 5.0;
+    let hera = ClusterScheduler::new(&STORE, &MATRIX)
+        .schedule(&targets)
+        .unwrap()
+        .num_servers() as f64;
+    assert!(
+        hera <= 0.85 * drs,
+        "hera {hera} should save >=15% vs DeepRecSys {drs}"
+    );
+    assert!(hera <= rand + 0.5, "hera {hera} vs random {rand}");
+}
+
+#[test]
+fn rmu_tracks_load_spike_faster_than_parties() {
+    // Fig. 14's claim, distilled: after a sudden spike in NCF traffic,
+    // Hera's lookup-table RMU restores SLA in fewer monitor windows than
+    // PARTIES' one-unit feedback loop.
+    let node = NodeConfig::paper_default();
+    let d = id("dlrm_d");
+    let n = id("ncf");
+    let violations_after_spike = |use_parties: bool| -> usize {
+        let tenants = [
+            SimulatedTenant {
+                model: d,
+                workers: 10,
+                ways: 5,
+                arrival_qps: STORE.profile(d).max_load(),
+            },
+            SimulatedTenant {
+                model: n,
+                workers: 6,
+                ways: 6,
+                arrival_qps: STORE.profile(n).max_load(),
+            },
+        ];
+        let mut sim = Simulation::new(node.clone(), &tenants, 31);
+        sim.set_monitor_interval(0.5);
+        sim.set_load_trace(vec![
+            (0.0, vec![0.6, 0.15]),
+            (15.0, vec![0.15, 0.55]), // the spike
+        ]);
+        let mut hera_rmu;
+        let mut parties;
+        let c: &mut dyn hera::server_sim::Controller = if use_parties {
+            parties = PartiesController::new(node.clone());
+            &mut parties
+        } else {
+            hera_rmu = HeraRmu::new(&STORE);
+            &mut hera_rmu
+        };
+        sim.run(35.0, 0.0, c);
+        sim.latency_timeline
+            .iter()
+            .filter(|(t, tenant, norm)| *t > 15.0 && *tenant == 1 && *norm > 1.0)
+            .count()
+    };
+    let hera_v = violations_after_spike(false);
+    let parties_v = violations_after_spike(true);
+    assert!(
+        hera_v <= parties_v,
+        "hera {hera_v} violating windows vs parties {parties_v}"
+    );
+}
+
+#[test]
+fn affinity_identifies_papers_good_and_bad_pairs() {
+    // NCF+DLRM(B) must rank above NCF+DIEN/DIN/WnD (paper Fig. 9/10).
+    let ncf = id("ncf");
+    let good = MATRIX.get(ncf, id("dlrm_b")).system;
+    for bad_name in ["dien", "din", "wnd"] {
+        let bad = MATRIX.get(ncf, id(bad_name)).system;
+        assert!(
+            good >= bad,
+            "ncf+dlrm_b ({good}) must rank >= ncf+{bad_name} ({bad})"
+        );
+    }
+}
+
+#[test]
+fn profiling_cost_bounds() {
+    // Paper §VII-E: affinity matrix for hundreds of models < 1 s on one
+    // core; Algorithm 2 < 100 ms. Our 8-model equivalents must be far
+    // inside those bounds.
+    let t0 = std::time::Instant::now();
+    let _ = AffinityMatrix::build(&STORE);
+    let matrix_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert!(matrix_ms < 1000.0, "affinity matrix took {matrix_ms:.1} ms");
+
+    let t0 = std::time::Instant::now();
+    let _ = ClusterScheduler::new(&STORE, &MATRIX)
+        .schedule(&[1000.0; N_MODELS])
+        .unwrap();
+    let sched_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert!(sched_ms < 100.0, "Algorithm 2 took {sched_ms:.1} ms");
+}

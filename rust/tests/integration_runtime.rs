@@ -1,0 +1,247 @@
+//! Integration tests for the PJRT runtime: artifact loading, golden
+//! numeric round-trip (python-computed outputs vs rust-executed HLO),
+//! bucket padding semantics, concurrency.
+//!
+//! Requires `make artifacts` to have run; tests no-op (with a note) if
+//! the artifact directory is missing so `cargo test` stays green on a
+//! fresh checkout.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use hera::runtime::Engine;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = std::env::var_os("HERA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn small_engine(models: &[&str]) -> Option<Engine> {
+    let dir = artifact_dir()?;
+    Some(Engine::load(&dir, Some(models), Some(&[1, 16, 64])).expect("engine load"))
+}
+
+#[test]
+fn golden_roundtrip_every_model() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    // Load all models but only the golden bucket (16) to keep compiles fast.
+    let engine = Engine::load(&dir, None, Some(&[16])).expect("engine load");
+    for model in engine.model_names() {
+        let err = engine.verify_golden(model).expect(model);
+        eprintln!("golden {model}: max abs err {err:.2e}");
+    }
+}
+
+#[test]
+fn bucket_padding_preserves_prefix() {
+    let Some(engine) = small_engine(&["ncf"]) else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    // batch=5 pads into the 16-bucket; the first 5 outputs must equal the
+    // same rows run at batch=16 with identical content.
+    let (dense16, idx16) = engine.example_inputs("ncf", 16);
+    let out16 = engine.infer("ncf", 16, &dense16, &idx16).unwrap();
+    let dense5 = dense16[..5 * engine.dense_dim()].to_vec();
+    let lookups = engine.manifest("ncf").unwrap().total_lookups;
+    let idx5 = idx16[..5 * lookups].to_vec();
+    let out5 = engine.infer("ncf", 5, &dense5, &idx5).unwrap();
+    assert_eq!(out5.bucket, 16);
+    assert_eq!(out5.probs.len(), 5);
+    for i in 0..5 {
+        assert!(
+            (out5.probs[i] - out16.probs[i]).abs() < 1e-5,
+            "row {i}: {} vs {}",
+            out5.probs[i],
+            out16.probs[i]
+        );
+    }
+}
+
+#[test]
+fn outputs_are_probabilities() {
+    let Some(engine) = small_engine(&["din", "wnd"]) else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    for model in ["din", "wnd"] {
+        let (dense, idx) = engine.example_inputs(model, 16);
+        let out = engine.infer(model, 16, &dense, &idx).unwrap();
+        assert_eq!(out.probs.len(), 16);
+        for p in &out.probs {
+            assert!((0.0..1.0).contains(p), "{model}: {p}");
+        }
+    }
+}
+
+#[test]
+fn infer_is_deterministic() {
+    let Some(engine) = small_engine(&["dlrm_a"]) else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let (dense, idx) = engine.example_inputs("dlrm_a", 16);
+    let a = engine.infer("dlrm_a", 16, &dense, &idx).unwrap();
+    let b = engine.infer("dlrm_a", 16, &dense, &idx).unwrap();
+    assert_eq!(a.probs, b.probs);
+}
+
+#[test]
+fn rejects_bad_input_sizes() {
+    let Some(engine) = small_engine(&["ncf"]) else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let (dense, idx) = engine.example_inputs("ncf", 4);
+    assert!(engine.infer("ncf", 4, &dense[..10], &idx).is_err());
+    assert!(engine.infer("ncf", 4, &dense, &idx[..3]).is_err());
+    assert!(engine.infer("nope", 4, &dense, &idx).is_err());
+    assert!(engine.infer("ncf", 0, &[], &[]).is_err());
+}
+
+#[test]
+fn concurrent_inference_from_many_threads() {
+    let Some(engine) = small_engine(&["ncf", "din"]) else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let engine = Arc::new(engine);
+    let mut handles = Vec::new();
+    for t in 0..8 {
+        let e = engine.clone();
+        handles.push(std::thread::spawn(move || {
+            let model = if t % 2 == 0 { "ncf" } else { "din" };
+            let (dense, idx) = e.example_inputs(model, 16);
+            let first = e.infer(model, 16, &dense, &idx).unwrap().probs;
+            for _ in 0..20 {
+                let out = e.infer(model, 16, &dense, &idx).unwrap();
+                assert_eq!(out.probs, first, "thread {t} nondeterminism");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("worker thread panicked");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Coordinator (serving path) tests
+// ---------------------------------------------------------------------
+
+use hera::coordinator::{run_load, Coordinator, LoadGenSpec, TenantConfig};
+use std::time::Duration;
+
+#[test]
+fn coordinator_serves_concurrent_tenants() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let engine =
+        Arc::new(Engine::load(&dir, Some(&["ncf", "din"]), Some(&[1, 16, 64, 256])).unwrap());
+    let coord = Coordinator::start(
+        engine,
+        &[
+            TenantConfig { model: "ncf".into(), workers: 2, sla_ms: None },
+            TenantConfig { model: "din".into(), workers: 2, sla_ms: None },
+        ],
+    )
+    .unwrap();
+
+    let reports = run_load(
+        &coord,
+        &[
+            LoadGenSpec { model: "ncf".into(), arrival_qps: 50.0, max_batch: 256 },
+            LoadGenSpec { model: "din".into(), arrival_qps: 50.0, max_batch: 256 },
+        ],
+        Duration::from_secs(2),
+        7,
+    )
+    .unwrap();
+    for r in &reports {
+        assert!(r.completed >= r.offered, "{}: all offered must complete", r.model);
+        assert!(r.offered > 20, "{}: offered {}", r.model, r.offered);
+        assert!(r.p95_ms > 0.0);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn coordinator_worker_resize_applies() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let engine = Arc::new(Engine::load(&dir, Some(&["ncf"]), Some(&[16])).unwrap());
+    let coord = Coordinator::start(
+        engine,
+        &[TenantConfig { model: "ncf".into(), workers: 1, sla_ms: None }],
+    )
+    .unwrap();
+    coord.set_workers("ncf", 4).unwrap();
+    for _ in 0..40 {
+        coord.submit_synthetic("ncf", 16).unwrap();
+    }
+    assert!(coord.drain(Duration::from_secs(20)), "queries must drain");
+    let snap = coord.snapshot("ncf").unwrap();
+    assert_eq!(snap.workers, 4);
+    assert_eq!(snap.completed, 40);
+    assert!(coord.set_workers("nope", 2).is_err());
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// HTTP frontend tests
+// ---------------------------------------------------------------------
+
+use hera::httpfront::{http_request, HttpFront};
+
+#[test]
+fn http_frontend_serves_infer_and_stats() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let engine = Arc::new(Engine::load(&dir, Some(&["ncf"]), Some(&[16])).unwrap());
+    let coord = Arc::new(
+        Coordinator::start(
+            engine,
+            &[TenantConfig { model: "ncf".into(), workers: 2, sla_ms: None }],
+        )
+        .unwrap(),
+    );
+    let front = HttpFront::start("127.0.0.1:0", coord.clone()).unwrap();
+    let addr = front.addr();
+
+    let (status, body) = http_request(addr, "GET", "/healthz").unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("\"ok\":true"), "{body}");
+
+    for _ in 0..10 {
+        let (status, body) =
+            http_request(addr, "POST", "/infer?model=ncf&batch=8").unwrap();
+        assert_eq!(status, 202, "{body}");
+    }
+    assert!(coord.drain(Duration::from_secs(20)));
+
+    let (status, body) = http_request(addr, "GET", "/stats?model=ncf").unwrap();
+    assert_eq!(status, 200);
+    let v = hera::json::parse(&body).unwrap();
+    assert_eq!(v.get("completed").unwrap().as_usize(), Some(10));
+    assert!(v.get("p95_ms").unwrap().as_f64().unwrap() > 0.0);
+
+    // Error paths.
+    let (status, _) = http_request(addr, "POST", "/infer?model=nope&batch=8").unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = http_request(addr, "POST", "/infer?model=ncf&batch=0").unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = http_request(addr, "GET", "/nope").unwrap();
+    assert_eq!(status, 404);
+
+    front.stop();
+}

@@ -1,0 +1,128 @@
+//! Cross-engine integration tests: the analytic M/G/c model vs the
+//! discrete-event simulation must agree on max loads and feasibility —
+//! the profiler tables (analytic) drive Hera's decisions, and the sim
+//! provides the "measured" side of every figure.
+
+use hera::config::{ModelId, NodeConfig};
+use hera::server_sim::analytic::{solve, AnalyticTenant};
+use hera::server_sim::{
+    max_load_analytic, max_load_sim, MaxLoadOpts, NullController, SimulatedTenant,
+    Simulation,
+};
+
+fn id(name: &str) -> ModelId {
+    ModelId::from_name(name).unwrap()
+}
+
+#[test]
+fn analytic_max_load_close_to_sim() {
+    // The two oracles bound the same physical system; require agreement
+    // within ~40% across a spread of model classes and allocations.
+    let node = NodeConfig::paper_default();
+    let opts = MaxLoadOpts {
+        sim_duration_s: 25.0,
+        sim_warmup_s: 5.0,
+        ..Default::default()
+    };
+    for (name, workers, ways) in [
+        ("ncf", 16, 11),
+        ("din", 8, 6),
+        ("dlrm_d", 12, 5),
+        ("wnd", 16, 11),
+        ("dlrm_a", 8, 4),
+    ] {
+        let m = id(name);
+        let qa = max_load_analytic(&node, m, workers, ways, &opts);
+        let qs = max_load_sim(&node, m, workers, ways, &opts);
+        let ratio = qa / qs.max(1e-9);
+        assert!(
+            (0.6..1.5).contains(&ratio),
+            "{name} w={workers} k={ways}: analytic {qa:.0} vs sim {qs:.0} (ratio {ratio:.2})"
+        );
+    }
+}
+
+#[test]
+fn analytic_feasibility_matches_sim_at_extremes() {
+    let node = NodeConfig::paper_default();
+    let m = id("dien");
+    let max = max_load_analytic(&node, m, 16, 11, &MaxLoadOpts::default());
+    // Far below max: both engines must call it feasible.
+    let low = AnalyticTenant { model: m, workers: 16, ways: 11, arrival_qps: 0.3 * max };
+    assert!(solve(&node, &[low]).tenants[0].feasible);
+    let t = SimulatedTenant { model: m, workers: 16, ways: 11, arrival_qps: 0.3 * max };
+    let out = &Simulation::new(node.clone(), &[t], 5).run(20.0, 4.0, &mut NullController)[0];
+    assert!(out.p95_s <= m.spec().sla_ms / 1e3, "sim p95 {}", out.p95_s);
+
+    // Far above max: both must call it infeasible.
+    let hi = AnalyticTenant { model: m, workers: 16, ways: 11, arrival_qps: 3.0 * max };
+    assert!(!solve(&node, &[hi]).tenants[0].feasible);
+    let t = SimulatedTenant { model: m, workers: 16, ways: 11, arrival_qps: 3.0 * max };
+    let out = &Simulation::new(node, &[t], 5).run(20.0, 4.0, &mut NullController)[0];
+    assert!(out.p95_s > m.spec().sla_ms / 1e3, "sim p95 {}", out.p95_s);
+}
+
+#[test]
+fn colocation_interference_visible_in_both_engines() {
+    // Adding a bandwidth-hungry co-runner must raise DLRM(D)'s p95 in
+    // both engines.
+    let node = NodeConfig::paper_default();
+    let d = id("dlrm_d");
+    let a = id("dlrm_a");
+    let qd = 0.55 * 624.0; // ~55% of its 8-worker capacity
+
+    let solo_an = solve(
+        &node,
+        &[AnalyticTenant { model: d, workers: 8, ways: 5, arrival_qps: qd }],
+    )
+    .tenants[0]
+        .p95_sojourn_s;
+    let duo_an = solve(
+        &node,
+        &[
+            AnalyticTenant { model: d, workers: 8, ways: 5, arrival_qps: qd },
+            AnalyticTenant { model: a, workers: 8, ways: 6, arrival_qps: 1200.0 },
+        ],
+    )
+    .tenants[0]
+        .p95_sojourn_s;
+    assert!(duo_an > solo_an, "analytic: {duo_an} vs {solo_an}");
+
+    let solo_tenants = [SimulatedTenant { model: d, workers: 8, ways: 5, arrival_qps: qd }];
+    let solo_sim = Simulation::new(node.clone(), &solo_tenants, 9)
+        .run(20.0, 4.0, &mut NullController)[0]
+        .p95_s;
+    let duo_tenants = [
+        SimulatedTenant { model: d, workers: 8, ways: 5, arrival_qps: qd },
+        SimulatedTenant { model: a, workers: 8, ways: 6, arrival_qps: 1200.0 },
+    ];
+    let duo_sim = Simulation::new(node, &duo_tenants, 9)
+        .run(20.0, 4.0, &mut NullController)[0]
+        .p95_s;
+    assert!(duo_sim > solo_sim, "sim: {duo_sim} vs {solo_sim}");
+}
+
+#[test]
+fn friction_hurts_cache_sensitive_pairs_more() {
+    // NCF co-running with DIN (both cache-sensitive) must lose more
+    // throughput headroom than NCF with DLRM(B) (memory-bound).
+    let node = NodeConfig::paper_default();
+    let ncf = id("ncf");
+    let p95_with = |other: ModelId, q_other: f64| -> f64 {
+        solve(
+            &node,
+            &[
+                AnalyticTenant { model: ncf, workers: 8, ways: 6, arrival_qps: 5000.0 },
+                AnalyticTenant { model: other, workers: 8, ways: 5, arrival_qps: q_other },
+            ],
+        )
+        .tenants[0]
+            .p95_sojourn_s
+    };
+    let with_din = p95_with(id("din"), 20000.0);
+    let with_b = p95_with(id("dlrm_b"), 100.0);
+    assert!(
+        with_din > with_b,
+        "cache-sensitive co-runner should hurt more: {with_din} vs {with_b}"
+    );
+}

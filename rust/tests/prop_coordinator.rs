@@ -1,0 +1,259 @@
+//! Property tests on coordinator-side invariants: routing, allocation
+//! arbitration, affinity bounds, profiler-table structure, simulation
+//! conservation laws.  Uses the seeded driver in `hera::testutil`
+//! (proptest substitute — failures print a replay seed).
+
+use hera::config::{ModelId, NodeConfig, N_MODELS};
+use hera::hera::{AffinityMatrix, ClusterScheduler, HeraRmu};
+use hera::node::{enumerate_partitions, BandwidthModel, ServiceProfile};
+use hera::profiler::ProfileStore;
+use hera::prop_assert;
+use hera::rng::{Rng, Xoshiro256};
+use hera::server_sim::{Controller, NullController, SimulatedTenant, Simulation, TenantStats};
+use hera::testutil::{check, default_cases};
+use once_cell::sync::Lazy;
+
+static STORE: Lazy<ProfileStore> =
+    Lazy::new(|| ProfileStore::build(&NodeConfig::paper_default()));
+static MATRIX: Lazy<AffinityMatrix> = Lazy::new(|| AffinityMatrix::build(&STORE));
+
+fn random_model(rng: &mut Xoshiro256) -> ModelId {
+    ModelId::from_index(rng.next_below(N_MODELS as u64) as usize).unwrap()
+}
+
+#[test]
+fn prop_service_time_monotone_in_batch_and_contention() {
+    check("service_monotone", default_cases(), |rng| {
+        let node = NodeConfig::paper_default();
+        let m = random_model(rng);
+        let workers = 1 + rng.next_below(16) as usize;
+        let ways = 1 + rng.next_below(11) as usize;
+        let prof = ServiceProfile::build(m.spec(), &node, workers, ways);
+        let b1 = 1 + rng.next_below(512) as u32;
+        let b2 = b1 + 1 + rng.next_below(512) as u32;
+        let s = 1.0 + rng.next_f64() * 3.0;
+        prop_assert!(
+            prof.service_time_s(b2, s) >= prof.service_time_s(b1, s),
+            "batch monotonicity violated for {m} ({b1} vs {b2})"
+        );
+        prop_assert!(
+            prof.service_time_s(b1, s + 0.5) >= prof.service_time_s(b1, s),
+            "contention monotonicity violated for {m}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bandwidth_slowdown_bounds() {
+    check("bw_slowdown", default_cases(), |rng| {
+        let bw = BandwidthModel::new(128e9);
+        let n = 1 + rng.next_below(4) as usize;
+        let demands: Vec<(f64, usize)> = (0..n)
+            .map(|_| (rng.next_f64() * 20e9, rng.next_below(16) as usize))
+            .collect();
+        let s = bw.slowdown(&demands);
+        let u = bw.utilization(&demands);
+        prop_assert!(s >= 1.0, "slowdown {s} < 1");
+        prop_assert!((0.0..=1.0).contains(&u), "utilization {u} out of range");
+        let total: f64 = demands.iter().map(|&(d, k)| d * k as f64).sum();
+        if total <= 128e9 {
+            prop_assert!(s == 1.0, "no saturation expected, got {s}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_affinity_in_unit_range_and_symmetric() {
+    check("affinity_bounds", default_cases(), |rng| {
+        let a = random_model(rng);
+        let b = random_model(rng);
+        let ab = MATRIX.get(a, b);
+        let ba = MATRIX.get(b, a);
+        prop_assert!((0.0..=1.0).contains(&ab.system), "{a}/{b}: {}", ab.system);
+        prop_assert!(
+            (ab.system - ba.system).abs() < 1e-9,
+            "asymmetry {a}/{b}: {} vs {}",
+            ab.system,
+            ba.system
+        );
+        let (wa, wb) = ab.best_partition;
+        prop_assert!(
+            wa >= 1 && wb >= 1 && wa + wb == STORE.node.llc_ways,
+            "invalid partition ({wa},{wb})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cluster_plans_always_meet_targets() {
+    check("cluster_meets_targets", 24, |rng| {
+        let mut targets = [0.0; N_MODELS];
+        for t in targets.iter_mut() {
+            *t = rng.next_f64() * 3000.0;
+        }
+        let plan = ClusterScheduler::new(&STORE, &MATRIX)
+            .schedule(&targets)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(plan.meets(&targets), "plan misses targets {targets:?}");
+        // Serviced accounting must equal the per-server sum.
+        for m in ModelId::all() {
+            let sum: f64 = plan.servers.iter().map(|s| s.qps_for(m)).sum();
+            prop_assert!(
+                (sum - plan.serviced[m.index()]).abs() < 1e-6,
+                "accounting mismatch for {m}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rmu_decisions_respect_node_limits() {
+    check("rmu_limits", default_cases(), |rng| {
+        let mut rmu = HeraRmu::new(&STORE);
+        let a = random_model(rng);
+        let b = random_model(rng);
+        let node = &STORE.node;
+        let wa = 1 + rng.next_below(14) as usize;
+        let wb = 1 + rng.next_below((node.cores - wa).max(1) as u64) as usize;
+        let ka = 1 + rng.next_below(10) as usize;
+        let kb = (node.llc_ways - ka).max(1);
+        let stats = vec![
+            TenantStats {
+                model: a,
+                workers: wa,
+                ways: ka,
+                window_p95_s: rng.next_f64() * 3.0 * a.spec().sla_ms / 1e3,
+                window_completed: 50,
+                window_arrival_qps: rng.next_f64() * 2.0 * STORE.profile(a).max_load(),
+                queue_depth: rng.next_below(100) as usize,
+            },
+            TenantStats {
+                model: b,
+                workers: wb,
+                ways: kb,
+                window_p95_s: rng.next_f64() * 3.0 * b.spec().sla_ms / 1e3,
+                window_completed: 50,
+                window_arrival_qps: rng.next_f64() * 2.0 * STORE.profile(b).max_load(),
+                queue_depth: rng.next_below(100) as usize,
+            },
+        ];
+        let changes = rmu.on_monitor(1.0, &stats);
+        let mut w = [wa, wb];
+        let mut k = [ka, kb];
+        for c in &changes {
+            prop_assert!(c.tenant < 2, "bad tenant index");
+            w[c.tenant] = c.workers;
+            k[c.tenant] = c.ways;
+        }
+        prop_assert!(
+            w[0] + w[1] <= node.cores,
+            "core budget exceeded: {w:?} for {a}/{b}"
+        );
+        prop_assert!(
+            w[0] >= 1 && w[1] >= 1 && k[0] >= 1 && k[1] >= 1,
+            "zero allocation: {w:?}/{k:?}"
+        );
+        prop_assert!(
+            k[0] + k[1] <= node.llc_ways,
+            "way budget exceeded: {k:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulation_conserves_queries() {
+    check("sim_conservation", 16, |rng| {
+        let node = NodeConfig::paper_default();
+        let m = random_model(rng);
+        let workers = (1 + rng.next_below(8) as usize).min(STORE.profile(m).max_workers);
+        let t = SimulatedTenant {
+            model: m,
+            workers,
+            ways: 1 + rng.next_below(11) as usize,
+            arrival_qps: 1.0 + rng.next_f64() * 0.5 * STORE.profile(m).max_load(),
+        };
+        let mut sim = Simulation::new(node, &[t], rng.next_u64());
+        let out = &sim.run(8.0, 1.0, &mut NullController)[0];
+        prop_assert!(
+            out.completed <= out.arrivals,
+            "completed {} > arrivals {}",
+            out.completed,
+            out.arrivals
+        );
+        prop_assert!(out.p95_s >= out.p50_s, "p95 < p50");
+        prop_assert!(out.p99_s >= out.p95_s, "p99 < p95");
+        prop_assert!(
+            out.worker_util <= 1.05,
+            "worker utilization {} > 1",
+            out.worker_util
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_enumeration_is_complete_and_valid() {
+    check("partition_enum", default_cases(), |rng| {
+        let total = 2 + rng.next_below(30) as usize;
+        let parts: Vec<_> = enumerate_partitions(total).collect();
+        prop_assert!(parts.len() == total - 1, "count {} != {}", parts.len(), total - 1);
+        for p in &parts {
+            prop_assert!(
+                p.ways_a >= 1 && p.ways_b >= 1 && p.ways_a + p.ways_b == total,
+                "invalid partition {p:?} of {total}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_controller_clamping_in_simulation() {
+    // A hostile controller that requests absurd allocations must always
+    // be clamped to node limits by the simulation.
+    struct Hostile(u64);
+    impl Controller for Hostile {
+        fn on_monitor(&mut self, _: f64, s: &[TenantStats]) -> Vec<hera::server_sim::AllocChange> {
+            self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let w = (self.0 >> 33) as usize % 64;
+            let k = (self.0 >> 21) as usize % 32;
+            (0..s.len())
+                .map(|i| hera::server_sim::AllocChange { tenant: i, workers: w, ways: k.max(1) })
+                .collect()
+        }
+    }
+    check("hostile_controller", 8, |rng| {
+        let node = NodeConfig::paper_default();
+        let tenants = [
+            SimulatedTenant {
+                model: ModelId::from_name("ncf").unwrap(),
+                workers: 4,
+                ways: 5,
+                arrival_qps: 500.0,
+            },
+            SimulatedTenant {
+                model: ModelId::from_name("din").unwrap(),
+                workers: 4,
+                ways: 6,
+                arrival_qps: 500.0,
+            },
+        ];
+        let mut sim = Simulation::new(node.clone(), &tenants, rng.next_u64());
+        sim.set_monitor_interval(0.25);
+        let out = sim.run(5.0, 1.0, &mut Hostile(rng.next_u64()));
+        for o in &out {
+            prop_assert!(
+                o.final_workers <= node.cores && o.final_ways <= node.llc_ways,
+                "clamping failed: {}w/{}k",
+                o.final_workers,
+                o.final_ways
+            );
+        }
+        Ok(())
+    });
+}
