@@ -24,12 +24,14 @@ fn main() -> anyhow::Result<()> {
                 workers: 8,
                 ways: 5,
                 arrival_qps: store.profile(d).max_load(),
+                cache_bytes: None,
             },
             SimulatedTenant {
                 model: n,
                 workers: 8,
                 ways: 6,
                 arrival_qps: store.profile(n).max_load(),
+                cache_bytes: None,
             },
         ];
         let mut sim = Simulation::new(NodeConfig::paper_default(), &tenants, 99);

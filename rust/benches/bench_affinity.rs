@@ -49,6 +49,8 @@ fn main() {
             window_completed: 400,
             window_arrival_qps: 500.0,
             queue_depth: 3,
+            cache_bytes: None,
+            window_hit_rate: 1.0,
         },
         TenantStats {
             model: hera::config::ModelId(4),
@@ -58,6 +60,8 @@ fn main() {
             window_completed: 3000,
             window_arrival_qps: 6000.0,
             queue_depth: 0,
+            cache_bytes: None,
+            window_hit_rate: 1.0,
         },
     ];
     b.run("rmu_monitor_step", || {

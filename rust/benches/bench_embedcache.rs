@@ -1,0 +1,82 @@
+//! `embedcache` benchmarks: hot-tier access throughput under both
+//! eviction policies, Zipf sampling rate, analytical hit-curve and
+//! cache-aware profile evaluation cost (the RMU's third-knob argmax calls
+//! these in its monitor loop).
+
+use hera::config::{ModelId, NodeConfig};
+use hera::bench_harness::Bench;
+use hera::embedcache::{
+    CacheConfig, EvictionPolicy, HitCurve, HotTierCache, TieredEmbeddingStore, Zipf,
+};
+use hera::profiler::ProfileStore;
+use hera::rng::Xoshiro256;
+
+fn main() {
+    let mut b = Bench::new("embedcache");
+
+    // Raw Zipf sampling over a paper-scale table (100M-row class).
+    let z = Zipf::new(97_000_000, 1.1);
+    let mut rng = Xoshiro256::seed_from(1);
+    b.run("zipf_sample_1k", || {
+        let mut acc = 0u64;
+        for _ in 0..1000 {
+            acc = acc.wrapping_add(z.sample(&mut rng));
+        }
+        acc
+    });
+
+    // Hot-tier access throughput, LRU vs LFU, warm cache.
+    for (name, policy) in [("lru", EvictionPolicy::Lru), ("lfu", EvictionPolicy::Lfu)] {
+        let mut cache = HotTierCache::new(policy, 10_000);
+        let z = Zipf::new(100_000, 1.0);
+        let mut rng = Xoshiro256::seed_from(2);
+        for _ in 0..50_000 {
+            cache.access(z.sample(&mut rng));
+        }
+        b.run(&format!("hot_tier_access_1k_{name}"), || {
+            let mut hits = 0u32;
+            for _ in 0..1000 {
+                hits += cache.access(z.sample(&mut rng)) as u32;
+            }
+            hits
+        });
+    }
+
+    // Tiered store: one full item gather for the widest-fanout model.
+    let dien = ModelId::from_name("dien").unwrap();
+    let mut store = TieredEmbeddingStore::new(
+        dien.spec().n_tables,
+        100_000,
+        dien.spec().lookups.max(1),
+        dien.spec().row_bytes(),
+        dien.spec().skew,
+        CacheConfig {
+            policy: EvictionPolicy::Lfu,
+            capacity_bytes: 43.0 * 10_000.0 * dien.spec().row_bytes(),
+        },
+    );
+    let mut rng3 = Xoshiro256::seed_from(3);
+    b.run("tiered_store_item_gather_dien", || {
+        store.access_item(&mut rng3);
+        store.accesses()
+    });
+
+    // Analytical curve + planning-path costs (RMU argmax inner loop).
+    let curve = HitCurve::for_model(ModelId::from_name("dlrm_b").unwrap());
+    b.run("hit_curve_eval_1k", || {
+        let mut acc = 0.0;
+        for i in 1..=1000 {
+            acc += curve.hit_rate(i as f64 * 25e6);
+        }
+        acc
+    });
+
+    let profiles = ProfileStore::build(&NodeConfig::paper_default());
+    let dlrm_b = ModelId::from_name("dlrm_b").unwrap();
+    b.run("cache_qps_factor", || {
+        profiles.cache_qps_factor(dlrm_b, 2e9)
+    });
+    b.run("min_cache_for_sla", || profiles.min_cache_for_sla(dlrm_b));
+
+    b.report();
+}

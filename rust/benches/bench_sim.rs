@@ -32,6 +32,7 @@ fn main() {
         workers: 16,
         ways: 11,
         arrival_qps: 10_000.0,
+        cache_bytes: None,
     };
     let r = b.run("simulate_1s_at_10kqps", || {
         let mut sim = Simulation::new(node.clone(), &[tenant.clone()], 7);
@@ -48,12 +49,14 @@ fn main() {
             workers: 8,
             ways: 5,
             arrival_qps: 400.0,
+            cache_bytes: None,
         },
         SimulatedTenant {
             model: ModelId::from_name("ncf").unwrap(),
             workers: 8,
             ways: 6,
             arrival_qps: 6000.0,
+            cache_bytes: None,
         },
     ];
     b.run("simulate_1s_colocated_pair", || {

@@ -146,6 +146,7 @@ impl Controller for PartiesController {
                     tenant: i,
                     workers: workers[i],
                     ways: ways[i],
+                    cache_bytes: None,
                 });
             }
         }
@@ -174,6 +175,8 @@ mod tests {
             window_completed: 100,
             window_arrival_qps: 100.0,
             queue_depth: 0,
+            cache_bytes: None,
+            window_hit_rate: 1.0,
         }
     }
 

@@ -36,6 +36,10 @@ pub struct ModelSpec {
     /// Paper-scale FC weight bytes (Table I "Size (MB)").
     pub fc_mb: f64,
     pub sla_ms: f64,
+    /// Zipf exponent of the per-table embedding-row popularity (drives the
+    /// `embedcache` hot-tier hit curve; production traces show strong
+    /// access skew — HugeCTR HPS, Hercules).
+    pub skew: f64,
 }
 
 /// Compact model identifier — index into [`MODELS`]; used to index every
@@ -59,6 +63,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         emb_gb: 2.0,
         fc_mb: 0.2,
         sla_ms: 100.0,
+        skew: 1.05,
     },
     ModelSpec {
         name: "dlrm_b",
@@ -73,6 +78,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         emb_gb: 25.0,
         fc_mb: 0.5,
         sla_ms: 400.0,
+        skew: 1.1,
     },
     ModelSpec {
         name: "dlrm_c",
@@ -87,6 +93,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         emb_gb: 2.5,
         fc_mb: 12.0,
         sla_ms: 100.0,
+        skew: 1.05,
     },
     ModelSpec {
         name: "dlrm_d",
@@ -101,6 +108,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         emb_gb: 8.0,
         fc_mb: 0.2,
         sla_ms: 100.0,
+        skew: 1.0,
     },
     ModelSpec {
         name: "ncf",
@@ -115,6 +123,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         emb_gb: 0.1,
         fc_mb: 0.6,
         sla_ms: 5.0,
+        skew: 0.9,
     },
     ModelSpec {
         name: "dien",
@@ -129,6 +138,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         emb_gb: 3.9,
         fc_mb: 0.2,
         sla_ms: 35.0,
+        skew: 1.2,
     },
     ModelSpec {
         name: "din",
@@ -143,6 +153,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         emb_gb: 2.7,
         fc_mb: 0.2,
         sla_ms: 100.0,
+        skew: 1.2,
     },
     ModelSpec {
         name: "wnd",
@@ -157,6 +168,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         emb_gb: 3.5,
         fc_mb: 8.0,
         sla_ms: 25.0,
+        skew: 1.1,
     },
 ];
 
@@ -269,13 +281,7 @@ impl ModelSpec {
 
     /// Embedding bytes gathered from DRAM/LLC for one item.
     pub fn emb_bytes_per_item(&self) -> f64 {
-        let seq = if matches!(self.pooling, Pooling::Attention | Pooling::AttentionRnn)
-        {
-            self.seq_len.saturating_sub(self.lookups)
-        } else {
-            0
-        };
-        4.0 * ((self.n_tables * self.lookups + seq) * self.emb_dim) as f64
+        self.row_accesses_per_item() as f64 * self.row_bytes()
     }
 
     /// FC weight bytes touched per query (cacheable working set), paper scale.
@@ -287,9 +293,32 @@ impl ModelSpec {
         (self.fc_mb * 1e6).max(arch)
     }
 
-    /// Total per-worker resident bytes (paper scale) — DRAM capacity check.
+    /// Total per-worker resident bytes (paper scale) — DRAM capacity check
+    /// under full embedding residency (no hot-tier cache).
     pub fn worker_bytes(&self) -> f64 {
         self.emb_gb * 1e9 + self.fc_bytes()
+    }
+
+    /// Bytes of one embedding row (fp32).
+    pub fn row_bytes(&self) -> f64 {
+        4.0 * self.emb_dim as f64
+    }
+
+    /// Rows per embedding table at paper scale (Table-I size spread evenly
+    /// over the model's tables) — the universe the hot-tier cache samples.
+    pub fn emb_rows_per_table(&self) -> f64 {
+        (self.emb_gb * 1e9 / (self.n_tables as f64 * self.row_bytes())).max(1.0)
+    }
+
+    /// Embedding-row accesses per item (cache lookups the hot tier sees).
+    pub fn row_accesses_per_item(&self) -> usize {
+        let seq = if matches!(self.pooling, Pooling::Attention | Pooling::AttentionRnn)
+        {
+            self.seq_len.saturating_sub(self.lookups)
+        } else {
+            0
+        };
+        self.n_tables * self.lookups + seq
     }
 
     /// Arithmetic intensity proxy (FLOPs per DRAM byte, single item).
@@ -345,6 +374,30 @@ mod tests {
         let c = ModelId::from_name("dlrm_c").unwrap().spec();
         let a = ModelId::from_name("dlrm_a").unwrap().spec();
         assert!(c.flops_per_item() > 10.0 * a.flops_per_item());
+    }
+
+    #[test]
+    fn row_geometry_consistent() {
+        for id in ModelId::all() {
+            let m = id.spec();
+            assert!(m.skew > 0.0, "{}: skew must be positive", m.name);
+            assert!(m.emb_rows_per_table() >= 1.0);
+            // rows * row_bytes * tables recovers the Table-I size.
+            let total = m.emb_rows_per_table() * m.row_bytes() * m.n_tables as f64;
+            assert!(
+                (total - m.emb_gb * 1e9).abs() / (m.emb_gb * 1e9) < 1e-6,
+                "{}: {total} vs {}",
+                m.name,
+                m.emb_gb * 1e9
+            );
+        }
+        // Per-item row accesses match the byte accounting.
+        let a = ModelId::from_name("dlrm_a").unwrap().spec();
+        assert_eq!(a.row_accesses_per_item(), 8 * 80);
+        assert_eq!(
+            a.row_accesses_per_item() as f64 * a.row_bytes(),
+            a.emb_bytes_per_item()
+        );
     }
 
     #[test]

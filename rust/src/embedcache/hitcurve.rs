@@ -1,0 +1,205 @@
+//! Analytical hit-rate-vs-capacity curve for a Zipfian row-access stream.
+//!
+//! For a table of `R` rows accessed Zipf(s), an ideal hot tier holding the
+//! `C` most popular rows serves `H(C, s) / H(R, s)` of accesses from DRAM,
+//! where `H(k, s)` is the generalized harmonic number.  A converged
+//! frequency-based cache (LFU) approaches this curve — verified to within
+//! 2% by the micro-simulation test in `store.rs` — and LRU tracks it from
+//! below, so the curve is the right *planning* model for the RMU and the
+//! cluster scheduler.
+
+use crate::config::ModelId;
+
+/// Generalized harmonic number `H(k, s) = Σ_{i=1..k} i^-s`, extended
+/// continuously in `k`: exact summation for the head, midpoint-rule
+/// integral for the tail (error < 1e-4 relative for the exponents in use),
+/// linear ramp below one row.
+pub fn harmonic(k: f64, s: f64) -> f64 {
+    if k <= 0.0 {
+        return 0.0;
+    }
+    if k < 1.0 {
+        // A fraction of the hottest row: linear in the cached fraction.
+        return k;
+    }
+    let kf = k.floor();
+    let head = kf.min(2048.0);
+    let mut h = 0.0;
+    let mut i = 1.0;
+    while i <= head {
+        h += i.powf(-s);
+        i += 1.0;
+    }
+    if kf > head {
+        h += integral_pow(head + 0.5, kf + 0.5, s);
+    }
+    // Partial weight of the next row for non-integer k.
+    h + (k - kf) * (kf + 1.0).powf(-s)
+}
+
+/// ∫ₐᵇ x^-s dx.
+fn integral_pow(a: f64, b: f64, s: f64) -> f64 {
+    if (s - 1.0).abs() < 1e-12 {
+        (b / a).ln()
+    } else {
+        (b.powf(1.0 - s) - a.powf(1.0 - s)) / (1.0 - s)
+    }
+}
+
+/// Hit-rate-vs-capacity curve for one model's embedding tables.
+///
+/// The hot tier is split evenly across the model's `n_tables` tables (they
+/// share one popularity law), so
+/// `hit(C_bytes) = H(C_bytes / (row_bytes · T), s) / H(R, s)`.
+#[derive(Debug, Clone, Copy)]
+pub struct HitCurve {
+    rows_per_table: f64,
+    n_tables: f64,
+    row_bytes: f64,
+    skew: f64,
+    h_total: f64,
+}
+
+impl HitCurve {
+    pub fn new(rows_per_table: f64, n_tables: usize, row_bytes: f64, skew: f64) -> HitCurve {
+        assert!(rows_per_table >= 1.0, "need at least one row per table");
+        assert!(n_tables >= 1, "need at least one table");
+        assert!(row_bytes > 0.0 && skew > 0.0);
+        HitCurve {
+            rows_per_table,
+            n_tables: n_tables as f64,
+            row_bytes,
+            skew,
+            h_total: harmonic(rows_per_table, skew),
+        }
+    }
+
+    /// The curve for one Table-I model (paper-scale row geometry plus the
+    /// `ModelSpec::skew` popularity exponent).
+    pub fn for_model(id: ModelId) -> HitCurve {
+        let spec = id.spec();
+        HitCurve::new(
+            spec.emb_rows_per_table(),
+            spec.n_tables,
+            spec.row_bytes(),
+            spec.skew,
+        )
+    }
+
+    /// Expected DRAM hit fraction of row gathers with `cache_bytes` of hot
+    /// tier.  Monotonically non-decreasing; 1.0 at (or beyond) full
+    /// residency.
+    pub fn hit_rate(&self, cache_bytes: f64) -> f64 {
+        let rows_total = cache_bytes.max(0.0) / self.row_bytes;
+        let per_table = (rows_total / self.n_tables).min(self.rows_per_table);
+        (harmonic(per_table, self.skew) / self.h_total).clamp(0.0, 1.0)
+    }
+
+    /// Smallest hot-tier size (bytes) achieving `target` hit rate, by
+    /// bisection on the monotone curve.
+    pub fn bytes_for_hit_rate(&self, target: f64) -> f64 {
+        let target = target.clamp(0.0, 1.0);
+        let full = self.full_bytes();
+        if target >= 1.0 {
+            return full;
+        }
+        let mut lo = 0.0;
+        let mut hi = full;
+        for _ in 0..64 {
+            let mid = 0.5 * (lo + hi);
+            if self.hit_rate(mid) >= target {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        hi
+    }
+
+    /// Bytes at full residency (hit rate 1.0).
+    pub fn full_bytes(&self) -> f64 {
+        self.rows_per_table * self.n_tables * self.row_bytes
+    }
+
+    pub fn skew(&self) -> f64 {
+        self.skew
+    }
+
+    pub fn rows_per_table(&self) -> f64 {
+        self.rows_per_table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harmonic_matches_exact_sums() {
+        for &s in &[0.8, 1.0, 1.3] {
+            for &k in &[1u64, 10, 100, 5000, 200_000] {
+                let exact: f64 = (1..=k).map(|i| (i as f64).powf(-s)).sum();
+                let approx = harmonic(k as f64, s);
+                assert!(
+                    (approx - exact).abs() / exact < 1e-3,
+                    "H({k}, {s}): {approx} vs {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn curve_is_monotone_and_saturates() {
+        let c = HitCurve::new(1e6, 8, 256.0, 1.05);
+        let mut prev = -1.0;
+        for i in 0..=20 {
+            let bytes = c.full_bytes() * i as f64 / 20.0;
+            let h = c.hit_rate(bytes);
+            assert!((0.0..=1.0).contains(&h));
+            assert!(h >= prev, "hit rate must be monotone");
+            prev = h;
+        }
+        assert_eq!(c.hit_rate(0.0), 0.0);
+        assert!((c.hit_rate(c.full_bytes()) - 1.0).abs() < 1e-9);
+        assert!((c.hit_rate(2.0 * c.full_bytes()) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zipf_concentration_beats_uniform() {
+        // At 10% capacity a Zipf(1.0) cache must far exceed a 10% hit rate.
+        let c = HitCurve::new(1e6, 1, 256.0, 1.0);
+        let h = c.hit_rate(0.1 * c.full_bytes());
+        assert!(h > 0.7, "Zipf(1.0) at 10% capacity: {h}");
+    }
+
+    #[test]
+    fn inverse_is_consistent() {
+        let c = HitCurve::for_model(ModelId::from_name("dlrm_b").unwrap());
+        for target in [0.3, 0.6, 0.9, 0.99] {
+            let bytes = c.bytes_for_hit_rate(target);
+            let h = c.hit_rate(bytes);
+            assert!(
+                (h - target).abs() < 1e-3,
+                "target {target}: bytes {bytes:.3e} gives {h}"
+            );
+            // And it is (near-)minimal.
+            if bytes > 1e4 {
+                assert!(c.hit_rate(bytes * 0.98) < target + 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn all_models_have_sane_curves() {
+        for id in ModelId::all() {
+            let c = HitCurve::for_model(id);
+            let spec = id.spec();
+            assert!(
+                (c.full_bytes() - spec.emb_gb * 1e9).abs() / (spec.emb_gb * 1e9) < 1e-6,
+                "{id}: full bytes"
+            );
+            let h_half = c.hit_rate(0.5 * c.full_bytes());
+            assert!(h_half > 0.5, "{id}: half capacity must beat half hits ({h_half})");
+        }
+    }
+}

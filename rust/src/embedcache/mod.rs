@@ -1,0 +1,45 @@
+//! Tiered embedding store — the `embedcache` subsystem.
+//!
+//! Hera's schedulers treat DRAM as a per-tenant knob, yet the seed modeled
+//! each model's embedding tables as a flat, fully-resident footprint
+//! (`ModelSpec::emb_gb`).  Real deployments serve multi-GB tables through a
+//! hierarchical parameter store with a hot-embedding DRAM cache over a slow
+//! backing tier (HugeCTR HPS; Hercules — PAPERS.md), which makes DRAM
+//! capacity *tunable*: a tenant with `cache_bytes` of hot tier serves a
+//! `hit_rate(cache_bytes)` fraction of row gathers from DRAM and pays the
+//! backing tier for the rest.
+//!
+//! Pieces:
+//!
+//! * [`Zipf`] — per-model embedding-row popularity sampler
+//!   (rejection-inversion, exact for any exponent > 0), driven by the
+//!   crate's deterministic `rng` module;
+//! * [`HotTierCache`] — bounded hot tier with pluggable eviction
+//!   ([`EvictionPolicy::Lru`] / [`EvictionPolicy::Lfu`]);
+//! * [`TieredEmbeddingStore`] — per-table hot caches over the backing
+//!   tier, with hit/miss/traffic accounting (micro-simulation ground truth
+//!   for the analytical curve);
+//! * [`HitCurve`] — the analytical hit-rate-vs-capacity curve computed per
+//!   [`crate::config::ModelId`] from `n_tables`, row geometry and the
+//!   `ModelSpec::skew` Zipf exponent.  Everything capacity-aware in the
+//!   node model, simulator, RMU and cluster scheduler consumes this curve.
+//!
+//! Integration points: `node::ServiceProfile::build_with_cache` (misses
+//! inflate the memory leg), `server_sim` (`SimulatedTenant::cache_bytes`,
+//! cache-resizing `AllocChange`s), `hera::rmu` (third knob:
+//! `adjust_cache_partition`), `hera::cluster` (min-cache-for-SLA
+//! feasibility), and the `cache-sweep` CLI/figure.
+
+mod hitcurve;
+mod policy;
+mod store;
+mod zipf;
+
+pub use hitcurve::{harmonic, HitCurve};
+pub use policy::{EvictionPolicy, HotTierCache};
+pub use store::{CacheConfig, TieredEmbeddingStore};
+pub use zipf::Zipf;
+
+/// Smallest hot-tier allocation the simulator/RMU will grant a cached
+/// tenant (keeps hit curves and per-table capacities well-defined).
+pub const MIN_CACHE_BYTES: f64 = 1e6;

@@ -1,0 +1,218 @@
+//! Bounded hot-tier cache with pluggable eviction.
+//!
+//! One ordered index serves both policies: entries are keyed by
+//! `(frequency, last-touch stamp)` in a `BTreeMap`, and the victim is
+//! always the first entry.  LRU pins `frequency` to zero, so the order
+//! degenerates to pure recency; LFU counts touches, with recency breaking
+//! frequency ties.  Both are deterministic, which the eviction-order unit
+//! tests and the seeded micro-simulations rely on.
+
+use std::collections::{BTreeMap, HashMap};
+
+/// Hot-tier eviction policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Evict the least-recently-used row.
+    Lru,
+    /// Evict the least-frequently-used row (ties: least recent).
+    Lfu,
+}
+
+/// A bounded cache of embedding-row keys.
+#[derive(Debug, Clone)]
+pub struct HotTierCache {
+    policy: EvictionPolicy,
+    capacity: usize,
+    /// key -> (frequency, stamp); also the membership test.
+    entries: HashMap<u64, (u64, u64)>,
+    /// (frequency, stamp) -> key, ordered; first entry is the victim.
+    order: BTreeMap<(u64, u64), u64>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl HotTierCache {
+    /// A cache holding at most `capacity` rows (>= 1).
+    pub fn new(policy: EvictionPolicy, capacity: usize) -> HotTierCache {
+        assert!(capacity >= 1, "cache capacity must be at least one row");
+        HotTierCache {
+            policy,
+            capacity,
+            entries: HashMap::with_capacity(capacity.min(1 << 20)),
+            order: BTreeMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Touch `key`: returns `true` on a hit; on a miss the row is fetched
+    /// into the hot tier, evicting the policy's victim if full.
+    pub fn access(&mut self, key: u64) -> bool {
+        self.tick += 1;
+        let stamp = self.tick;
+        if let Some((freq, old_stamp)) = self.entries.get(&key).copied() {
+            self.hits += 1;
+            self.order.remove(&(freq, old_stamp));
+            let freq = match self.policy {
+                EvictionPolicy::Lru => 0,
+                EvictionPolicy::Lfu => freq + 1,
+            };
+            self.entries.insert(key, (freq, stamp));
+            self.order.insert((freq, stamp), key);
+            return true;
+        }
+        self.misses += 1;
+        if self.entries.len() == self.capacity {
+            let (&victim_idx, &victim_key) =
+                self.order.iter().next().expect("full cache has a victim");
+            self.order.remove(&victim_idx);
+            self.entries.remove(&victim_key);
+        }
+        let freq = match self.policy {
+            EvictionPolicy::Lru => 0,
+            EvictionPolicy::Lfu => 1,
+        };
+        self.entries.insert(key, (freq, stamp));
+        self.order.insert((freq, stamp), key);
+        false
+    }
+
+    /// Membership without touching recency/frequency.
+    pub fn contains(&self, key: u64) -> bool {
+        self.entries.contains_key(&key)
+    }
+
+    /// The key the next miss would evict (None if not full).
+    pub fn victim(&self) -> Option<u64> {
+        if self.entries.len() < self.capacity {
+            return None;
+        }
+        self.order.values().next().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn policy(&self) -> EvictionPolicy {
+        self.policy
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Hit rate since the last [`Self::reset_stats`].
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Zero the hit/miss counters (contents stay warm).
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(policy: EvictionPolicy, keys: &[u64], cap: usize) -> HotTierCache {
+        let mut c = HotTierCache::new(policy, cap);
+        for &k in keys {
+            c.access(k);
+        }
+        c
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c = filled(EvictionPolicy::Lru, &[1, 2, 3], 3);
+        // Refresh 1; 2 becomes the LRU victim.
+        assert!(c.access(1));
+        assert_eq!(c.victim(), Some(2));
+        assert!(!c.access(4), "4 is a miss");
+        assert!(!c.contains(2), "2 evicted");
+        assert!(c.contains(1) && c.contains(3) && c.contains(4));
+        // Next victim is now 3 (older than 1's refresh and 4's insert).
+        assert_eq!(c.victim(), Some(3));
+    }
+
+    #[test]
+    fn lfu_evicts_least_frequent_with_lru_tiebreak() {
+        let mut c = HotTierCache::new(EvictionPolicy::Lfu, 3);
+        for k in [1, 1, 1, 2, 2, 3] {
+            c.access(k);
+        }
+        // freq: 1 -> 3, 2 -> 2, 3 -> 1; victim must be 3.
+        assert_eq!(c.victim(), Some(3));
+        c.access(4);
+        assert!(!c.contains(3) && c.contains(4));
+        // 4 (freq 1) is now older than any same-frequency newcomer: a new
+        // key 5 evicts 4, not the heavy hitters.
+        c.access(5);
+        assert!(!c.contains(4));
+        assert!(c.contains(1) && c.contains(2) && c.contains(5));
+    }
+
+    #[test]
+    fn lfu_hit_promotes_out_of_victim_slot() {
+        let mut c = filled(EvictionPolicy::Lfu, &[1, 2, 3], 3);
+        // All at freq 1; victim is the stalest (1) — until it is touched.
+        assert_eq!(c.victim(), Some(1));
+        assert!(c.access(1));
+        assert_eq!(c.victim(), Some(2));
+    }
+
+    #[test]
+    fn capacity_is_respected() {
+        let mut c = HotTierCache::new(EvictionPolicy::Lru, 4);
+        for k in 0..100 {
+            c.access(k);
+        }
+        assert_eq!(c.len(), 4);
+        for k in 96..100 {
+            assert!(c.contains(k), "most recent four stay resident");
+        }
+    }
+
+    #[test]
+    fn stats_count_hits_and_misses() {
+        let mut c = HotTierCache::new(EvictionPolicy::Lru, 2);
+        assert!(!c.access(7)); // miss
+        assert!(c.access(7)); // hit
+        assert!(!c.access(8)); // miss
+        assert_eq!((c.hits(), c.misses()), (1, 2));
+        assert!((c.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        c.reset_stats();
+        assert_eq!((c.hits(), c.misses()), (0, 0));
+        assert_eq!(c.hit_rate(), 0.0);
+        assert!(c.contains(7) && c.contains(8), "reset keeps contents");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_rejected() {
+        HotTierCache::new(EvictionPolicy::Lru, 0);
+    }
+}

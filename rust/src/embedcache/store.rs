@@ -1,0 +1,239 @@
+//! Two-tier embedding store: per-table hot caches over a slow backing
+//! tier, with traffic accounting.  This is the micro-simulation ground
+//! truth that validates the analytical [`HitCurve`] (acceptance: within 2%
+//! on a Zipf(1.0) trace) and the workload behind `bench_embedcache`.
+
+use crate::config::ModelId;
+use crate::rng::Rng;
+
+use super::{EvictionPolicy, HitCurve, HotTierCache, Zipf};
+
+/// Hot-tier configuration for one tenant/model.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    pub policy: EvictionPolicy,
+    pub capacity_bytes: f64,
+}
+
+/// A tiered embedding store for one model: `n_tables` hot caches (the
+/// capacity is split evenly, as the analytical curve assumes) in front of
+/// an infinite backing tier.
+#[derive(Debug, Clone)]
+pub struct TieredEmbeddingStore {
+    tables: Vec<HotTierCache>,
+    zipf: Zipf,
+    lookups_per_table: usize,
+    row_bytes: f64,
+    backing_bytes: f64,
+}
+
+impl TieredEmbeddingStore {
+    /// Build a store over `n_tables` tables of `rows_per_table` rows each.
+    pub fn new(
+        n_tables: usize,
+        rows_per_table: u64,
+        lookups_per_table: usize,
+        row_bytes: f64,
+        skew: f64,
+        cfg: CacheConfig,
+    ) -> TieredEmbeddingStore {
+        assert!(n_tables >= 1 && rows_per_table >= 1);
+        assert!(lookups_per_table >= 1 && row_bytes > 0.0);
+        let rows_total = (cfg.capacity_bytes / row_bytes).max(n_tables as f64);
+        let per_table = ((rows_total / n_tables as f64) as usize)
+            .clamp(1, rows_per_table as usize);
+        TieredEmbeddingStore {
+            tables: (0..n_tables)
+                .map(|_| HotTierCache::new(cfg.policy, per_table))
+                .collect(),
+            zipf: Zipf::new(rows_per_table, skew),
+            lookups_per_table,
+            row_bytes,
+            backing_bytes: 0.0,
+        }
+    }
+
+    /// A paper-scale store for one Table-I model.  Intended for bench and
+    /// test workloads with modest `capacity_bytes` — the hot tier keeps
+    /// per-row bookkeeping, so size it accordingly.
+    pub fn for_model(id: ModelId, cfg: CacheConfig) -> TieredEmbeddingStore {
+        let spec = id.spec();
+        TieredEmbeddingStore::new(
+            spec.n_tables,
+            spec.emb_rows_per_table() as u64,
+            spec.lookups.max(1),
+            spec.row_bytes(),
+            spec.skew,
+            cfg,
+        )
+    }
+
+    /// The matching analytical curve (same geometry and skew).
+    pub fn hit_curve(&self) -> HitCurve {
+        HitCurve::new(
+            self.zipf.n() as f64,
+            self.tables.len(),
+            self.row_bytes,
+            self.zipf.exponent(),
+        )
+    }
+
+    /// Configured hot-tier capacity in bytes (after per-table rounding).
+    pub fn capacity_bytes(&self) -> f64 {
+        self.tables.len() as f64 * self.tables[0].capacity() as f64 * self.row_bytes
+    }
+
+    /// Gather one item: every table performs its per-item lookups against
+    /// its hot tier; misses stream rows in from the backing tier.
+    pub fn access_item<R: Rng>(&mut self, rng: &mut R) {
+        let zipf = self.zipf;
+        for table in &mut self.tables {
+            for _ in 0..self.lookups_per_table {
+                let row = zipf.sample(rng);
+                if !table.access(row) {
+                    self.backing_bytes += self.row_bytes;
+                }
+            }
+        }
+    }
+
+    /// Row accesses since the last reset, summed over tables.
+    pub fn accesses(&self) -> u64 {
+        self.tables.iter().map(|t| t.hits() + t.misses()).sum()
+    }
+
+    /// Measured hot-tier hit rate since the last reset.
+    pub fn hit_rate(&self) -> f64 {
+        let hits: u64 = self.tables.iter().map(HotTierCache::hits).sum();
+        let total = self.accesses();
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// Bytes fetched from the backing tier since the last reset.
+    pub fn backing_bytes(&self) -> f64 {
+        self.backing_bytes
+    }
+
+    /// Zero all counters, keeping the caches warm.
+    pub fn reset_stats(&mut self) {
+        for t in &mut self.tables {
+            t.reset_stats();
+        }
+        self.backing_bytes = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn run_store(policy: EvictionPolicy, capacity_rows: usize, skew: f64) -> (f64, f64) {
+        // One table, 10k rows, 256 B/row: small enough to micro-simulate,
+        // large enough for a real Zipf tail.
+        let rows = 10_000u64;
+        let row_bytes = 256.0;
+        let mut store = TieredEmbeddingStore::new(
+            1,
+            rows,
+            1,
+            row_bytes,
+            skew,
+            CacheConfig {
+                policy,
+                capacity_bytes: capacity_rows as f64 * row_bytes,
+            },
+        );
+        let mut rng = Xoshiro256::seed_from(0xCAC4E);
+        // Warm until the policy converges, then measure.
+        for _ in 0..200_000 {
+            store.access_item(&mut rng);
+        }
+        store.reset_stats();
+        for _ in 0..200_000 {
+            store.access_item(&mut rng);
+        }
+        let analytic = store.hit_curve().hit_rate(store.capacity_bytes());
+        (store.hit_rate(), analytic)
+    }
+
+    #[test]
+    fn lfu_matches_hit_curve_within_two_percent_on_zipf_1() {
+        // The acceptance criterion: analytical HitCurve vs simulated hit
+        // rate within 2% on a Zipf(1.0) trace (10% capacity).
+        let (measured, analytic) = run_store(EvictionPolicy::Lfu, 1000, 1.0);
+        assert!(
+            (measured - analytic).abs() < 0.02,
+            "LFU measured {measured:.4} vs analytic {analytic:.4}"
+        );
+    }
+
+    #[test]
+    fn lru_tracks_curve_from_below() {
+        let (measured, analytic) = run_store(EvictionPolicy::Lru, 1000, 1.0);
+        // LRU cannot beat the ideal top-C curve, and on a stationary Zipf
+        // trace it lands close beneath it (Che-style approximation).
+        assert!(
+            measured <= analytic + 0.01,
+            "LRU {measured:.4} must not beat ideal {analytic:.4}"
+        );
+        assert!(
+            analytic - measured < 0.10,
+            "LRU {measured:.4} too far below analytic {analytic:.4}"
+        );
+    }
+
+    #[test]
+    fn measured_hit_rate_grows_with_capacity() {
+        let (small, _) = run_store(EvictionPolicy::Lfu, 200, 1.0);
+        let (large, _) = run_store(EvictionPolicy::Lfu, 2000, 1.0);
+        assert!(
+            large > small + 0.05,
+            "capacity must buy hits: {small:.4} vs {large:.4}"
+        );
+    }
+
+    #[test]
+    fn backing_traffic_accounts_misses() {
+        let rows = 1000u64;
+        let mut store = TieredEmbeddingStore::new(
+            2,
+            rows,
+            3,
+            128.0,
+            1.0,
+            CacheConfig {
+                policy: EvictionPolicy::Lru,
+                capacity_bytes: 100.0 * 128.0,
+            },
+        );
+        let mut rng = Xoshiro256::seed_from(3);
+        for _ in 0..5_000 {
+            store.access_item(&mut rng);
+        }
+        let total = store.accesses();
+        assert_eq!(total, 5_000 * 2 * 3, "2 tables x 3 lookups per item");
+        let misses = total - (store.hit_rate() * total as f64).round() as u64;
+        assert!(
+            (store.backing_bytes() - misses as f64 * 128.0).abs() < 128.0,
+            "backing bytes must equal miss count x row bytes"
+        );
+    }
+
+    #[test]
+    fn per_model_store_builds() {
+        // NCF's table is small enough to cache at 10% for a quick check.
+        let id = ModelId::from_name("ncf").unwrap();
+        let cfg = CacheConfig {
+            policy: EvictionPolicy::Lfu,
+            capacity_bytes: 0.1 * id.spec().emb_gb * 1e9,
+        };
+        let store = TieredEmbeddingStore::for_model(id, cfg);
+        assert_eq!(store.tables.len(), 4);
+        assert!(store.capacity_bytes() <= cfg.capacity_bytes * 1.01);
+    }
+}

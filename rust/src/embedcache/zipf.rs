@@ -1,0 +1,185 @@
+//! Zipfian rank sampler over `1..=n` by rejection-inversion
+//! (Hörmann & Derflinger; the sampler behind Apache Commons and
+//! `rand_distr`).  Exact for any exponent > 0 — including the `s < 1`
+//! regime some models use — with O(1) expected time and no setup tables,
+//! so a sampler over 100M embedding rows costs nothing to build.
+
+use crate::rng::Rng;
+
+/// Zipf(n, s): P(k) ∝ k^-s for ranks k in `1..=n` (rank 1 = hottest row).
+#[derive(Debug, Clone, Copy)]
+pub struct Zipf {
+    n: u64,
+    exponent: f64,
+    h_integral_x1: f64,
+    h_integral_n: f64,
+    threshold: f64,
+}
+
+/// H(x) = ∫₁ˣ t^-s dt, extended continuously (the sampler's hazard
+/// integral, shifted so H(1) = 0).
+fn h_integral(x: f64, s: f64) -> f64 {
+    if (s - 1.0).abs() < 1e-12 {
+        x.ln()
+    } else {
+        (x.powf(1.0 - s) - 1.0) / (1.0 - s)
+    }
+}
+
+/// Inverse of [`h_integral`].
+fn h_integral_inverse(v: f64, s: f64) -> f64 {
+    if (s - 1.0).abs() < 1e-12 {
+        v.exp()
+    } else {
+        // Guard the root argument against tiny negative fp noise.
+        (1.0 + v * (1.0 - s)).max(f64::MIN_POSITIVE).powf(1.0 / (1.0 - s))
+    }
+}
+
+/// The density h(x) = x^-s.
+fn h(x: f64, s: f64) -> f64 {
+    x.powf(-s)
+}
+
+impl Zipf {
+    /// Sampler over `1..=n` with exponent `s` (both must be positive).
+    pub fn new(n: u64, s: f64) -> Zipf {
+        assert!(n >= 1, "Zipf needs at least one element");
+        assert!(s > 0.0 && s.is_finite(), "Zipf exponent must be positive, got {s}");
+        Zipf {
+            n,
+            exponent: s,
+            h_integral_x1: h_integral(1.5, s) - 1.0,
+            h_integral_n: h_integral(n as f64 + 0.5, s),
+            threshold: 2.0 - h_integral_inverse(h_integral(2.5, s) - h(2.0, s), s),
+        }
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn exponent(&self) -> f64 {
+        self.exponent
+    }
+
+    /// Draw one rank in `1..=n` (1 is the most popular).
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> u64 {
+        let s = self.exponent;
+        loop {
+            let u = self.h_integral_n
+                + rng.next_f64() * (self.h_integral_x1 - self.h_integral_n);
+            let x = h_integral_inverse(u, s);
+            let k64 = (x + 0.5).floor().clamp(1.0, self.n as f64);
+            let k = k64 as u64;
+            if k64 - x <= self.threshold
+                || u >= h_integral(k64 + 0.5, s) - h(k64, s)
+            {
+                return k;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    /// Exact H(n, s) by summation, for test oracles only.
+    fn harmonic_exact(n: u64, s: f64) -> f64 {
+        (1..=n).map(|i| (i as f64).powf(-s)).sum()
+    }
+
+    #[test]
+    fn samples_stay_in_range_and_cover_head() {
+        let z = Zipf::new(100, 1.0);
+        let mut rng = Xoshiro256::seed_from(21);
+        let mut seen1 = false;
+        for _ in 0..10_000 {
+            let k = z.sample(&mut rng);
+            assert!((1..=100).contains(&k));
+            seen1 |= k == 1;
+        }
+        assert!(seen1, "rank 1 must be sampled");
+    }
+
+    #[test]
+    fn rank_one_frequency_matches_inverse_harmonic() {
+        // P(1) = 1 / H(n, s).
+        for &(n, s) in &[(1_000u64, 1.0f64), (10_000, 0.8), (10_000, 1.3)] {
+            let z = Zipf::new(n, s);
+            let mut rng = Xoshiro256::seed_from(22);
+            let trials = 200_000;
+            let ones = (0..trials).filter(|_| z.sample(&mut rng) == 1).count();
+            let p_hat = ones as f64 / trials as f64;
+            let p = 1.0 / harmonic_exact(n, s);
+            assert!(
+                (p_hat - p).abs() < 0.01,
+                "n={n} s={s}: P(1) measured {p_hat:.4} vs exact {p:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn head_mass_matches_analytic() {
+        // P(k <= 100) = H(100, s) / H(n, s) — the quantity the HitCurve
+        // integrates; verify the sampler agrees with the closed form.
+        let n = 100_000u64;
+        for &s in &[0.9, 1.0, 1.2] {
+            let z = Zipf::new(n, s);
+            let mut rng = Xoshiro256::seed_from(23);
+            let trials = 200_000;
+            let head = (0..trials).filter(|_| z.sample(&mut rng) <= 100).count();
+            let measured = head as f64 / trials as f64;
+            let exact = harmonic_exact(100, s) / harmonic_exact(n, s);
+            assert!(
+                (measured - exact).abs() < 0.01,
+                "s={s}: head mass {measured:.4} vs {exact:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn higher_skew_concentrates_mass() {
+        let n = 10_000u64;
+        let mut rng = Xoshiro256::seed_from(24);
+        let head_frac = |s: f64, rng: &mut Xoshiro256| -> f64 {
+            let z = Zipf::new(n, s);
+            let trials = 50_000;
+            (0..trials).filter(|_| z.sample(rng) <= 10).count() as f64 / trials as f64
+        };
+        let flat = head_frac(0.6, &mut rng);
+        let steep = head_frac(1.4, &mut rng);
+        assert!(steep > 2.0 * flat, "skew must concentrate: {steep} vs {flat}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let z = Zipf::new(1_000_000, 1.05);
+        let a: Vec<u64> = {
+            let mut rng = Xoshiro256::seed_from(9);
+            (0..64).map(|_| z.sample(&mut rng)).collect()
+        };
+        let b: Vec<u64> = {
+            let mut rng = Xoshiro256::seed_from(9);
+            (0..64).map(|_| z.sample(&mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn single_element_always_rank_one() {
+        let z = Zipf::new(1, 1.0);
+        let mut rng = Xoshiro256::seed_from(4);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut rng), 1);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_exponent_rejected() {
+        Zipf::new(10, 0.0);
+    }
+}

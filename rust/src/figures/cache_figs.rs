@@ -1,0 +1,164 @@
+//! Embedding-cache figure: hit rate and tail latency vs hot-tier
+//! capacity (the `embedcache` acceptance curve, CLI `cache-sweep`).
+//!
+//! For a fixed (model, workers, ways, load) operating point the sweep
+//! grows the hot tier from ~0.01% of the tables to full residency and
+//! reports the analytical hit rate, the steady-state p95 from the coupled
+//! analytic engine, and the QPS-retention factor the RMU's cache knob
+//! consumes.  Hit rate is monotonically non-decreasing and p95
+//! monotonically non-increasing in capacity — asserted by the unit test
+//! below and by the `cache-sweep` CLI output.
+
+use crate::config::ModelId;
+use crate::profiler::ProfileStore;
+use crate::server_sim::analytic::{solve, AnalyticTenant};
+use crate::server_sim::{max_load_analytic, MaxLoadOpts};
+
+use super::{fmt, FigureContext};
+
+/// One point of the capacity sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct CachePoint {
+    /// Hot-tier size as a fraction of full table bytes.
+    pub frac: f64,
+    pub cache_bytes: f64,
+    /// Analytical hit rate at this capacity.
+    pub hit_rate: f64,
+    /// Steady-state p95 sojourn (s) at the probe load; infinite when the
+    /// allocation cannot sustain the load.
+    pub p95_s: f64,
+    /// QPS-retention factor (RMU cache-knob input).
+    pub qps_factor: f64,
+}
+
+/// Sweep `points` log-spaced capacities for `model` at `workers`/`ways`,
+/// probing with `load_frac` of the full-residency max load.
+pub fn sweep_points(
+    store: &ProfileStore,
+    model: ModelId,
+    workers: usize,
+    ways: usize,
+    load_frac: f64,
+    points: usize,
+) -> Vec<CachePoint> {
+    assert!(points >= 2);
+    let curve = store.hit_curve(model);
+    let full = curve.full_bytes();
+    let qps = load_frac
+        * max_load_analytic(&store.node, model, workers, ways, &MaxLoadOpts::default());
+    let lo_frac: f64 = 1e-4;
+    (0..points)
+        .map(|i| {
+            // Log-spaced from lo_frac to 1.0.
+            let t = i as f64 / (points - 1) as f64;
+            let frac = lo_frac * (1.0 / lo_frac).powf(t);
+            let cache_bytes = frac * full;
+            let out = solve(
+                &store.node,
+                &[AnalyticTenant {
+                    model,
+                    workers,
+                    ways,
+                    arrival_qps: qps,
+                    cache_bytes: Some(cache_bytes),
+                }],
+            );
+            CachePoint {
+                frac,
+                cache_bytes,
+                hit_rate: curve.hit_rate(cache_bytes),
+                p95_s: out.tenants[0].p95_sojourn_s,
+                qps_factor: store.cache_qps_factor(model, cache_bytes),
+            }
+        })
+        .collect()
+}
+
+/// The `cache` figure: capacity sweeps for one memory-heavy and one
+/// compute-heavy model.
+pub fn cache_sweep(ctx: &FigureContext) -> anyhow::Result<()> {
+    let points = if ctx.fast { 6 } else { 13 };
+    let mut rows = Vec::new();
+    for (name, workers, ways, load) in
+        [("dlrm_b", 8usize, 6usize, 0.35f64), ("dlrm_d", 12, 5, 0.35)]
+    {
+        let m = ModelId::from_name(name).unwrap();
+        let sweep = sweep_points(&ctx.store, m, workers, ways, load, points);
+        println!("  {name} ({workers}w/{ways}k @ {:.0}% load):", 100.0 * load);
+        for p in &sweep {
+            let p95_ms = if p.p95_s.is_finite() {
+                fmt(p.p95_s * 1e3)
+            } else {
+                "inf".into()
+            };
+            println!(
+                "    cache {:>8.4} GB  hit {:>5.1}%  p95 {:>9} ms  qps-factor {:.3}",
+                p.cache_bytes / 1e9,
+                100.0 * p.hit_rate,
+                p95_ms,
+                p.qps_factor
+            );
+            rows.push(vec![
+                name.into(),
+                fmt(p.frac),
+                fmt(p.cache_bytes / 1e9),
+                fmt(100.0 * p.hit_rate),
+                p95_ms,
+                fmt(m.spec().sla_ms),
+                fmt(p.qps_factor),
+            ]);
+        }
+    }
+    ctx.write_csv(
+        "cache_sweep.csv",
+        "model,cache_frac,cache_gb,hit_rate_pct,p95_ms,sla_ms,qps_factor",
+        &rows,
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NodeConfig;
+    use once_cell::sync::Lazy;
+
+    static STORE: Lazy<ProfileStore> =
+        Lazy::new(|| ProfileStore::build(&NodeConfig::paper_default()));
+
+    #[test]
+    fn sweep_is_monotone_hit_up_p95_down() {
+        let m = ModelId::from_name("dlrm_b").unwrap();
+        let sweep = sweep_points(&STORE, m, 8, 6, 0.35, 9);
+        assert_eq!(sweep.len(), 9);
+        for w in sweep.windows(2) {
+            assert!(
+                w[1].hit_rate >= w[0].hit_rate,
+                "hit rate must not drop: {:?} -> {:?}",
+                w[0].hit_rate,
+                w[1].hit_rate
+            );
+            assert!(
+                w[1].p95_s <= w[0].p95_s,
+                "p95 must not grow with capacity: {} -> {}",
+                w[0].p95_s,
+                w[1].p95_s
+            );
+            assert!(w[1].qps_factor >= w[0].qps_factor);
+        }
+        let last = sweep.last().unwrap();
+        assert!((last.hit_rate - 1.0).abs() < 1e-9, "full residency hits 1.0");
+        assert!(last.p95_s.is_finite(), "full residency must sustain the load");
+    }
+
+    #[test]
+    fn figure_writes_csv() {
+        let dir = std::env::temp_dir().join("hera_cachefig_test");
+        let ctx = FigureContext::new(&dir, true);
+        cache_sweep(&ctx).unwrap();
+        let text = std::fs::read_to_string(dir.join("cache_sweep.csv")).unwrap();
+        assert!(text.lines().count() > 8, "both sweeps present");
+        assert!(text.starts_with("model,cache_frac"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

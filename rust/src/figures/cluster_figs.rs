@@ -147,8 +147,8 @@ fn emu_pair_even_split(store: &ProfileStore, a: ModelId, b: ModelId) -> f64 {
         let fx = i as f64 / 10.0;
         let feasible = |fy: f64| -> bool {
             let tenants = [
-                AnalyticTenant { model: a, workers: wa, ways: half_w.max(1), arrival_qps: fx * ml_a },
-                AnalyticTenant { model: b, workers: wb, ways: (node.llc_ways - half_w).max(1), arrival_qps: fy * ml_b },
+                AnalyticTenant { model: a, workers: wa, ways: half_w.max(1), arrival_qps: fx * ml_a, cache_bytes: None },
+                AnalyticTenant { model: b, workers: wb, ways: (node.llc_ways - half_w).max(1), arrival_qps: fy * ml_b, cache_bytes: None },
             ];
             solve(node, &tenants).tenants.iter().all(|t| t.feasible)
         };

@@ -34,12 +34,14 @@ fn max_partner_load_sim(
                 workers: half_c.min(store.profile(a).max_workers).max(1),
                 ways: half_w.max(1),
                 arrival_qps: qa,
+                cache_bytes: None,
             },
             SimulatedTenant {
                 model: b,
                 workers: half_c.min(store.profile(b).max_workers).max(1),
                 ways: (node.llc_ways - half_w).max(1),
                 arrival_qps: fy * maxb,
+                cache_bytes: None,
             },
         ];
         let mut sim = Simulation::new(node.clone(), &tenants, 0xF16012);
@@ -141,8 +143,8 @@ pub fn fig13(ctx: &FigureContext) -> anyhow::Result<()> {
         let qb = 0.8 * store.profile(b).max_load();
         for use_parties in [false, true] {
             let tenants = [
-                SimulatedTenant { model: d, workers: 8, ways: 5, arrival_qps: qa },
-                SimulatedTenant { model: b, workers: 8, ways: 6, arrival_qps: qb },
+                SimulatedTenant { model: d, workers: 8, ways: 5, arrival_qps: qa, cache_bytes: None },
+                SimulatedTenant { model: b, workers: 8, ways: 6, arrival_qps: qb, cache_bytes: None },
             ];
             let mut sim = Simulation::new(node.clone(), &tenants, 0xF1613);
             sim.set_monitor_interval(0.5);
@@ -202,8 +204,8 @@ pub fn fig14(ctx: &FigureContext) -> anyhow::Result<()> {
     let mut viol = Vec::new();
     for use_parties in [false, true] {
         let tenants = [
-            SimulatedTenant { model: d, workers: 8, ways: 5, arrival_qps: store.profile(d).max_load() },
-            SimulatedTenant { model: n, workers: 8, ways: 6, arrival_qps: store.profile(n).max_load() },
+            SimulatedTenant { model: d, workers: 8, ways: 5, arrival_qps: store.profile(d).max_load(), cache_bytes: None },
+            SimulatedTenant { model: n, workers: 8, ways: 6, arrival_qps: store.profile(n).max_load(), cache_bytes: None },
         ];
         let mut sim = Simulation::new(node.clone(), &tenants, 0xF1614);
         sim.set_monitor_interval(0.5);

@@ -58,8 +58,8 @@ pub fn max_partner_load_analytic(
     let feasible = |fy: f64| -> bool {
         let (wa, ka, wb, kb) = hera_alloc(store, a, b, qa);
         let tenants = [
-            AnalyticTenant { model: a, workers: wa, ways: ka, arrival_qps: qa },
-            AnalyticTenant { model: b, workers: wb, ways: kb, arrival_qps: fy * maxb },
+            AnalyticTenant { model: a, workers: wa, ways: ka, arrival_qps: qa, cache_bytes: None },
+            AnalyticTenant { model: b, workers: wb, ways: kb, arrival_qps: fy * maxb, cache_bytes: None },
         ];
         solve(node, &tenants).tenants.iter().all(|t| t.feasible)
     };
@@ -117,8 +117,8 @@ pub fn measured_pair_qps_sim(
     let (dur, warm, steps) = if fast { (6.0, 1.5, 5) } else { (15.0, 3.0, 8) };
     let feasible = |s: f64| -> bool {
         let tenants = [
-            SimulatedTenant { model: a, workers: wa, ways: ka, arrival_qps: s * qa_iso },
-            SimulatedTenant { model: b, workers: wb, ways: kb, arrival_qps: s * qb_iso },
+            SimulatedTenant { model: a, workers: wa, ways: ka, arrival_qps: s * qa_iso, cache_bytes: None },
+            SimulatedTenant { model: b, workers: wb, ways: kb, arrival_qps: s * qb_iso, cache_bytes: None },
         ];
         let mut sim = Simulation::new(node.clone(), &tenants, 0xF1610);
         let out = sim.run(dur, warm, &mut NullController);

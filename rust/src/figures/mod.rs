@@ -4,11 +4,13 @@
 //! Every figure writes `results/figN.csv` (or `tableN.csv`) and prints a
 //! human-readable summary; EXPERIMENTS.md records paper-vs-measured.
 
+mod cache_figs;
 mod emu;
 mod static_figs;
 mod dynamic_figs;
 mod cluster_figs;
 
+pub use cache_figs::{sweep_points, CachePoint};
 pub use emu::{emu_pair_analytic, emu_sweep_curve, measured_pair_qps_sim};
 
 use std::path::{Path, PathBuf};
@@ -78,6 +80,7 @@ impl FigureContext {
             "15" => cluster_figs::fig15(self),
             "16" => cluster_figs::fig16(self),
             "17" => cluster_figs::fig17(self),
+            "cache" => cache_figs::cache_sweep(self),
             other => anyhow::bail!("unknown figure id {other:?}"),
         }
     }
@@ -85,7 +88,7 @@ impl FigureContext {
     pub fn run_all(&self) -> anyhow::Result<()> {
         for id in [
             "table1", "table2", "3", "4", "5", "6", "7", "9", "10", "11", "12",
-            "13", "14", "15", "16", "17",
+            "13", "14", "15", "16", "17", "cache",
         ] {
             println!("== figure {id} ==");
             self.run(id)?;

@@ -27,6 +27,9 @@ pub enum ServerAssignment {
         workers: (usize, usize),
         ways: (usize, usize),
         qps: (f64, f64),
+        /// Per-worker hot-tier bytes when the pair is deployed cache-aware
+        /// (`None` = both models fully resident).
+        cache: Option<(f64, f64)>,
     },
 }
 
@@ -90,12 +93,14 @@ pub fn evaluate_pair(
                 workers: wa,
                 ways: ka,
                 arrival_qps: s * qa0,
+                cache_bytes: None,
             },
             AnalyticTenant {
                 model: b,
                 workers: wb,
                 ways: kb,
                 arrival_qps: s * qb0,
+                cache_bytes: None,
             },
         ];
         solve(node, &tenants).tenants.iter().all(|t| t.feasible)
@@ -118,15 +123,139 @@ pub fn evaluate_pair(
         workers: (wa, wb),
         ways: (ka, kb),
         qps: (lo * qa0, lo * qb0),
+        cache: None,
+    }
+}
+
+/// Combined-DRAM feasibility of a pair at full embedding residency: every
+/// worker carries its model's whole tables, so big-table pairs can exceed
+/// node DRAM even when each model fits alone.  Note this check is
+/// advisory: the full-residency scheduling path (`evaluate_pair`) keeps
+/// the seed's optimistic behavior for paper parity, and only the
+/// cache-aware path (`evaluate_pair_cached`) enforces joint fit — see
+/// ROADMAP "embedcache follow-ons".
+pub fn pair_fits_dram(
+    store: &ProfileStore,
+    a: ModelId,
+    wa: usize,
+    b: ModelId,
+    wb: usize,
+) -> bool {
+    let bytes = wa as f64 * a.spec().worker_bytes() + wb as f64 * b.spec().worker_bytes();
+    bytes <= store.node.dram_capacity_gb * 1e9
+}
+
+/// Same check with `embedcache`-aware footprints: each worker needs only
+/// its model's min-cache-for-SLA hot tier plus FC weights.
+pub fn pair_fits_dram_cached(
+    store: &ProfileStore,
+    a: ModelId,
+    wa: usize,
+    b: ModelId,
+    wb: usize,
+) -> bool {
+    let bytes =
+        wa as f64 * store.cache_worker_bytes(a) + wb as f64 * store.cache_worker_bytes(b);
+    bytes <= store.node.dram_capacity_gb * 1e9
+}
+
+/// Cache-aware pair evaluation: workers are capped by the *cache-aware*
+/// DRAM footprint (min-cache-for-SLA instead of full `emb_gb`), and the
+/// joint QPS scaling runs with each tenant's hit-curve-adjusted service
+/// profile.  This is how the scheduler co-locates pairs the full-residency
+/// footprint check rejects.
+pub fn evaluate_pair_cached(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    a: ModelId,
+    b: ModelId,
+) -> ServerAssignment {
+    let node = &store.node;
+    let cache_a = store.min_cache_for_sla(a);
+    let cache_b = store.min_cache_for_sla(b);
+    // The OOM wall moves: cache-aware workers are DRAM-limited by their
+    // hot tier, not the full tables (even split with idle-core donation,
+    // as in `split_cores`).
+    let bytes_a = cache_a + a.spec().fc_bytes();
+    let bytes_b = cache_b + b.spec().fc_bytes();
+    let cap_a = node.capacity_limit(bytes_a);
+    let cap_b = node.capacity_limit(bytes_b);
+    let (mut wa, mut wb) = split_cores_with_caps(node.cores, cap_a, cap_b);
+    // Shrink the larger side until the pair jointly fits.
+    let fits = |wa: usize, wb: usize| -> bool {
+        wa as f64 * bytes_a + wb as f64 * bytes_b <= node.dram_capacity_gb * 1e9
+    };
+    while !fits(wa, wb) && wa + wb > 2 {
+        if wa >= wb && wa > 1 {
+            wa -= 1;
+        } else if wb > 1 {
+            wb -= 1;
+        }
+    }
+    let (ka, kb) = matrix.get(a, b).best_partition;
+
+    // Standalone sustainable rates come from the cache-aware analytic
+    // oracle — the profiled table's OOM zeros do not apply behind a hot
+    // tier.
+    let opts = crate::server_sim::MaxLoadOpts::default();
+    let qa0 =
+        crate::server_sim::max_load_analytic_cached(node, a, wa, ka, Some(cache_a), &opts);
+    let qb0 =
+        crate::server_sim::max_load_analytic_cached(node, b, wb, kb, Some(cache_b), &opts);
+    let feasible = |s: f64| -> bool {
+        let tenants = [
+            AnalyticTenant {
+                model: a,
+                workers: wa,
+                ways: ka,
+                arrival_qps: s * qa0,
+                cache_bytes: Some(cache_a),
+            },
+            AnalyticTenant {
+                model: b,
+                workers: wb,
+                ways: kb,
+                arrival_qps: s * qb0,
+                cache_bytes: Some(cache_b),
+            },
+        ];
+        solve(node, &tenants).tenants.iter().all(|t| t.feasible)
+    };
+    let mut lo = 0.0;
+    let mut hi = 1.0;
+    if qa0 > 0.0 || qb0 > 0.0 {
+        for _ in 0..12 {
+            let mid = 0.5 * (lo + hi);
+            if feasible(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+    }
+    ServerAssignment::Pair {
+        a,
+        b,
+        workers: (wa, wb),
+        ways: (ka, kb),
+        qps: (lo * qa0, lo * qb0),
+        cache: Some((cache_a, cache_b)),
     }
 }
 
 /// Even core split with idle-core donation across the OOM wall.
 pub fn split_cores(store: &ProfileStore, a: ModelId, b: ModelId) -> (usize, usize) {
-    let cores = store.node.cores;
+    split_cores_with_caps(
+        store.node.cores,
+        store.profile(a).max_workers,
+        store.profile(b).max_workers,
+    )
+}
+
+/// The core-donation idiom shared by the full-residency and cache-aware
+/// paths: even split, each side capped, leftovers donated back.
+pub fn split_cores_with_caps(cores: usize, cap_a: usize, cap_b: usize) -> (usize, usize) {
     let half = cores / 2;
-    let cap_a = store.profile(a).max_workers;
-    let cap_b = store.profile(b).max_workers;
     let mut wa = half.min(cap_a).max(1);
     let mut wb = (cores - wa).min(cap_b).max(1);
     // Donate leftover cores back to A if B could not absorb them.
@@ -152,6 +281,9 @@ pub struct ClusterScheduler<'a> {
     pub matrix: &'a AffinityMatrix,
     /// Safety valve against unreachable targets.
     pub max_servers: usize,
+    /// Deploy pairs through `embedcache` hot tiers (min-cache-for-SLA
+    /// footprints) instead of fully-resident tables.
+    pub cache_aware: bool,
 }
 
 impl<'a> ClusterScheduler<'a> {
@@ -160,7 +292,14 @@ impl<'a> ClusterScheduler<'a> {
             store,
             matrix,
             max_servers: 100_000,
+            cache_aware: false,
         }
+    }
+
+    /// Toggle cache-aware pair deployment.
+    pub fn with_cache_aware(mut self, on: bool) -> Self {
+        self.cache_aware = on;
+        self
     }
 
     /// Allocate servers until every model's target QPS is serviced.
@@ -170,6 +309,10 @@ impl<'a> ClusterScheduler<'a> {
             servers: Vec::new(),
             serviced: [0.0; N_MODELS],
         };
+        // evaluate_pair_cached runs several analytic bisections per call
+        // and is deterministic per pair — memoize it across the loop.
+        let mut pair_cache: std::collections::HashMap<(ModelId, ModelId), ServerAssignment> =
+            std::collections::HashMap::new();
 
         // Step A: low-scalability models first, best-affinity partners.
         for &mi in &low {
@@ -199,7 +342,16 @@ impl<'a> ClusterScheduler<'a> {
                     .matrix
                     .best_partner(mi, &needy)
                     .ok_or_else(|| anyhow::anyhow!("no partner for {mi}"))?;
-                let server = evaluate_pair(self.store, self.matrix, mi, mj);
+                let server = if self.cache_aware {
+                    pair_cache
+                        .entry((mi, mj))
+                        .or_insert_with(|| {
+                            evaluate_pair_cached(self.store, self.matrix, mi, mj)
+                        })
+                        .clone()
+                } else {
+                    evaluate_pair(self.store, self.matrix, mi, mj)
+                };
                 let (qi, qj) = match &server {
                     ServerAssignment::Pair { qps, .. } => *qps,
                     _ => unreachable!(),
@@ -310,6 +462,55 @@ mod tests {
                 if *a == id("dlrm_b") || *b == id("dlrm_b"))
         });
         assert!(has_pair_with_b, "DLRM(B) must be deployed co-located");
+    }
+
+    #[test]
+    fn cache_aware_colocates_pair_rejected_at_full_residency() {
+        // DLRM(B)+DLRM(D): 8 workers x 25 GB + 8 x 8 GB = 264 GB — over
+        // the 201 GB node at full residency.  Behind min-cache hot tiers
+        // the same pair fits with positive QPS for both tenants: the
+        // acceptance scenario for the embedcache subsystem.
+        let a = id("dlrm_b");
+        let b = id("dlrm_d");
+        let (wa, wb) = split_cores(&STORE, a, b);
+        assert!(
+            !pair_fits_dram(&STORE, a, wa, b, wb),
+            "full residency must reject {wa}x{a} + {wb}x{b}"
+        );
+        let server = evaluate_pair_cached(&STORE, &MATRIX, a, b);
+        match &server {
+            ServerAssignment::Pair { workers, qps, cache, .. } => {
+                assert!(
+                    pair_fits_dram_cached(&STORE, a, workers.0, b, workers.1),
+                    "cache-aware allocation must fit DRAM"
+                );
+                assert!(
+                    qps.0 > 0.0 && qps.1 > 0.0,
+                    "both tenants must serve traffic: {qps:?}"
+                );
+                let (ca, cb) = cache.expect("cache-aware pair records its tiers");
+                assert!(ca < a.spec().emb_gb * 1e9 && cb < b.spec().emb_gb * 1e9);
+            }
+            other => panic!("expected a pair, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cache_aware_scheduler_still_meets_targets() {
+        let targets = scaled_targets(&STORE, 1.0);
+        let plan = ClusterScheduler::new(&STORE, &MATRIX)
+            .with_cache_aware(true)
+            .schedule(&targets)
+            .unwrap();
+        assert!(plan.meets(&targets));
+        // At least one deployed pair carries hot-tier allocations.
+        assert!(
+            plan.servers.iter().any(|s| matches!(
+                s,
+                ServerAssignment::Pair { cache: Some(_), .. }
+            )),
+            "cache-aware plans must deploy cached pairs"
+        );
     }
 
     #[test]

@@ -9,7 +9,12 @@
 //!   (urgency = tail/SLA when violating, else 1 — the paper's mechanism
 //!   for absorbing sudden load spikes);
 //! * `adjust_LLC_partition` — re-evaluates every CAT split against the
-//!   3-D QPS[model][workers][ways] table and applies the argmax.
+//!   3-D QPS[model][workers][ways] table and applies the argmax;
+//! * `adjust_cache_partition` — the third knob: when both co-located
+//!   tenants serve embeddings through an `embedcache` hot tier, the
+//!   combined DRAM cache budget is re-split on a quantized grid, arg-
+//!   maxing aggregate QPS after scaling each tenant's table entry by its
+//!   hit-curve-derived cache factor (`ProfileStore::cache_qps_factor`).
 //!
 //! Implemented as a [`Controller`] so it plugs straight into the
 //! discrete-event simulation (and mirrors how the real coordinator calls
@@ -61,6 +66,47 @@ impl<'a> HeraRmu<'a> {
             .max(1)
     }
 
+    /// `adjust_cache_partition` — the cache knob: split the combined hot-
+    /// tier budget between two cached tenants, arg-maxing aggregate QPS
+    /// with each side's table entry scaled by its hit-curve cache factor.
+    /// Returns `None` when either tenant is fully resident (nothing to
+    /// trade) or the budget is too small to split.
+    fn adjust_cache_partition(
+        &self,
+        a: (ModelId, usize, usize),
+        b: (ModelId, usize, usize),
+        cache_a: Option<f64>,
+        cache_b: Option<f64>,
+    ) -> Option<(f64, f64)> {
+        const STEPS: usize = 8;
+        let (ca, cb) = (cache_a?, cache_b?);
+        let budget = ca + cb;
+        let min = crate::embedcache::MIN_CACHE_BYTES;
+        if budget < 2.0 * min {
+            return None;
+        }
+        let pa = self.store.profile(a.0);
+        let pb = self.store.profile(b.0);
+        let score = |xa: f64, xb: f64| -> f64 {
+            pa.qps_at(a.1, a.2) * self.store.cache_qps_factor(a.0, xa)
+                + pb.qps_at(b.1, b.2) * self.store.cache_qps_factor(b.0, xb)
+        };
+        // The incumbent split competes too — a grid point must beat the
+        // (possibly off-grid) current allocation to displace it.
+        let mut best = (ca, cb);
+        let mut best_qps = score(ca, cb);
+        for i in 1..STEPS {
+            let xa = (budget * i as f64 / STEPS as f64).clamp(min, budget - min);
+            let xb = budget - xa;
+            let q = score(xa, xb);
+            if q > best_qps {
+                best_qps = q;
+                best = (xa, xb);
+            }
+        }
+        Some(best)
+    }
+
     /// `adjust_LLC_partition` (Algorithm 3 line 28): argmax of aggregate
     /// QPS over all CAT partitions at the *new* worker counts.
     fn adjust_partition(&self, a: (ModelId, usize), b: (ModelId, usize)) -> (usize, usize) {
@@ -85,6 +131,7 @@ impl Controller for HeraRmu<'_> {
         // Compute desired workers per tenant where the slack band triggers.
         let mut desired: Vec<usize> = stats.iter().map(|s| s.workers).collect();
         let mut any_change = false;
+        let mut any_trigger = false;
         for (i, s) in stats.iter().enumerate() {
             if s.window_completed == 0 && s.queue_depth == 0 {
                 continue; // idle tenant, nothing to learn
@@ -92,6 +139,7 @@ impl Controller for HeraRmu<'_> {
             let sla_s = s.model.spec().sla_ms / 1e3;
             let slack = s.window_p95_s / sla_s;
             if slack > SLACK_HIGH || slack < SLACK_LOW {
+                any_trigger = true;
                 let w = self.adjust_workers(s.model, s.ways, s);
                 if w != s.workers {
                     desired[i] = w;
@@ -99,7 +147,13 @@ impl Controller for HeraRmu<'_> {
                 }
             }
         }
-        if !any_change {
+        // For a cached pair the hot tier is a knob of its own: a tenant
+        // can sit at its worker argmax and still be fixable by moving
+        // cache bytes, so an out-of-band window proceeds to the
+        // re-partition stage even with no worker change.
+        let cached_pair =
+            stats.len() == 2 && stats.iter().all(|s| s.cache_bytes.is_some());
+        if !any_change && !(cached_pair && any_trigger) {
             return Vec::new();
         }
 
@@ -130,13 +184,39 @@ impl Controller for HeraRmu<'_> {
                 (stats[0].model, desired[0]),
                 (stats[1].model, desired[1]),
             );
+            // Third knob: re-split the hot-tier DRAM budget for the new
+            // allocation when both tenants are cache-served.
+            let cache_split = self.adjust_cache_partition(
+                (stats[0].model, desired[0], ka),
+                (stats[1].model, desired[1], kb),
+                stats[0].cache_bytes,
+                stats[1].cache_bytes,
+            );
+            // A re-split is applied to BOTH tenants or neither — emitting
+            // one side would break hot-tier budget conservation.  Below 2%
+            // movement on both tiers it is churn, not a decision.
+            let cache_moved = match (cache_split, stats[0].cache_bytes, stats[1].cache_bytes)
+            {
+                (Some((xa, xb)), Some(oa), Some(ob)) => {
+                    (xa - oa).abs() > 0.02 * oa.max(1.0)
+                        || (xb - ob).abs() > 0.02 * ob.max(1.0)
+                }
+                _ => false,
+            };
+            let cache_of = |i: usize| -> Option<f64> {
+                if !cache_moved {
+                    return None;
+                }
+                cache_split.map(|(xa, xb)| if i == 0 { xa } else { xb })
+            };
             for (i, (w, k)) in [(desired[0], ka), (desired[1], kb)].iter().enumerate() {
-                if *w != stats[i].workers || *k != stats[i].ways {
+                if *w != stats[i].workers || *k != stats[i].ways || cache_moved {
                     self.decisions.push((now, i, *w, *k));
                     changes.push(AllocChange {
                         tenant: i,
                         workers: *w,
                         ways: *k,
+                        cache_bytes: cache_of(i),
                     });
                 }
             }
@@ -148,6 +228,7 @@ impl Controller for HeraRmu<'_> {
                         tenant: i,
                         workers: *w,
                         ways: stats[i].ways,
+                        cache_bytes: None,
                     });
                 }
             }
@@ -185,6 +266,8 @@ mod tests {
             window_completed: 100,
             window_arrival_qps: qps,
             queue_depth: 0,
+            cache_bytes: None,
+            window_hit_rate: 1.0,
         }
     }
 
@@ -259,6 +342,67 @@ mod tests {
     }
 
     #[test]
+    fn cache_knob_shifts_budget_toward_the_big_table() {
+        let mut rmu = HeraRmu::new(&STORE);
+        // Both tenants cached with an even 2 GB split; dlrm_b (25 GB of
+        // tables, starving) should win hot-tier bytes from ncf (0.1 GB of
+        // tables, saturated hit rate), and the knob only engages when the
+        // worker band triggers — so put dlrm_b in violation.
+        let mut a = stats(id("dlrm_b"), 4, 5, 0.800, 200.0);
+        a.cache_bytes = Some(1e9);
+        a.window_hit_rate = STORE.hit_curve(id("dlrm_b")).hit_rate(1e9);
+        let mut b = stats(id("ncf"), 8, 6, 0.004, 2000.0);
+        b.cache_bytes = Some(1e9);
+        let s = vec![a, b];
+        let changes = rmu.on_monitor(1.0, &s);
+        assert!(!changes.is_empty(), "violating tenant must trigger changes");
+        // The scenario is constructed so the argmax must move bytes; a
+        // missing cache change would mean the knob regressed to a no-op.
+        let x = changes
+            .iter()
+            .find(|c| c.tenant == 0)
+            .and_then(|c| c.cache_bytes)
+            .expect("dlrm_b must receive a cache re-split");
+        let y = changes
+            .iter()
+            .find(|c| c.tenant == 1)
+            .and_then(|c| c.cache_bytes)
+            .expect("re-splits apply to both sides");
+        assert!(x > 1e9, "dlrm_b should gain cache, got {x:.3e}");
+        assert!((x + y - 2e9).abs() < 1e-3 * 2e9, "budget conserved: {x} + {y}");
+    }
+
+    #[test]
+    fn cache_knob_engages_without_worker_changes() {
+        // Both tenants already at their worker argmax (violating side at
+        // max_workers); the cache knob must still re-split the budget.
+        let mut rmu = HeraRmu::new(&STORE);
+        let mut a = stats(id("dlrm_b"), 8, 5, 0.800, 200.0);
+        a.cache_bytes = Some(1e9);
+        let mut b = stats(id("ncf"), 8, 6, 0.004, 2000.0);
+        b.cache_bytes = Some(1e9);
+        let changes = rmu.on_monitor(1.0, &[a, b]);
+        let gained = changes
+            .iter()
+            .find(|c| c.tenant == 0)
+            .and_then(|c| c.cache_bytes)
+            .expect("cache knob must engage with converged workers");
+        assert!(gained > 1e9, "dlrm_b should gain cache, got {gained:.3e}");
+    }
+
+    #[test]
+    fn resident_tenants_never_get_cache_changes() {
+        let mut rmu = HeraRmu::new(&STORE);
+        let s = vec![
+            stats(id("din"), 2, 6, 0.300, 8000.0),
+            stats(id("dlrm_d"), 12, 5, 0.050, 10.0),
+        ];
+        for c in rmu.on_monitor(1.0, &s) {
+            assert_eq!(c.cache_bytes, None);
+        }
+    }
+
+    #[test]
     fn rmu_keeps_sla_in_simulation() {
         // End-to-end: start under-provisioned; the RMU must converge to an
         // allocation that meets both SLAs at moderate load.
@@ -271,12 +415,14 @@ mod tests {
                 workers: 2,
                 ways: 5,
                 arrival_qps: 0.4 * STORE.profile(d).max_load(),
+                cache_bytes: None,
             },
             SimulatedTenant {
                 model: n,
                 workers: 2,
                 ways: 6,
                 arrival_qps: 0.4 * STORE.profile(n).max_load(),
+                cache_bytes: None,
             },
         ];
         let mut rmu = HeraRmu::new(&STORE);

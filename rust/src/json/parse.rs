@@ -5,12 +5,22 @@ use std::collections::BTreeMap;
 use super::Value;
 
 /// Parse failure with byte offset for diagnostics.
-#[derive(Debug, thiserror::Error)]
-#[error("JSON parse error at byte {pos}: {msg}")]
+///
+/// `Display`/`Error` are implemented by hand (thiserror's derive is not in
+/// the offline vendor set — DESIGN.md substitution log).
+#[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "JSON parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

@@ -9,10 +9,12 @@
 //!   text artifacts.
 //! * **L3 (this crate)**: the Hera system itself — co-location affinity
 //!   (Algorithm 1), the cluster scheduler (Algorithm 2), the node-level
-//!   resource management unit (Algorithm 3) — plus the substrates it
-//!   needs: an analytical CPU-node model, a discrete-event multi-tenant
-//!   server simulator, profiling tables, baselines (DeepRecSys, Random,
-//!   PARTIES) and a real serving path over PJRT-loaded artifacts.
+//!   resource management unit (Algorithm 3, including the `embedcache`
+//!   hot-tier knob) — plus the substrates it needs: an analytical
+//!   CPU-node model, a tiered embedding store with analytical hit curves
+//!   (`embedcache`), a discrete-event multi-tenant server simulator,
+//!   profiling tables, baselines (DeepRecSys, Random, PARTIES) and a
+//!   real serving path over PJRT-loaded artifacts.
 //!
 //! See DESIGN.md for the system inventory and the per-figure experiment
 //! index; EXPERIMENTS.md records reproduced results.
@@ -22,6 +24,7 @@ pub mod bench_harness;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod embedcache;
 pub mod figures;
 pub mod hera;
 pub mod httpfront;

@@ -38,6 +38,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
         "cluster" => cmd_cluster(&args),
+        "cache-sweep" => cmd_cache_sweep(&args),
         "bench-engine" => cmd_bench_engine(&args),
         "" | "help" | "--help" => {
             print_help();
@@ -65,7 +66,8 @@ USAGE: hera <subcommand> [flags]
   golden                                           verify python<->rust numerics
   serve    --models a,b --workers n,m --qps x,y [--secs S] [--http 127.0.0.1:8080]
   simulate --models a,b --workers n,m --ways p,q --qps x,y [--secs S]
-  cluster  [--target QPS] [--policy name]          run the cluster scheduler
+  cluster  [--target QPS] [--policy name] [--cache-aware]  run the cluster scheduler
+  cache-sweep [--model m] [--workers N] [--ways K] [--load-frac F] [--points P]
   bench-engine [--models a,b] [--batch B] [--iters N]"
     );
 }
@@ -230,6 +232,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                 workers: *w,
                 ways: *k,
                 arrival_qps: *q,
+                cache_bytes: None,
             })
         })
         .collect::<anyhow::Result<_>>()?;
@@ -261,7 +264,17 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let matrix = AffinityMatrix::build(&store);
     let targets = [target; N_MODELS];
     let t0 = std::time::Instant::now();
-    let plan = policy.schedule(&store, &matrix, &targets, 42)?;
+    let plan = if args.has("cache-aware") {
+        anyhow::ensure!(
+            policy == SelectionPolicy::Hera,
+            "--cache-aware is only implemented for --policy hera"
+        );
+        hera::hera::ClusterScheduler::new(&store, &matrix)
+            .with_cache_aware(true)
+            .schedule(&targets)?
+    } else {
+        policy.schedule(&store, &matrix, &targets, 42)?
+    };
     println!(
         "{}: {} servers for {target:.0} QPS/model (scheduled in {:.1} ms)",
         policy.name(),
@@ -273,15 +286,66 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             hera::hera::ServerAssignment::Solo { model, workers, qps } => {
                 println!("  [{i:3}] solo {model} ({workers} workers, {qps:.0} QPS)")
             }
-            hera::hera::ServerAssignment::Pair { a, b, workers, ways, qps } => println!(
-                "  [{i:3}] pair {a}({}w/{}k {:.0}qps) + {b}({}w/{}k {:.0}qps)",
-                workers.0, ways.0, qps.0, workers.1, ways.1, qps.1
-            ),
+            hera::hera::ServerAssignment::Pair { a, b, workers, ways, qps, cache } => {
+                let tier = match cache {
+                    Some((ca, cb)) => {
+                        format!("  hot tiers {:.2}/{:.2} GB", ca / 1e9, cb / 1e9)
+                    }
+                    None => String::new(),
+                };
+                println!(
+                    "  [{i:3}] pair {a}({}w/{}k {:.0}qps) + {b}({}w/{}k {:.0}qps){tier}",
+                    workers.0, ways.0, qps.0, workers.1, ways.1, qps.1
+                )
+            }
         }
     }
     if plan.num_servers() > 20 {
         println!("  ... {} more", plan.num_servers() - 20);
     }
+    Ok(())
+}
+
+fn cmd_cache_sweep(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "dlrm_b");
+    let m = ModelId::from_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let store = ProfileStore::build(&NodeConfig::paper_default());
+    let workers = args
+        .get_usize("workers", store.profile(m).max_workers.min(8).max(1))?;
+    let ways = args.get_usize("ways", 6)?;
+    let load_frac = args.get_f64("load-frac", 0.35)?;
+    let points = args.get_usize("points", 11)?.max(2);
+    println!(
+        "{model}: hot-tier sweep at {workers} workers / {ways} ways, \
+         {:.0}% of isolated max load (SLA {} ms)",
+        100.0 * load_frac,
+        m.spec().sla_ms
+    );
+    println!(
+        "{:>12} {:>10} {:>10} {:>12} {:>12}",
+        "cache(GB)", "of-tables", "hit-rate", "p95(ms)", "qps-factor"
+    );
+    for p in hera::figures::sweep_points(&store, m, workers, ways, load_frac, points) {
+        let p95 = if p.p95_s.is_finite() {
+            format!("{:.2}", p.p95_s * 1e3)
+        } else {
+            "inf".into()
+        };
+        println!(
+            "{:>12.4} {:>9.2}% {:>9.1}% {:>12} {:>12.3}",
+            p.cache_bytes / 1e9,
+            100.0 * p.frac,
+            100.0 * p.hit_rate,
+            p95,
+            p.qps_factor
+        );
+    }
+    println!(
+        "min-cache-for-SLA: {:.3} GB (vs {:.1} GB fully resident)",
+        store.min_cache_for_sla(m) / 1e9,
+        m.spec().emb_gb
+    );
     Ok(())
 }
 

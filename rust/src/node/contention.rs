@@ -76,4 +76,37 @@ mod tests {
         assert_eq!(bw.slowdown(&[]), 1.0);
         assert_eq!(bw.utilization(&[]), 0.0);
     }
+
+    #[test]
+    fn zero_busy_workers_contribute_nothing() {
+        let bw = BandwidthModel::new(128e9);
+        // A tenant with demand but no busy workers is invisible...
+        assert_eq!(bw.slowdown(&[(50e9, 0)]), 1.0);
+        assert_eq!(bw.utilization(&[(50e9, 0)]), 0.0);
+        // ...and never perturbs a co-runner's slowdown.
+        let alone = bw.slowdown(&[(12e9, 12)]);
+        let with_idle = bw.slowdown(&[(12e9, 12), (99e9, 0)]);
+        assert_eq!(alone, with_idle);
+    }
+
+    #[test]
+    fn zero_demand_workers_contribute_nothing() {
+        let bw = BandwidthModel::new(128e9);
+        assert_eq!(bw.slowdown(&[(0.0, 16)]), 1.0);
+        assert_eq!(bw.utilization(&[(0.0, 16)]), 0.0);
+    }
+
+    #[test]
+    fn exactly_at_capacity_is_the_boundary() {
+        let bw = BandwidthModel::new(128e9);
+        // total == capacity: no stretch yet, but fully utilized.
+        assert_eq!(bw.slowdown(&[(8e9, 16)]), 1.0);
+        assert_eq!(bw.utilization(&[(8e9, 16)]), 1.0);
+        // One epsilon over the line starts stretching proportionally.
+        let s = bw.slowdown(&[(8e9 + 1.0, 16)]);
+        assert!(s > 1.0 && s < 1.0 + 1e-6, "just past capacity: {s}");
+        // Split across two tenants summing exactly to capacity: same.
+        assert_eq!(bw.slowdown(&[(8e9, 8), (8e9, 8)]), 1.0);
+        assert_eq!(bw.utilization(&[(8e9, 8), (8e9, 8)]), 1.0);
+    }
 }

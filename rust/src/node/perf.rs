@@ -39,6 +39,12 @@ pub fn cross_tenant_friction(
     1.0 + CROSS_TENANT_FRICTION * sens_self * pressure
 }
 
+/// Per-worker streaming bandwidth to the slow embedding backing tier
+/// (NVMe-class random row reads behind the `embedcache` hot tier).  Cache
+/// misses stream rows through this leg, so latency depends on the
+/// tenant's hot-tier allocation.
+const BACKING_BW_PER_WORKER: f64 = 0.5e9;
+
 /// Effective DRAM latency for a dependent gather chain (s).
 const GATHER_LATENCY_S: f64 = 80e-9;
 /// Outstanding-miss parallelism a single SLS worker sustains.
@@ -102,23 +108,48 @@ pub struct ServiceProfile {
     miss_rate: f64,
     /// Normalized cache sensitivity in [0, 1] (for cross-tenant friction).
     sensitivity: f64,
+    /// Seconds per item spent streaming hot-tier misses from the backing
+    /// tier (0 under full residency); serial, not stretched by DRAM
+    /// contention.
+    t_backing_item: f64,
+    /// Hot-tier hit fraction of embedding gathers (1.0 = fully resident).
+    emb_hit: f64,
     workers: usize,
 }
 
 impl ServiceProfile {
     /// Build the profile for `workers` workers of `model` sharing `ways`
-    /// LLC ways on `node`.
+    /// LLC ways on `node`, with fully DRAM-resident embeddings.
     pub fn build(
         model: &ModelSpec,
         node: &NodeConfig,
         workers: usize,
         ways: usize,
     ) -> ServiceProfile {
+        Self::build_with_cache(model, node, workers, ways, 1.0)
+    }
+
+    /// Build the profile when the tenant serves embeddings through an
+    /// `embedcache` hot tier with DRAM hit fraction `emb_hit` (see
+    /// `embedcache::HitCurve`): the missing fraction of gather bytes is
+    /// streamed from the backing tier, inflating both the per-item memory
+    /// time and the DRAM bytes (miss rows are staged through DRAM).
+    pub fn build_with_cache(
+        model: &ModelSpec,
+        node: &NodeConfig,
+        workers: usize,
+        ways: usize,
+        emb_hit: f64,
+    ) -> ServiceProfile {
         assert!(workers >= 1, "profile needs at least one worker");
         assert!(
             (1..=node.llc_ways).contains(&ways),
             "ways {ways} outside 1..={}",
             node.llc_ways
+        );
+        assert!(
+            (0.0..=1.0).contains(&emb_hit),
+            "emb_hit {emb_hit} outside [0, 1]"
         );
 
         let (ws_bytes, miss_penalty) = cache_params(model);
@@ -138,12 +169,18 @@ impl ServiceProfile {
             (GATHER_MLP * row_bytes / GATHER_LATENCY_S).min(STREAM_BW_PER_CORE);
         let emb_traffic = model.emb_bytes_per_item() * (1.0 - EMB_LOCALITY);
         let fc_traffic_item = ws_bytes * (1.0 - fc_hit) / 220.0; // amortized/query
-        let dram_bytes_item = emb_traffic + fc_traffic_item;
-        let t_mem_item = dram_bytes_item / gather_bw;
 
-        // Unconstrained per-worker demand: traffic over the larger of the
-        // two pipeline legs (a compute-bound worker issues memory slowly).
-        let t_item = t_compute_item.max(t_mem_item);
+        // Hot-tier misses: the missing fraction of gather bytes streams in
+        // from the backing tier (slow leg) and transits DRAM on the way.
+        let backing_bytes_item = model.emb_bytes_per_item() * (1.0 - emb_hit);
+        let t_backing_item = backing_bytes_item / BACKING_BW_PER_WORKER;
+
+        let dram_bytes_item = emb_traffic + fc_traffic_item + backing_bytes_item;
+        let t_mem_item = (emb_traffic + fc_traffic_item) / gather_bw;
+
+        // Unconstrained per-worker demand: traffic over the elapsed item
+        // time (a compute- or backing-bound worker issues memory slowly).
+        let t_item = t_compute_item.max(t_mem_item) + t_backing_item;
         let bw_demand = if t_item > 0.0 {
             dram_bytes_item / t_item
         } else {
@@ -161,6 +198,8 @@ impl ServiceProfile {
             fc_hit,
             miss_rate,
             sensitivity: (miss_penalty / 2.5).min(1.0),
+            t_backing_item,
+            emb_hit,
             workers,
         }
     }
@@ -173,7 +212,9 @@ impl ServiceProfile {
     }
 
     /// Service time (s) of one query of `batch` items when the memory leg
-    /// is stretched by the node-wide contention `slowdown` (>= 1).
+    /// is stretched by the node-wide contention `slowdown` (>= 1).  The
+    /// backing-tier leg (hot-tier misses) is serial and unaffected by DRAM
+    /// contention — it is bounded by the slow tier itself.
     pub fn service_time_s(&self, batch: u32, slowdown: f64) -> f64 {
         debug_assert!(slowdown >= 1.0);
         let b = batch as f64;
@@ -185,7 +226,7 @@ impl ServiceProfile {
         } else {
             (t_mem, t_comp)
         };
-        DISPATCH_OVERHEAD_S + hi + 0.3 * lo
+        DISPATCH_OVERHEAD_S + hi + 0.3 * lo + b * self.t_backing_item
     }
 
     /// Unconstrained DRAM bandwidth demand of one busy worker (B/s).
@@ -215,6 +256,16 @@ impl ServiceProfile {
     /// Compute/memory leg split for the Fig. 3 operator breakdown.
     pub fn legs_per_item(&self) -> (f64, f64) {
         (self.t_compute_item, self.t_mem_item)
+    }
+
+    /// Hot-tier hit fraction this profile was built with (1.0 = resident).
+    pub fn emb_hit(&self) -> f64 {
+        self.emb_hit
+    }
+
+    /// Seconds per item on the backing-tier leg (0 under full residency).
+    pub fn backing_leg_per_item(&self) -> f64 {
+        self.t_backing_item
     }
 }
 
@@ -323,5 +374,57 @@ mod tests {
     #[should_panic]
     fn zero_ways_rejected() {
         profile("ncf", 1, 0);
+    }
+
+    #[test]
+    fn full_residency_cache_build_is_identical_to_build() {
+        let node = NodeConfig::paper_default();
+        for name in ["dlrm_b", "ncf", "din"] {
+            let spec = ModelId::from_name(name).unwrap().spec();
+            let a = ServiceProfile::build(spec, &node, 8, 6);
+            let b = ServiceProfile::build_with_cache(spec, &node, 8, 6, 1.0);
+            assert_eq!(a.service_time_s(220, 1.3), b.service_time_s(220, 1.3));
+            assert_eq!(a.per_worker_bw_demand(), b.per_worker_bw_demand());
+            assert_eq!(b.emb_hit(), 1.0);
+            assert_eq!(b.backing_leg_per_item(), 0.0);
+        }
+    }
+
+    #[test]
+    fn lower_hit_rate_slows_service_monotonically() {
+        let node = NodeConfig::paper_default();
+        let spec = ModelId::from_name("dlrm_b").unwrap().spec();
+        let mut prev = 0.0;
+        for hit in [1.0, 0.95, 0.9, 0.8, 0.5, 0.0] {
+            let p = ServiceProfile::build_with_cache(spec, &node, 8, 5, hit);
+            let t = p.service_time_s(220, 1.0);
+            assert!(t > prev, "hit {hit}: {t} must exceed {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn cache_misses_reduce_dram_demand_but_add_bytes() {
+        // A backing-stalled worker issues DRAM traffic more slowly even
+        // though each item now moves more total bytes through DRAM.
+        let node = NodeConfig::paper_default();
+        let spec = ModelId::from_name("dlrm_d").unwrap().spec();
+        let resident = ServiceProfile::build(spec, &node, 12, 5);
+        let starved = ServiceProfile::build_with_cache(spec, &node, 12, 5, 0.5);
+        assert!(starved.dram_bytes_per_item() > resident.dram_bytes_per_item());
+        assert!(starved.per_worker_bw_demand() < resident.per_worker_bw_demand());
+    }
+
+    #[test]
+    fn backing_leg_ignores_dram_contention() {
+        let node = NodeConfig::paper_default();
+        let spec = ModelId::from_name("dlrm_b").unwrap().spec();
+        let p = ServiceProfile::build_with_cache(spec, &node, 8, 5, 0.3);
+        let t1 = p.service_time_s(220, 1.0);
+        let t2 = p.service_time_s(220, 2.0);
+        // The backing leg dominates at 30% hit rate, so doubling the DRAM
+        // slowdown must stretch service time far less than 2x.
+        assert!(t2 < 1.5 * t1, "backing-dominated: {t2} vs {t1}");
+        assert!(t2 > t1, "DRAM leg still counts");
     }
 }

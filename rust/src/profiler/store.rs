@@ -7,7 +7,10 @@ use std::path::Path;
 use anyhow::Context;
 
 use crate::config::{ModelId, NodeConfig, N_MODELS};
+use crate::embedcache::{HitCurve, MIN_CACHE_BYTES};
 use crate::json::{parse, Value};
+use crate::node::ServiceProfile;
+use crate::server_sim::paper_moments;
 
 use super::tables::{ModelProfile, ScalabilityClass};
 
@@ -16,6 +19,13 @@ use super::tables::{ModelProfile, ScalabilityClass};
 pub struct ProfileStore {
     pub node: NodeConfig,
     pub models: Vec<ModelProfile>,
+    /// Memoized `min_cache_for_sla` per model (derived, not persisted) —
+    /// the cluster scheduler's fit checks query it in a loop.
+    min_cache: Vec<f64>,
+    /// Memoized full-residency mean-batch service time per model (one
+    /// worker, whole LLC) — the `cache_qps_factor` baseline, queried per
+    /// grid point by the RMU's cache argmax.
+    base_service: Vec<f64>,
 }
 
 impl ProfileStore {
@@ -27,6 +37,12 @@ impl ProfileStore {
         ProfileStore {
             node: node.clone(),
             models,
+            min_cache: ModelId::all()
+                .map(|id| compute_min_cache_for_sla(node, id))
+                .collect(),
+            base_service: ModelId::all()
+                .map(|id| compute_base_service(node, id))
+                .collect(),
         }
     }
 
@@ -62,6 +78,89 @@ impl ProfileStore {
         let w = (self.node.cores / 2).min(p.max_workers);
         w as f64 * p.bw_demand_per_worker
     }
+
+    // ------------------------------------------------------------------
+    // embedcache-aware planning (hit curves are derived, not persisted)
+    // ------------------------------------------------------------------
+
+    /// The model's analytical hit-rate-vs-capacity curve.
+    pub fn hit_curve(&self, id: ModelId) -> HitCurve {
+        HitCurve::for_model(id)
+    }
+
+    /// QPS retention factor in (0, 1] for serving `id` through a hot tier
+    /// of `cache_bytes` instead of fully-resident tables: the ratio of
+    /// mean-batch service times.  Scales the profiled QPS table entries
+    /// for the RMU's `adjust_cache_partition` argmax.
+    pub fn cache_qps_factor(&self, id: ModelId, cache_bytes: f64) -> f64 {
+        let spec = id.spec();
+        let mean_batch = paper_moments().mean.round() as u32;
+        let hit = self.hit_curve(id).hit_rate(cache_bytes);
+        let full = self.base_service[id.index()];
+        let cached =
+            ServiceProfile::build_with_cache(spec, &self.node, 1, self.node.llc_ways, hit)
+                .service_time_s(mean_batch, 1.0);
+        (full / cached).clamp(0.0, 1.0)
+    }
+
+    /// Smallest hot-tier allocation (bytes) that keeps `id`'s service time
+    /// at the p95 *batch size* within 85% of its SLA (the tail-batch
+    /// service term dominates the analytic p95 at low load), floored at
+    /// 1% of the table bytes — the cache-aware replacement for the full
+    /// `emb_gb` residency footprint in capacity checks.  Memoized at
+    /// store construction.
+    pub fn min_cache_for_sla(&self, id: ModelId) -> f64 {
+        self.min_cache[id.index()]
+    }
+
+    /// Per-worker resident bytes when `id` is served through its minimum
+    /// SLA-safe hot tier (vs `ModelSpec::worker_bytes` at full residency).
+    pub fn cache_worker_bytes(&self, id: ModelId) -> f64 {
+        self.min_cache_for_sla(id) + id.spec().fc_bytes()
+    }
+}
+
+/// Full-residency mean-batch service time (one worker, whole LLC) — the
+/// `cache_qps_factor` baseline, computed once per model.
+fn compute_base_service(node: &NodeConfig, id: ModelId) -> f64 {
+    let mean_batch = paper_moments().mean.round() as u32;
+    ServiceProfile::build(id.spec(), node, 1, node.llc_ways).service_time_s(mean_batch, 1.0)
+}
+
+/// The bisection behind [`ProfileStore::min_cache_for_sla`], run once per
+/// model at store construction.
+fn compute_min_cache_for_sla(node: &NodeConfig, id: ModelId) -> f64 {
+    let spec = id.spec();
+    let curve = HitCurve::for_model(id);
+    let full_bytes = curve.full_bytes();
+    let tail_batch = paper_moments().p95.round() as u32;
+    let service_at = |bytes: f64| -> f64 {
+        let hit = curve.hit_rate(bytes);
+        ServiceProfile::build_with_cache(spec, node, 1, node.llc_ways, hit)
+            .service_time_s(tail_batch, 1.0)
+    };
+    // 85% of the SLA leaves queueing headroom; if even residency
+    // cannot manage that (service_at is monotone decreasing in bytes),
+    // accept a 10% stretch over the resident service time instead.
+    let target = (0.85 * spec.sla_ms / 1e3).max(1.1 * service_at(full_bytes));
+    let mut lo = MIN_CACHE_BYTES.min(full_bytes);
+    let mut hi = full_bytes;
+    if service_at(lo) <= target {
+        hi = lo;
+    } else {
+        for _ in 0..48 {
+            let mid = 0.5 * (lo + hi);
+            if service_at(mid) <= target {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+    }
+    hi.max(0.01 * full_bytes).max(MIN_CACHE_BYTES).min(full_bytes)
+}
+
+impl ProfileStore {
 
     // ------------------------------------------------------------------
     // Persistence
@@ -178,7 +277,18 @@ impl ProfileStore {
                 },
             });
         }
-        Ok(ProfileStore { node, models })
+        let min_cache = ModelId::all()
+            .map(|id| compute_min_cache_for_sla(&node, id))
+            .collect();
+        let base_service = ModelId::all()
+            .map(|id| compute_base_service(&node, id))
+            .collect();
+        Ok(ProfileStore {
+            node,
+            models,
+            min_cache,
+            base_service,
+        })
     }
 }
 
@@ -219,6 +329,36 @@ mod tests {
         let d = store.membw_half_cores(ModelId::from_name("dlrm_d").unwrap());
         let n = store.membw_half_cores(ModelId::from_name("ncf").unwrap());
         assert!(d > 10.0 * n, "dlrm_d {d:.2e} vs ncf {n:.2e}");
+    }
+
+    #[test]
+    fn cache_qps_factor_monotone_and_capped() {
+        let store = ProfileStore::build(&NodeConfig::paper_default());
+        let id = ModelId::from_name("dlrm_b").unwrap();
+        let full = id.spec().emb_gb * 1e9;
+        let mut prev = 0.0;
+        for frac in [0.0001, 0.001, 0.01, 0.1, 1.0] {
+            let f = store.cache_qps_factor(id, frac * full);
+            assert!((0.0..=1.0).contains(&f), "factor {f}");
+            assert!(f >= prev, "factor must grow with cache: {f} vs {prev}");
+            prev = f;
+        }
+        assert!((store.cache_qps_factor(id, full) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn min_cache_is_far_below_full_residency_for_big_tables() {
+        let store = ProfileStore::build(&NodeConfig::paper_default());
+        for name in ["dlrm_b", "dlrm_d"] {
+            let id = ModelId::from_name(name).unwrap();
+            let min = store.min_cache_for_sla(id);
+            let full = id.spec().emb_gb * 1e9;
+            assert!(min >= 0.01 * full - 1.0, "{name}: floor holds");
+            assert!(min < 0.6 * full, "{name}: min cache {min:.3e} vs full {full:.3e}");
+            // And the resulting footprint really is SLA-safe per the curve.
+            let hit = store.hit_curve(id).hit_rate(min);
+            assert!(hit > 0.5, "{name}: hit at min cache {hit}");
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! memory-leg slowdown, which feeds back into E[S].
 
 use crate::config::{ModelId, NodeConfig};
+use crate::embedcache::HitCurve;
 use crate::node::{cross_tenant_friction, BandwidthModel, ServiceProfile};
 
 use super::batch_moments::paper_moments;
@@ -20,6 +21,27 @@ pub struct AnalyticTenant {
     pub workers: usize,
     pub ways: usize,
     pub arrival_qps: f64,
+    /// Hot embedding-cache bytes (`None` = fully DRAM-resident tables).
+    /// When set, the tenant's service profile reflects the hit-curve
+    /// fraction of gathers served from DRAM vs the backing tier.
+    pub cache_bytes: Option<f64>,
+}
+
+/// Build a tenant's service profile, honoring its cache allocation.
+pub(crate) fn tenant_profile(
+    node: &NodeConfig,
+    model: ModelId,
+    workers: usize,
+    ways: usize,
+    cache_bytes: Option<f64>,
+) -> ServiceProfile {
+    match cache_bytes {
+        None => ServiceProfile::build(model.spec(), node, workers.max(1), ways),
+        Some(bytes) => {
+            let hit = HitCurve::for_model(model).hit_rate(bytes);
+            ServiceProfile::build_with_cache(model.spec(), node, workers.max(1), ways, hit)
+        }
+    }
 }
 
 /// Steady-state prediction for one tenant.
@@ -68,7 +90,7 @@ pub fn solve(node: &NodeConfig, tenants: &[AnalyticTenant]) -> NodeSteadyState {
     let bw = BandwidthModel::new(node.dram_bw_gbs * 1e9);
     let profiles: Vec<ServiceProfile> = tenants
         .iter()
-        .map(|t| ServiceProfile::build(t.model.spec(), node, t.workers.max(1), t.ways))
+        .map(|t| tenant_profile(node, t.model, t.workers, t.ways, t.cache_bytes))
         .collect();
 
     // Fixed point on the contention slowdown + cross-tenant friction.
@@ -190,6 +212,7 @@ mod tests {
             workers,
             ways,
             arrival_qps: qps,
+            cache_bytes: None,
         }
     }
 
@@ -231,6 +254,42 @@ mod tests {
         assert!(
             duo.tenants[0].p95_sojourn_s >= solo.tenants[0].p95_sojourn_s,
             "contention must not speed things up"
+        );
+    }
+
+    #[test]
+    fn starved_cache_raises_p95_and_can_break_sla() {
+        let node = NodeConfig::paper_default();
+        let m = ModelId::from_name("dlrm_b").unwrap();
+        let qps = 20.0;
+        let resident = solve(&node, &[tenant("dlrm_b", 8, 5, qps)]);
+        let comfortable = solve(
+            &node,
+            &[AnalyticTenant {
+                model: m,
+                workers: 8,
+                ways: 5,
+                arrival_qps: qps,
+                cache_bytes: Some(0.2 * m.spec().emb_gb * 1e9),
+            }],
+        );
+        let starved = solve(
+            &node,
+            &[AnalyticTenant {
+                model: m,
+                workers: 8,
+                ways: 5,
+                arrival_qps: qps,
+                cache_bytes: Some(1e6),
+            }],
+        );
+        let p = |s: &NodeSteadyState| s.tenants[0].p95_sojourn_s;
+        assert!(p(&comfortable) >= p(&resident), "cache cannot beat residency");
+        assert!(
+            p(&starved) > p(&comfortable),
+            "starving the hot tier must hurt: {} vs {}",
+            p(&starved),
+            p(&comfortable)
         );
     }
 

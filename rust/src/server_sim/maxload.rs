@@ -74,6 +74,33 @@ pub fn max_load_analytic(
                 workers,
                 ways,
                 arrival_qps: qps,
+                cache_bytes: None,
+            };
+            solve(node, &[t]).tenants[0].feasible
+        },
+        opts.tol,
+    )
+}
+
+/// Max sustainable QPS of `model` served through an `embedcache` hot tier
+/// of `cache_bytes` (analytic oracle).  With `cache_bytes = None` this is
+/// identical to [`max_load_analytic`].
+pub fn max_load_analytic_cached(
+    node: &NodeConfig,
+    model: ModelId,
+    workers: usize,
+    ways: usize,
+    cache_bytes: Option<f64>,
+    opts: &MaxLoadOpts,
+) -> f64 {
+    search(
+        |qps| {
+            let t = AnalyticTenant {
+                model,
+                workers,
+                ways,
+                arrival_qps: qps,
+                cache_bytes,
             };
             solve(node, &[t]).tenants[0].feasible
         },
@@ -121,6 +148,7 @@ pub fn max_load_sim(
                 workers,
                 ways,
                 arrival_qps: qps,
+                cache_bytes: None,
             };
             let mut sim = Simulation::new(node.clone(), &[t], opts.seed);
             let out = &sim.run(opts.sim_duration_s, opts.sim_warmup_s, &mut NullController)[0];
@@ -173,6 +201,27 @@ mod tests {
                 "{name} should scale: q8={q8:.1} q16={q16:.1}"
             );
         }
+    }
+
+    #[test]
+    fn cached_max_load_grows_with_cache_and_caps_at_residency() {
+        let node = NodeConfig::paper_default();
+        let opts = MaxLoadOpts::default();
+        let m = ModelId::from_name("dlrm_b").unwrap();
+        let full = max_load_analytic(&node, m, 8, 6, &opts);
+        let big = max_load_analytic_cached(
+            &node,
+            m,
+            8,
+            6,
+            Some(0.3 * m.spec().emb_gb * 1e9),
+            &opts,
+        );
+        let tiny = max_load_analytic_cached(&node, m, 8, 6, Some(2e6), &opts);
+        assert!(tiny < big, "more cache must not shrink max load: {tiny} vs {big}");
+        assert!(big <= full * 1.01, "cache cannot beat residency: {big} vs {full}");
+        let resident = max_load_analytic_cached(&node, m, 8, 6, None, &opts);
+        assert!((resident - full).abs() < 1e-9 + 0.02 * full);
     }
 
     #[test]

@@ -18,8 +18,11 @@ mod batch_moments;
 mod maxload;
 mod sim;
 
-pub use batch_moments::BatchMoments;
-pub use maxload::{max_load_analytic, max_load_analytic_colocated, max_load_sim, MaxLoadOpts};
+pub use batch_moments::{paper_moments, BatchMoments};
+pub use maxload::{
+    max_load_analytic, max_load_analytic_cached, max_load_analytic_colocated, max_load_sim,
+    MaxLoadOpts,
+};
 pub use sim::{
     AllocChange, Controller, NullController, SimOutcome, SimulatedTenant, Simulation,
     TenantStats,

@@ -9,11 +9,14 @@
 //! Hera RMU (Algorithm 3) and the PARTIES baseline plug into.
 
 use crate::config::{ModelId, NodeConfig};
+use crate::embedcache::MIN_CACHE_BYTES;
 use crate::metrics::LatencyStats;
 use crate::node::{BandwidthModel, ServiceProfile};
 use crate::rng::{BatchSizeDist, Exponential, Xoshiro256};
 use crate::simkernel::EventQueue;
 use std::collections::VecDeque;
+
+use super::analytic::tenant_profile;
 
 /// Tenant configuration for a simulation run.
 #[derive(Debug, Clone)]
@@ -23,6 +26,10 @@ pub struct SimulatedTenant {
     pub ways: usize,
     /// Mean query arrival rate (QPS). May be rescaled by a load trace.
     pub arrival_qps: f64,
+    /// Hot embedding-cache bytes (`None` = fully DRAM-resident tables).
+    /// Cached tenants pay the `embedcache` hit curve on every dispatch and
+    /// can be resized by controllers through [`AllocChange::cache_bytes`].
+    pub cache_bytes: Option<f64>,
 }
 
 /// Allocation change requested by a controller.
@@ -31,6 +38,9 @@ pub struct AllocChange {
     pub tenant: usize,
     pub workers: usize,
     pub ways: usize,
+    /// `Some(bytes)` resizes a cached tenant's hot tier (ignored — with a
+    /// clamp to node DRAM — for fully-resident tenants).
+    pub cache_bytes: Option<f64>,
 }
 
 /// Rolling statistics handed to controllers at each monitor tick.
@@ -39,6 +49,10 @@ pub struct TenantStats {
     pub model: ModelId,
     pub workers: usize,
     pub ways: usize,
+    /// Current hot-tier allocation (`None` = fully resident).
+    pub cache_bytes: Option<f64>,
+    /// Hot-tier hit rate over the window (1.0 for resident tenants).
+    pub window_hit_rate: f64,
     /// p95 latency over the last monitoring window (s); 0 if no completions.
     pub window_p95_s: f64,
     /// Queries completed in the window.
@@ -117,8 +131,12 @@ pub struct SimOutcome {
     pub avg_bw_util: f64,
     /// LLC miss-rate estimate from the final profile.
     pub miss_rate: f64,
+    /// Hot-tier hit rate of the final profile (1.0 when fully resident).
+    pub hit_rate: f64,
     pub final_workers: usize,
     pub final_ways: usize,
+    /// Final hot-tier allocation (`None` = fully resident).
+    pub final_cache_bytes: Option<f64>,
 }
 
 /// The simulation engine.
@@ -151,7 +169,7 @@ impl Simulation {
             .iter()
             .map(|t| {
                 let profile =
-                    ServiceProfile::build(t.model.spec(), &node, t.workers.max(1), t.ways);
+                    tenant_profile(&node, t.model, t.workers, t.ways, t.cache_bytes);
                 TenantState {
                     cfg: t.clone(),
                     profile,
@@ -264,11 +282,12 @@ impl Simulation {
 
     fn rebuild_profile(&mut self, tenant: usize) {
         let t = &mut self.tenants[tenant];
-        t.profile = ServiceProfile::build(
-            t.cfg.model.spec(),
+        t.profile = tenant_profile(
             &self.node,
-            t.cfg.workers.max(1),
+            t.cfg.model,
+            t.cfg.workers,
             t.cfg.ways,
+            t.cfg.cache_bytes,
         );
     }
 
@@ -331,6 +350,8 @@ impl Simulation {
                             model: t.cfg.model,
                             workers: t.cfg.workers,
                             ways: t.cfg.ways,
+                            cache_bytes: t.cfg.cache_bytes,
+                            window_hit_rate: t.profile.emb_hit(),
                             window_p95_s: t.lat_window.p95(),
                             window_completed: t.window_completed,
                             window_arrival_qps: t.window_arrivals as f64
@@ -355,9 +376,23 @@ impl Simulation {
                             c.workers.min(self.node.cores.saturating_sub(total_other));
                         let ways = c.ways.clamp(1, self.node.llc_ways);
                         let t = &mut self.tenants[c.tenant];
-                        if t.cfg.workers != workers || t.cfg.ways != ways {
+                        // Cache resizing only applies to cached tenants
+                        // (a resident tenant has no hot tier to resize),
+                        // clamped to [MIN_CACHE_BYTES, node DRAM].
+                        let cache = match (t.cfg.cache_bytes, c.cache_bytes) {
+                            (Some(_), Some(req)) => Some(req.clamp(
+                                MIN_CACHE_BYTES,
+                                self.node.dram_capacity_gb * 1e9,
+                            )),
+                            (current, _) => current,
+                        };
+                        if t.cfg.workers != workers
+                            || t.cfg.ways != ways
+                            || t.cfg.cache_bytes != cache
+                        {
                             t.cfg.workers = workers;
                             t.cfg.ways = ways;
+                            t.cfg.cache_bytes = cache;
                             self.rebuild_profile(c.tenant);
                             self.alloc_timeline.push((now, c.tenant, workers, ways));
                             self.dispatch(c.tenant, &mut q);
@@ -413,8 +448,10 @@ impl Simulation {
                         t.bw_util_sum / t.bw_util_n as f64
                     },
                     miss_rate: t.profile.miss_rate(),
+                    hit_rate: t.profile.emb_hit(),
                     final_workers: t.cfg.workers,
                     final_ways: t.cfg.ways,
+                    final_cache_bytes: t.cfg.cache_bytes,
                 }
             })
             .collect()
@@ -431,6 +468,7 @@ mod tests {
             workers: 16,
             ways: 11,
             arrival_qps: qps,
+            cache_bytes: None,
         }
     }
 
@@ -474,12 +512,14 @@ mod tests {
             workers: 12,
             ways: 5,
             arrival_qps: 20.0,
+            cache_bytes: None,
         };
         let t2 = SimulatedTenant {
             model: ModelId::from_name("ncf").unwrap(),
             workers: 4,
             ways: 6,
             arrival_qps: 200.0,
+            cache_bytes: None,
         };
         let mut sim = Simulation::new(node, &[t1, t2], 3);
         let out = sim.run(10.0, 1.0, &mut NullController);
@@ -496,6 +536,7 @@ mod tests {
             workers: 17,
             ways: 11,
             arrival_qps: 1.0,
+            cache_bytes: None,
         };
         Simulation::new(node, &[t], 1);
     }
@@ -515,6 +556,79 @@ mod tests {
     }
 
     #[test]
+    fn starved_cache_tenant_sees_higher_latency() {
+        let node = NodeConfig::paper_default();
+        let d = ModelId::from_name("dlrm_b").unwrap();
+        let mk = |cache: Option<f64>| SimulatedTenant {
+            model: d,
+            workers: 8,
+            ways: 6,
+            arrival_qps: 15.0,
+            cache_bytes: cache,
+        };
+        let resident =
+            Simulation::new(node.clone(), &[mk(None)], 17).run(15.0, 3.0, &mut NullController);
+        let starved = Simulation::new(node, &[mk(Some(2e6))], 17)
+            .run(15.0, 3.0, &mut NullController);
+        assert_eq!(resident[0].hit_rate, 1.0);
+        assert!(starved[0].hit_rate < 0.9, "tiny cache: {}", starved[0].hit_rate);
+        assert!(
+            starved[0].p95_s > resident[0].p95_s,
+            "cache starvation must cost latency: {} vs {}",
+            starved[0].p95_s,
+            resident[0].p95_s
+        );
+    }
+
+    #[test]
+    fn controller_can_grow_the_hot_tier() {
+        struct CacheGrower;
+        impl Controller for CacheGrower {
+            fn on_monitor(&mut self, _n: f64, s: &[TenantStats]) -> Vec<AllocChange> {
+                vec![AllocChange {
+                    tenant: 0,
+                    workers: s[0].workers,
+                    ways: s[0].ways,
+                    cache_bytes: s[0].cache_bytes.map(|b| b * 4.0),
+                }]
+            }
+        }
+        let node = NodeConfig::paper_default();
+        let t = SimulatedTenant {
+            model: ModelId::from_name("dlrm_b").unwrap(),
+            workers: 8,
+            ways: 6,
+            arrival_qps: 15.0,
+            cache_bytes: Some(16e6),
+        };
+        let mut sim = Simulation::new(node, &[t], 19);
+        let out = &sim.run(6.0, 1.0, &mut CacheGrower)[0];
+        let grown = out.final_cache_bytes.expect("still cached");
+        assert!(grown > 16e6 * 10.0, "cache grew each tick: {grown:.3e}");
+        assert!(out.hit_rate > 0.9, "grown cache raises hit rate: {}", out.hit_rate);
+    }
+
+    #[test]
+    fn resident_tenant_ignores_cache_resizing() {
+        struct CacheForcer;
+        impl Controller for CacheForcer {
+            fn on_monitor(&mut self, _n: f64, s: &[TenantStats]) -> Vec<AllocChange> {
+                vec![AllocChange {
+                    tenant: 0,
+                    workers: s[0].workers,
+                    ways: s[0].ways,
+                    cache_bytes: Some(1e9),
+                }]
+            }
+        }
+        let node = NodeConfig::paper_default();
+        let mut sim = Simulation::new(node, &[ncf_tenant(100.0)], 23);
+        let out = &sim.run(4.0, 1.0, &mut CacheForcer)[0];
+        assert_eq!(out.final_cache_bytes, None, "resident tenants stay resident");
+        assert_eq!(out.hit_rate, 1.0);
+    }
+
+    #[test]
     fn controller_changes_apply_and_are_clamped() {
         struct Grower;
         impl Controller for Grower {
@@ -523,6 +637,7 @@ mod tests {
                     tenant: 0,
                     workers: s[0].workers + 8,
                     ways: 99,
+                    cache_bytes: None,
                 }]
             }
         }
@@ -532,6 +647,7 @@ mod tests {
             workers: 2,
             ways: 4,
             arrival_qps: 100.0,
+            cache_bytes: None,
         };
         let mut sim = Simulation::new(node, &[t], 9);
         let out = &sim.run(5.0, 1.0, &mut Grower)[0];

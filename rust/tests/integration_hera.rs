@@ -93,12 +93,14 @@ fn rmu_tracks_load_spike_faster_than_parties() {
                 workers: 10,
                 ways: 5,
                 arrival_qps: STORE.profile(d).max_load(),
+                cache_bytes: None,
             },
             SimulatedTenant {
                 model: n,
                 workers: 6,
                 ways: 6,
                 arrival_qps: STORE.profile(n).max_load(),
+                cache_bytes: None,
             },
         ];
         let mut sim = Simulation::new(node.clone(), &tenants, 31);

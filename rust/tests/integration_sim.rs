@@ -48,16 +48,16 @@ fn analytic_feasibility_matches_sim_at_extremes() {
     let m = id("dien");
     let max = max_load_analytic(&node, m, 16, 11, &MaxLoadOpts::default());
     // Far below max: both engines must call it feasible.
-    let low = AnalyticTenant { model: m, workers: 16, ways: 11, arrival_qps: 0.3 * max };
+    let low = AnalyticTenant { model: m, workers: 16, ways: 11, arrival_qps: 0.3 * max, cache_bytes: None };
     assert!(solve(&node, &[low]).tenants[0].feasible);
-    let t = SimulatedTenant { model: m, workers: 16, ways: 11, arrival_qps: 0.3 * max };
+    let t = SimulatedTenant { model: m, workers: 16, ways: 11, arrival_qps: 0.3 * max, cache_bytes: None };
     let out = &Simulation::new(node.clone(), &[t], 5).run(20.0, 4.0, &mut NullController)[0];
     assert!(out.p95_s <= m.spec().sla_ms / 1e3, "sim p95 {}", out.p95_s);
 
     // Far above max: both must call it infeasible.
-    let hi = AnalyticTenant { model: m, workers: 16, ways: 11, arrival_qps: 3.0 * max };
+    let hi = AnalyticTenant { model: m, workers: 16, ways: 11, arrival_qps: 3.0 * max, cache_bytes: None };
     assert!(!solve(&node, &[hi]).tenants[0].feasible);
-    let t = SimulatedTenant { model: m, workers: 16, ways: 11, arrival_qps: 3.0 * max };
+    let t = SimulatedTenant { model: m, workers: 16, ways: 11, arrival_qps: 3.0 * max, cache_bytes: None };
     let out = &Simulation::new(node, &[t], 5).run(20.0, 4.0, &mut NullController)[0];
     assert!(out.p95_s > m.spec().sla_ms / 1e3, "sim p95 {}", out.p95_s);
 }
@@ -73,28 +73,28 @@ fn colocation_interference_visible_in_both_engines() {
 
     let solo_an = solve(
         &node,
-        &[AnalyticTenant { model: d, workers: 8, ways: 5, arrival_qps: qd }],
+        &[AnalyticTenant { model: d, workers: 8, ways: 5, arrival_qps: qd, cache_bytes: None }],
     )
     .tenants[0]
         .p95_sojourn_s;
     let duo_an = solve(
         &node,
         &[
-            AnalyticTenant { model: d, workers: 8, ways: 5, arrival_qps: qd },
-            AnalyticTenant { model: a, workers: 8, ways: 6, arrival_qps: 1200.0 },
+            AnalyticTenant { model: d, workers: 8, ways: 5, arrival_qps: qd, cache_bytes: None },
+            AnalyticTenant { model: a, workers: 8, ways: 6, arrival_qps: 1200.0, cache_bytes: None },
         ],
     )
     .tenants[0]
         .p95_sojourn_s;
     assert!(duo_an > solo_an, "analytic: {duo_an} vs {solo_an}");
 
-    let solo_tenants = [SimulatedTenant { model: d, workers: 8, ways: 5, arrival_qps: qd }];
+    let solo_tenants = [SimulatedTenant { model: d, workers: 8, ways: 5, arrival_qps: qd, cache_bytes: None }];
     let solo_sim = Simulation::new(node.clone(), &solo_tenants, 9)
         .run(20.0, 4.0, &mut NullController)[0]
         .p95_s;
     let duo_tenants = [
-        SimulatedTenant { model: d, workers: 8, ways: 5, arrival_qps: qd },
-        SimulatedTenant { model: a, workers: 8, ways: 6, arrival_qps: 1200.0 },
+        SimulatedTenant { model: d, workers: 8, ways: 5, arrival_qps: qd, cache_bytes: None },
+        SimulatedTenant { model: a, workers: 8, ways: 6, arrival_qps: 1200.0, cache_bytes: None },
     ];
     let duo_sim = Simulation::new(node, &duo_tenants, 9)
         .run(20.0, 4.0, &mut NullController)[0]
@@ -112,8 +112,8 @@ fn friction_hurts_cache_sensitive_pairs_more() {
         solve(
             &node,
             &[
-                AnalyticTenant { model: ncf, workers: 8, ways: 6, arrival_qps: 5000.0 },
-                AnalyticTenant { model: other, workers: 8, ways: 5, arrival_qps: q_other },
+                AnalyticTenant { model: ncf, workers: 8, ways: 6, arrival_qps: 5000.0, cache_bytes: None },
+                AnalyticTenant { model: other, workers: 8, ways: 5, arrival_qps: q_other, cache_bytes: None },
             ],
         )
         .tenants[0]

@@ -130,6 +130,8 @@ fn prop_rmu_decisions_respect_node_limits() {
                 window_completed: 50,
                 window_arrival_qps: rng.next_f64() * 2.0 * STORE.profile(a).max_load(),
                 queue_depth: rng.next_below(100) as usize,
+                cache_bytes: None,
+                window_hit_rate: 1.0,
             },
             TenantStats {
                 model: b,
@@ -139,6 +141,8 @@ fn prop_rmu_decisions_respect_node_limits() {
                 window_completed: 50,
                 window_arrival_qps: rng.next_f64() * 2.0 * STORE.profile(b).max_load(),
                 queue_depth: rng.next_below(100) as usize,
+                cache_bytes: None,
+                window_hit_rate: 1.0,
             },
         ];
         let changes = rmu.on_monitor(1.0, &stats);
@@ -176,6 +180,7 @@ fn prop_simulation_conserves_queries() {
             workers,
             ways: 1 + rng.next_below(11) as usize,
             arrival_qps: 1.0 + rng.next_f64() * 0.5 * STORE.profile(m).max_load(),
+            cache_bytes: None,
         };
         let mut sim = Simulation::new(node, &[t], rng.next_u64());
         let out = &sim.run(8.0, 1.0, &mut NullController)[0];
@@ -223,7 +228,7 @@ fn prop_controller_clamping_in_simulation() {
             let w = (self.0 >> 33) as usize % 64;
             let k = (self.0 >> 21) as usize % 32;
             (0..s.len())
-                .map(|i| hera::server_sim::AllocChange { tenant: i, workers: w, ways: k.max(1) })
+                .map(|i| hera::server_sim::AllocChange { tenant: i, workers: w, ways: k.max(1), cache_bytes: None })
                 .collect()
         }
     }
@@ -235,12 +240,14 @@ fn prop_controller_clamping_in_simulation() {
                 workers: 4,
                 ways: 5,
                 arrival_qps: 500.0,
+                cache_bytes: None,
             },
             SimulatedTenant {
                 model: ModelId::from_name("din").unwrap(),
                 workers: 4,
                 ways: 6,
                 arrival_qps: 500.0,
+                cache_bytes: None,
             },
         ];
         let mut sim = Simulation::new(node.clone(), &tenants, rng.next_u64());

@@ -1,0 +1,172 @@
+//! Minimal offline substitute for the `anyhow` crate.
+//!
+//! Implements the slice of the API this repository uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait for `Result`/`Option`, and
+//! the `anyhow!` / `bail!` / `ensure!` macros.  Context is kept as a chain
+//! of human-readable strings (most-recent first), matching how the real
+//! crate renders `{:#}`.
+
+use std::fmt;
+
+/// A string-chain error value.  Deliberately does **not** implement
+/// `std::error::Error`, so the blanket `From<E: std::error::Error>`
+/// conversion below cannot conflict with `From<Error> for Error`.
+pub struct Error {
+    /// Context chain, most recent first; the root cause is last.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Push a higher-level context message onto the chain.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost (most recent) message.
+    pub fn root_message(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, outermost first.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.root_message())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve source() messages as chain entries.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — alias with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_chains_render_outermost_first() {
+        let e: Result<()> = Err(anyhow!("root cause"));
+        let e = e.map_err(|err| err.context("while doing x"));
+        let err = e.unwrap_err();
+        assert_eq!(format!("{err}"), "while doing x");
+        assert_eq!(format!("{err:#}"), "while doing x: root cause");
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let n: Option<u32> = None;
+        let e = n.context("missing value").unwrap_err();
+        assert_eq!(e.root_message(), "missing value");
+
+        let r: std::result::Result<u32, std::num::ParseIntError> = "x".parse();
+        let e = r.with_context(|| format!("parsing {:?}", "x")).unwrap_err();
+        assert!(format!("{e:#}").starts_with("parsing \"x\": "));
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn f(v: u32) -> Result<u32> {
+            ensure!(v < 10, "value {v} too large");
+            if v == 7 {
+                bail!("unlucky {v}");
+            }
+            Ok(v)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(12).is_err());
+        assert_eq!(f(7).unwrap_err().root_message(), "unlucky 7");
+    }
+}

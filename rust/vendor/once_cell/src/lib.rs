@@ -1,0 +1,94 @@
+//! Minimal offline substitute for the `once_cell` crate.
+//!
+//! Only the slice of the API this repository uses is provided:
+//! `once_cell::sync::Lazy` for lazily-initialized statics.  Backed by
+//! `std::sync::OnceLock` (stable since Rust 1.70), with the initializer
+//! stored as a plain `Fn` value (statics use non-capturing closures, which
+//! coerce to `fn() -> T`, the default type parameter).
+
+pub mod sync {
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access, safe to use as a `static`.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        /// Create a new lazy value with the given initializer.
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy {
+                cell: OnceLock::new(),
+                init,
+            }
+        }
+
+        /// Force evaluation and return a reference to the value.
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(&this.init)
+        }
+
+        /// The value, if it has already been initialized.
+        pub fn get(this: &Lazy<T, F>) -> Option<&T> {
+            this.cell.get()
+        }
+    }
+
+    impl<T, F: Fn() -> T> std::ops::Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+
+    impl<T: std::fmt::Debug, F: Fn() -> T> std::fmt::Debug for Lazy<T, F> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            match Lazy::get(self) {
+                Some(v) => f.debug_tuple("Lazy").field(v).finish(),
+                None => f.write_str("Lazy(<uninit>)"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+
+    static GLOBAL: Lazy<Vec<u32>> = Lazy::new(|| vec![1, 2, 3]);
+
+    #[test]
+    fn static_lazy_initializes_once() {
+        assert_eq!(GLOBAL.len(), 3);
+        assert_eq!(GLOBAL[1], 2);
+        // Second access returns the same value.
+        let a: *const Vec<u32> = &*GLOBAL;
+        let b: *const Vec<u32> = &*GLOBAL;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn local_lazy_with_closure() {
+        let l: Lazy<u64> = Lazy::new(|| 40 + 2);
+        assert_eq!(*l, 42);
+    }
+
+    #[test]
+    fn concurrent_access_initializes_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        static SHARED: Lazy<usize> = Lazy::new(|| {
+            CALLS.fetch_add(1, Ordering::SeqCst);
+            7
+        });
+        let handles: Vec<_> = (0..8)
+            .map(|_| std::thread::spawn(|| *SHARED))
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7);
+        }
+        assert_eq!(CALLS.load(Ordering::SeqCst), 1);
+    }
+}
