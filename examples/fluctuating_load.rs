@@ -75,11 +75,14 @@ fn main() -> anyhow::Result<()> {
         let around_t2: Vec<_> = sim
             .alloc_timeline
             .iter()
-            .filter(|(t, _, _, _)| (40.0..50.0).contains(t))
+            .filter(|(t, _, _)| (40.0..50.0).contains(t))
             .collect();
-        for (t, tenant, w, k) in around_t2.iter().take(8) {
+        for (t, tenant, rv) in around_t2.iter().take(8) {
             let m = if *tenant == 0 { "dlrm_d" } else { "ncf" };
-            println!("    t={t:5.1}s  {m:7} -> {w} workers / {k} ways");
+            println!(
+                "    t={t:5.1}s  {m:7} -> {} workers / {} ways",
+                rv.workers, rv.ways
+            );
         }
     }
     Ok(())

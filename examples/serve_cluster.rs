@@ -15,9 +15,10 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use hera::alloc::ResidencyPolicy;
 use hera::config::NodeConfig;
 use hera::coordinator::{run_load, Coordinator, LoadGenSpec, TenantConfig};
-use hera::hera::{AffinityMatrix, ServerAssignment};
+use hera::hera::AffinityMatrix;
 use hera::profiler::ProfileStore;
 use hera::runtime::{manifest::default_artifact_dir, Engine};
 
@@ -29,21 +30,15 @@ fn main() -> anyhow::Result<()> {
     let (low, high) = store.partition_by_scalability();
     let a = low[1]; // dlrm_d — the bandwidth-limited model
     let b = matrix.best_partner(a, &high).unwrap();
-    let plan = hera::hera::cluster::evaluate_pair(&store, &matrix, a, b);
-    let ServerAssignment::Pair { workers, ways, qps, .. } = &plan else {
-        anyhow::bail!("expected a pair plan");
-    };
-    println!(
-        "  co-locating {}({}w/{}ways) + {}({}w/{}ways); plan QPS ({:.0}, {:.0})",
-        a.name(),
-        workers.0,
-        ways.0,
-        b.name(),
-        workers.1,
-        ways.1,
-        qps.0,
-        qps.1
+    let plan = hera::hera::cluster::evaluate_group(
+        &store,
+        &matrix,
+        &[a, b],
+        ResidencyPolicy::Optimistic,
     );
+    anyhow::ensure!(plan.tenants.len() == 2, "expected a pair plan");
+    let workers = (plan.tenants[0].rv.workers, plan.tenants[1].rv.workers);
+    println!("  co-locating {plan}");
 
     // ---- Phase 2: load the real models ----
     println!("[2/3] loading PJRT engine (AOT artifacts)...");

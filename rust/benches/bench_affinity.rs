@@ -43,24 +43,20 @@ fn main() {
     let stats = vec![
         TenantStats {
             model: hera::config::ModelId(3),
-            workers: 8,
-            ways: 5,
+            alloc: hera::alloc::ResourceVector::resident(8, 5),
             window_p95_s: 0.12,
             window_completed: 400,
             window_arrival_qps: 500.0,
             queue_depth: 3,
-            cache_bytes: None,
             window_hit_rate: 1.0,
         },
         TenantStats {
             model: hera::config::ModelId(4),
-            workers: 8,
-            ways: 6,
+            alloc: hera::alloc::ResourceVector::resident(8, 6),
             window_p95_s: 0.004,
             window_completed: 3000,
             window_arrival_qps: 6000.0,
             queue_depth: 0,
-            cache_bytes: None,
             window_hit_rate: 1.0,
         },
     ];

@@ -1,0 +1,380 @@
+//! Allocation primitives — the N-tenant replacement for the pair-shaped
+//! scheduler/RMU surface.
+//!
+//! Three first-class types carry every allocation decision in the system:
+//!
+//! * [`ResourceVector`] — one tenant's slice of a node: workers, LLC ways
+//!   and embedding residency ([`ResidencyMode`]), with budget arithmetic
+//!   (`+` sums slices) and node-fit checks (the old free-standing
+//!   `pair_fits_dram*` helpers folded into the type).
+//! * [`Placement`] — one server's assignment: a `Vec<TenantAlloc>` of any
+//!   cardinality (the old `ServerAssignment::{Solo, Pair}` enum could only
+//!   express one or two tenants), with per-model QPS accounting, DRAM
+//!   accounting and a coupled-analytic SLA feasibility check.
+//! * [`ResidencyPolicy`] — how group evaluation treats embedding tables:
+//!   fully resident with the seed's optimistic DRAM accounting, fully
+//!   resident with the joint-DRAM check enforced, or served through
+//!   min-cache-for-SLA `embedcache` hot tiers.
+//!
+//! The evaluator that produces [`Placement`]s is
+//! [`crate::hera::cluster::evaluate_group`]; controllers request changes
+//! as [`ResourceVector`]s through [`crate::server_sim::AllocChange`].
+
+use crate::config::{ModelId, NodeConfig, N_MODELS};
+
+/// How a tenant's embedding tables are held in node DRAM.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ResidencyMode {
+    /// Every worker carries the model's full tables.
+    Full,
+    /// Every worker serves gathers through an `embedcache` hot tier of
+    /// this many bytes (see [`crate::embedcache::HitCurve`]).
+    Cached(f64),
+}
+
+impl ResidencyMode {
+    /// Hot-tier bytes, `None` when fully resident.
+    pub fn cache_bytes(self) -> Option<f64> {
+        match self {
+            ResidencyMode::Full => None,
+            ResidencyMode::Cached(b) => Some(b),
+        }
+    }
+
+    /// Per-worker DRAM footprint of `model` under this residency: full
+    /// tables + FC weights when resident, hot tier + FC weights when
+    /// cached.  The single source of truth for capacity accounting —
+    /// `evaluate_group`'s caps/fit checks and [`ResourceVector`] both
+    /// route through it.
+    pub fn worker_bytes(self, model: ModelId) -> f64 {
+        match self {
+            ResidencyMode::Full => model.spec().worker_bytes(),
+            ResidencyMode::Cached(b) => b + model.spec().fc_bytes(),
+        }
+    }
+}
+
+/// How group evaluation and the cluster scheduler treat embedding
+/// residency and joint DRAM capacity.
+///
+/// The policy governs how a group's tenants are deployed.  Dedicated
+/// (solo) servers emitted by the schedulers are always fully resident
+/// and fit node DRAM by construction (`evaluate_solo` caps workers at
+/// the OOM wall), so for a policy like DeepRecSys — which never
+/// co-locates — every mode yields the same plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ResidencyPolicy {
+    /// Full residency without a combined-capacity check — the seed's
+    /// behavior, kept as the default for paper parity (see ROADMAP
+    /// "joint-DRAM check on the full-residency path").
+    #[default]
+    Optimistic,
+    /// Full residency with the joint-DRAM check enforced: workers are
+    /// shrunk until the whole group fits node DRAM.  Changes baseline
+    /// server counts versus `Optimistic` (see DESIGN.md).
+    Strict,
+    /// Every tenant is served through its min-cache-for-SLA hot tier and
+    /// the joint (cache + FC weight) footprint must fit node DRAM.
+    Cached,
+}
+
+/// One tenant's resource slice of a node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResourceVector {
+    pub workers: usize,
+    pub ways: usize,
+    pub residency: ResidencyMode,
+}
+
+impl ResourceVector {
+    /// A fully-resident slice.
+    pub fn resident(workers: usize, ways: usize) -> ResourceVector {
+        ResourceVector {
+            workers,
+            ways,
+            residency: ResidencyMode::Full,
+        }
+    }
+
+    /// A slice served through a hot tier of `cache_bytes` per worker.
+    pub fn cached(workers: usize, ways: usize, cache_bytes: f64) -> ResourceVector {
+        ResourceVector {
+            workers,
+            ways,
+            residency: ResidencyMode::Cached(cache_bytes),
+        }
+    }
+
+    /// Per-worker hot-tier bytes, `None` when fully resident.
+    pub fn cache_bytes(&self) -> Option<f64> {
+        self.residency.cache_bytes()
+    }
+
+    /// Per-worker DRAM footprint of `model` under this slice's residency
+    /// (see [`ResidencyMode::worker_bytes`]).
+    pub fn worker_bytes(&self, model: ModelId) -> f64 {
+        self.residency.worker_bytes(model)
+    }
+
+    /// Total DRAM bytes this slice demands for `model`.
+    pub fn dram_bytes(&self, model: ModelId) -> f64 {
+        self.workers as f64 * self.worker_bytes(model)
+    }
+
+    /// Whether this slice alone fits `node` when serving `model`.
+    pub fn fits_node(&self, model: ModelId, node: &NodeConfig) -> bool {
+        self.workers <= node.cores
+            && self.ways >= 1
+            && self.ways <= node.llc_ways
+            && self.dram_bytes(model) <= node.dram_capacity_gb * 1e9
+    }
+}
+
+impl std::ops::Add for ResourceVector {
+    type Output = ResourceVector;
+
+    /// Budget-style sum: workers and ways add; hot-tier bytes add, and the
+    /// sum is `Full` only when both sides are fully resident.  Model-aware
+    /// DRAM accounting goes through [`ResourceVector::dram_bytes`] /
+    /// [`Placement::dram_bytes`] instead.
+    fn add(self, rhs: ResourceVector) -> ResourceVector {
+        let residency = match (self.residency, rhs.residency) {
+            (ResidencyMode::Full, ResidencyMode::Full) => ResidencyMode::Full,
+            (a, b) => ResidencyMode::Cached(
+                a.cache_bytes().unwrap_or(0.0) + b.cache_bytes().unwrap_or(0.0),
+            ),
+        };
+        ResourceVector {
+            workers: self.workers + rhs.workers,
+            ways: self.ways + rhs.ways,
+            residency,
+        }
+    }
+}
+
+/// One tenant of a [`Placement`]: a model, its resource slice and the
+/// sustained QPS the evaluator assigned to it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantAlloc {
+    pub model: ModelId,
+    pub rv: ResourceVector,
+    pub qps: f64,
+}
+
+impl TenantAlloc {
+    /// DRAM bytes this tenant occupies on its node.
+    pub fn dram_bytes(&self) -> f64 {
+        self.rv.dram_bytes(self.model)
+    }
+}
+
+/// One allocated server: any number of co-located tenants (the paper
+/// co-locates pairs; [`crate::server_sim::Simulation`] and the evaluator
+/// support up to `MAX_TENANTS`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub tenants: Vec<TenantAlloc>,
+}
+
+impl Placement {
+    /// Dedicated server: one fully-resident model owning the whole LLC.
+    pub fn solo(model: ModelId, workers: usize, ways: usize, qps: f64) -> Placement {
+        Placement {
+            tenants: vec![TenantAlloc {
+                model,
+                rv: ResourceVector::resident(workers, ways),
+                qps,
+            }],
+        }
+    }
+
+    /// QPS this server contributes to `m` (summed over matching tenants).
+    pub fn qps_for(&self, m: ModelId) -> f64 {
+        self.tenants
+            .iter()
+            .filter(|t| t.model == m)
+            .map(|t| t.qps)
+            .sum()
+    }
+
+    /// Aggregate QPS over all tenants.
+    pub fn total_qps(&self) -> f64 {
+        self.tenants.iter().map(|t| t.qps).sum()
+    }
+
+    /// Combined DRAM bytes of all tenants.
+    pub fn dram_bytes(&self) -> f64 {
+        self.tenants.iter().map(TenantAlloc::dram_bytes).sum()
+    }
+
+    /// Budget sum of all tenant slices (workers, ways, hot-tier bytes).
+    pub fn total(&self) -> ResourceVector {
+        self.tenants
+            .iter()
+            .map(|t| t.rv)
+            .fold(ResourceVector::resident(0, 0), |acc, rv| acc + rv)
+    }
+
+    /// Whether the whole placement fits `node`: core budget, way budget
+    /// (each tenant at least one way) and joint DRAM capacity.
+    pub fn fits_node(&self, node: &NodeConfig) -> bool {
+        let total = self.total();
+        total.workers <= node.cores
+            && total.ways <= node.llc_ways
+            && self.tenants.iter().all(|t| t.rv.ways >= 1)
+            && self.dram_bytes() <= node.dram_capacity_gb * 1e9
+    }
+
+    /// More than one tenant shares the node.
+    pub fn is_colocated(&self) -> bool {
+        self.tenants.len() > 1
+    }
+
+    /// The models deployed on this server, in tenant order.
+    pub fn models(&self) -> Vec<ModelId> {
+        self.tenants.iter().map(|t| t.model).collect()
+    }
+
+    /// The tenant serving `m`, if any.
+    pub fn get(&self, m: ModelId) -> Option<&TenantAlloc> {
+        self.tenants.iter().find(|t| t.model == m)
+    }
+
+    /// Coupled-analytic SLA check at the recorded per-tenant QPS: every
+    /// tenant must be stable and meet its p95 SLA under the shared
+    /// bandwidth/LLC contention model.
+    pub fn sla_feasible(&self, store: &crate::profiler::ProfileStore) -> bool {
+        use crate::server_sim::analytic::{solve, AnalyticTenant};
+        if self.tenants.is_empty() {
+            return true;
+        }
+        let tenants: Vec<AnalyticTenant> = self
+            .tenants
+            .iter()
+            .map(|t| AnalyticTenant::from_alloc(t.model, &t.rv, t.qps))
+            .collect();
+        solve(&store.node, &tenants).tenants.iter().all(|t| t.feasible)
+    }
+
+    /// Per-model serviced QPS as a dense vector (plan accounting).
+    pub fn serviced(&self) -> [f64; N_MODELS] {
+        let mut out = [0.0; N_MODELS];
+        for t in &self.tenants {
+            out[t.model.index()] += t.qps;
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for Placement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, t) in self.tenants.iter().enumerate() {
+            if i > 0 {
+                f.write_str(" + ")?;
+            }
+            write!(f, "{}({}w/{}k {:.0}qps", t.model, t.rv.workers, t.rv.ways, t.qps)?;
+            if let ResidencyMode::Cached(b) = t.rv.residency {
+                write!(f, " {:.2}GB", b / 1e9)?;
+            }
+            f.write_str(")")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id(name: &str) -> ModelId {
+        ModelId::from_name(name).unwrap()
+    }
+
+    #[test]
+    fn resource_vector_dram_accounting() {
+        let m = id("dlrm_b"); // 25 GB tables
+        let full = ResourceVector::resident(8, 5);
+        assert!(full.dram_bytes(m) > 8.0 * 25e9);
+        let cached = ResourceVector::cached(8, 5, 1e9);
+        assert!(cached.dram_bytes(m) < full.dram_bytes(m));
+        assert!((cached.dram_bytes(m) - 8.0 * (1e9 + m.spec().fc_bytes())).abs() < 1.0);
+    }
+
+    #[test]
+    fn resource_vector_add_sums_budgets() {
+        let a = ResourceVector::resident(4, 5);
+        let b = ResourceVector::cached(8, 6, 2e9);
+        let s = a + b;
+        assert_eq!(s.workers, 12);
+        assert_eq!(s.ways, 11);
+        assert_eq!(s.cache_bytes(), Some(2e9));
+        let r = ResourceVector::resident(1, 1) + ResourceVector::resident(2, 2);
+        assert_eq!(r.residency, ResidencyMode::Full);
+    }
+
+    #[test]
+    fn placement_qps_and_fit() {
+        let node = NodeConfig::paper_default();
+        let p = Placement {
+            tenants: vec![
+                TenantAlloc {
+                    model: id("ncf"),
+                    rv: ResourceVector::resident(8, 6),
+                    qps: 1000.0,
+                },
+                TenantAlloc {
+                    model: id("din"),
+                    rv: ResourceVector::resident(8, 5),
+                    qps: 500.0,
+                },
+            ],
+        };
+        assert_eq!(p.qps_for(id("ncf")), 1000.0);
+        assert_eq!(p.qps_for(id("wnd")), 0.0);
+        assert_eq!(p.total_qps(), 1500.0);
+        assert!(p.is_colocated());
+        assert!(p.fits_node(&node));
+        assert_eq!(p.serviced()[id("din").index()], 500.0);
+    }
+
+    #[test]
+    fn oversubscribed_placement_does_not_fit() {
+        let node = NodeConfig::paper_default();
+        // 2 x 8 workers x 25 GB DLRM(B) + 8 GB DLRM(D) workers blows the
+        // 201 GB node (the ROADMAP joint-DRAM scenario).
+        let p = Placement {
+            tenants: vec![
+                TenantAlloc {
+                    model: id("dlrm_b"),
+                    rv: ResourceVector::resident(8, 5),
+                    qps: 1.0,
+                },
+                TenantAlloc {
+                    model: id("dlrm_d"),
+                    rv: ResourceVector::resident(8, 6),
+                    qps: 1.0,
+                },
+            ],
+        };
+        assert!(!p.fits_node(&node), "264 GB of tables cannot fit 201 GB");
+        let too_many_ways = Placement {
+            tenants: vec![TenantAlloc {
+                model: id("ncf"),
+                rv: ResourceVector::resident(4, 12),
+                qps: 1.0,
+            }],
+        };
+        assert!(!too_many_ways.fits_node(&node));
+    }
+
+    #[test]
+    fn solo_placement_helpers() {
+        let p = Placement::solo(id("ncf"), 16, 11, 5000.0);
+        assert!(!p.is_colocated());
+        assert_eq!(p.models(), vec![id("ncf")]);
+        assert!(p.get(id("ncf")).is_some());
+        assert!(p.get(id("din")).is_none());
+        let shown = format!("{p}");
+        assert!(shown.contains("ncf(16w/11k"), "{shown}");
+    }
+}

@@ -16,6 +16,7 @@
 //! slowly compared to Hera's table lookup — exactly the effect Fig. 12-14
 //! measure.
 
+use crate::alloc::ResourceVector;
 use crate::config::NodeConfig;
 use crate::server_sim::{AllocChange, Controller, TenantStats};
 
@@ -50,8 +51,8 @@ pub struct PartiesController {
     comfort_streak: Vec<u32>,
     /// Windows of sustained comfort required before a downsize probe.
     downsize_patience: u32,
-    /// Decision log (time, tenant, workers, ways) for Fig. 13/14.
-    pub decisions: Vec<(f64, usize, usize, usize)>,
+    /// Decision log (time, tenant, applied allocation) for Fig. 13/14.
+    pub decisions: Vec<(f64, usize, ResourceVector)>,
 }
 
 impl PartiesController {
@@ -70,8 +71,8 @@ impl PartiesController {
 
 impl Controller for PartiesController {
     fn on_monitor(&mut self, now: f64, stats: &[TenantStats]) -> Vec<AllocChange> {
-        let mut workers: Vec<usize> = stats.iter().map(|s| s.workers).collect();
-        let mut ways: Vec<usize> = stats.iter().map(|s| s.ways).collect();
+        let mut workers: Vec<usize> = stats.iter().map(|s| s.alloc.workers).collect();
+        let mut ways: Vec<usize> = stats.iter().map(|s| s.alloc.ways).collect();
         let slacks: Vec<f64> = stats
             .iter()
             .map(|s| s.window_p95_s / (s.model.spec().sla_ms / 1e3))
@@ -140,14 +141,16 @@ impl Controller for PartiesController {
 
         let mut changes = Vec::new();
         for i in 0..stats.len() {
-            if workers[i] != stats[i].workers || ways[i] != stats[i].ways {
-                self.decisions.push((now, i, workers[i], ways[i]));
-                changes.push(AllocChange {
-                    tenant: i,
+            if workers[i] != stats[i].alloc.workers || ways[i] != stats[i].alloc.ways {
+                // PARTIES has no cache knob: echo the tenant's residency
+                // so the simulation leaves its hot tier untouched.
+                let rv = ResourceVector {
                     workers: workers[i],
                     ways: ways[i],
-                    cache_bytes: None,
-                });
+                    residency: stats[i].alloc.residency,
+                };
+                self.decisions.push((now, i, rv));
+                changes.push(AllocChange { tenant: i, rv });
             }
         }
         changes
@@ -169,13 +172,11 @@ mod tests {
     fn stats(name: &str, workers: usize, ways: usize, p95_s: f64) -> TenantStats {
         TenantStats {
             model: ModelId::from_name(name).unwrap(),
-            workers,
-            ways,
+            alloc: ResourceVector::resident(workers, ways),
             window_p95_s: p95_s,
             window_completed: 100,
             window_arrival_qps: 100.0,
             queue_depth: 0,
-            cache_bytes: None,
             window_hit_rate: 1.0,
         }
     }
@@ -188,12 +189,12 @@ mod tests {
         let c1 = p.on_monitor(1.0, &s);
         assert_eq!(c1.len(), 1, "din upsized by one core (ncf hysteresis holds)");
         let din = c1.iter().find(|c| c.tenant == 0).unwrap();
-        assert_eq!((din.workers, din.ways), (5, 4), "one core added");
+        assert_eq!((din.rv.workers, din.rv.ways), (5, 4), "one core added");
         // Next interval: alternates to the ways knob.
         let s2 = vec![stats("din", 5, 4, 0.200), stats("ncf", 4, 4, 0.09)];
         let c2 = p.on_monitor(2.0, &s2);
         let din2 = c2.iter().find(|c| c.tenant == 0).unwrap();
-        assert_eq!((din2.workers, din2.ways), (5, 5), "one way added");
+        assert_eq!((din2.rv.workers, din2.rv.ways), (5, 5), "one way added");
     }
 
     #[test]
@@ -204,8 +205,8 @@ mod tests {
         let ch = p.on_monitor(1.0, &s);
         let din = ch.iter().find(|c| c.tenant == 0).unwrap();
         let ncf = ch.iter().find(|c| c.tenant == 1).unwrap();
-        assert_eq!(din.workers, 9);
-        assert!(ncf.workers <= 7, "victim loses a core (and may downsize)");
+        assert_eq!(din.rv.workers, 9);
+        assert!(ncf.rv.workers <= 7, "victim loses a core (and may downsize)");
     }
 
     #[test]
@@ -225,7 +226,7 @@ mod tests {
         // Third window: one unit released.
         let ch = p.on_monitor(3.0, &s);
         assert_eq!(ch.len(), 1);
-        assert!(ch[0].workers < 8 || ch[0].ways < 5);
+        assert!(ch[0].rv.workers < 8 || ch[0].rv.ways < 5);
     }
 
     #[test]
@@ -236,8 +237,8 @@ mod tests {
         for t in 0..10 {
             let s = vec![stats("din", w, k, 0.0001)];
             for c in p.on_monitor(t as f64, &s) {
-                w = c.workers;
-                k = c.ways;
+                w = c.rv.workers;
+                k = c.rv.ways;
             }
         }
         assert!(w >= 1 && k >= 1);

@@ -1,14 +1,19 @@
 //! Cluster-level model-selection baselines (paper §VII-A1 / §VII-C).
 //!
 //! All four policies (incl. Hera itself, in `crate::hera::cluster`) share
-//! the pair-evaluation machinery so differences in the Fig. 11/15/16
+//! the group-evaluation machinery so differences in the Fig. 11/15/16
 //! results come purely from *which models get co-located*, exactly as in
 //! the paper ("all four design points employ our proposed resource
-//! management algorithm").
+//! management algorithm").  Every policy accepts a
+//! [`ResidencyPolicy`]: the default [`ResidencyPolicy::Optimistic`] keeps
+//! the seed's DRAM-blind pairing; [`ResidencyPolicy::Strict`] enforces
+//! the joint-DRAM check (which changes Random's server counts — it can
+//! no longer deploy over-subscribed big-table pairs at full width).
 
+use crate::alloc::{Placement, ResidencyPolicy};
 use crate::config::{ModelId, N_MODELS};
 use crate::hera::affinity::AffinityMatrix;
-use crate::hera::cluster::{evaluate_pair, evaluate_solo, ClusterPlan, ClusterScheduler, ServerAssignment};
+use crate::hera::cluster::{evaluate_group, evaluate_solo, ClusterPlan, ClusterScheduler};
 use crate::profiler::{ProfileStore, ScalabilityClass};
 use crate::rng::{Rng, Xoshiro256};
 
@@ -35,7 +40,8 @@ impl SelectionPolicy {
         }
     }
 
-    /// Allocate servers until `targets` are met (Fig. 15/16 experiment).
+    /// Allocate servers until `targets` are met (Fig. 15/16 experiment),
+    /// with the seed-parity optimistic DRAM accounting.
     pub fn schedule(
         self,
         store: &ProfileStore,
@@ -43,16 +49,32 @@ impl SelectionPolicy {
         targets: &[f64; N_MODELS],
         seed: u64,
     ) -> anyhow::Result<ClusterPlan> {
+        self.schedule_with_residency(store, matrix, targets, seed, ResidencyPolicy::default())
+    }
+
+    /// [`SelectionPolicy::schedule`] under an explicit residency/DRAM
+    /// policy for co-located groups.  Dedicated servers are always fully
+    /// resident and fit node DRAM by construction, so the policy is a
+    /// no-op for `DeepRecSys` (which never co-locates): every mode
+    /// returns the same plan there.
+    pub fn schedule_with_residency(
+        self,
+        store: &ProfileStore,
+        matrix: &AffinityMatrix,
+        targets: &[f64; N_MODELS],
+        seed: u64,
+        residency: ResidencyPolicy,
+    ) -> anyhow::Result<ClusterPlan> {
         match self {
-            SelectionPolicy::Hera => {
-                ClusterScheduler::new(store, matrix).schedule(targets)
-            }
+            SelectionPolicy::Hera => ClusterScheduler::new(store, matrix)
+                .with_residency(residency)
+                .schedule(targets),
             SelectionPolicy::DeepRecSys => schedule_deeprecsys(store, targets),
             SelectionPolicy::Random => {
-                schedule_random(store, matrix, targets, seed, false)
+                schedule_random(store, matrix, targets, seed, false, residency)
             }
             SelectionPolicy::HeraRandom => {
-                schedule_random(store, matrix, targets, seed, true)
+                schedule_random(store, matrix, targets, seed, true, residency)
             }
         }
     }
@@ -105,6 +127,7 @@ fn schedule_random(
     targets: &[f64; N_MODELS],
     seed: u64,
     scalability_aware: bool,
+    residency: ResidencyPolicy,
 ) -> anyhow::Result<ClusterPlan> {
     let mut rng = Xoshiro256::seed_from(seed);
     let mut plan = ClusterPlan {
@@ -146,19 +169,18 @@ fn schedule_random(
             continue;
         }
         let (a, b) = pairs[rng.next_below(pairs.len() as u64) as usize];
-        let s = evaluate_pair(store, matrix, a, b);
-        if let ServerAssignment::Pair { qps, .. } = &s {
-            // A degenerate pair that cannot serve either model would loop
-            // forever; fall back to solo for the first model.
-            if qps.0 <= 0.0 && qps.1 <= 0.0 {
-                let solo = evaluate_solo(store, a);
-                plan.serviced[a.index()] += solo.qps_for(a);
-                plan.servers.push(solo);
-                continue;
-            }
-            plan.serviced[a.index()] += qps.0;
-            plan.serviced[b.index()] += qps.1;
+        let s: Placement = evaluate_group(store, matrix, &[a, b], residency);
+        let (qa, qb) = (s.qps_for(a), s.qps_for(b));
+        // A degenerate pair that cannot serve either model would loop
+        // forever; fall back to solo for the first model.
+        if qa <= 0.0 && qb <= 0.0 {
+            let solo = evaluate_solo(store, a);
+            plan.serviced[a.index()] += solo.qps_for(a);
+            plan.servers.push(solo);
+            continue;
         }
+        plan.serviced[a.index()] += qa;
+        plan.serviced[b.index()] += qb;
         plan.servers.push(s);
     }
     Ok(plan)
@@ -195,10 +217,7 @@ mod tests {
         let plan = SelectionPolicy::DeepRecSys
             .schedule(&STORE, &MATRIX, &targets, 1)
             .unwrap();
-        assert!(plan
-            .servers
-            .iter()
-            .all(|s| matches!(s, ServerAssignment::Solo { .. })));
+        assert!(plan.servers.iter().all(|s| !s.is_colocated()));
     }
 
     #[test]
@@ -208,9 +227,9 @@ mod tests {
             .schedule(&STORE, &MATRIX, &targets, 7)
             .unwrap();
         for s in &plan.servers {
-            if let ServerAssignment::Pair { a, b, .. } = s {
-                let both_high = STORE.scalability(*a) == ScalabilityClass::High
-                    && STORE.scalability(*b) == ScalabilityClass::High;
+            if let [a, b] = s.models()[..] {
+                let both_high = STORE.scalability(a) == ScalabilityClass::High
+                    && STORE.scalability(b) == ScalabilityClass::High;
                 assert!(!both_high, "{a}+{b} is a (high,high) pair");
             }
         }
@@ -267,5 +286,43 @@ mod tests {
             .unwrap()
             .num_servers();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn strict_residency_plans_always_fit_dram() {
+        // Under Optimistic the Random policy can deploy over-subscribed
+        // big-table pairs (e.g. DLRM(B)+DLRM(D) at 264 GB on a 201 GB
+        // node); under Strict every deployed placement must fit.
+        let targets = scaled_targets(&STORE, 1.5);
+        for policy in [SelectionPolicy::Random, SelectionPolicy::Hera] {
+            let plan = policy
+                .schedule_with_residency(
+                    &STORE,
+                    &MATRIX,
+                    &targets,
+                    3,
+                    ResidencyPolicy::Strict,
+                )
+                .unwrap();
+            assert!(plan.meets(&targets), "{} misses targets", policy.name());
+            for s in &plan.servers {
+                assert!(
+                    s.fits_node(&STORE.node),
+                    "{}: strict plan deploys an over-subscribed server {s}",
+                    policy.name()
+                );
+            }
+        }
+        // And the optimistic Random baseline really does over-subscribe
+        // for some seed — the delta Strict exists to close.
+        let over = (0..20).any(|seed| {
+            SelectionPolicy::Random
+                .schedule(&STORE, &MATRIX, &targets, seed)
+                .unwrap()
+                .servers
+                .iter()
+                .any(|s| !s.fits_node(&STORE.node))
+        });
+        assert!(over, "expected at least one optimistic over-subscription");
     }
 }

@@ -1,8 +1,9 @@
 //! EMU machinery + Figs. 9-11 (co-location effectiveness).
 
+use crate::alloc::ResidencyPolicy;
 use crate::config::ModelId;
 use crate::hera::affinity::AffinityMatrix;
-use crate::hera::cluster::{evaluate_pair, split_cores, ServerAssignment};
+use crate::hera::cluster::{evaluate_group, split_cores};
 use crate::metrics::{pearson, EmuDistribution};
 use crate::node::enumerate_partitions;
 use crate::profiler::ProfileStore;
@@ -153,31 +154,31 @@ pub fn fig9(ctx: &FigureContext) -> anyhow::Result<()> {
         (ncf, dien, "(high,high): NCF+DIEN"),
         (ncf, dlrm_b, "(high,low): NCF+DLRM(B)"),
     ] {
-        let server = evaluate_pair(&ctx.store, &ctx.matrix, a, b);
-        if let ServerAssignment::Pair { qps, workers, ways, .. } = server {
-            let fa = qps.0 / ctx.store.profile(a).max_load();
-            let fb = qps.1 / ctx.store.profile(b).max_load();
-            let emu = emu_pair_analytic(&ctx.store, a, b);
-            println!(
-                "  {label}: {}@{:.0}% + {}@{:.0}%  (EMU {emu:.0}%)",
-                a.name(),
-                100.0 * fa,
-                b.name(),
-                100.0 * fb
-            );
-            rows.push(vec![
-                label.to_string(),
-                a.name().into(),
-                fmt(100.0 * fa),
-                b.name().into(),
-                fmt(100.0 * fb),
-                fmt(emu),
-                workers.0.to_string(),
-                workers.1.to_string(),
-                ways.0.to_string(),
-                ways.1.to_string(),
-            ]);
-        }
+        let server =
+            evaluate_group(&ctx.store, &ctx.matrix, &[a, b], ResidencyPolicy::Optimistic);
+        let (ta, tb) = (&server.tenants[0], &server.tenants[1]);
+        let fa = ta.qps / ctx.store.profile(a).max_load();
+        let fb = tb.qps / ctx.store.profile(b).max_load();
+        let emu = emu_pair_analytic(&ctx.store, a, b);
+        println!(
+            "  {label}: {}@{:.0}% + {}@{:.0}%  (EMU {emu:.0}%)",
+            a.name(),
+            100.0 * fa,
+            b.name(),
+            100.0 * fb
+        );
+        rows.push(vec![
+            label.to_string(),
+            a.name().into(),
+            fmt(100.0 * fa),
+            b.name().into(),
+            fmt(100.0 * fb),
+            fmt(emu),
+            ta.rv.workers.to_string(),
+            tb.rv.workers.to_string(),
+            ta.rv.ways.to_string(),
+            tb.rv.ways.to_string(),
+        ]);
     }
     ctx.write_csv(
         "fig9.csv",
@@ -251,8 +252,8 @@ pub fn fig11(ctx: &FigureContext) -> anyhow::Result<()> {
         let mut pairs: Vec<(ModelId, ModelId)> = plan
             .servers
             .iter()
-            .filter_map(|s| match s {
-                crate::hera::ServerAssignment::Pair { a, b, .. } => Some((*a, *b)),
+            .filter_map(|s| match s.models()[..] {
+                [a, b] => Some((a, b)),
                 _ => None,
             })
             .collect();

@@ -1,17 +1,19 @@
 //! Figure/table regeneration harness — one function per table and figure
-//! of the paper's evaluation (see DESIGN.md §4 for the index).
+//! of the paper's evaluation (see DESIGN.md §5 for the index).
 //!
 //! Every figure writes `results/figN.csv` (or `tableN.csv`) and prints a
 //! human-readable summary; EXPERIMENTS.md records paper-vs-measured.
 
 mod cache_figs;
 mod emu;
+mod group_figs;
 mod static_figs;
 mod dynamic_figs;
 mod cluster_figs;
 
 pub use cache_figs::{sweep_points, CachePoint};
 pub use emu::{emu_pair_analytic, emu_sweep_curve, measured_pair_qps_sim};
+pub use group_figs::{normalized_qps_pct, sweep_groups};
 
 use std::path::{Path, PathBuf};
 
@@ -81,6 +83,7 @@ impl FigureContext {
             "16" => cluster_figs::fig16(self),
             "17" => cluster_figs::fig17(self),
             "cache" => cache_figs::cache_sweep(self),
+            "group" => group_figs::group_sweep(self),
             other => anyhow::bail!("unknown figure id {other:?}"),
         }
     }
@@ -88,7 +91,7 @@ impl FigureContext {
     pub fn run_all(&self) -> anyhow::Result<()> {
         for id in [
             "table1", "table2", "3", "4", "5", "6", "7", "9", "10", "11", "12",
-            "13", "14", "15", "16", "17", "cache",
+            "13", "14", "15", "16", "17", "cache", "group",
         ] {
             println!("== figure {id} ==");
             self.run(id)?;

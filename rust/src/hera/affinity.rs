@@ -16,7 +16,7 @@
 //! hundreds of models (see `benches/bench_affinity.rs`).
 
 use crate::config::{ModelId, N_MODELS};
-use crate::node::enumerate_partitions;
+use crate::node::{enumerate_partitions, for_each_ways_split};
 use crate::profiler::ProfileStore;
 
 /// Affinity decomposition for one model pair.
@@ -67,6 +67,49 @@ pub fn co_location_affinity(store: &ProfileStore, a: ModelId, b: ModelId) -> CoA
         system: llc.min(dram),
         best_partition,
     }
+}
+
+/// Algorithm-1 step A generalized to N tenants: the LLC split (at least
+/// one way per tenant) maximizing the mean per-model QPS normalized by
+/// each model's whole-LLC QPS, at the group's even-split worker counts.
+/// For two tenants this reproduces `CoAff::best_partition`; group
+/// evaluation uses it for larger placements.
+pub fn best_group_partition(store: &ProfileStore, models: &[ModelId]) -> Vec<usize> {
+    let node = &store.node;
+    let n = models.len();
+    assert!(n >= 1 && n <= node.llc_ways, "one way per tenant required");
+    if n == 1 {
+        return vec![node.llc_ways];
+    }
+    let share = (node.cores / n).max(1);
+    let w: Vec<usize> = models
+        .iter()
+        .map(|&m| share.min(store.profile(m).max_workers).max(1))
+        .collect();
+    let q_full: Vec<f64> = models
+        .iter()
+        .zip(&w)
+        .map(|(&m, &wi)| store.qps(m, wi, node.llc_ways))
+        .collect();
+    // Even-split fallback (remainder ways to the first tenants).
+    let mut best: Vec<usize> = (0..n)
+        .map(|i| (node.llc_ways / n + usize::from(i < node.llc_ways % n)).max(1))
+        .collect();
+    let mut best_score = -1.0;
+    for_each_ways_split(node.llc_ways, n, &mut |ks| {
+        let mut score = 0.0;
+        for (i, &m) in models.iter().enumerate() {
+            if q_full[i] > 0.0 {
+                score += store.qps(m, w[i], ks[i]) / q_full[i];
+            }
+        }
+        score /= n as f64;
+        if score > best_score {
+            best_score = score;
+            best = ks.to_vec();
+        }
+    });
+    best
 }
 
 /// The offline pairwise affinity table (Fig. 10a), indexed by model ids.
@@ -190,6 +233,24 @@ mod tests {
         let c = co_location_affinity(&STORE, id("ncf"), id("dlrm_d"));
         let (a, b) = c.best_partition;
         assert!(a >= 1 && b >= 1 && a + b == STORE.node.llc_ways);
+    }
+
+    #[test]
+    fn group_partition_reduces_to_pair_partition() {
+        for (a, b) in [("ncf", "dlrm_d"), ("din", "dlrm_b"), ("wnd", "dien")] {
+            let pair = co_location_affinity(&STORE, id(a), id(b)).best_partition;
+            let group = best_group_partition(&STORE, &[id(a), id(b)]);
+            assert_eq!(group, vec![pair.0, pair.1], "{a}+{b}");
+        }
+    }
+
+    #[test]
+    fn group_partition_valid_for_triples() {
+        let ks = best_group_partition(&STORE, &[id("ncf"), id("wnd"), id("din")]);
+        assert_eq!(ks.len(), 3);
+        assert_eq!(ks.iter().sum::<usize>(), STORE.node.llc_ways);
+        assert!(ks.iter().all(|&k| k >= 1));
+        assert_eq!(best_group_partition(&STORE, &[id("ncf")]), vec![11]);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Algorithm 2 — Hera's cluster-level scheduling.
+//! Algorithm 2 — Hera's cluster-level scheduling, rebuilt on the
+//! N-tenant allocation API.
 //!
 //! Step A: for every *low* worker-scalability model, allocate co-located
 //! servers until its target QPS is met, choosing the *high*-scalability
@@ -6,49 +7,24 @@
 //! Step B: remaining high-scalability models get dedicated servers with
 //! maximum workers.
 //!
-//! The same machinery (pair evaluation, plan accounting) is reused by the
+//! Server evaluation goes through one entry point, [`evaluate_group`]:
+//! any number of tenants, one [`ResidencyPolicy`], one coupled-analytic
+//! proportional-scaling bisection.  Two-tenant groups reproduce the
+//! pre-redesign `evaluate_pair` / `evaluate_pair_cached` numbers exactly
+//! (`tests/parity_group.rs`).  The same machinery is reused by the
 //! baseline selection policies in `crate::baselines`.
 
+use crate::alloc::{Placement, ResidencyMode, ResidencyPolicy, ResourceVector, TenantAlloc};
 use crate::config::{ModelId, NodeConfig, N_MODELS};
 use crate::profiler::ProfileStore;
 use crate::server_sim::analytic::{solve, AnalyticTenant};
 
-use super::affinity::AffinityMatrix;
-
-/// One allocated server in a cluster plan.
-#[derive(Debug, Clone)]
-pub enum ServerAssignment {
-    /// Dedicated server: one model, max workers, whole LLC.
-    Solo { model: ModelId, workers: usize, qps: f64 },
-    /// Co-located pair with its node allocation and sustained QPS.
-    Pair {
-        a: ModelId,
-        b: ModelId,
-        workers: (usize, usize),
-        ways: (usize, usize),
-        qps: (f64, f64),
-        /// Per-worker hot-tier bytes when the pair is deployed cache-aware
-        /// (`None` = both models fully resident).
-        cache: Option<(f64, f64)>,
-    },
-}
-
-impl ServerAssignment {
-    /// QPS this server contributes to `m`.
-    pub fn qps_for(&self, m: ModelId) -> f64 {
-        match self {
-            ServerAssignment::Solo { model, qps, .. } if *model == m => *qps,
-            ServerAssignment::Pair { a, qps, .. } if *a == m => qps.0,
-            ServerAssignment::Pair { b, qps, .. } if *b == m => qps.1,
-            _ => 0.0,
-        }
-    }
-}
+use super::affinity::{best_group_partition, AffinityMatrix};
 
 /// The scheduler's output: server list + per-model serviced QPS.
 #[derive(Debug, Clone)]
 pub struct ClusterPlan {
-    pub servers: Vec<ServerAssignment>,
+    pub servers: Vec<Placement>,
     pub serviced: [f64; N_MODELS],
 }
 
@@ -65,165 +41,147 @@ impl ClusterPlan {
     }
 }
 
-/// Co-location evaluation: node allocation + sustained QPS for a pair.
+/// Co-location evaluation for an arbitrary tenant group.
 ///
-/// Initialization follows §VI-C: cores split evenly; if one model's OOM
-/// wall prevents it from using its half, the other model takes the idle
-/// cores.  Ways come from the Algorithm-1 best partition.  The pair's
-/// sustained QPS is the largest proportional scaling of the two models'
-/// standalone allocations that keeps *both* SLAs feasible.
-pub fn evaluate_pair(
+/// Initialization follows §VI-C, generalized from pairs: cores split
+/// evenly across the group; if one model's OOM wall prevents it from
+/// using its share, the others take the idle cores.  Ways come from the
+/// Algorithm-1 best partition (the pairwise matrix for two tenants,
+/// [`best_group_partition`] beyond).  The group's sustained QPS is the
+/// largest proportional scaling of the members' standalone rates that
+/// keeps *every* SLA feasible under the coupled analytic model.
+///
+/// `policy` selects the residency mode and DRAM accounting:
+/// [`ResidencyPolicy::Optimistic`] reproduces the seed's full-residency
+/// path (no joint-DRAM check), [`ResidencyPolicy::Strict`] shrinks
+/// workers until the group jointly fits node DRAM, and
+/// [`ResidencyPolicy::Cached`] deploys min-cache-for-SLA hot tiers with
+/// the joint fit enforced (the old `evaluate_pair_cached`).
+pub fn evaluate_group(
     store: &ProfileStore,
     matrix: &AffinityMatrix,
-    a: ModelId,
-    b: ModelId,
-) -> ServerAssignment {
+    models: &[ModelId],
+    policy: ResidencyPolicy,
+) -> Placement {
     let node = &store.node;
-    let (wa, wb) = split_cores(store, a, b);
-    let (ka, kb) = matrix.get(a, b).best_partition;
+    assert!(!models.is_empty(), "a group needs at least one tenant");
+    assert!(
+        models.len() <= crate::server_sim::MAX_TENANTS,
+        "at most {} tenants per node",
+        crate::server_sim::MAX_TENANTS
+    );
+    if models.len() == 1 {
+        // A group of one is a dedicated server; under `Cached` it still
+        // honors the policy (hot tier instead of full residency).
+        return match policy {
+            ResidencyPolicy::Cached => evaluate_solo_cached(store, models[0]),
+            _ => evaluate_solo(store, models[0]),
+        };
+    }
+    let n = models.len();
 
-    let qa0 = store.qps(a, wa, ka);
-    let qb0 = store.qps(b, wb, kb);
+    // Residency + per-worker DRAM footprint per tenant.
+    let residency: Vec<ResidencyMode> = models
+        .iter()
+        .map(|&m| match policy {
+            ResidencyPolicy::Cached => ResidencyMode::Cached(store.min_cache_for_sla(m)),
+            _ => ResidencyMode::Full,
+        })
+        .collect();
 
-    // Proportional joint scaling, validated with the coupled analytic model.
-    let feasible = |s: f64| -> bool {
-        let tenants = [
-            AnalyticTenant {
-                model: a,
-                workers: wa,
-                ways: ka,
-                arrival_qps: s * qa0,
-                cache_bytes: None,
-            },
-            AnalyticTenant {
-                model: b,
-                workers: wb,
-                ways: kb,
-                arrival_qps: s * qb0,
-                cache_bytes: None,
-            },
-        ];
-        solve(node, &tenants).tenants.iter().all(|t| t.feasible)
+    // Worker caps: the profiled OOM wall at full residency; behind a hot
+    // tier the wall moves to the cache-aware footprint.
+    let caps: Vec<usize> = models
+        .iter()
+        .zip(&residency)
+        .map(|(&m, r)| match r {
+            ResidencyMode::Full => store.profile(m).max_workers,
+            ResidencyMode::Cached(_) => node.capacity_limit(r.worker_bytes(m)),
+        })
+        .collect();
+    let mut workers: Vec<usize> = if n == 2 {
+        let (wa, wb) = split_cores_with_caps(node.cores, caps[0], caps[1]);
+        vec![wa, wb]
+    } else {
+        split_cores_n(node.cores, &caps)
     };
-    let mut lo = 0.0;
-    let mut hi = 1.0;
-    if qa0 > 0.0 || qb0 > 0.0 {
-        for _ in 0..12 {
-            let mid = 0.5 * (lo + hi);
-            if feasible(mid) {
-                lo = mid;
-            } else {
-                hi = mid;
+
+    // Joint-DRAM enforcement (Strict + Cached): shrink the widest tenant
+    // until the whole group fits node DRAM.
+    if policy != ResidencyPolicy::Optimistic {
+        let fits = |w: &[usize]| -> bool {
+            let bytes: f64 = w
+                .iter()
+                .zip(models)
+                .zip(&residency)
+                .map(|((&wi, &m), r)| wi as f64 * r.worker_bytes(m))
+                .sum();
+            bytes <= node.dram_capacity_gb * 1e9
+        };
+        while !fits(&workers) {
+            // Widest tenant with spare workers loses one (ties: lowest
+            // index — matches the pre-redesign pair shrink order).
+            let mut widest: Option<usize> = None;
+            for i in 0..n {
+                if workers[i] > 1 && widest.map_or(true, |j| workers[i] > workers[j]) {
+                    widest = Some(i);
+                }
+            }
+            match widest {
+                Some(i) => workers[i] -= 1,
+                None => break, // every tenant at one worker: give up
             }
         }
     }
-    ServerAssignment::Pair {
-        a,
-        b,
-        workers: (wa, wb),
-        ways: (ka, kb),
-        qps: (lo * qa0, lo * qb0),
-        cache: None,
-    }
-}
 
-/// Combined-DRAM feasibility of a pair at full embedding residency: every
-/// worker carries its model's whole tables, so big-table pairs can exceed
-/// node DRAM even when each model fits alone.  Note this check is
-/// advisory: the full-residency scheduling path (`evaluate_pair`) keeps
-/// the seed's optimistic behavior for paper parity, and only the
-/// cache-aware path (`evaluate_pair_cached`) enforces joint fit — see
-/// ROADMAP "embedcache follow-ons".
-pub fn pair_fits_dram(
-    store: &ProfileStore,
-    a: ModelId,
-    wa: usize,
-    b: ModelId,
-    wb: usize,
-) -> bool {
-    let bytes = wa as f64 * a.spec().worker_bytes() + wb as f64 * b.spec().worker_bytes();
-    bytes <= store.node.dram_capacity_gb * 1e9
-}
-
-/// Same check with `embedcache`-aware footprints: each worker needs only
-/// its model's min-cache-for-SLA hot tier plus FC weights.
-pub fn pair_fits_dram_cached(
-    store: &ProfileStore,
-    a: ModelId,
-    wa: usize,
-    b: ModelId,
-    wb: usize,
-) -> bool {
-    let bytes =
-        wa as f64 * store.cache_worker_bytes(a) + wb as f64 * store.cache_worker_bytes(b);
-    bytes <= store.node.dram_capacity_gb * 1e9
-}
-
-/// Cache-aware pair evaluation: workers are capped by the *cache-aware*
-/// DRAM footprint (min-cache-for-SLA instead of full `emb_gb`), and the
-/// joint QPS scaling runs with each tenant's hit-curve-adjusted service
-/// profile.  This is how the scheduler co-locates pairs the full-residency
-/// footprint check rejects.
-pub fn evaluate_pair_cached(
-    store: &ProfileStore,
-    matrix: &AffinityMatrix,
-    a: ModelId,
-    b: ModelId,
-) -> ServerAssignment {
-    let node = &store.node;
-    let cache_a = store.min_cache_for_sla(a);
-    let cache_b = store.min_cache_for_sla(b);
-    // The OOM wall moves: cache-aware workers are DRAM-limited by their
-    // hot tier, not the full tables (even split with idle-core donation,
-    // as in `split_cores`).
-    let bytes_a = cache_a + a.spec().fc_bytes();
-    let bytes_b = cache_b + b.spec().fc_bytes();
-    let cap_a = node.capacity_limit(bytes_a);
-    let cap_b = node.capacity_limit(bytes_b);
-    let (mut wa, mut wb) = split_cores_with_caps(node.cores, cap_a, cap_b);
-    // Shrink the larger side until the pair jointly fits.
-    let fits = |wa: usize, wb: usize| -> bool {
-        wa as f64 * bytes_a + wb as f64 * bytes_b <= node.dram_capacity_gb * 1e9
+    // LLC partition: the pairwise Algorithm-1 matrix for two tenants,
+    // the N-ary generalization beyond.
+    let ways: Vec<usize> = if n == 2 {
+        let (ka, kb) = matrix.get(models[0], models[1]).best_partition;
+        vec![ka, kb]
+    } else {
+        best_group_partition(store, models)
     };
-    while !fits(wa, wb) && wa + wb > 2 {
-        if wa >= wb && wa > 1 {
-            wa -= 1;
-        } else if wb > 1 {
-            wb -= 1;
-        }
-    }
-    let (ka, kb) = matrix.get(a, b).best_partition;
 
-    // Standalone sustainable rates come from the cache-aware analytic
-    // oracle — the profiled table's OOM zeros do not apply behind a hot
-    // tier.
+    // Standalone sustainable rates.  Full residency reads the profiled
+    // table; cached tenants use the cache-aware analytic oracle — the
+    // table's OOM zeros do not apply behind a hot tier.
     let opts = crate::server_sim::MaxLoadOpts::default();
-    let qa0 =
-        crate::server_sim::max_load_analytic_cached(node, a, wa, ka, Some(cache_a), &opts);
-    let qb0 =
-        crate::server_sim::max_load_analytic_cached(node, b, wb, kb, Some(cache_b), &opts);
+    let q0: Vec<f64> = models
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| match residency[i] {
+            ResidencyMode::Full => store.qps(m, workers[i], ways[i]),
+            ResidencyMode::Cached(b) => crate::server_sim::max_load_analytic_cached(
+                node,
+                m,
+                workers[i],
+                ways[i],
+                Some(b),
+                &opts,
+            ),
+        })
+        .collect();
+
+    // Proportional joint scaling, validated with the coupled analytic
+    // model over all N tenants.
     let feasible = |s: f64| -> bool {
-        let tenants = [
-            AnalyticTenant {
-                model: a,
-                workers: wa,
-                ways: ka,
-                arrival_qps: s * qa0,
-                cache_bytes: Some(cache_a),
-            },
-            AnalyticTenant {
-                model: b,
-                workers: wb,
-                ways: kb,
-                arrival_qps: s * qb0,
-                cache_bytes: Some(cache_b),
-            },
-        ];
+        let tenants: Vec<AnalyticTenant> = models
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| AnalyticTenant {
+                model: m,
+                workers: workers[i],
+                ways: ways[i],
+                arrival_qps: s * q0[i],
+                cache_bytes: residency[i].cache_bytes(),
+            })
+            .collect();
         solve(node, &tenants).tenants.iter().all(|t| t.feasible)
     };
     let mut lo = 0.0;
     let mut hi = 1.0;
-    if qa0 > 0.0 || qb0 > 0.0 {
+    if q0.iter().any(|&q| q > 0.0) {
         for _ in 0..12 {
             let mid = 0.5 * (lo + hi);
             if feasible(mid) {
@@ -233,13 +191,21 @@ pub fn evaluate_pair_cached(
             }
         }
     }
-    ServerAssignment::Pair {
-        a,
-        b,
-        workers: (wa, wb),
-        ways: (ka, kb),
-        qps: (lo * qa0, lo * qb0),
-        cache: Some((cache_a, cache_b)),
+
+    Placement {
+        tenants: models
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| TenantAlloc {
+                model: m,
+                rv: ResourceVector {
+                    workers: workers[i],
+                    ways: ways[i],
+                    residency: residency[i],
+                },
+                qps: lo * q0[i],
+            })
+            .collect(),
     }
 }
 
@@ -264,14 +230,66 @@ pub fn split_cores_with_caps(cores: usize, cap_a: usize, cap_b: usize) -> (usize
     (wa, wb)
 }
 
+/// [`split_cores_with_caps`] generalized to N tenants: even shares capped
+/// by each tenant's OOM wall, leftovers donated (later tenants first,
+/// matching the two-tenant donation order) until no tenant can absorb
+/// more.
+pub fn split_cores_n(cores: usize, caps: &[usize]) -> Vec<usize> {
+    let n = caps.len().max(1);
+    let share = cores / n;
+    let mut w: Vec<usize> = caps.iter().map(|&c| share.min(c).max(1)).collect();
+    loop {
+        let total: usize = w.iter().sum();
+        if total >= cores {
+            break;
+        }
+        let mut leftover = cores - total;
+        let mut progressed = false;
+        for i in (0..w.len()).rev() {
+            if leftover == 0 {
+                break;
+            }
+            let take = caps[i].saturating_sub(w[i]).min(leftover);
+            if take > 0 {
+                w[i] += take;
+                leftover -= take;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    w
+}
+
 /// Dedicated-server assignment (Algorithm 2 step B / DeepRecSys).
-pub fn evaluate_solo(store: &ProfileStore, m: ModelId) -> ServerAssignment {
+pub fn evaluate_solo(store: &ProfileStore, m: ModelId) -> Placement {
     let p = store.profile(m);
     let workers = p.max_workers.min(store.node.cores).max(1);
-    ServerAssignment::Solo {
-        model: m,
+    Placement::solo(m, workers, store.node.llc_ways, p.max_load())
+}
+
+/// Dedicated cache-aware server: one model behind its min-cache-for-SLA
+/// hot tier with the whole LLC — the worker count is limited by the
+/// cache-aware footprint instead of the full tables, which matters for
+/// big-table models on small-DRAM nodes.
+pub fn evaluate_solo_cached(store: &ProfileStore, m: ModelId) -> Placement {
+    let node = &store.node;
+    let residency = ResidencyMode::Cached(store.min_cache_for_sla(m));
+    let workers = node
+        .capacity_limit(residency.worker_bytes(m))
+        .min(node.cores)
+        .max(1);
+    let rv = ResourceVector {
         workers,
-        qps: p.max_load(),
+        ways: node.llc_ways,
+        residency,
+    };
+    let opts = crate::server_sim::MaxLoadOpts::default();
+    let qps = crate::server_sim::max_load_analytic_alloc(node, m, &rv, &opts);
+    Placement {
+        tenants: vec![TenantAlloc { model: m, rv, qps }],
     }
 }
 
@@ -281,9 +299,10 @@ pub struct ClusterScheduler<'a> {
     pub matrix: &'a AffinityMatrix,
     /// Safety valve against unreachable targets.
     pub max_servers: usize,
-    /// Deploy pairs through `embedcache` hot tiers (min-cache-for-SLA
-    /// footprints) instead of fully-resident tables.
-    pub cache_aware: bool,
+    /// Residency/DRAM policy for co-located groups: optimistic full
+    /// residency (seed parity, default), strict joint-DRAM full
+    /// residency, or `embedcache` hot tiers.
+    pub residency: ResidencyPolicy,
 }
 
 impl<'a> ClusterScheduler<'a> {
@@ -292,13 +311,13 @@ impl<'a> ClusterScheduler<'a> {
             store,
             matrix,
             max_servers: 100_000,
-            cache_aware: false,
+            residency: ResidencyPolicy::Optimistic,
         }
     }
 
-    /// Toggle cache-aware pair deployment.
-    pub fn with_cache_aware(mut self, on: bool) -> Self {
-        self.cache_aware = on;
+    /// Select the residency/DRAM policy for co-located groups.
+    pub fn with_residency(mut self, policy: ResidencyPolicy) -> Self {
+        self.residency = policy;
         self
     }
 
@@ -309,9 +328,9 @@ impl<'a> ClusterScheduler<'a> {
             servers: Vec::new(),
             serviced: [0.0; N_MODELS],
         };
-        // evaluate_pair_cached runs several analytic bisections per call
-        // and is deterministic per pair — memoize it across the loop.
-        let mut pair_cache: std::collections::HashMap<(ModelId, ModelId), ServerAssignment> =
+        // evaluate_group runs several analytic bisections per call and is
+        // deterministic per (group, policy) — memoize it across the loop.
+        let mut pair_cache: std::collections::HashMap<(ModelId, ModelId), Placement> =
             std::collections::HashMap::new();
 
         // Step A: low-scalability models first, best-affinity partners.
@@ -342,20 +361,13 @@ impl<'a> ClusterScheduler<'a> {
                     .matrix
                     .best_partner(mi, &needy)
                     .ok_or_else(|| anyhow::anyhow!("no partner for {mi}"))?;
-                let server = if self.cache_aware {
-                    pair_cache
-                        .entry((mi, mj))
-                        .or_insert_with(|| {
-                            evaluate_pair_cached(self.store, self.matrix, mi, mj)
-                        })
-                        .clone()
-                } else {
-                    evaluate_pair(self.store, self.matrix, mi, mj)
-                };
-                let (qi, qj) = match &server {
-                    ServerAssignment::Pair { qps, .. } => *qps,
-                    _ => unreachable!(),
-                };
+                let server = pair_cache
+                    .entry((mi, mj))
+                    .or_insert_with(|| {
+                        evaluate_group(self.store, self.matrix, &[mi, mj], self.residency)
+                    })
+                    .clone();
+                let (qi, qj) = (server.qps_for(mi), server.qps_for(mj));
                 anyhow::ensure!(qi > 0.0, "pair ({mi},{mj}) cannot serve {mi}");
                 plan.serviced[mi.index()] += qi;
                 plan.serviced[mj.index()] += qj;
@@ -431,14 +443,37 @@ mod tests {
     }
 
     #[test]
-    fn pair_evaluation_produces_positive_qps() {
-        let s = evaluate_pair(&STORE, &MATRIX, id("dlrm_d"), id("ncf"));
-        if let ServerAssignment::Pair { qps, ways, .. } = &s {
-            assert!(qps.0 > 0.0 && qps.1 > 0.0);
-            assert_eq!(ways.0 + ways.1, STORE.node.llc_ways);
-        } else {
-            panic!("expected pair");
+    fn split_cores_n_matches_pair_split() {
+        for caps in [(8, 16), (16, 8), (4, 16), (16, 4), (16, 16), (1, 1), (3, 3)] {
+            let (wa, wb) = split_cores_with_caps(16, caps.0, caps.1);
+            assert_eq!(
+                split_cores_n(16, &[caps.0, caps.1]),
+                vec![wa, wb],
+                "caps {caps:?}"
+            );
         }
+        // Three-way split: even shares, donation (later tenants first) to
+        // whoever still has cap headroom.
+        assert_eq!(split_cores_n(16, &[16, 16, 16]), vec![5, 5, 6]);
+        assert_eq!(split_cores_n(16, &[2, 16, 16]), vec![2, 5, 9]);
+        let w = split_cores_n(16, &[8, 8, 8]);
+        assert_eq!(w.iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn pair_evaluation_produces_positive_qps() {
+        let s = evaluate_group(
+            &STORE,
+            &MATRIX,
+            &[id("dlrm_d"), id("ncf")],
+            ResidencyPolicy::Optimistic,
+        );
+        assert_eq!(s.tenants.len(), 2);
+        assert!(s.tenants[0].qps > 0.0 && s.tenants[1].qps > 0.0);
+        assert_eq!(
+            s.tenants[0].rv.ways + s.tenants[1].rv.ways,
+            STORE.node.llc_ways
+        );
     }
 
     #[test]
@@ -457,10 +492,10 @@ mod tests {
         let plan = ClusterScheduler::new(&STORE, &MATRIX)
             .schedule(&targets)
             .unwrap();
-        let has_pair_with_b = plan.servers.iter().any(|s| {
-            matches!(s, ServerAssignment::Pair { a, b, .. }
-                if *a == id("dlrm_b") || *b == id("dlrm_b"))
-        });
+        let has_pair_with_b = plan
+            .servers
+            .iter()
+            .any(|s| s.is_colocated() && s.get(id("dlrm_b")).is_some());
         assert!(has_pair_with_b, "DLRM(B) must be deployed co-located");
     }
 
@@ -472,45 +507,96 @@ mod tests {
         // acceptance scenario for the embedcache subsystem.
         let a = id("dlrm_b");
         let b = id("dlrm_d");
-        let (wa, wb) = split_cores(&STORE, a, b);
+        let full = evaluate_group(&STORE, &MATRIX, &[a, b], ResidencyPolicy::Optimistic);
         assert!(
-            !pair_fits_dram(&STORE, a, wa, b, wb),
-            "full residency must reject {wa}x{a} + {wb}x{b}"
+            !full.fits_node(&STORE.node),
+            "full residency must reject {full}"
         );
-        let server = evaluate_pair_cached(&STORE, &MATRIX, a, b);
-        match &server {
-            ServerAssignment::Pair { workers, qps, cache, .. } => {
-                assert!(
-                    pair_fits_dram_cached(&STORE, a, workers.0, b, workers.1),
-                    "cache-aware allocation must fit DRAM"
-                );
-                assert!(
-                    qps.0 > 0.0 && qps.1 > 0.0,
-                    "both tenants must serve traffic: {qps:?}"
-                );
-                let (ca, cb) = cache.expect("cache-aware pair records its tiers");
-                assert!(ca < a.spec().emb_gb * 1e9 && cb < b.spec().emb_gb * 1e9);
-            }
-            other => panic!("expected a pair, got {other:?}"),
+        let server = evaluate_group(&STORE, &MATRIX, &[a, b], ResidencyPolicy::Cached);
+        assert!(
+            server.fits_node(&STORE.node),
+            "cache-aware allocation must fit DRAM: {server}"
+        );
+        for t in &server.tenants {
+            assert!(t.qps > 0.0, "both tenants must serve traffic: {server}");
+            let cache = t.rv.cache_bytes().expect("cache-aware pair records tiers");
+            assert!(cache < t.model.spec().emb_gb * 1e9);
         }
+    }
+
+    #[test]
+    fn strict_policy_shrinks_oversubscribed_pairs_to_fit() {
+        // The same DLRM(B)+DLRM(D) pair under Strict keeps full residency
+        // but sheds workers until the joint footprint fits the node.
+        let a = id("dlrm_b");
+        let b = id("dlrm_d");
+        let strict = evaluate_group(&STORE, &MATRIX, &[a, b], ResidencyPolicy::Strict);
+        assert!(strict.fits_node(&STORE.node), "strict must fit: {strict}");
+        let optimistic =
+            evaluate_group(&STORE, &MATRIX, &[a, b], ResidencyPolicy::Optimistic);
+        assert!(
+            strict.total().workers < optimistic.total().workers,
+            "strict sheds workers: {strict} vs {optimistic}"
+        );
+        // A pair that already fits is untouched by Strict.
+        let small = [id("ncf"), id("din")];
+        let s = evaluate_group(&STORE, &MATRIX, &small, ResidencyPolicy::Strict);
+        let o = evaluate_group(&STORE, &MATRIX, &small, ResidencyPolicy::Optimistic);
+        assert_eq!(s, o, "fitting pairs are identical under Strict");
     }
 
     #[test]
     fn cache_aware_scheduler_still_meets_targets() {
         let targets = scaled_targets(&STORE, 1.0);
         let plan = ClusterScheduler::new(&STORE, &MATRIX)
-            .with_cache_aware(true)
+            .with_residency(ResidencyPolicy::Cached)
             .schedule(&targets)
             .unwrap();
         assert!(plan.meets(&targets));
-        // At least one deployed pair carries hot-tier allocations.
+        // At least one deployed group carries hot-tier allocations.
         assert!(
-            plan.servers.iter().any(|s| matches!(
-                s,
-                ServerAssignment::Pair { cache: Some(_), .. }
-            )),
-            "cache-aware plans must deploy cached pairs"
+            plan.servers
+                .iter()
+                .any(|s| s.tenants.iter().any(|t| t.rv.cache_bytes().is_some())),
+            "cache-aware plans must deploy cached tenants"
         );
+    }
+
+    #[test]
+    fn triple_group_is_feasible_and_conserves_resources() {
+        let trio = [id("ncf"), id("wnd"), id("din")];
+        let p = evaluate_group(&STORE, &MATRIX, &trio, ResidencyPolicy::Optimistic);
+        assert_eq!(p.tenants.len(), 3);
+        let total = p.total();
+        assert!(total.workers <= STORE.node.cores, "{p}");
+        assert_eq!(total.ways, STORE.node.llc_ways, "{p}");
+        assert!(p.fits_node(&STORE.node), "{p}");
+        for t in &p.tenants {
+            assert!(t.qps > 0.0, "all three must serve traffic: {p}");
+        }
+        assert!(p.sla_feasible(&STORE), "recorded QPS must be SLA-safe: {p}");
+    }
+
+    #[test]
+    fn singleton_group_honors_the_cached_policy() {
+        // A group of one under `Cached` deploys behind a hot tier — no
+        // pair/solo asymmetry: the placement must be cache-labeled,
+        // DRAM-feasible and serving.
+        let p = evaluate_group(&STORE, &MATRIX, &[id("dlrm_b")], ResidencyPolicy::Cached);
+        assert_eq!(p.tenants.len(), 1);
+        let t = &p.tenants[0];
+        assert!(t.rv.cache_bytes().is_some(), "{p}");
+        assert!(p.fits_node(&STORE.node), "{p}");
+        assert!(t.qps > 0.0, "{p}");
+        assert!(
+            p.dram_bytes()
+                < evaluate_group(&STORE, &MATRIX, &[id("dlrm_b")], ResidencyPolicy::Strict)
+                    .dram_bytes(),
+            "hot tier must shrink the footprint: {p}"
+        );
+        // Optimistic / Strict singletons stay fully resident.
+        let o = evaluate_group(&STORE, &MATRIX, &[id("dlrm_b")], ResidencyPolicy::Optimistic);
+        assert_eq!(o.tenants[0].rv.cache_bytes(), None);
     }
 
     #[test]
@@ -528,8 +614,7 @@ mod tests {
             .schedule(&targets)
             .unwrap();
         for m in ModelId::all() {
-            let from_servers: f64 =
-                plan.servers.iter().map(|s| s.qps_for(m)).sum();
+            let from_servers: f64 = plan.servers.iter().map(|s| s.qps_for(m)).sum();
             assert!(
                 (from_servers - plan.serviced[m.index()]).abs() < 1e-6,
                 "{m}: {from_servers} vs {}",

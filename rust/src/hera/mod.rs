@@ -3,18 +3,23 @@
 //! * [`affinity`] — **Algorithm 1**: the analytical co-location affinity
 //!   model (CoAff_LLC from the profiled LLC-sensitivity tables,
 //!   CoAff_DRAM from profiled bandwidth demands, system affinity =
-//!   min of the two) and the full pairwise matrix of Fig. 10(a).
+//!   min of the two), the full pairwise matrix of Fig. 10(a), and the
+//!   N-ary LLC partition chooser behind group placements.
 //! * [`cluster`] — **Algorithm 2**: the cluster-level model selection /
 //!   server allocation scheduler (low-scalability models first, paired
-//!   with their highest-affinity high-scalability partner).
+//!   with their highest-affinity high-scalability partner), built on the
+//!   N-tenant [`evaluate_group`] evaluator and [`Placement`] /
+//!   [`ResourceVector`] allocation types (see [`crate::alloc`]).
 //! * [`rmu`] — **Algorithm 3**: the node-level resource management unit —
 //!   the monitor-and-adjust feedback loop with urgency-scaled worker
-//!   provisioning and lookup-table LLC repartitioning.
+//!   provisioning, N-ary lookup-table LLC repartitioning and the
+//!   `embedcache` hot-tier knob.
 
 pub mod affinity;
 pub mod cluster;
 pub mod rmu;
 
-pub use affinity::{AffinityMatrix, CoAff};
-pub use cluster::{ClusterPlan, ClusterScheduler, ServerAssignment};
+pub use crate::alloc::{Placement, ResidencyMode, ResidencyPolicy, ResourceVector, TenantAlloc};
+pub use affinity::{best_group_partition, AffinityMatrix, CoAff};
+pub use cluster::{evaluate_group, ClusterPlan, ClusterScheduler};
 pub use rmu::HeraRmu;

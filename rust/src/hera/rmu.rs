@@ -1,4 +1,5 @@
-//! Algorithm 3 — Hera's node-level resource management unit (RMU).
+//! Algorithm 3 — Hera's node-level resource management unit (RMU),
+//! operating on tenant slices and [`ResourceVector`]s.
 //!
 //! Every T_monitor the RMU reads each co-located model's tail latency,
 //! QPS and arrival rate, computes the SLA slack, and when a model is
@@ -8,10 +9,12 @@
 //!   `urgency x observed traffic` in the profiled scalability table
 //!   (urgency = tail/SLA when violating, else 1 — the paper's mechanism
 //!   for absorbing sudden load spikes);
-//! * `adjust_LLC_partition` — re-evaluates every CAT split against the
-//!   3-D QPS[model][workers][ways] table and applies the argmax;
-//! * `adjust_cache_partition` — the third knob: when both co-located
-//!   tenants serve embeddings through an `embedcache` hot tier, the
+//! * `adjust_LLC_partition` — re-evaluates every CAT split of the node's
+//!   ways across *all* tenants against the 3-D QPS[model][workers][ways]
+//!   table and applies the argmax (the paper partitions pairs; the
+//!   N-ary search covers larger groups);
+//! * `adjust_cache_partition` — the third knob: when every co-located
+//!   tenant serves embeddings through an `embedcache` hot tier, the
 //!   combined DRAM cache budget is re-split on a quantized grid, arg-
 //!   maxing aggregate QPS after scaling each tenant's table entry by its
 //!   hit-curve-derived cache factor (`ProfileStore::cache_qps_factor`).
@@ -20,8 +23,9 @@
 //! discrete-event simulation (and mirrors how the real coordinator calls
 //! it between batches).
 
+use crate::alloc::{ResidencyMode, ResourceVector};
 use crate::config::ModelId;
-use crate::node::enumerate_partitions;
+use crate::node::for_each_ways_split;
 use crate::profiler::ProfileStore;
 use crate::server_sim::{AllocChange, Controller, TenantStats};
 
@@ -29,13 +33,15 @@ use crate::server_sim::{AllocChange, Controller, TenantStats};
 const SLACK_HIGH: f64 = 1.0;
 const SLACK_LOW: f64 = 0.8;
 
-/// Hera node-level RMU for a two-tenant (or single-tenant) node.
+/// Hera node-level RMU for an N-tenant node.
 pub struct HeraRmu<'a> {
     store: &'a ProfileStore,
     /// Headroom multiplier on observed traffic when sizing workers.
     headroom: f64,
-    /// History of (time, tenant, workers, ways) decisions (for Fig. 13/14).
-    pub decisions: Vec<(f64, usize, usize, usize)>,
+    /// History of (time, tenant, applied allocation) decisions — all
+    /// three knobs, including the hot-tier bytes (for Fig. 13/14-style
+    /// traces).
+    pub decisions: Vec<(f64, usize, ResourceVector)>,
 }
 
 impl<'a> HeraRmu<'a> {
@@ -67,61 +73,86 @@ impl<'a> HeraRmu<'a> {
     }
 
     /// `adjust_cache_partition` — the cache knob: split the combined hot-
-    /// tier budget between two cached tenants, arg-maxing aggregate QPS
-    /// with each side's table entry scaled by its hit-curve cache factor.
-    /// Returns `None` when either tenant is fully resident (nothing to
-    /// trade) or the budget is too small to split.
+    /// tier budget across the cached tenant slice, arg-maxing aggregate
+    /// QPS with each tenant's table entry scaled by its hit-curve cache
+    /// factor.  `tenants` carries the candidate workers/ways and the
+    /// *current* hot tier in its residency; returns `None` when any
+    /// tenant is fully resident (nothing to trade) or the budget is too
+    /// small to split.
     fn adjust_cache_partition(
         &self,
-        a: (ModelId, usize, usize),
-        b: (ModelId, usize, usize),
-        cache_a: Option<f64>,
-        cache_b: Option<f64>,
-    ) -> Option<(f64, f64)> {
+        tenants: &[(ModelId, ResourceVector)],
+    ) -> Option<Vec<f64>> {
         const STEPS: usize = 8;
-        let (ca, cb) = (cache_a?, cache_b?);
-        let budget = ca + cb;
+        let n = tenants.len();
+        let current: Vec<f64> = tenants
+            .iter()
+            .map(|(_, rv)| rv.cache_bytes())
+            .collect::<Option<Vec<f64>>>()?;
+        let budget: f64 = current.iter().sum();
         let min = crate::embedcache::MIN_CACHE_BYTES;
-        if budget < 2.0 * min {
+        if n < 2 || n > STEPS || budget < n as f64 * min {
             return None;
         }
-        let pa = self.store.profile(a.0);
-        let pb = self.store.profile(b.0);
-        let score = |xa: f64, xb: f64| -> f64 {
-            pa.qps_at(a.1, a.2) * self.store.cache_qps_factor(a.0, xa)
-                + pb.qps_at(b.1, b.2) * self.store.cache_qps_factor(b.0, xb)
+        let score = |xs: &[f64]| -> f64 {
+            tenants
+                .iter()
+                .zip(xs)
+                .map(|(&(m, rv), &x)| {
+                    self.store.profile(m).qps_at(rv.workers, rv.ways)
+                        * self.store.cache_qps_factor(m, x)
+                })
+                .sum()
         };
         // The incumbent split competes too — a grid point must beat the
         // (possibly off-grid) current allocation to displace it.
-        let mut best = (ca, cb);
-        let mut best_qps = score(ca, cb);
-        for i in 1..STEPS {
-            let xa = (budget * i as f64 / STEPS as f64).clamp(min, budget - min);
-            let xb = budget - xa;
-            let q = score(xa, xb);
+        let mut best = current.clone();
+        let mut best_qps = score(&current);
+        for_each_ways_split(STEPS, n, &mut |shares| {
+            // Quantized split: the first n-1 tenants land on the grid
+            // (clamped to the minimum tier), the last takes the exact
+            // remainder so the budget is conserved.
+            let mut xs = vec![0.0; n];
+            let mut used = 0.0;
+            for i in 0..n - 1 {
+                xs[i] =
+                    (budget * shares[i] as f64 / STEPS as f64).clamp(min, budget - min);
+                used += xs[i];
+            }
+            xs[n - 1] = budget - used;
+            if xs[n - 1] < min {
+                return;
+            }
+            let q = score(&xs);
             if q > best_qps {
                 best_qps = q;
-                best = (xa, xb);
+                best = xs;
             }
-        }
+        });
         Some(best)
     }
 
     /// `adjust_LLC_partition` (Algorithm 3 line 28): argmax of aggregate
-    /// QPS over all CAT partitions at the *new* worker counts.
-    fn adjust_partition(&self, a: (ModelId, usize), b: (ModelId, usize)) -> (usize, usize) {
+    /// QPS over all CAT splits of the node's ways across the tenant
+    /// slice, at the *new* worker counts.
+    fn adjust_partition(&self, tenants: &[(ModelId, usize)]) -> Vec<usize> {
         let total = self.store.node.llc_ways;
-        let pa = self.store.profile(a.0);
-        let pb = self.store.profile(b.0);
-        let mut best = (total / 2, total - total / 2);
+        let n = tenants.len();
+        let mut best: Vec<usize> = (0..n)
+            .map(|i| (total / n + usize::from(i < total % n)).max(1))
+            .collect();
         let mut best_qps = -1.0;
-        for part in enumerate_partitions(total) {
-            let q = pa.qps_at(a.1, part.ways_a) + pb.qps_at(b.1, part.ways_b);
+        for_each_ways_split(total, n, &mut |ks| {
+            let q: f64 = tenants
+                .iter()
+                .zip(ks)
+                .map(|(&(m, w), &k)| self.store.profile(m).qps_at(w, k))
+                .sum();
             if q > best_qps {
                 best_qps = q;
-                best = (part.ways_a, part.ways_b);
+                best = ks.to_vec();
             }
-        }
+        });
         best
     }
 }
@@ -129,7 +160,7 @@ impl<'a> HeraRmu<'a> {
 impl Controller for HeraRmu<'_> {
     fn on_monitor(&mut self, now: f64, stats: &[TenantStats]) -> Vec<AllocChange> {
         // Compute desired workers per tenant where the slack band triggers.
-        let mut desired: Vec<usize> = stats.iter().map(|s| s.workers).collect();
+        let mut desired: Vec<usize> = stats.iter().map(|s| s.alloc.workers).collect();
         let mut any_change = false;
         let mut any_trigger = false;
         for (i, s) in stats.iter().enumerate() {
@@ -140,20 +171,20 @@ impl Controller for HeraRmu<'_> {
             let slack = s.window_p95_s / sla_s;
             if slack > SLACK_HIGH || slack < SLACK_LOW {
                 any_trigger = true;
-                let w = self.adjust_workers(s.model, s.ways, s);
-                if w != s.workers {
+                let w = self.adjust_workers(s.model, s.alloc.ways, s);
+                if w != s.alloc.workers {
                     desired[i] = w;
                     any_change = true;
                 }
             }
         }
-        // For a cached pair the hot tier is a knob of its own: a tenant
+        // For a cached group the hot tier is a knob of its own: a tenant
         // can sit at its worker argmax and still be fixable by moving
         // cache bytes, so an out-of-band window proceeds to the
         // re-partition stage even with no worker change.
-        let cached_pair =
-            stats.len() == 2 && stats.iter().all(|s| s.cache_bytes.is_some());
-        if !any_change && !(cached_pair && any_trigger) {
+        let cached_group = stats.len() >= 2
+            && stats.iter().all(|s| s.alloc.cache_bytes().is_some());
+        if !any_change && !(cached_group && any_trigger) {
             return Vec::new();
         }
 
@@ -177,59 +208,80 @@ impl Controller for HeraRmu<'_> {
             }
         }
 
-        // Re-partition the LLC for the new worker counts (two-tenant node).
+        // Re-partition the LLC (and, for cached groups, the hot-tier
+        // budget) across the whole tenant slice at the new worker counts.
         let mut changes = Vec::new();
-        if stats.len() == 2 {
-            let (ka, kb) = self.adjust_partition(
-                (stats[0].model, desired[0]),
-                (stats[1].model, desired[1]),
-            );
+        if stats.len() >= 2 {
+            let slice: Vec<(ModelId, usize)> = stats
+                .iter()
+                .zip(&desired)
+                .map(|(s, &w)| (s.model, w))
+                .collect();
+            // CAT needs at least one way per tenant; on a node with fewer
+            // ways than tenants, keep the current partition (the worker
+            // knob still applies, as before the N-ary generalization).
+            let ways: Vec<usize> = if stats.len() <= self.store.node.llc_ways {
+                self.adjust_partition(&slice)
+            } else {
+                stats.iter().map(|s| s.alloc.ways).collect()
+            };
             // Third knob: re-split the hot-tier DRAM budget for the new
-            // allocation when both tenants are cache-served.
-            let cache_split = self.adjust_cache_partition(
-                (stats[0].model, desired[0], ka),
-                (stats[1].model, desired[1], kb),
-                stats[0].cache_bytes,
-                stats[1].cache_bytes,
-            );
-            // A re-split is applied to BOTH tenants or neither — emitting
-            // one side would break hot-tier budget conservation.  Below 2%
-            // movement on both tiers it is churn, not a decision.
-            let cache_moved = match (cache_split, stats[0].cache_bytes, stats[1].cache_bytes)
-            {
-                (Some((xa, xb)), Some(oa), Some(ob)) => {
-                    (xa - oa).abs() > 0.02 * oa.max(1.0)
-                        || (xb - ob).abs() > 0.02 * ob.max(1.0)
-                }
-                _ => false,
+            // allocation when every tenant is cache-served.
+            let cache_split = if cached_group {
+                let cached_slice: Vec<(ModelId, ResourceVector)> = stats
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| {
+                        (
+                            s.model,
+                            ResourceVector {
+                                workers: desired[i],
+                                ways: ways[i],
+                                residency: s.alloc.residency,
+                            },
+                        )
+                    })
+                    .collect();
+                self.adjust_cache_partition(&cached_slice)
+            } else {
+                None
             };
-            let cache_of = |i: usize| -> Option<f64> {
-                if !cache_moved {
-                    return None;
-                }
-                cache_split.map(|(xa, xb)| if i == 0 { xa } else { xb })
+            // A re-split is applied to ALL tenants or none — emitting a
+            // subset would break hot-tier budget conservation.  Below 2%
+            // movement on every tier it is churn, not a decision.
+            let cache_moved = match &cache_split {
+                Some(xs) => stats.iter().zip(xs).any(|(s, &x)| {
+                    let cur = s.alloc.cache_bytes().unwrap_or(0.0);
+                    (x - cur).abs() > 0.02 * cur.max(1.0)
+                }),
+                None => false,
             };
-            for (i, (w, k)) in [(desired[0], ka), (desired[1], kb)].iter().enumerate() {
-                if *w != stats[i].workers || *k != stats[i].ways || cache_moved {
-                    self.decisions.push((now, i, *w, *k));
-                    changes.push(AllocChange {
-                        tenant: i,
-                        workers: *w,
-                        ways: *k,
-                        cache_bytes: cache_of(i),
-                    });
+            for (i, s) in stats.iter().enumerate() {
+                let (w, k) = (desired[i], ways[i]);
+                if w != s.alloc.workers || k != s.alloc.ways || cache_moved {
+                    let residency = match (&cache_split, cache_moved) {
+                        (Some(xs), true) => ResidencyMode::Cached(xs[i]),
+                        _ => s.alloc.residency,
+                    };
+                    let rv = ResourceVector {
+                        workers: w,
+                        ways: k,
+                        residency,
+                    };
+                    self.decisions.push((now, i, rv));
+                    changes.push(AllocChange { tenant: i, rv });
                 }
             }
         } else {
-            for (i, w) in desired.iter().enumerate() {
-                if *w != stats[i].workers {
-                    self.decisions.push((now, i, *w, stats[i].ways));
-                    changes.push(AllocChange {
-                        tenant: i,
-                        workers: *w,
-                        ways: stats[i].ways,
-                        cache_bytes: None,
-                    });
+            for (i, s) in stats.iter().enumerate() {
+                if desired[i] != s.alloc.workers {
+                    let rv = ResourceVector {
+                        workers: desired[i],
+                        ways: s.alloc.ways,
+                        residency: s.alloc.residency,
+                    };
+                    self.decisions.push((now, i, rv));
+                    changes.push(AllocChange { tenant: i, rv });
                 }
             }
         }
@@ -260,13 +312,11 @@ mod tests {
     ) -> TenantStats {
         TenantStats {
             model,
-            workers,
-            ways,
+            alloc: ResourceVector::resident(workers, ways),
             window_p95_s: p95_s,
             window_completed: 100,
             window_arrival_qps: qps,
             queue_depth: 0,
-            cache_bytes: None,
             window_hit_rate: 1.0,
         }
     }
@@ -289,7 +339,7 @@ mod tests {
         ];
         let changes = rmu.on_monitor(1.0, &s);
         let din_change = changes.iter().find(|c| c.tenant == 0).expect("din grows");
-        assert!(din_change.workers > 2, "got {}", din_change.workers);
+        assert!(din_change.rv.workers > 2, "got {}", din_change.rv.workers);
     }
 
     #[test]
@@ -302,7 +352,7 @@ mod tests {
         ];
         let changes = rmu.on_monitor(1.0, &s);
         if let Some(c) = changes.iter().find(|c| c.tenant == 0) {
-            assert!(c.workers < 14, "should shrink, got {}", c.workers);
+            assert!(c.rv.workers < 14, "should shrink, got {}", c.rv.workers);
         } else {
             panic!("expected a shrink decision");
         }
@@ -319,7 +369,7 @@ mod tests {
         let changes = rmu.on_monitor(1.0, &s);
         let mut w = [8usize, 8usize];
         for c in &changes {
-            w[c.tenant] = c.workers;
+            w[c.tenant] = c.rv.workers;
         }
         assert!(w[0] + w[1] <= STORE.node.cores, "{w:?}");
     }
@@ -335,10 +385,29 @@ mod tests {
         let changes = rmu.on_monitor(1.0, &s);
         let ncf = changes.iter().find(|c| c.tenant == 0).expect("ncf adjusts");
         assert!(
-            ncf.ways >= 6,
+            ncf.rv.ways >= 6,
             "cache-sensitive NCF should win most ways, got {}",
-            ncf.ways
+            ncf.rv.ways
         );
+    }
+
+    #[test]
+    fn three_tenant_group_gets_full_way_repartition() {
+        // The N-ary partition search: three violating tenants must come
+        // out with a complete, valid split of the node's ways.
+        let mut rmu = HeraRmu::new(&STORE);
+        let s = vec![
+            stats(id("ncf"), 4, 4, 0.050, 8000.0),
+            stats(id("wnd"), 4, 4, 0.100, 4000.0),
+            stats(id("din"), 4, 3, 0.300, 3000.0),
+        ];
+        let changes = rmu.on_monitor(1.0, &s);
+        assert_eq!(changes.len(), 3, "all three tenants adjust: {changes:?}");
+        let total_ways: usize = changes.iter().map(|c| c.rv.ways).sum();
+        assert_eq!(total_ways, STORE.node.llc_ways, "{changes:?}");
+        let total_workers: usize = changes.iter().map(|c| c.rv.workers).sum();
+        assert!(total_workers <= STORE.node.cores, "{changes:?}");
+        assert!(changes.iter().all(|c| c.rv.ways >= 1));
     }
 
     #[test]
@@ -349,10 +418,10 @@ mod tests {
         // tables, saturated hit rate), and the knob only engages when the
         // worker band triggers — so put dlrm_b in violation.
         let mut a = stats(id("dlrm_b"), 4, 5, 0.800, 200.0);
-        a.cache_bytes = Some(1e9);
+        a.alloc = ResourceVector::cached(4, 5, 1e9);
         a.window_hit_rate = STORE.hit_curve(id("dlrm_b")).hit_rate(1e9);
         let mut b = stats(id("ncf"), 8, 6, 0.004, 2000.0);
-        b.cache_bytes = Some(1e9);
+        b.alloc = ResourceVector::cached(8, 6, 1e9);
         let s = vec![a, b];
         let changes = rmu.on_monitor(1.0, &s);
         assert!(!changes.is_empty(), "violating tenant must trigger changes");
@@ -361,12 +430,12 @@ mod tests {
         let x = changes
             .iter()
             .find(|c| c.tenant == 0)
-            .and_then(|c| c.cache_bytes)
+            .and_then(|c| c.rv.cache_bytes())
             .expect("dlrm_b must receive a cache re-split");
         let y = changes
             .iter()
             .find(|c| c.tenant == 1)
-            .and_then(|c| c.cache_bytes)
+            .and_then(|c| c.rv.cache_bytes())
             .expect("re-splits apply to both sides");
         assert!(x > 1e9, "dlrm_b should gain cache, got {x:.3e}");
         assert!((x + y - 2e9).abs() < 1e-3 * 2e9, "budget conserved: {x} + {y}");
@@ -378,16 +447,36 @@ mod tests {
         // max_workers); the cache knob must still re-split the budget.
         let mut rmu = HeraRmu::new(&STORE);
         let mut a = stats(id("dlrm_b"), 8, 5, 0.800, 200.0);
-        a.cache_bytes = Some(1e9);
+        a.alloc = ResourceVector::cached(8, 5, 1e9);
         let mut b = stats(id("ncf"), 8, 6, 0.004, 2000.0);
-        b.cache_bytes = Some(1e9);
+        b.alloc = ResourceVector::cached(8, 6, 1e9);
         let changes = rmu.on_monitor(1.0, &[a, b]);
         let gained = changes
             .iter()
             .find(|c| c.tenant == 0)
-            .and_then(|c| c.cache_bytes)
+            .and_then(|c| c.rv.cache_bytes())
             .expect("cache knob must engage with converged workers");
         assert!(gained > 1e9, "dlrm_b should gain cache, got {gained:.3e}");
+    }
+
+    #[test]
+    fn decision_history_records_the_cache_knob() {
+        // Fig. 13/14-style traces need all three knobs: a cache re-split
+        // must land in `decisions` with its hot-tier bytes.
+        let mut rmu = HeraRmu::new(&STORE);
+        let mut a = stats(id("dlrm_b"), 8, 5, 0.800, 200.0);
+        a.alloc = ResourceVector::cached(8, 5, 1e9);
+        let mut b = stats(id("ncf"), 8, 6, 0.004, 2000.0);
+        b.alloc = ResourceVector::cached(8, 6, 1e9);
+        let _ = rmu.on_monitor(3.0, &[a, b]);
+        assert!(!rmu.decisions.is_empty());
+        let (t, tenant, rv) = rmu.decisions[0];
+        assert_eq!(t, 3.0);
+        assert!(tenant < 2);
+        assert!(
+            rv.cache_bytes().is_some(),
+            "decision history must carry the cache knob: {rv:?}"
+        );
     }
 
     #[test]
@@ -398,7 +487,7 @@ mod tests {
             stats(id("dlrm_d"), 12, 5, 0.050, 10.0),
         ];
         for c in rmu.on_monitor(1.0, &s) {
-            assert_eq!(c.cache_bytes, None);
+            assert_eq!(c.rv.cache_bytes(), None);
         }
     }
 

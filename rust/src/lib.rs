@@ -16,9 +16,21 @@
 //!   profiling tables, baselines (DeepRecSys, Random, PARTIES) and a
 //!   real serving path over PJRT-loaded artifacts.
 //!
-//! See DESIGN.md for the system inventory and the per-figure experiment
-//! index; EXPERIMENTS.md records reproduced results.
+//! Allocation decisions flow through the N-tenant API in [`alloc`]:
+//! [`alloc::ResourceVector`] is one tenant's slice of a node (workers,
+//! LLC ways, embedding residency), [`alloc::Placement`] is one server's
+//! assignment of any cardinality, and
+//! [`hera::cluster::evaluate_group`] turns a model group plus an
+//! [`alloc::ResidencyPolicy`] into a placement.  The paper's pair-shaped
+//! evaluation is the two-tenant special case (golden-tested in
+//! `tests/parity_group.rs`); the `group-sweep` CLI explores placements
+//! beyond pairs (e.g. triple co-location of small-footprint models).
+//!
+//! See DESIGN.md for the system inventory, the per-figure experiment
+//! index and the pair-API migration table; EXPERIMENTS.md records
+//! reproduced results.
 
+pub mod alloc;
 pub mod baselines;
 pub mod bench_harness;
 pub mod cli;

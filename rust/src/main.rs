@@ -7,12 +7,14 @@
 //!   serve     run the real PJRT serving path under Poisson load
 //!   simulate  run one co-location scenario in the discrete-event sim
 //!   cluster   run the cluster scheduler for a target QPS level
+//!   group-sweep   evaluate N-tenant co-location groups (beyond pairs)
 //!   bench-engine  measure per-model PJRT inference latency
 
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
+use hera::alloc::ResidencyPolicy;
 use hera::baselines::SelectionPolicy;
 use hera::cli::Args;
 use hera::config::{ModelId, NodeConfig, N_MODELS};
@@ -38,6 +40,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
         "cluster" => cmd_cluster(&args),
+        "group-sweep" => cmd_group_sweep(&args),
         "cache-sweep" => cmd_cache_sweep(&args),
         "bench-engine" => cmd_bench_engine(&args),
         "" | "help" | "--help" => {
@@ -66,7 +69,8 @@ USAGE: hera <subcommand> [flags]
   golden                                           verify python<->rust numerics
   serve    --models a,b --workers n,m --qps x,y [--secs S] [--http 127.0.0.1:8080]
   simulate --models a,b --workers n,m --ways p,q --qps x,y [--secs S]
-  cluster  [--target QPS] [--policy name] [--cache-aware]  run the cluster scheduler
+  cluster  [--target QPS] [--policy name] [--residency optimistic|strict|cached]
+  group-sweep [--models a,b,c] [--residency MODE]  evaluate N-tenant co-location
   cache-sweep [--model m] [--workers N] [--ways K] [--load-frac F] [--points P]
   bench-engine [--models a,b] [--batch B] [--iters N]"
     );
@@ -252,6 +256,21 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Shared `--residency` flag (with `--cache-aware` kept as an alias for
+/// the cached mode).
+fn parse_residency(args: &Args) -> anyhow::Result<ResidencyPolicy> {
+    if args.has("cache-aware") {
+        return Ok(ResidencyPolicy::Cached);
+    }
+    let policy = match args.get_or("residency", "optimistic") {
+        "optimistic" => ResidencyPolicy::Optimistic,
+        "strict" => ResidencyPolicy::Strict,
+        "cached" => ResidencyPolicy::Cached,
+        other => anyhow::bail!("unknown residency {other:?} (optimistic|strict|cached)"),
+    };
+    Ok(policy)
+}
+
 fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let target = args.get_f64("target", 1000.0)?;
     let policy = match args.get_or("policy", "hera") {
@@ -260,48 +279,68 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         "hera-random" => SelectionPolicy::HeraRandom,
         _ => SelectionPolicy::Hera,
     };
+    let residency = parse_residency(args)?;
     let store = ProfileStore::build(&NodeConfig::paper_default());
     let matrix = AffinityMatrix::build(&store);
     let targets = [target; N_MODELS];
     let t0 = std::time::Instant::now();
-    let plan = if args.has("cache-aware") {
-        anyhow::ensure!(
-            policy == SelectionPolicy::Hera,
-            "--cache-aware is only implemented for --policy hera"
-        );
-        hera::hera::ClusterScheduler::new(&store, &matrix)
-            .with_cache_aware(true)
-            .schedule(&targets)?
-    } else {
-        policy.schedule(&store, &matrix, &targets, 42)?
-    };
+    let plan = policy.schedule_with_residency(&store, &matrix, &targets, 42, residency)?;
     println!(
-        "{}: {} servers for {target:.0} QPS/model (scheduled in {:.1} ms)",
+        "{}: {} servers for {target:.0} QPS/model (scheduled in {:.1} ms, {residency:?} residency)",
         policy.name(),
         plan.num_servers(),
         t0.elapsed().as_secs_f64() * 1e3
     );
     for (i, s) in plan.servers.iter().enumerate().take(20) {
-        match s {
-            hera::hera::ServerAssignment::Solo { model, workers, qps } => {
-                println!("  [{i:3}] solo {model} ({workers} workers, {qps:.0} QPS)")
-            }
-            hera::hera::ServerAssignment::Pair { a, b, workers, ways, qps, cache } => {
-                let tier = match cache {
-                    Some((ca, cb)) => {
-                        format!("  hot tiers {:.2}/{:.2} GB", ca / 1e9, cb / 1e9)
-                    }
-                    None => String::new(),
-                };
-                println!(
-                    "  [{i:3}] pair {a}({}w/{}k {:.0}qps) + {b}({}w/{}k {:.0}qps){tier}",
-                    workers.0, ways.0, qps.0, workers.1, ways.1, qps.1
-                )
-            }
-        }
+        let kind = if s.is_colocated() { "group" } else { "solo " };
+        println!("  [{i:3}] {kind} {s}");
     }
     if plan.num_servers() > 20 {
         println!("  ... {} more", plan.num_servers() - 20);
+    }
+    Ok(())
+}
+
+fn cmd_group_sweep(args: &Args) -> anyhow::Result<()> {
+    let names = args
+        .get_list("models")
+        .unwrap_or_else(|| vec!["ncf".into(), "wnd".into(), "din".into()]);
+    anyhow::ensure!(
+        (1..=8).contains(&names.len()),
+        "--models takes 1..=8 comma-separated models"
+    );
+    let models: Vec<ModelId> = names
+        .iter()
+        .map(|n| {
+            ModelId::from_name(n).ok_or_else(|| anyhow::anyhow!("unknown model {n}"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let residency = parse_residency(args)?;
+    let store = ProfileStore::build(&NodeConfig::paper_default());
+    let matrix = AffinityMatrix::build(&store);
+    println!(
+        "group sweep over {{{}}} ({residency:?} residency): every subset as one node",
+        names.join(",")
+    );
+    println!(
+        "{:>28} {:>10} {:>8} {:>9} {:>5}  allocation",
+        "members", "agg qps", "norm %", "dram GB", "fits"
+    );
+    for p in hera::figures::sweep_groups(&store, &matrix, &models, residency) {
+        let members = p
+            .models()
+            .iter()
+            .map(|m| m.name())
+            .collect::<Vec<_>>()
+            .join("+");
+        println!(
+            "{:>28} {:>10.1} {:>8.1} {:>9.2} {:>5}  {p}",
+            members,
+            p.total_qps(),
+            hera::figures::normalized_qps_pct(&store, &p),
+            p.dram_bytes() / 1e9,
+            if p.fits_node(&store.node) { "yes" } else { "NO" },
+        );
     }
     Ok(())
 }

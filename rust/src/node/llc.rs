@@ -50,6 +50,30 @@ pub fn enumerate_partitions(total: usize) -> impl Iterator<Item = CatPartition> 
     })
 }
 
+/// Visit every split of `total` ways into `n` parts of at least one way
+/// each — the N-tenant generalization of [`enumerate_partitions`], used
+/// by group evaluation and the RMU's N-ary `adjust_LLC_partition`.  For
+/// `n = 2` the visit order matches [`enumerate_partitions`]: the first
+/// tenant's ways grow from 1 upward.
+pub fn for_each_ways_split(total: usize, n: usize, f: &mut dyn FnMut(&[usize])) {
+    assert!(n >= 1 && total >= n, "need at least one way per tenant");
+    fn rec(remaining: usize, idx: usize, cur: &mut [usize], f: &mut dyn FnMut(&[usize])) {
+        let n = cur.len();
+        if idx == n - 1 {
+            cur[idx] = remaining;
+            f(cur);
+            return;
+        }
+        let max = remaining - (n - 1 - idx);
+        for k in 1..=max {
+            cur[idx] = k;
+            rec(remaining - k, idx + 1, cur, f);
+        }
+    }
+    let mut cur = vec![0usize; n];
+    rec(total, 0, &mut cur, f);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -84,5 +108,27 @@ mod tests {
         let p = CatPartition::whole(11);
         assert_eq!(p.ways_a, 11);
         assert_eq!(p.ways_b, 0);
+    }
+
+    #[test]
+    fn ways_splits_match_pair_enumeration() {
+        let mut splits = Vec::new();
+        for_each_ways_split(11, 2, &mut |ks| splits.push((ks[0], ks[1])));
+        let pairs: Vec<_> = enumerate_partitions(11)
+            .map(|p| (p.ways_a, p.ways_b))
+            .collect();
+        assert_eq!(splits, pairs);
+    }
+
+    #[test]
+    fn ways_splits_cover_all_triples() {
+        let mut count = 0usize;
+        for_each_ways_split(11, 3, &mut |ks| {
+            assert_eq!(ks.iter().sum::<usize>(), 11);
+            assert!(ks.iter().all(|&k| k >= 1));
+            count += 1;
+        });
+        // Compositions of 11 into 3 positive parts: C(10, 2) = 45.
+        assert_eq!(count, 45);
     }
 }

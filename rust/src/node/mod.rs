@@ -13,7 +13,7 @@ mod llc;
 mod perf;
 
 pub use contention::BandwidthModel;
-pub use llc::{enumerate_partitions, CatPartition};
+pub use llc::{enumerate_partitions, for_each_ways_split, CatPartition};
 pub use perf::{
     cross_tenant_friction, ServiceProfile, CROSS_TENANT_FRICTION, DISPATCH_OVERHEAD_S,
 };

@@ -115,8 +115,12 @@ impl ProfileStore {
 
     /// Per-worker resident bytes when `id` is served through its minimum
     /// SLA-safe hot tier (vs `ModelSpec::worker_bytes` at full residency).
+    /// Convenience over the authoritative accounting in
+    /// [`crate::alloc::ResidencyMode::worker_bytes`] — this is exactly
+    /// the footprint `evaluate_group` uses for
+    /// [`crate::alloc::ResidencyPolicy::Cached`] tenants.
     pub fn cache_worker_bytes(&self, id: ModelId) -> f64 {
-        self.min_cache_for_sla(id) + id.spec().fc_bytes()
+        crate::alloc::ResidencyMode::Cached(self.min_cache_for_sla(id)).worker_bytes(id)
     }
 }
 

@@ -8,6 +8,7 @@
 //! tenants: busy workers follow Little's law, aggregate demand sets the
 //! memory-leg slowdown, which feeds back into E[S].
 
+use crate::alloc::{ResidencyMode, ResourceVector};
 use crate::config::{ModelId, NodeConfig};
 use crate::embedcache::HitCurve;
 use crate::node::{cross_tenant_friction, BandwidthModel, ServiceProfile};
@@ -25,6 +26,31 @@ pub struct AnalyticTenant {
     /// When set, the tenant's service profile reflects the hit-curve
     /// fraction of gathers served from DRAM vs the backing tier.
     pub cache_bytes: Option<f64>,
+}
+
+impl AnalyticTenant {
+    /// Build from an allocation slice (scheduler/placement output).
+    pub fn from_alloc(model: ModelId, rv: &ResourceVector, arrival_qps: f64) -> Self {
+        AnalyticTenant {
+            model,
+            workers: rv.workers,
+            ways: rv.ways,
+            arrival_qps,
+            cache_bytes: rv.cache_bytes(),
+        }
+    }
+
+    /// This tenant's allocation as a [`ResourceVector`].
+    pub fn alloc(&self) -> ResourceVector {
+        ResourceVector {
+            workers: self.workers,
+            ways: self.ways,
+            residency: match self.cache_bytes {
+                None => ResidencyMode::Full,
+                Some(b) => ResidencyMode::Cached(b),
+            },
+        }
+    }
 }
 
 /// Build a tenant's service profile, honoring its cache allocation.

@@ -108,6 +108,18 @@ pub fn max_load_analytic_cached(
     )
 }
 
+/// Max sustainable QPS of `model` under an allocation slice: dispatches
+/// to the cached or full-residency analytic oracle according to the
+/// vector's [`crate::alloc::ResidencyMode`].
+pub fn max_load_analytic_alloc(
+    node: &NodeConfig,
+    model: ModelId,
+    rv: &crate::alloc::ResourceVector,
+    opts: &MaxLoadOpts,
+) -> f64 {
+    max_load_analytic_cached(node, model, rv.workers, rv.ways, rv.cache_bytes(), opts)
+}
+
 /// Max sustainable QPS of tenant `target` while the other tenants run at
 /// their fixed configured rates (analytic oracle). Feasibility requires
 /// *every* tenant to meet its SLA — co-location must not sacrifice the

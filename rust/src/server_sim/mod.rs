@@ -20,10 +20,10 @@ mod sim;
 
 pub use batch_moments::{paper_moments, BatchMoments};
 pub use maxload::{
-    max_load_analytic, max_load_analytic_cached, max_load_analytic_colocated, max_load_sim,
-    MaxLoadOpts,
+    max_load_analytic, max_load_analytic_alloc, max_load_analytic_cached,
+    max_load_analytic_colocated, max_load_sim, MaxLoadOpts,
 };
 pub use sim::{
     AllocChange, Controller, NullController, SimOutcome, SimulatedTenant, Simulation,
-    TenantStats,
+    TenantStats, MAX_TENANTS,
 };

@@ -8,6 +8,7 @@
 //! and may resize worker counts and LLC partitions — this is the hook the
 //! Hera RMU (Algorithm 3) and the PARTIES baseline plug into.
 
+use crate::alloc::{ResidencyMode, ResourceVector};
 use crate::config::{ModelId, NodeConfig};
 use crate::embedcache::MIN_CACHE_BYTES;
 use crate::metrics::LatencyStats;
@@ -28,29 +29,52 @@ pub struct SimulatedTenant {
     pub arrival_qps: f64,
     /// Hot embedding-cache bytes (`None` = fully DRAM-resident tables).
     /// Cached tenants pay the `embedcache` hit curve on every dispatch and
-    /// can be resized by controllers through [`AllocChange::cache_bytes`].
+    /// can be resized by controllers through [`AllocChange`].
     pub cache_bytes: Option<f64>,
 }
 
-/// Allocation change requested by a controller.
+impl SimulatedTenant {
+    /// Build from an allocation slice (scheduler output).
+    pub fn from_alloc(model: ModelId, rv: &ResourceVector, arrival_qps: f64) -> Self {
+        SimulatedTenant {
+            model,
+            workers: rv.workers,
+            ways: rv.ways,
+            arrival_qps,
+            cache_bytes: rv.cache_bytes(),
+        }
+    }
+
+    /// This tenant's current allocation as a [`ResourceVector`].
+    pub fn alloc(&self) -> ResourceVector {
+        ResourceVector {
+            workers: self.workers,
+            ways: self.ways,
+            residency: match self.cache_bytes {
+                None => ResidencyMode::Full,
+                Some(b) => ResidencyMode::Cached(b),
+            },
+        }
+    }
+}
+
+/// Allocation change requested by a controller: the tenant index plus its
+/// requested [`ResourceVector`].  The simulation clamps workers/ways to
+/// node limits; a [`ResidencyMode::Cached`] request resizes a cached
+/// tenant's hot tier (clamped to node DRAM) and is ignored for
+/// fully-resident tenants — controllers cannot change residency mode.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AllocChange {
     pub tenant: usize,
-    pub workers: usize,
-    pub ways: usize,
-    /// `Some(bytes)` resizes a cached tenant's hot tier (ignored — with a
-    /// clamp to node DRAM — for fully-resident tenants).
-    pub cache_bytes: Option<f64>,
+    pub rv: ResourceVector,
 }
 
 /// Rolling statistics handed to controllers at each monitor tick.
 #[derive(Debug, Clone)]
 pub struct TenantStats {
     pub model: ModelId,
-    pub workers: usize,
-    pub ways: usize,
-    /// Current hot-tier allocation (`None` = fully resident).
-    pub cache_bytes: Option<f64>,
+    /// Current allocation (workers, ways, residency).
+    pub alloc: ResourceVector,
     /// Hot-tier hit rate over the window (1.0 for resident tenants).
     pub window_hit_rate: f64,
     /// p95 latency over the last monitoring window (s); 0 if no completions.
@@ -147,8 +171,9 @@ pub struct Simulation {
     bw: BandwidthModel,
     monitor_interval_s: f64,
     trace: LoadTrace,
-    /// Timeline of (t, tenant, workers, ways) after controller changes.
-    pub alloc_timeline: Vec<(f64, usize, usize, usize)>,
+    /// Timeline of (t, tenant, applied allocation) after controller
+    /// changes — carries the hot-tier knob alongside workers/ways.
+    pub alloc_timeline: Vec<(f64, usize, ResourceVector)>,
     /// Timeline of (t, tenant, window p95 normalized to SLA).
     pub latency_timeline: Vec<(f64, usize, f64)>,
 }
@@ -348,9 +373,7 @@ impl Simulation {
                         .iter()
                         .map(|t| TenantStats {
                             model: t.cfg.model,
-                            workers: t.cfg.workers,
-                            ways: t.cfg.ways,
-                            cache_bytes: t.cfg.cache_bytes,
+                            alloc: t.cfg.alloc(),
                             window_hit_rate: t.profile.emb_hit(),
                             window_p95_s: t.lat_window.p95(),
                             window_completed: t.window_completed,
@@ -372,15 +395,17 @@ impl Simulation {
                             .filter(|(i, _)| *i != c.tenant)
                             .map(|(_, t)| t.cfg.workers)
                             .sum();
-                        let workers =
-                            c.workers.min(self.node.cores.saturating_sub(total_other));
-                        let ways = c.ways.clamp(1, self.node.llc_ways);
+                        let workers = c
+                            .rv
+                            .workers
+                            .min(self.node.cores.saturating_sub(total_other));
+                        let ways = c.rv.ways.clamp(1, self.node.llc_ways);
                         let t = &mut self.tenants[c.tenant];
                         // Cache resizing only applies to cached tenants
                         // (a resident tenant has no hot tier to resize),
                         // clamped to [MIN_CACHE_BYTES, node DRAM].
-                        let cache = match (t.cfg.cache_bytes, c.cache_bytes) {
-                            (Some(_), Some(req)) => Some(req.clamp(
+                        let cache = match (t.cfg.cache_bytes, c.rv.residency) {
+                            (Some(_), ResidencyMode::Cached(req)) => Some(req.clamp(
                                 MIN_CACHE_BYTES,
                                 self.node.dram_capacity_gb * 1e9,
                             )),
@@ -393,8 +418,9 @@ impl Simulation {
                             t.cfg.workers = workers;
                             t.cfg.ways = ways;
                             t.cfg.cache_bytes = cache;
+                            let applied = t.cfg.alloc();
                             self.rebuild_profile(c.tenant);
-                            self.alloc_timeline.push((now, c.tenant, workers, ways));
+                            self.alloc_timeline.push((now, c.tenant, applied));
                             self.dispatch(c.tenant, &mut q);
                         }
                     }
@@ -585,12 +611,11 @@ mod tests {
         struct CacheGrower;
         impl Controller for CacheGrower {
             fn on_monitor(&mut self, _n: f64, s: &[TenantStats]) -> Vec<AllocChange> {
-                vec![AllocChange {
-                    tenant: 0,
-                    workers: s[0].workers,
-                    ways: s[0].ways,
-                    cache_bytes: s[0].cache_bytes.map(|b| b * 4.0),
-                }]
+                let mut rv = s[0].alloc;
+                if let ResidencyMode::Cached(b) = rv.residency {
+                    rv.residency = ResidencyMode::Cached(b * 4.0);
+                }
+                vec![AllocChange { tenant: 0, rv }]
             }
         }
         let node = NodeConfig::paper_default();
@@ -615,9 +640,7 @@ mod tests {
             fn on_monitor(&mut self, _n: f64, s: &[TenantStats]) -> Vec<AllocChange> {
                 vec![AllocChange {
                     tenant: 0,
-                    workers: s[0].workers,
-                    ways: s[0].ways,
-                    cache_bytes: Some(1e9),
+                    rv: ResourceVector::cached(s[0].alloc.workers, s[0].alloc.ways, 1e9),
                 }]
             }
         }
@@ -635,9 +658,7 @@ mod tests {
             fn on_monitor(&mut self, _n: f64, s: &[TenantStats]) -> Vec<AllocChange> {
                 vec![AllocChange {
                     tenant: 0,
-                    workers: s[0].workers + 8,
-                    ways: 99,
-                    cache_bytes: None,
+                    rv: ResourceVector::resident(s[0].alloc.workers + 8, 99),
                 }]
             }
         }

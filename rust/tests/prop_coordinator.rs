@@ -124,24 +124,20 @@ fn prop_rmu_decisions_respect_node_limits() {
         let stats = vec![
             TenantStats {
                 model: a,
-                workers: wa,
-                ways: ka,
+                alloc: hera::alloc::ResourceVector::resident(wa, ka),
                 window_p95_s: rng.next_f64() * 3.0 * a.spec().sla_ms / 1e3,
                 window_completed: 50,
                 window_arrival_qps: rng.next_f64() * 2.0 * STORE.profile(a).max_load(),
                 queue_depth: rng.next_below(100) as usize,
-                cache_bytes: None,
                 window_hit_rate: 1.0,
             },
             TenantStats {
                 model: b,
-                workers: wb,
-                ways: kb,
+                alloc: hera::alloc::ResourceVector::resident(wb, kb),
                 window_p95_s: rng.next_f64() * 3.0 * b.spec().sla_ms / 1e3,
                 window_completed: 50,
                 window_arrival_qps: rng.next_f64() * 2.0 * STORE.profile(b).max_load(),
                 queue_depth: rng.next_below(100) as usize,
-                cache_bytes: None,
                 window_hit_rate: 1.0,
             },
         ];
@@ -150,8 +146,8 @@ fn prop_rmu_decisions_respect_node_limits() {
         let mut k = [ka, kb];
         for c in &changes {
             prop_assert!(c.tenant < 2, "bad tenant index");
-            w[c.tenant] = c.workers;
-            k[c.tenant] = c.ways;
+            w[c.tenant] = c.rv.workers;
+            k[c.tenant] = c.rv.ways;
         }
         prop_assert!(
             w[0] + w[1] <= node.cores,
@@ -228,7 +224,10 @@ fn prop_controller_clamping_in_simulation() {
             let w = (self.0 >> 33) as usize % 64;
             let k = (self.0 >> 21) as usize % 32;
             (0..s.len())
-                .map(|i| hera::server_sim::AllocChange { tenant: i, workers: w, ways: k.max(1), cache_bytes: None })
+                .map(|i| hera::server_sim::AllocChange {
+                    tenant: i,
+                    rv: hera::alloc::ResourceVector::resident(w, k.max(1)),
+                })
                 .collect()
         }
     }
