@@ -62,7 +62,7 @@ impl ResidencyMode {
 /// and fit node DRAM by construction (`evaluate_solo` caps workers at
 /// the OOM wall), so for a policy like DeepRecSys — which never
 /// co-locates — every mode yields the same plan.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum ResidencyPolicy {
     /// Full residency without a combined-capacity check — the seed's
     /// behavior, kept as the default for paper parity (see ROADMAP

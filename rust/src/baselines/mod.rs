@@ -13,4 +13,4 @@ pub mod parties;
 pub mod selection;
 
 pub use parties::PartiesController;
-pub use selection::{allowed_pairs_hera_random, SelectionPolicy};
+pub use selection::{allowed_pairs_hera_random, SelectionOpts, SelectionPolicy};

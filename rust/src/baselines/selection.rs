@@ -1,21 +1,54 @@
 //! Cluster-level model-selection baselines (paper §VII-A1 / §VII-C).
 //!
 //! All four policies (incl. Hera itself, in `crate::hera::cluster`) share
-//! the group-evaluation machinery so differences in the Fig. 11/15/16
-//! results come purely from *which models get co-located*, exactly as in
-//! the paper ("all four design points employ our proposed resource
-//! management algorithm").  Every policy accepts a
-//! [`ResidencyPolicy`]: the default [`ResidencyPolicy::Optimistic`] keeps
-//! the seed's DRAM-blind pairing; [`ResidencyPolicy::Strict`] enforces
-//! the joint-DRAM check (which changes Random's server counts — it can
-//! no longer deploy over-subscribed big-table pairs at full width).
+//! the group-evaluation machinery — the same [`enumerate_groups`]
+//! candidate enumerator and the same sorted-key [`GroupMemo`] — so
+//! differences in the Fig. 11/15/16 results come purely from *which
+//! models get co-located*, exactly as in the paper ("all four design
+//! points employ our proposed resource management algorithm").  Every
+//! policy accepts [`SelectionOpts`]: the default keeps the seed's
+//! DRAM-blind pairing ([`ResidencyPolicy::Optimistic`], groups of at
+//! most 2); [`ResidencyPolicy::Strict`] enforces the joint-DRAM check
+//! (which changes Random's server counts — it can no longer deploy
+//! over-subscribed big-table pairs at full width); `max_group > 2` lets
+//! the random policies draw larger groups from the same enumerator the
+//! Hera scheduler prunes, keeping baseline comparisons apples-to-apples.
 
 use crate::alloc::{Placement, ResidencyPolicy};
 use crate::config::{ModelId, N_MODELS};
 use crate::hera::affinity::AffinityMatrix;
-use crate::hera::cluster::{evaluate_group, evaluate_solo, ClusterPlan, ClusterScheduler};
+use crate::hera::cluster::{
+    enumerate_groups, evaluate_solo, ClusterPlan, ClusterScheduler, GroupMemo,
+};
 use crate::profiler::{ProfileStore, ScalabilityClass};
 use crate::rng::{Rng, Xoshiro256};
+
+/// Knobs shared by every selection policy: the residency/DRAM policy for
+/// co-located groups and the largest group a policy may deploy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SelectionOpts {
+    pub residency: ResidencyPolicy,
+    /// Largest co-located group (2 = the paper's pairs).
+    pub max_group: usize,
+}
+
+impl Default for SelectionOpts {
+    fn default() -> Self {
+        SelectionOpts {
+            residency: ResidencyPolicy::default(),
+            max_group: 2,
+        }
+    }
+}
+
+impl SelectionOpts {
+    pub fn with_residency(residency: ResidencyPolicy) -> Self {
+        SelectionOpts {
+            residency,
+            ..Default::default()
+        }
+    }
+}
 
 /// The four model-selection policies of the evaluation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,7 +74,7 @@ impl SelectionPolicy {
     }
 
     /// Allocate servers until `targets` are met (Fig. 15/16 experiment),
-    /// with the seed-parity optimistic DRAM accounting.
+    /// with the seed-parity optimistic DRAM accounting and pairs only.
     pub fn schedule(
         self,
         store: &ProfileStore,
@@ -49,14 +82,11 @@ impl SelectionPolicy {
         targets: &[f64; N_MODELS],
         seed: u64,
     ) -> anyhow::Result<ClusterPlan> {
-        self.schedule_with_residency(store, matrix, targets, seed, ResidencyPolicy::default())
+        self.schedule_with(store, matrix, targets, seed, SelectionOpts::default())
     }
 
     /// [`SelectionPolicy::schedule`] under an explicit residency/DRAM
-    /// policy for co-located groups.  Dedicated servers are always fully
-    /// resident and fit node DRAM by construction, so the policy is a
-    /// no-op for `DeepRecSys` (which never co-locates): every mode
-    /// returns the same plan there.
+    /// policy for co-located groups (pairs only).
     pub fn schedule_with_residency(
         self,
         store: &ProfileStore,
@@ -65,16 +95,38 @@ impl SelectionPolicy {
         seed: u64,
         residency: ResidencyPolicy,
     ) -> anyhow::Result<ClusterPlan> {
+        self.schedule_with(
+            store,
+            matrix,
+            targets,
+            seed,
+            SelectionOpts::with_residency(residency),
+        )
+    }
+
+    /// [`SelectionPolicy::schedule`] under explicit [`SelectionOpts`].
+    /// Dedicated servers are always fully resident and fit node DRAM by
+    /// construction, so the options are a no-op for `DeepRecSys` (which
+    /// never co-locates): every combination returns the same plan there.
+    pub fn schedule_with(
+        self,
+        store: &ProfileStore,
+        matrix: &AffinityMatrix,
+        targets: &[f64; N_MODELS],
+        seed: u64,
+        opts: SelectionOpts,
+    ) -> anyhow::Result<ClusterPlan> {
         match self {
             SelectionPolicy::Hera => ClusterScheduler::new(store, matrix)
-                .with_residency(residency)
+                .with_residency(opts.residency)
+                .with_max_group(opts.max_group)
                 .schedule(targets),
             SelectionPolicy::DeepRecSys => schedule_deeprecsys(store, targets),
             SelectionPolicy::Random => {
-                schedule_random(store, matrix, targets, seed, false, residency)
+                schedule_random(store, matrix, targets, seed, false, opts)
             }
             SelectionPolicy::HeraRandom => {
-                schedule_random(store, matrix, targets, seed, true, residency)
+                schedule_random(store, matrix, targets, seed, true, opts)
             }
         }
     }
@@ -119,17 +171,31 @@ pub fn allowed_pairs_hera_random(store: &ProfileStore) -> Vec<(ModelId, ModelId)
     out
 }
 
-/// Random / Hera (Random): co-locate random pairs of models that still
-/// need QPS; leftovers get dedicated servers.
+/// Groups Hera (Random) may choose: at most one high-scalability member
+/// (the N-ary generalization of "never pair high with high").
+fn scalability_admissible(store: &ProfileStore, group: &[ModelId]) -> bool {
+    group
+        .iter()
+        .filter(|&&m| store.scalability(m) == ScalabilityClass::High)
+        .count()
+        <= 1
+}
+
+/// Random / Hera (Random): co-locate random groups (up to
+/// `opts.max_group` members, from the same [`enumerate_groups`] the Hera
+/// scheduler prunes) of models that still need QPS; leftovers get
+/// dedicated servers.  At `max_group = 2` the candidate list and the RNG
+/// draw sequence are identical to the seed's pair-only loop.
 fn schedule_random(
     store: &ProfileStore,
     matrix: &AffinityMatrix,
     targets: &[f64; N_MODELS],
     seed: u64,
     scalability_aware: bool,
-    residency: ResidencyPolicy,
+    opts: SelectionOpts,
 ) -> anyhow::Result<ClusterPlan> {
     let mut rng = Xoshiro256::seed_from(seed);
+    let mut memo = GroupMemo::new();
     let mut plan = ClusterPlan {
         servers: Vec::new(),
         serviced: [0.0; N_MODELS],
@@ -146,20 +212,13 @@ fn schedule_random(
             break;
         }
         anyhow::ensure!(plan.servers.len() < 100_000, "budget exhausted");
-        // Candidate pairs among models still needing QPS.
-        let mut pairs: Vec<(ModelId, ModelId)> = Vec::new();
-        for (ai, &a) in open.iter().enumerate() {
-            for &b in &open[ai + 1..] {
-                let both_high = store.scalability(a) == ScalabilityClass::High
-                    && store.scalability(b) == ScalabilityClass::High;
-                if scalability_aware && both_high {
-                    continue;
-                }
-                pairs.push((a, b));
-            }
-        }
-        if pairs.is_empty() {
-            // Only one model left (or only disallowed pairs): solo server.
+        // Candidate groups among models still needing QPS.
+        let groups: Vec<Vec<ModelId>> = enumerate_groups(&open, 2, opts.max_group)
+            .into_iter()
+            .filter(|g| !scalability_aware || scalability_admissible(store, g))
+            .collect();
+        if groups.is_empty() {
+            // Only one model left (or only disallowed groups): solo server.
             let m = open[rng.next_below(open.len() as u64) as usize];
             let s = evaluate_solo(store, m);
             let q = s.qps_for(m);
@@ -168,19 +227,19 @@ fn schedule_random(
             plan.servers.push(s);
             continue;
         }
-        let (a, b) = pairs[rng.next_below(pairs.len() as u64) as usize];
-        let s: Placement = evaluate_group(store, matrix, &[a, b], residency);
-        let (qa, qb) = (s.qps_for(a), s.qps_for(b));
-        // A degenerate pair that cannot serve either model would loop
-        // forever; fall back to solo for the first model.
-        if qa <= 0.0 && qb <= 0.0 {
-            let solo = evaluate_solo(store, a);
-            plan.serviced[a.index()] += solo.qps_for(a);
+        let members = &groups[rng.next_below(groups.len() as u64) as usize];
+        let s: Placement = memo.evaluate(store, matrix, members, opts.residency);
+        // A degenerate group that cannot serve any member would loop
+        // forever; fall back to solo for the first member.
+        if s.tenants.iter().all(|t| t.qps <= 0.0) {
+            let solo = evaluate_solo(store, members[0]);
+            plan.serviced[members[0].index()] += solo.qps_for(members[0]);
             plan.servers.push(solo);
             continue;
         }
-        plan.serviced[a.index()] += qa;
-        plan.serviced[b.index()] += qb;
+        for t in &s.tenants {
+            plan.serviced[t.model.index()] += t.qps;
+        }
         plan.servers.push(s);
     }
     Ok(plan)
@@ -272,6 +331,60 @@ mod tests {
         let pairs = allowed_pairs_hera_random(&STORE);
         // 2 low models: 2*6 (low,high) + 1 (low,low) = 13 pairs.
         assert_eq!(pairs.len(), 13);
+    }
+
+    #[test]
+    fn random_groups_respect_cap_and_scalability_rule() {
+        // With max_group = 3 the random policies draw from the shared
+        // group enumerator: Random may deploy triples; Hera (Random)
+        // still never co-locates two high-scalability models.
+        let targets = scaled_targets(&STORE, 1.0);
+        let opts = SelectionOpts {
+            max_group: 3,
+            ..Default::default()
+        };
+        let mut saw_triple = false;
+        for seed in 0..5 {
+            let plan = SelectionPolicy::Random
+                .schedule_with(&STORE, &MATRIX, &targets, seed, opts)
+                .unwrap();
+            assert!(plan.meets(&targets), "seed {seed}");
+            assert!(plan.servers.iter().all(|s| s.tenants.len() <= 3));
+            saw_triple |= plan.servers.iter().any(|s| s.tenants.len() == 3);
+            let aware = SelectionPolicy::HeraRandom
+                .schedule_with(&STORE, &MATRIX, &targets, seed, opts)
+                .unwrap();
+            for s in &aware.servers {
+                let highs = s
+                    .models()
+                    .iter()
+                    .filter(|&&m| STORE.scalability(m) == ScalabilityClass::High)
+                    .count();
+                assert!(highs <= 1, "seed {seed}: {s}");
+            }
+        }
+        assert!(saw_triple, "five seeds of uniform triples never drew one");
+    }
+
+    #[test]
+    fn pair_cap_matches_legacy_schedule() {
+        // schedule_with at the default opts is the old schedule(): same
+        // server count and serviced vector, seed by seed.
+        let targets = scaled_targets(&STORE, 1.2);
+        for seed in [3u64, 11] {
+            let legacy = SelectionPolicy::Random
+                .schedule(&STORE, &MATRIX, &targets, seed)
+                .unwrap();
+            let opted = SelectionPolicy::Random
+                .schedule_with(&STORE, &MATRIX, &targets, seed, SelectionOpts::default())
+                .unwrap();
+            assert_eq!(legacy.num_servers(), opted.num_servers());
+            for m in ModelId::all() {
+                assert!(
+                    (legacy.serviced[m.index()] - opted.serviced[m.index()]).abs() < 1e-9
+                );
+            }
+        }
     }
 
     #[test]

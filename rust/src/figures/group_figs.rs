@@ -4,7 +4,8 @@
 //!
 //! For a model list (default: the small-footprint trio NCF + WnD + DIN)
 //! every non-empty subset is evaluated as one co-located group with
-//! [`evaluate_group`], reporting per-tenant allocations, aggregate QPS,
+//! [`crate::hera::cluster::evaluate_group`] (via the shared
+//! [`GroupMemo`]), reporting per-tenant allocations, aggregate QPS,
 //! the EMU-style normalized aggregate (sum of per-model fractions of
 //! isolated max load) and the joint DRAM footprint.  The headline
 //! comparison: one triple node versus the best two-node split (pair node
@@ -12,7 +13,7 @@
 
 use crate::alloc::{Placement, ResidencyPolicy};
 use crate::config::ModelId;
-use crate::hera::cluster::evaluate_group;
+use crate::hera::cluster::GroupMemo;
 use crate::hera::AffinityMatrix;
 use crate::profiler::ProfileStore;
 
@@ -26,29 +27,50 @@ pub fn normalized_qps_pct(store: &ProfileStore, p: &Placement) -> f64 {
         .sum()
 }
 
-/// Evaluate every non-empty subset of `models` as one co-located group,
-/// in increasing bitmask order over the member list (subset sizes
-/// interleave; the full group is always last).
+/// Evaluate every non-empty subset of `models` of at most `max_size`
+/// members as one co-located group, in increasing bitmask order over the
+/// member list (subset sizes interleave; with no cap the full group is
+/// always last).  `max_size = 0` means no cap.
 pub fn sweep_groups(
     store: &ProfileStore,
     matrix: &AffinityMatrix,
     models: &[ModelId],
     policy: ResidencyPolicy,
+    max_size: usize,
+) -> Vec<Placement> {
+    let mut memo = GroupMemo::new();
+    sweep_groups_with_memo(store, matrix, models, policy, max_size, &mut memo)
+}
+
+/// [`sweep_groups`] against a caller-owned [`GroupMemo`], so sweeps over
+/// several policies or overlapping model lists share evaluations with
+/// each other and with the scheduling loop.
+pub fn sweep_groups_with_memo(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    models: &[ModelId],
+    policy: ResidencyPolicy,
+    max_size: usize,
+    memo: &mut GroupMemo,
 ) -> Vec<Placement> {
     assert!(
         (1..=8).contains(&models.len()),
         "sweep needs 1..=8 models, got {}",
         models.len()
     );
+    let cap = if max_size == 0 { models.len() } else { max_size };
     let mut out = Vec::new();
     for mask in 1u32..(1 << models.len()) {
+        if mask.count_ones() as usize > cap {
+            continue;
+        }
         let members: Vec<ModelId> = models
             .iter()
             .enumerate()
             .filter(|(i, _)| mask & (1 << i) != 0)
             .map(|(_, &m)| m)
             .collect();
-        out.push(evaluate_group(store, matrix, &members, policy));
+        out.push(memo.evaluate(store, matrix, &members, policy));
     }
     out
 }
@@ -93,11 +115,27 @@ pub fn group_sweep(ctx: &FigureContext) -> anyhow::Result<()> {
         .map(|n| ModelId::from_name(n).unwrap())
         .collect();
     let mut rows = Vec::new();
-    let optimistic = sweep_groups(&ctx.store, &ctx.matrix, &trio, ResidencyPolicy::Optimistic);
+    // One memo across both policy sweeps (entries are policy-keyed).
+    let mut memo = GroupMemo::new();
+    let optimistic = sweep_groups_with_memo(
+        &ctx.store,
+        &ctx.matrix,
+        &trio,
+        ResidencyPolicy::Optimistic,
+        0,
+        &mut memo,
+    );
     for p in &optimistic {
         rows.push(placement_row(&ctx.store, p, "optimistic"));
     }
-    for p in &sweep_groups(&ctx.store, &ctx.matrix, &trio, ResidencyPolicy::Strict) {
+    for p in &sweep_groups_with_memo(
+        &ctx.store,
+        &ctx.matrix,
+        &trio,
+        ResidencyPolicy::Strict,
+        0,
+        &mut memo,
+    ) {
         rows.push(placement_row(&ctx.store, p, "strict"));
     }
     // Headline: one triple node vs the best (pair node + leftover solo
@@ -180,7 +218,7 @@ mod tests {
     #[test]
     fn sweep_covers_all_subsets() {
         let trio = [id("ncf"), id("wnd"), id("din")];
-        let groups = sweep_groups(&STORE, &MATRIX, &trio, ResidencyPolicy::Optimistic);
+        let groups = sweep_groups(&STORE, &MATRIX, &trio, ResidencyPolicy::Optimistic, 0);
         assert_eq!(groups.len(), 7, "2^3 - 1 subsets");
         let sizes: Vec<usize> = groups.iter().map(|p| p.tenants.len()).collect();
         assert_eq!(sizes.iter().filter(|&&s| s == 1).count(), 3);
@@ -192,6 +230,10 @@ mod tests {
                 assert!(t.qps > 0.0, "{p}");
             }
         }
+        // A size cap drops only the larger subsets (CLI --max-group).
+        let capped = sweep_groups(&STORE, &MATRIX, &trio, ResidencyPolicy::Optimistic, 2);
+        assert_eq!(capped.len(), 6, "the triple is excluded at max_size 2");
+        assert!(capped.iter().all(|p| p.tenants.len() <= 2));
     }
 
     #[test]

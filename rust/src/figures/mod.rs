@@ -13,7 +13,7 @@ mod cluster_figs;
 
 pub use cache_figs::{sweep_points, CachePoint};
 pub use emu::{emu_pair_analytic, emu_sweep_curve, measured_pair_qps_sim};
-pub use group_figs::{normalized_qps_pct, sweep_groups};
+pub use group_figs::{normalized_qps_pct, sweep_groups, sweep_groups_with_memo};
 
 use std::path::{Path, PathBuf};
 
@@ -30,6 +30,8 @@ pub struct FigureContext {
     pub out_dir: PathBuf,
     /// Reduced sweep sizes for tests/CI.
     pub fast: bool,
+    /// Upper bound of the `group-scaling` sweep (CLI `--max-group`).
+    pub max_group: usize,
 }
 
 impl FigureContext {
@@ -42,7 +44,14 @@ impl FigureContext {
             matrix,
             out_dir: out_dir.to_path_buf(),
             fast,
+            max_group: 3,
         }
+    }
+
+    /// Override the largest co-located group swept by `group-scaling`.
+    pub fn with_max_group(mut self, n: usize) -> Self {
+        self.max_group = n.max(1);
+        self
     }
 
     pub(crate) fn write_csv(
@@ -84,6 +93,8 @@ impl FigureContext {
             "17" => cluster_figs::fig17(self),
             "cache" => cache_figs::cache_sweep(self),
             "group" => group_figs::group_sweep(self),
+            "group-scaling" => cluster_figs::group_scaling(self),
+            "strict" => cluster_figs::strict_delta(self),
             other => anyhow::bail!("unknown figure id {other:?}"),
         }
     }
@@ -91,7 +102,8 @@ impl FigureContext {
     pub fn run_all(&self) -> anyhow::Result<()> {
         for id in [
             "table1", "table2", "3", "4", "5", "6", "7", "9", "10", "11", "12",
-            "13", "14", "15", "16", "17", "cache", "group",
+            "13", "14", "15", "16", "17", "cache", "group", "group-scaling",
+            "strict",
         ] {
             println!("== figure {id} ==");
             self.run(id)?;

@@ -1,22 +1,33 @@
-//! Algorithm 1 — co-location affinity.
+//! Algorithm 1 — co-location affinity, generalized from pairs to groups
+//! and from full residency to `embedcache` hot tiers.
 //!
-//! For a model pair (A, B), each getting an equal share of the cores:
+//! For a model group each member gets an equal share of the cores:
 //!
-//! * **Step A (LLC)**: sweep every CAT partition (i, max-i); for each,
-//!   read the profiled QPS of each model at its way share, normalize by
-//!   the model's QPS with the entire LLC, average over the two models,
-//!   and keep the best partition's score.
-//! * **Step B (DRAM)**: CoAff_DRAM = min(1, MemBW_system / (MemBW_A +
-//!   MemBW_B)), with MemBW_X the profiled demand of X given half the
-//!   cores and the whole LLC.
+//! * **Step A (LLC)**: sweep every CAT split (one way per tenant); for
+//!   each, read the profiled QPS of each model at its way share, scale it
+//!   by the model's hot-tier QPS retention under the group's residency
+//!   policy, normalize by the model's QPS with the entire LLC, average
+//!   over the members, and keep the best split's score.
+//! * **Step B (DRAM)**: CoAff_DRAM = min(1, MemBW_system / Σ MemBW_i),
+//!   with MemBW_i the profiled demand of model i at its core share and
+//!   the whole LLC, scaled by the same hot-tier retention (a cached
+//!   tenant sustains retention × QPS, so it streams that much less).
 //! * **Step C**: CoAff_system = min(CoAff_LLC, CoAff_DRAM).
+//!
+//! Under [`ResidencyPolicy::Optimistic`] (and `Strict` — both are fully
+//! resident) every retention factor is 1 and the two-tenant case reduces
+//! exactly to the seed's pairwise `co_location_affinity`.  Under
+//! [`ResidencyPolicy::Cached`] the retention is
+//! [`ProfileStore::cache_qps_factor`] at the tenant's min-cache-for-SLA
+//! footprint, so partner and partition choice see the hot-tier trade.
 //!
 //! The full pairwise matrix (Fig. 10a) is computed offline and stored as
 //! a 2-D array indexed by model ids; the paper measures < 1 s for
 //! hundreds of models (see `benches/bench_affinity.rs`).
 
+use crate::alloc::ResidencyPolicy;
 use crate::config::{ModelId, N_MODELS};
-use crate::node::{enumerate_partitions, for_each_ways_split};
+use crate::node::for_each_ways_split;
 use crate::profiler::ProfileStore;
 
 /// Affinity decomposition for one model pair.
@@ -24,48 +35,144 @@ use crate::profiler::ProfileStore;
 pub struct CoAff {
     pub llc: f64,
     pub dram: f64,
+    /// Mean hot-tier QPS retention of the pair at min-cache-for-SLA
+    /// footprints (1.0 under full residency).
+    pub cache: f64,
     /// min(llc, dram) — the conservative system-level affinity.
     pub system: f64,
     /// The LLC partition (ways_a, ways_b) that achieved `llc`.
     pub best_partition: (usize, usize),
 }
 
-/// Compute Algorithm 1 for one pair using the profiled tables.
-pub fn co_location_affinity(store: &ProfileStore, a: ModelId, b: ModelId) -> CoAff {
-    let node = &store.node;
-    let half = node.cores / 2;
-    let pa = store.profile(a);
-    let pb = store.profile(b);
-    // Each model gets an equal core partition, capped by its OOM wall.
-    let wa = half.min(pa.max_workers).max(1);
-    let wb = half.min(pb.max_workers).max(1);
+/// Affinity decomposition for an arbitrary tenant group — Algorithm 1
+/// beyond pairs.  Two-tenant groups under full residency reproduce
+/// [`CoAff`] exactly (the matrix stores them as the pairwise table).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupAffinity {
+    /// Step A: best retention-scaled mean normalized QPS over LLC splits.
+    pub llc: f64,
+    /// Step B: bandwidth-sharing affinity.
+    pub dram: f64,
+    /// Mean hot-tier QPS retention across members (1.0 when resident).
+    pub cache: f64,
+    /// min(llc, dram) — the conservative system-level affinity.
+    pub system: f64,
+    /// The LLC split achieving `llc`, one entry per member.
+    pub split: Vec<usize>,
+}
 
-    // Step A: best normalized QPS over all CAT partitions.
-    let qa_full = pa.qps_at(wa, node.llc_ways);
-    let qb_full = pb.qps_at(wb, node.llc_ways);
-    let mut llc = 0.0;
-    let mut best_partition = (1, node.llc_ways - 1);
-    for part in enumerate_partitions(node.llc_ways) {
-        let qa = pa.qps_at(wa, part.ways_a);
-        let qb = pb.qps_at(wb, part.ways_b);
-        let score = 0.5
-            * (if qa_full > 0.0 { qa / qa_full } else { 0.0 }
-                + if qb_full > 0.0 { qb / qb_full } else { 0.0 });
-        if score > llc {
-            llc = score;
-            best_partition = (part.ways_a, part.ways_b);
-        }
+/// Compute Algorithm 1 steps A–C for a whole group under a residency
+/// policy.  The scorer reads the profiled tables, so worker counts are
+/// capped at the table's full-residency OOM wall even under `Cached`
+/// (the group *evaluator*'s analytic oracle handles counts beyond it —
+/// this is a ranking heuristic, not the deployment).
+pub fn group_affinity(
+    store: &ProfileStore,
+    models: &[ModelId],
+    policy: ResidencyPolicy,
+) -> GroupAffinity {
+    let node = &store.node;
+    let n = models.len();
+    assert!(n >= 1 && n <= node.llc_ways, "one way per tenant required");
+
+    // Hot-tier QPS retention per member; 1.0 at full residency.
+    let factors: Vec<f64> = models
+        .iter()
+        .map(|&m| match policy {
+            ResidencyPolicy::Cached => {
+                store.cache_qps_factor(m, store.min_cache_for_sla(m))
+            }
+            _ => 1.0,
+        })
+        .collect();
+    let cache = factors.iter().sum::<f64>() / n as f64;
+
+    // Each model gets an equal core partition, capped by its OOM wall.
+    let share = (node.cores / n).max(1);
+    let w: Vec<usize> = models
+        .iter()
+        .map(|&m| share.min(store.profile(m).max_workers).max(1))
+        .collect();
+
+    // Step B: bandwidth-sharing affinity at retention-scaled demand.
+    let demand: f64 = models
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| w[i] as f64 * store.profile(m).bw_demand_per_worker * factors[i])
+        .sum();
+    let dram = if demand > 0.0 {
+        (node.dram_bw_gbs * 1e9 / demand).min(1.0)
+    } else {
+        1.0
+    };
+
+    if n == 1 {
+        // A singleton owns the whole LLC: step A degenerates to the
+        // retention factor itself.
+        return GroupAffinity {
+            llc: factors[0],
+            dram,
+            cache,
+            system: factors[0].min(dram),
+            split: vec![node.llc_ways],
+        };
     }
 
-    // Step B: bandwidth-sharing affinity.
-    let demand = store.membw_half_cores(a) + store.membw_half_cores(b);
-    let dram = (node.dram_bw_gbs * 1e9 / demand).min(1.0);
+    // Step A: best retention-scaled normalized QPS over all CAT splits.
+    let q_full: Vec<f64> = models
+        .iter()
+        .zip(&w)
+        .map(|(&m, &wi)| store.qps(m, wi, node.llc_ways))
+        .collect();
+    // Even-split fallback (remainder ways to the first tenants).
+    let mut split: Vec<usize> = (0..n)
+        .map(|i| (node.llc_ways / n + usize::from(i < node.llc_ways % n)).max(1))
+        .collect();
+    let mut llc = -1.0;
+    for_each_ways_split(node.llc_ways, n, &mut |ks| {
+        let mut score = 0.0;
+        for (i, &m) in models.iter().enumerate() {
+            if q_full[i] > 0.0 {
+                score += factors[i] * store.qps(m, w[i], ks[i]) / q_full[i];
+            }
+        }
+        score /= n as f64;
+        if score > llc {
+            llc = score;
+            split = ks.to_vec();
+        }
+    });
+    let llc = llc.max(0.0);
 
-    CoAff {
+    GroupAffinity {
         llc,
         dram,
+        cache,
         system: llc.min(dram),
-        best_partition,
+        split,
+    }
+}
+
+/// Compute Algorithm 1 for one pair at full residency (the seed's
+/// scorer) — the `Optimistic` special case of [`group_affinity`].
+pub fn co_location_affinity(store: &ProfileStore, a: ModelId, b: ModelId) -> CoAff {
+    co_location_affinity_with_policy(store, a, b, ResidencyPolicy::Optimistic)
+}
+
+/// Pairwise Algorithm 1 under an explicit residency policy.
+pub fn co_location_affinity_with_policy(
+    store: &ProfileStore,
+    a: ModelId,
+    b: ModelId,
+    policy: ResidencyPolicy,
+) -> CoAff {
+    let g = group_affinity(store, &[a, b], policy);
+    CoAff {
+        llc: g.llc,
+        dram: g.dram,
+        cache: g.cache,
+        system: g.system,
+        best_partition: (g.split[0], g.split[1]),
     }
 }
 
@@ -73,64 +180,52 @@ pub fn co_location_affinity(store: &ProfileStore, a: ModelId, b: ModelId) -> CoA
 /// one way per tenant) maximizing the mean per-model QPS normalized by
 /// each model's whole-LLC QPS, at the group's even-split worker counts.
 /// For two tenants this reproduces `CoAff::best_partition`; group
-/// evaluation uses it for larger placements.
+/// evaluation uses it (via [`group_affinity`], which also handles the
+/// cache-aware scaling) for larger placements.
 pub fn best_group_partition(store: &ProfileStore, models: &[ModelId]) -> Vec<usize> {
-    let node = &store.node;
-    let n = models.len();
-    assert!(n >= 1 && n <= node.llc_ways, "one way per tenant required");
-    if n == 1 {
-        return vec![node.llc_ways];
-    }
-    let share = (node.cores / n).max(1);
-    let w: Vec<usize> = models
-        .iter()
-        .map(|&m| share.min(store.profile(m).max_workers).max(1))
-        .collect();
-    let q_full: Vec<f64> = models
-        .iter()
-        .zip(&w)
-        .map(|(&m, &wi)| store.qps(m, wi, node.llc_ways))
-        .collect();
-    // Even-split fallback (remainder ways to the first tenants).
-    let mut best: Vec<usize> = (0..n)
-        .map(|i| (node.llc_ways / n + usize::from(i < node.llc_ways % n)).max(1))
-        .collect();
-    let mut best_score = -1.0;
-    for_each_ways_split(node.llc_ways, n, &mut |ks| {
-        let mut score = 0.0;
-        for (i, &m) in models.iter().enumerate() {
-            if q_full[i] > 0.0 {
-                score += store.qps(m, w[i], ks[i]) / q_full[i];
-            }
-        }
-        score /= n as f64;
-        if score > best_score {
-            best_score = score;
-            best = ks.to_vec();
-        }
-    });
-    best
+    group_affinity(store, models, ResidencyPolicy::Optimistic).split
 }
 
 /// The offline pairwise affinity table (Fig. 10a), indexed by model ids.
+/// Built under a [`ResidencyPolicy`]: the default full-residency build
+/// reproduces the seed's scores; a `Cached` build folds each model's
+/// hot-tier QPS retention into every entry, so partner choice (and the
+/// two-tenant partitions the evaluator reads back) see the trade.
 #[derive(Debug, Clone)]
 pub struct AffinityMatrix {
     entries: Vec<Vec<CoAff>>,
+    policy: ResidencyPolicy,
 }
 
 impl AffinityMatrix {
-    /// Build the full matrix from profiled tables (done once, offline).
+    /// Build the full matrix from profiled tables (done once, offline),
+    /// at full residency — seed parity.
     pub fn build(store: &ProfileStore) -> AffinityMatrix {
+        Self::build_with_policy(store, ResidencyPolicy::Optimistic)
+    }
+
+    /// Build the matrix under an explicit residency policy.
+    pub fn build_with_policy(store: &ProfileStore, policy: ResidencyPolicy) -> AffinityMatrix {
         let entries = (0..N_MODELS)
             .map(|i| {
                 (0..N_MODELS)
                     .map(|j| {
-                        co_location_affinity(store, ModelId(i as u8), ModelId(j as u8))
+                        co_location_affinity_with_policy(
+                            store,
+                            ModelId(i as u8),
+                            ModelId(j as u8),
+                            policy,
+                        )
                     })
                     .collect()
             })
             .collect();
-        AffinityMatrix { entries }
+        AffinityMatrix { entries, policy }
+    }
+
+    /// The residency policy this matrix was scored under.
+    pub fn policy(&self) -> ResidencyPolicy {
+        self.policy
     }
 
     pub fn get(&self, a: ModelId, b: ModelId) -> CoAff {
@@ -259,5 +354,69 @@ mod tests {
         let m = AffinityMatrix::build(&STORE);
         let b_ncf = m.get(id("dlrm_b"), id("ncf")).system;
         assert!(b_ncf > 0.8, "dlrm_b+ncf affinity {b_ncf}");
+    }
+
+    #[test]
+    fn group_affinity_pair_matches_pairwise_scorer() {
+        // The Optimistic special case must reproduce the seed's pairwise
+        // numbers bit-for-bit.
+        for (a, b) in [("ncf", "dlrm_d"), ("dlrm_b", "din"), ("wnd", "dien")] {
+            let pair = co_location_affinity(&STORE, id(a), id(b));
+            let g = group_affinity(&STORE, &[id(a), id(b)], ResidencyPolicy::Optimistic);
+            assert_eq!(g.llc, pair.llc, "{a}+{b}");
+            assert_eq!(g.dram, pair.dram, "{a}+{b}");
+            assert_eq!(g.system, pair.system, "{a}+{b}");
+            assert_eq!(g.cache, 1.0, "{a}+{b}: full residency has no tier");
+            assert_eq!(g.split, vec![pair.best_partition.0, pair.best_partition.1]);
+        }
+    }
+
+    #[test]
+    fn cached_matrix_folds_the_hot_tier_trade() {
+        // Full residency (Optimistic and Strict alike) scores retention 1;
+        // a Cached build discounts big-table models by their min-cache
+        // QPS retention, so the hot-tier trade reaches partner choice.
+        let opt = AffinityMatrix::build(&STORE);
+        let strict = AffinityMatrix::build_with_policy(&STORE, ResidencyPolicy::Strict);
+        let cached = AffinityMatrix::build_with_policy(&STORE, ResidencyPolicy::Cached);
+        assert_eq!(opt.policy(), ResidencyPolicy::Optimistic);
+        assert_eq!(cached.policy(), ResidencyPolicy::Cached);
+        for a in ModelId::all() {
+            for b in ModelId::all() {
+                let o = opt.get(a, b);
+                assert_eq!(o, strict.get(a, b), "{a}/{b}: Strict is fully resident");
+                let c = cached.get(a, b);
+                assert_eq!(o.cache, 1.0, "{a}/{b}");
+                assert!((0.0..=1.0).contains(&c.cache), "{a}/{b}: {}", c.cache);
+                assert!((0.0..=1.0).contains(&c.llc), "{a}/{b}: {}", c.llc);
+                assert!(c.system <= c.llc && c.system <= c.dram);
+                // A min-cache tier strictly misses for big-table models, so
+                // the retention-scaled LLC score drops below full residency.
+                assert!(c.llc <= o.llc + 1e-12, "{a}/{b}: {} vs {}", c.llc, o.llc);
+            }
+        }
+        let big = cached.get(id("dlrm_b"), id("dlrm_d"));
+        assert!(
+            big.cache < 1.0,
+            "big-table pair must pay the hot tier: {}",
+            big.cache
+        );
+        // Retention-scaled demand can only shrink: CoAff_DRAM never drops.
+        assert!(big.dram >= opt.get(id("dlrm_b"), id("dlrm_d")).dram - 1e-12);
+    }
+
+    #[test]
+    fn group_affinity_triples_are_valid() {
+        for policy in [ResidencyPolicy::Optimistic, ResidencyPolicy::Cached] {
+            let g = group_affinity(&STORE, &[id("ncf"), id("wnd"), id("din")], policy);
+            assert_eq!(g.split.len(), 3);
+            assert_eq!(g.split.iter().sum::<usize>(), STORE.node.llc_ways);
+            assert!(g.split.iter().all(|&k| k >= 1));
+            assert!((0.0..=1.0).contains(&g.system), "{policy:?}: {}", g.system);
+        }
+        // Singleton: the whole LLC, system bounded by the retention.
+        let solo = group_affinity(&STORE, &[id("dlrm_b")], ResidencyPolicy::Cached);
+        assert_eq!(solo.split, vec![STORE.node.llc_ways]);
+        assert!(solo.system <= solo.cache + 1e-12);
     }
 }

@@ -1,25 +1,38 @@
-//! Algorithm 2 — Hera's cluster-level scheduling, rebuilt on the
+//! Algorithm 2 — Hera's cluster-level scheduling, group-native on the
 //! N-tenant allocation API.
 //!
 //! Step A: for every *low* worker-scalability model, allocate co-located
-//! servers until its target QPS is met, choosing the *high*-scalability
-//! partner with the highest co-location affinity each time.
-//! Step B: remaining high-scalability models get dedicated servers with
-//! maximum workers.
+//! servers until its target QPS is met.  The seed member is the
+//! *high*-scalability partner with the highest co-location affinity (the
+//! paper's pair rule); with `max_group_size > 2` every larger candidate
+//! group drawn from the still-needy high models is enumerated, pruned by
+//! the pairwise affinity floor and DRAM feasibility, and displaces the
+//! pair only when its *useful* QPS (capped at each member's remaining
+//! demand) is strictly higher.
+//! Step B: remaining high-scalability demand gets dedicated servers with
+//! maximum workers; with `max_group_size > 2` those servers may also be
+//! shared by other still-needy high models under the same
+//! enumerate/prune/displace rule.  At the default `max_group_size = 2`
+//! both steps reduce exactly to the paper's pairs-and-solos algorithm
+//! (`tests/parity_schedule.rs`).
 //!
 //! Server evaluation goes through one entry point, [`evaluate_group`]:
 //! any number of tenants, one [`ResidencyPolicy`], one coupled-analytic
-//! proportional-scaling bisection.  Two-tenant groups reproduce the
-//! pre-redesign `evaluate_pair` / `evaluate_pair_cached` numbers exactly
-//! (`tests/parity_group.rs`).  The same machinery is reused by the
-//! baseline selection policies in `crate::baselines`.
+//! proportional-scaling bisection.  The result is permutation-invariant
+//! in the tenant order (`tests/prop_groups.rs`), which lets [`GroupMemo`]
+//! key evaluations on the *sorted* member list — one memo serves the
+//! scheduling loop, the baselines and the figure sweeps.  Two-tenant
+//! groups reproduce the pre-redesign `evaluate_pair` /
+//! `evaluate_pair_cached` numbers exactly (`tests/parity_group.rs`).
+
+use std::collections::HashMap;
 
 use crate::alloc::{Placement, ResidencyMode, ResidencyPolicy, ResourceVector, TenantAlloc};
 use crate::config::{ModelId, NodeConfig, N_MODELS};
 use crate::profiler::ProfileStore;
 use crate::server_sim::analytic::{solve, AnalyticTenant};
 
-use super::affinity::{best_group_partition, AffinityMatrix};
+use super::affinity::{group_affinity, AffinityMatrix};
 
 /// The scheduler's output: server list + per-model serviced QPS.
 #[derive(Debug, Clone)]
@@ -47,7 +60,8 @@ impl ClusterPlan {
 /// evenly across the group; if one model's OOM wall prevents it from
 /// using its share, the others take the idle cores.  Ways come from the
 /// Algorithm-1 best partition (the pairwise matrix for two tenants,
-/// [`best_group_partition`] beyond).  The group's sustained QPS is the
+/// the policy-aware [`group_affinity`] split beyond).  The group's
+/// sustained QPS is the
 /// largest proportional scaling of the members' standalone rates that
 /// keeps *every* SLA feasible under the coupled analytic model.
 ///
@@ -57,19 +71,47 @@ impl ClusterPlan {
 /// workers until the group jointly fits node DRAM, and
 /// [`ResidencyPolicy::Cached`] deploys min-cache-for-SLA hot tiers with
 /// the joint fit enforced (the old `evaluate_pair_cached`).
+///
+/// The evaluation runs in canonical (sorted-by-model) order, so the
+/// per-tenant result depends only on the group's *membership*, never on
+/// the argument order; tenants are emitted back in the caller's order.
 pub fn evaluate_group(
     store: &ProfileStore,
     matrix: &AffinityMatrix,
     models: &[ModelId],
     policy: ResidencyPolicy,
 ) -> Placement {
-    let node = &store.node;
     assert!(!models.is_empty(), "a group needs at least one tenant");
     assert!(
         models.len() <= crate::server_sim::MAX_TENANTS,
         "at most {} tenants per node",
         crate::server_sim::MAX_TENANTS
     );
+    let mut order: Vec<usize> = (0..models.len()).collect();
+    order.sort_by_key(|&i| models[i]);
+    let sorted: Vec<ModelId> = order.iter().map(|&i| models[i]).collect();
+    let canonical = evaluate_group_canonical(store, matrix, &sorted, policy);
+    let mut tenants: Vec<Option<TenantAlloc>> = vec![None; models.len()];
+    for (&slot, t) in order.iter().zip(canonical.tenants) {
+        tenants[slot] = Some(t);
+    }
+    Placement {
+        tenants: tenants
+            .into_iter()
+            .map(|t| t.expect("every slot filled"))
+            .collect(),
+    }
+}
+
+/// [`evaluate_group`] after canonical ordering — the single evaluator
+/// body shared by every policy and group size.
+fn evaluate_group_canonical(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    models: &[ModelId],
+    policy: ResidencyPolicy,
+) -> Placement {
+    let node = &store.node;
     if models.len() == 1 {
         // A group of one is a dedicated server; under `Cached` it still
         // honors the policy (hot tier instead of full residency).
@@ -134,13 +176,15 @@ pub fn evaluate_group(
         }
     }
 
-    // LLC partition: the pairwise Algorithm-1 matrix for two tenants,
-    // the N-ary generalization beyond.
+    // LLC partition: the pairwise Algorithm-1 matrix for two tenants
+    // (whatever policy it was scored under — parity tests pass the seed's
+    // full-residency matrix), the policy-aware N-ary generalization
+    // beyond.
     let ways: Vec<usize> = if n == 2 {
         let (ka, kb) = matrix.get(models[0], models[1]).best_partition;
         vec![ka, kb]
     } else {
-        best_group_partition(store, models)
+        group_affinity(store, models, policy).split
     };
 
     // Standalone sustainable rates.  Full residency reads the profiled
@@ -293,7 +337,97 @@ pub fn evaluate_solo_cached(store: &ProfileStore, m: ModelId) -> Placement {
     }
 }
 
-/// Hera's cluster scheduler (Algorithm 2).
+/// Memoized group evaluation, keyed by the *sorted* member list plus the
+/// residency policy.  [`evaluate_group`] is permutation-invariant and
+/// deterministic, so one entry serves every argument order; the same
+/// memo is shared by the scheduling loop ([`ClusterScheduler`]), the
+/// baseline policies and the figure sweeps.  Entries are specific to the
+/// (store, matrix) they were evaluated against — do not reuse one memo
+/// across different profile stores or affinity matrices.
+#[derive(Debug, Default)]
+pub struct GroupMemo {
+    entries: HashMap<(Vec<ModelId>, ResidencyPolicy), Placement>,
+}
+
+impl GroupMemo {
+    pub fn new() -> GroupMemo {
+        GroupMemo::default()
+    }
+
+    /// Evaluate (or recall) `models` under `policy`.  Members must be
+    /// distinct.  Entries are stored in canonical (sorted) order and
+    /// re-emitted in the caller's member order on every call — hit or
+    /// miss — preserving [`evaluate_group`]'s caller-order contract.
+    pub fn evaluate(
+        &mut self,
+        store: &ProfileStore,
+        matrix: &AffinityMatrix,
+        models: &[ModelId],
+        policy: ResidencyPolicy,
+    ) -> Placement {
+        let mut key: Vec<ModelId> = models.to_vec();
+        key.sort();
+        let stored = self
+            .entries
+            .entry((key.clone(), policy))
+            .or_insert_with(|| evaluate_group(store, matrix, &key, policy));
+        Placement {
+            tenants: models
+                .iter()
+                .map(|&m| *stored.get(m).expect("every member was evaluated"))
+                .collect(),
+        }
+    }
+
+    /// Distinct (group, policy) evaluations performed so far.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Every combination of `min_size..=max_size` members drawn from `pool`,
+/// sizes ascending and lexicographic (by pool position) within a size —
+/// for `min_size == max_size == 2` exactly the seed's pair enumeration
+/// order.  Shared by the Hera scheduler and the Random baselines.
+pub fn enumerate_groups(
+    pool: &[ModelId],
+    min_size: usize,
+    max_size: usize,
+) -> Vec<Vec<ModelId>> {
+    fn rec(
+        pool: &[ModelId],
+        start: usize,
+        left: usize,
+        cur: &mut Vec<ModelId>,
+        out: &mut Vec<Vec<ModelId>>,
+    ) {
+        if left == 0 {
+            out.push(cur.clone());
+            return;
+        }
+        for i in start..pool.len() {
+            // Not enough members left to finish this combination.
+            if pool.len() - i < left {
+                break;
+            }
+            cur.push(pool[i]);
+            rec(pool, i + 1, left - 1, cur, out);
+            cur.pop();
+        }
+    }
+    let mut out = Vec::new();
+    let mut cur = Vec::new();
+    for size in min_size.max(1)..=max_size.min(pool.len()) {
+        rec(pool, 0, size, &mut cur, &mut out);
+    }
+    out
+}
+
+/// Hera's cluster scheduler (Algorithm 2), group-native.
 pub struct ClusterScheduler<'a> {
     pub store: &'a ProfileStore,
     pub matrix: &'a AffinityMatrix,
@@ -303,6 +437,15 @@ pub struct ClusterScheduler<'a> {
     /// residency (seed parity, default), strict joint-DRAM full
     /// residency, or `embedcache` hot tiers.
     pub residency: ResidencyPolicy,
+    /// Largest co-located group the scheduler may deploy.  The default
+    /// of 2 reproduces the paper's pairs-and-solos plans exactly; 3+
+    /// unlocks triples of small-footprint high-scalability models when
+    /// targets skew toward many small tenants.
+    pub max_group: usize,
+    /// Pairwise system-affinity floor for *grown* groups (size > 2): a
+    /// candidate is pruned when any internal pair scores below it.  The
+    /// affinity-chosen seed pair is never subject to the floor.
+    pub affinity_floor: f64,
 }
 
 impl<'a> ClusterScheduler<'a> {
@@ -312,6 +455,8 @@ impl<'a> ClusterScheduler<'a> {
             matrix,
             max_servers: 100_000,
             residency: ResidencyPolicy::Optimistic,
+            max_group: 2,
+            affinity_floor: 0.25,
         }
     }
 
@@ -321,19 +466,125 @@ impl<'a> ClusterScheduler<'a> {
         self
     }
 
+    /// Cap the co-located group size (clamped to at least 1; 2 is the
+    /// paper-parity default).
+    pub fn with_max_group(mut self, n: usize) -> Self {
+        self.max_group = n.max(1);
+        self
+    }
+
+    /// Set the pairwise affinity floor for grown groups.
+    pub fn with_affinity_floor(mut self, floor: f64) -> Self {
+        self.affinity_floor = floor;
+        self
+    }
+
+    /// Whether a grown candidate group survives pruning: every internal
+    /// pair must clear the affinity floor, and (outside the seed's
+    /// DRAM-blind `Optimistic` accounting) the group must fit node DRAM
+    /// at one worker per tenant — otherwise the evaluator could only
+    /// shrink it into the ground.
+    fn group_admissible(&self, group: &[ModelId]) -> bool {
+        for i in 0..group.len() {
+            for j in (i + 1)..group.len() {
+                if self.matrix.get(group[i], group[j]).system < self.affinity_floor {
+                    return false;
+                }
+            }
+        }
+        if self.residency != ResidencyPolicy::Optimistic {
+            let bytes: f64 = group
+                .iter()
+                .map(|&m| match self.residency {
+                    ResidencyPolicy::Cached => {
+                        ResidencyMode::Cached(self.store.min_cache_for_sla(m))
+                            .worker_bytes(m)
+                    }
+                    _ => m.spec().worker_bytes(),
+                })
+                .sum();
+            if bytes > self.store.node.dram_capacity_gb * 1e9 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Enumerate grown groups `anchor ∪ S` with `S` drawn from `pool`
+    /// (`|S| >= min_add`, total size capped at `max_group`), prune them,
+    /// and return the admissible candidate with the highest *useful* QPS
+    /// — each member's sustained QPS capped at its remaining demand — if
+    /// it strictly beats `incumbent`.
+    fn best_grown_group(
+        &self,
+        memo: &mut GroupMemo,
+        incumbent: Placement,
+        anchor: &[ModelId],
+        pool: &[ModelId],
+        min_add: usize,
+        serviced: &[f64; N_MODELS],
+        targets: &[f64; N_MODELS],
+    ) -> Placement {
+        let remaining =
+            |m: ModelId| (targets[m.index()] - serviced[m.index()]).max(0.0);
+        let useful = |p: &Placement| -> f64 {
+            p.tenants.iter().map(|t| t.qps.min(remaining(t.model))).sum()
+        };
+        let max_add = self.max_group.saturating_sub(anchor.len());
+        let mut best = incumbent;
+        let mut best_useful = useful(&best);
+        for cand in enumerate_groups(pool, min_add, max_add) {
+            let mut group = anchor.to_vec();
+            group.extend_from_slice(&cand);
+            if !self.group_admissible(&group) {
+                continue;
+            }
+            let p = memo.evaluate(self.store, self.matrix, &group, self.residency);
+            // A grown group must still serve the anchor — a candidate
+            // that starves it (e.g. joint-DRAM shrink to a zero-QPS
+            // slice) could otherwise win on its partners' useful QPS and
+            // then abort the schedule at the anchor-progress check.
+            if p.qps_for(anchor[0]) <= 0.0 {
+                continue;
+            }
+            let u = useful(&p);
+            if u > best_useful {
+                best_useful = u;
+                best = p;
+            }
+        }
+        best
+    }
+
     /// Allocate servers until every model's target QPS is serviced.
     pub fn schedule(&self, targets: &[f64; N_MODELS]) -> anyhow::Result<ClusterPlan> {
+        let mut memo = GroupMemo::new();
+        self.schedule_with_memo(targets, &mut memo)
+    }
+
+    /// [`ClusterScheduler::schedule`] against a caller-owned [`GroupMemo`]
+    /// so repeated runs (figure sweeps over targets, policies and group
+    /// sizes) share evaluations.
+    pub fn schedule_with_memo(
+        &self,
+        targets: &[f64; N_MODELS],
+        memo: &mut GroupMemo,
+    ) -> anyhow::Result<ClusterPlan> {
+        anyhow::ensure!(
+            (1..=crate::server_sim::MAX_TENANTS).contains(&self.max_group)
+                && self.max_group <= self.store.node.llc_ways,
+            "max_group {} outside 1..={}",
+            self.max_group,
+            crate::server_sim::MAX_TENANTS.min(self.store.node.llc_ways)
+        );
         let (low, high) = self.store.partition_by_scalability();
         let mut plan = ClusterPlan {
             servers: Vec::new(),
             serviced: [0.0; N_MODELS],
         };
-        // evaluate_group runs several analytic bisections per call and is
-        // deterministic per (group, policy) — memoize it across the loop.
-        let mut pair_cache: std::collections::HashMap<(ModelId, ModelId), Placement> =
-            std::collections::HashMap::new();
 
-        // Step A: low-scalability models first, best-affinity partners.
+        // Step A: low-scalability models first, seeded with the
+        // best-affinity partner, grown beyond pairs when allowed.
         for &mi in &low {
             while plan.serviced[mi.index()] < targets[mi.index()] {
                 anyhow::ensure!(
@@ -342,14 +593,14 @@ impl<'a> ClusterScheduler<'a> {
                 );
                 // Only co-locate with partners that still need QPS: a
                 // zero-demand partner would waste the low model's other
-                // half of the machine (a dedicated max-worker server
+                // share of the machine (a dedicated max-worker server
                 // serves it strictly better).
                 let needy: Vec<ModelId> = high
                     .iter()
                     .copied()
                     .filter(|m| plan.serviced[m.index()] < targets[m.index()])
                     .collect();
-                if needy.is_empty() {
+                if needy.is_empty() || self.max_group < 2 {
                     let server = evaluate_solo(self.store, mi);
                     let q = server.qps_for(mi);
                     anyhow::ensure!(q > 0.0, "model {mi} has zero isolated max load");
@@ -361,31 +612,68 @@ impl<'a> ClusterScheduler<'a> {
                     .matrix
                     .best_partner(mi, &needy)
                     .ok_or_else(|| anyhow::anyhow!("no partner for {mi}"))?;
-                let server = pair_cache
-                    .entry((mi, mj))
-                    .or_insert_with(|| {
-                        evaluate_group(self.store, self.matrix, &[mi, mj], self.residency)
-                    })
-                    .clone();
-                let (qi, qj) = (server.qps_for(mi), server.qps_for(mj));
-                anyhow::ensure!(qi > 0.0, "pair ({mi},{mj}) cannot serve {mi}");
-                plan.serviced[mi.index()] += qi;
-                plan.serviced[mj.index()] += qj;
+                let pair =
+                    memo.evaluate(self.store, self.matrix, &[mi, mj], self.residency);
+                // Candidate groups {mi} ∪ S beyond the affinity pair: S of
+                // size >= 2 so the paper's pair choice is never second-
+                // guessed by a different partner, only *extended*.
+                let server = self.best_grown_group(
+                    memo,
+                    pair,
+                    &[mi],
+                    &needy,
+                    2,
+                    &plan.serviced,
+                    targets,
+                );
+                anyhow::ensure!(
+                    server.qps_for(mi) > 0.0,
+                    "group {server} cannot serve {mi}"
+                );
+                for t in &server.tenants {
+                    plan.serviced[t.model.index()] += t.qps;
+                }
                 plan.servers.push(server);
             }
         }
 
-        // Step B: dedicated servers for remaining high-scalability demand.
+        // Step B: dedicated servers for remaining high-scalability demand;
+        // beyond the paper's group size they may be shared with other
+        // still-needy high models.
         for &m in &high {
             while plan.serviced[m.index()] < targets[m.index()] {
                 anyhow::ensure!(
                     plan.servers.len() < self.max_servers,
                     "server budget exhausted for {m}"
                 );
-                let server = evaluate_solo(self.store, m);
-                let q = server.qps_for(m);
-                anyhow::ensure!(q > 0.0, "model {m} has zero isolated max load");
-                plan.serviced[m.index()] += q;
+                let solo = evaluate_solo(self.store, m);
+                let server = if self.max_group > 2 {
+                    let needy: Vec<ModelId> = high
+                        .iter()
+                        .copied()
+                        .filter(|h| {
+                            *h != m && plan.serviced[h.index()] < targets[h.index()]
+                        })
+                        .collect();
+                    self.best_grown_group(
+                        memo,
+                        solo,
+                        &[m],
+                        &needy,
+                        1,
+                        &plan.serviced,
+                        targets,
+                    )
+                } else {
+                    solo
+                };
+                anyhow::ensure!(
+                    server.qps_for(m) > 0.0,
+                    "model {m} has zero isolated max load"
+                );
+                for t in &server.tenants {
+                    plan.serviced[t.model.index()] += t.qps;
+                }
                 plan.servers.push(server);
             }
         }
@@ -597,6 +885,154 @@ mod tests {
         // Optimistic / Strict singletons stay fully resident.
         let o = evaluate_group(&STORE, &MATRIX, &[id("dlrm_b")], ResidencyPolicy::Optimistic);
         assert_eq!(o.tenants[0].rv.cache_bytes(), None);
+    }
+
+    #[test]
+    fn enumerate_groups_orders_and_counts() {
+        let pool: Vec<ModelId> = ModelId::all().take(4).collect();
+        // Size-2 enumeration matches the seed's nested-loop pair order.
+        let pairs = enumerate_groups(&pool, 2, 2);
+        let mut expect = Vec::new();
+        for i in 0..pool.len() {
+            for j in (i + 1)..pool.len() {
+                expect.push(vec![pool[i], pool[j]]);
+            }
+        }
+        assert_eq!(pairs, expect);
+        // Sizes ascend; counts are binomial.
+        let all = enumerate_groups(&pool, 1, 3);
+        assert_eq!(all.len(), 4 + 6 + 4);
+        assert!(all.windows(2).all(|w| w[0].len() <= w[1].len()));
+        // Degenerate ranges are empty, not panics.
+        assert!(enumerate_groups(&pool, 2, 1).is_empty());
+        assert!(enumerate_groups(&[], 1, 3).is_empty());
+        assert_eq!(enumerate_groups(&pool, 5, 8), Vec::<Vec<ModelId>>::new());
+    }
+
+    #[test]
+    fn group_memo_is_order_blind_and_reused() {
+        let mut memo = GroupMemo::new();
+        assert!(memo.is_empty());
+        let a = memo.evaluate(
+            &STORE,
+            &MATRIX,
+            &[id("ncf"), id("dlrm_d")],
+            ResidencyPolicy::Optimistic,
+        );
+        assert_eq!(memo.len(), 1);
+        // The reversed order hits the same entry (sorted key) and the
+        // per-model allocations agree because evaluate_group is
+        // permutation-invariant.
+        let b = memo.evaluate(
+            &STORE,
+            &MATRIX,
+            &[id("dlrm_d"), id("ncf")],
+            ResidencyPolicy::Optimistic,
+        );
+        assert_eq!(memo.len(), 1);
+        for m in [id("ncf"), id("dlrm_d")] {
+            assert_eq!(a.get(m).unwrap().rv, b.get(m).unwrap().rv);
+            assert_eq!(a.get(m).unwrap().qps, b.get(m).unwrap().qps);
+        }
+        // A different policy is a different entry.
+        memo.evaluate(
+            &STORE,
+            &MATRIX,
+            &[id("ncf"), id("dlrm_d")],
+            ResidencyPolicy::Cached,
+        );
+        assert_eq!(memo.len(), 2);
+    }
+
+    #[test]
+    fn max_group_one_never_colocates() {
+        let targets = scaled_targets(&STORE, 1.0);
+        let plan = ClusterScheduler::new(&STORE, &MATRIX)
+            .with_max_group(1)
+            .schedule(&targets)
+            .unwrap();
+        assert!(plan.meets(&targets));
+        assert!(plan.servers.iter().all(|s| !s.is_colocated()));
+    }
+
+    #[test]
+    fn grouped_schedules_deploy_larger_groups_within_the_cap() {
+        // A fragmented mix (every model at a small slice of its isolated
+        // max) is where density beyond pairs pays off.
+        let targets = scaled_targets(&STORE, 0.15);
+        let plan = ClusterScheduler::new(&STORE, &MATRIX)
+            .with_max_group(3)
+            .schedule(&targets)
+            .unwrap();
+        assert!(plan.meets(&targets));
+        assert!(
+            plan.servers.iter().all(|s| s.tenants.len() <= 3),
+            "cap respected"
+        );
+        assert!(
+            plan.servers.iter().any(|s| s.tenants.len() == 3),
+            "fragmented targets must produce at least one triple"
+        );
+    }
+
+    #[test]
+    fn triples_beat_pair_only_plans_for_fragmented_cached_targets() {
+        // The ISSUE's acceptance scenario: under `Cached`, allowing
+        // triples yields a plan with fewer servers than the best
+        // pair-only plan for a target mix of many small tenants (each
+        // model at 15% of its isolated max load).
+        let targets = scaled_targets(&STORE, 0.15);
+        let pair_only = ClusterScheduler::new(&STORE, &MATRIX)
+            .with_residency(ResidencyPolicy::Cached)
+            .schedule(&targets)
+            .unwrap();
+        let grouped = ClusterScheduler::new(&STORE, &MATRIX)
+            .with_residency(ResidencyPolicy::Cached)
+            .with_max_group(3)
+            .schedule(&targets)
+            .unwrap();
+        assert!(pair_only.meets(&targets) && grouped.meets(&targets));
+        assert!(
+            grouped.num_servers() < pair_only.num_servers(),
+            "triples must save servers: {} vs pair-only {}",
+            grouped.num_servers(),
+            pair_only.num_servers()
+        );
+        // Cached co-located groups honor the joint-DRAM fit.
+        for s in grouped.servers.iter().filter(|s| s.is_colocated()) {
+            assert!(s.fits_node(&STORE.node), "{s}");
+        }
+        // And grouping never hurts under the seed's optimistic accounting
+        // either for this mix.
+        let opt_pairs = ClusterScheduler::new(&STORE, &MATRIX)
+            .schedule(&targets)
+            .unwrap();
+        let opt_grouped = ClusterScheduler::new(&STORE, &MATRIX)
+            .with_max_group(3)
+            .schedule(&targets)
+            .unwrap();
+        assert!(opt_grouped.num_servers() <= opt_pairs.num_servers());
+    }
+
+    #[test]
+    fn shared_memo_reproduces_per_run_plans() {
+        // schedule_with_memo across group sizes must match fresh runs.
+        let targets = scaled_targets(&STORE, 0.5);
+        let mut memo = GroupMemo::new();
+        for max_group in [2usize, 3] {
+            let sched = ClusterScheduler::new(&STORE, &MATRIX).with_max_group(max_group);
+            let shared = sched.schedule_with_memo(&targets, &mut memo).unwrap();
+            let fresh = sched.schedule(&targets).unwrap();
+            assert_eq!(shared.num_servers(), fresh.num_servers());
+            for m in ModelId::all() {
+                assert!(
+                    (shared.serviced[m.index()] - fresh.serviced[m.index()]).abs()
+                        < 1e-9,
+                    "{m} serviced differs under a shared memo"
+                );
+            }
+        }
+        assert!(!memo.is_empty());
     }
 
     #[test]

@@ -3,12 +3,16 @@
 //! * [`affinity`] — **Algorithm 1**: the analytical co-location affinity
 //!   model (CoAff_LLC from the profiled LLC-sensitivity tables,
 //!   CoAff_DRAM from profiled bandwidth demands, system affinity =
-//!   min of the two), the full pairwise matrix of Fig. 10(a), and the
-//!   N-ary LLC partition chooser behind group placements.
+//!   min of the two), generalized to N-tenant groups and to `embedcache`
+//!   residency ([`GroupAffinity`] folds each tenant's min-cache QPS
+//!   retention into steps A–C), plus the full pairwise matrix of
+//!   Fig. 10(a) built under any [`ResidencyPolicy`].
 //! * [`cluster`] — **Algorithm 2**: the cluster-level model selection /
-//!   server allocation scheduler (low-scalability models first, paired
-//!   with their highest-affinity high-scalability partner), built on the
-//!   N-tenant [`evaluate_group`] evaluator and [`Placement`] /
+//!   server allocation scheduler (low-scalability models first, seeded
+//!   with their highest-affinity high-scalability partner and grown to
+//!   larger groups up to `max_group_size` when that strictly raises
+//!   useful QPS), built on the N-tenant [`evaluate_group`] evaluator,
+//!   the sorted-key [`GroupMemo`], and [`Placement`] /
 //!   [`ResourceVector`] allocation types (see [`crate::alloc`]).
 //! * [`rmu`] — **Algorithm 3**: the node-level resource management unit —
 //!   the monitor-and-adjust feedback loop with urgency-scaled worker
@@ -20,6 +24,11 @@ pub mod cluster;
 pub mod rmu;
 
 pub use crate::alloc::{Placement, ResidencyMode, ResidencyPolicy, ResourceVector, TenantAlloc};
-pub use affinity::{best_group_partition, AffinityMatrix, CoAff};
-pub use cluster::{evaluate_group, ClusterPlan, ClusterScheduler};
+pub use affinity::{
+    best_group_partition, co_location_affinity, group_affinity, AffinityMatrix, CoAff,
+    GroupAffinity,
+};
+pub use cluster::{
+    enumerate_groups, evaluate_group, ClusterPlan, ClusterScheduler, GroupMemo,
+};
 pub use rmu::HeraRmu;

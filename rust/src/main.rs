@@ -15,7 +15,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use hera::alloc::ResidencyPolicy;
-use hera::baselines::SelectionPolicy;
+use hera::baselines::{SelectionOpts, SelectionPolicy};
 use hera::cli::Args;
 use hera::config::{ModelId, NodeConfig, N_MODELS};
 use hera::coordinator::{run_load, Coordinator, LoadGenSpec, TenantConfig};
@@ -64,13 +64,13 @@ fn print_help() {
 
 USAGE: hera <subcommand> [flags]
 
-  figures  [--fig ID|--all] [--out DIR] [--fast]   regenerate paper figures
+  figures  [--fig ID|--all] [--out DIR] [--fast] [--max-group N]   regenerate paper figures
   profile  [--out FILE]                            build + save profiling tables
   golden                                           verify python<->rust numerics
   serve    --models a,b --workers n,m --qps x,y [--secs S] [--http 127.0.0.1:8080]
   simulate --models a,b --workers n,m --ways p,q --qps x,y [--secs S]
-  cluster  [--target QPS] [--policy name] [--residency optimistic|strict|cached]
-  group-sweep [--models a,b,c] [--residency MODE]  evaluate N-tenant co-location
+  cluster  [--target QPS] [--policy name] [--residency optimistic|strict|cached] [--max-group N]
+  group-sweep [--models a,b,c] [--residency MODE] [--max-group N]  evaluate N-tenant co-location
   cache-sweep [--model m] [--workers N] [--ways K] [--load-frac F] [--points P]
   bench-engine [--models a,b] [--batch B] [--iters N]"
     );
@@ -78,7 +78,8 @@ USAGE: hera <subcommand> [flags]
 
 fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     let out = Path::new(args.get_or("out", "results"));
-    let ctx = FigureContext::new(out, args.has("fast"));
+    let ctx = FigureContext::new(out, args.has("fast"))
+        .with_max_group(parse_max_group(args, 3)?);
     match args.get("fig") {
         Some(id) => ctx.run(id),
         None => ctx.run_all(),
@@ -256,6 +257,17 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Shared `--max-group` flag: the largest co-located group the scheduler
+/// and sweeps may consider (2 = the paper's pairs).
+fn parse_max_group(args: &Args, default: usize) -> anyhow::Result<usize> {
+    let n = args.get_usize("max-group", default)?;
+    anyhow::ensure!(
+        (1..=8).contains(&n),
+        "--max-group expects 1..=8, got {n}"
+    );
+    Ok(n)
+}
+
 /// Shared `--residency` flag (with `--cache-aware` kept as an alias for
 /// the cached mode).
 fn parse_residency(args: &Args) -> anyhow::Result<ResidencyPolicy> {
@@ -280,13 +292,21 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         _ => SelectionPolicy::Hera,
     };
     let residency = parse_residency(args)?;
+    let max_group = parse_max_group(args, 2)?;
     let store = ProfileStore::build(&NodeConfig::paper_default());
-    let matrix = AffinityMatrix::build(&store);
+    // Cache-aware Algorithm 1: score the affinity matrix under the same
+    // residency policy the scheduler deploys with.
+    let matrix = AffinityMatrix::build_with_policy(&store, residency);
     let targets = [target; N_MODELS];
     let t0 = std::time::Instant::now();
-    let plan = policy.schedule_with_residency(&store, &matrix, &targets, 42, residency)?;
+    let opts = SelectionOpts {
+        residency,
+        max_group,
+    };
+    let plan = policy.schedule_with(&store, &matrix, &targets, 42, opts)?;
     println!(
-        "{}: {} servers for {target:.0} QPS/model (scheduled in {:.1} ms, {residency:?} residency)",
+        "{}: {} servers for {target:.0} QPS/model (scheduled in {:.1} ms, \
+         {residency:?} residency, groups up to {max_group})",
         policy.name(),
         plan.num_servers(),
         t0.elapsed().as_secs_f64() * 1e3
@@ -316,17 +336,19 @@ fn cmd_group_sweep(args: &Args) -> anyhow::Result<()> {
         })
         .collect::<anyhow::Result<_>>()?;
     let residency = parse_residency(args)?;
+    let max_group = parse_max_group(args, names.len().min(8))?;
     let store = ProfileStore::build(&NodeConfig::paper_default());
-    let matrix = AffinityMatrix::build(&store);
+    let matrix = AffinityMatrix::build_with_policy(&store, residency);
     println!(
-        "group sweep over {{{}}} ({residency:?} residency): every subset as one node",
+        "group sweep over {{{}}} ({residency:?} residency): every subset of \
+         <= {max_group} members as one node",
         names.join(",")
     );
     println!(
         "{:>28} {:>10} {:>8} {:>9} {:>5}  allocation",
         "members", "agg qps", "norm %", "dram GB", "fits"
     );
-    for p in hera::figures::sweep_groups(&store, &matrix, &models, residency) {
+    for p in hera::figures::sweep_groups(&store, &matrix, &models, residency, max_group) {
         let members = p
             .models()
             .iter()

@@ -201,11 +201,33 @@ fn two_tenant_cached_parity_all_table1_pairs() {
 #[test]
 fn parity_holds_in_reversed_tenant_order() {
     // The evaluator must not care which side of the old pair API a model
-    // sat on.
+    // sat on: evaluation is canonical (sorted by model id), so the
+    // reversed call matches the reference computed in canonical order,
+    // with the tenants emitted in the caller's order.
     let a = ModelId::from_name("dlrm_d").unwrap();
     let b = ModelId::from_name("ncf").unwrap();
-    let r = reference_pair(&STORE, &MATRIX, b, a);
-    assert_matches(&r, [b, a], ResidencyPolicy::Optimistic);
+    assert!(a < b, "canonical order for this pair is (dlrm_d, ncf)");
+    let r = reference_pair(&STORE, &MATRIX, a, b);
+    let reversed = evaluate_group(&STORE, &MATRIX, &[b, a], ResidencyPolicy::Optimistic);
+    assert_eq!(reversed.tenants[0].model, b, "caller order is preserved");
+    assert_eq!(reversed.tenants[1].model, a);
+    for (i, m) in [a, b].iter().enumerate() {
+        let t = reversed.get(*m).expect("both tenants present");
+        assert_eq!(t.rv.workers, r.workers[i], "{m}: workers");
+        assert_eq!(t.rv.ways, r.ways[i], "{m}: ways");
+        assert!(
+            (t.qps - r.qps[i]).abs() <= 1e-6 * r.qps[i].abs().max(1.0),
+            "{m}: qps {} vs reference {}",
+            t.qps,
+            r.qps[i]
+        );
+    }
+    // And the forward call agrees with the reversed one per model.
+    let forward = evaluate_group(&STORE, &MATRIX, &[a, b], ResidencyPolicy::Optimistic);
+    for m in [a, b] {
+        assert_eq!(forward.get(m).unwrap().rv, reversed.get(m).unwrap().rv);
+        assert_eq!(forward.get(m).unwrap().qps, reversed.get(m).unwrap().qps);
+    }
 }
 
 #[test]

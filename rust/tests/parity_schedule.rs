@@ -1,0 +1,163 @@
+//! Golden parity for the group-native scheduler: at its defaults
+//! (`max_group_size = 2`, `ResidencyPolicy::Optimistic`) the rewritten
+//! `ClusterScheduler::schedule` must reproduce the pre-refactor
+//! pairs-and-solos loop exactly — same server sequence, same per-server
+//! allocations, same serviced vector.
+//!
+//! The reference below is a verbatim transcription of the seed Algorithm
+//! 2 loop (pair-keyed memo, best-affinity partner in step A, dedicated
+//! solos in step B), kept here — not in the crate — so the production
+//! path has exactly one scheduler.  It leans on the same `evaluate_group`
+//! evaluator, so what this file pins down is the *scheduling logic*: the
+//! group enumerator, the sorted-key memo and the growth rule must all be
+//! invisible at the paper-parity defaults.
+
+use std::collections::HashMap;
+
+use hera::alloc::{Placement, ResidencyPolicy};
+use hera::config::{ModelId, NodeConfig, N_MODELS};
+use hera::hera::cluster::{evaluate_group, evaluate_solo, ClusterScheduler};
+use hera::hera::AffinityMatrix;
+use hera::profiler::ProfileStore;
+use once_cell::sync::Lazy;
+
+static STORE: Lazy<ProfileStore> =
+    Lazy::new(|| ProfileStore::build(&NodeConfig::paper_default()));
+static MATRIX: Lazy<AffinityMatrix> = Lazy::new(|| AffinityMatrix::build(&STORE));
+
+struct RefPlan {
+    servers: Vec<Placement>,
+    serviced: [f64; N_MODELS],
+}
+
+/// Verbatim pre-refactor `ClusterScheduler::schedule` (pairs + solos,
+/// optimistic residency).
+fn reference_schedule(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    targets: &[f64; N_MODELS],
+) -> RefPlan {
+    let (low, high) = store.partition_by_scalability();
+    let mut plan = RefPlan {
+        servers: Vec::new(),
+        serviced: [0.0; N_MODELS],
+    };
+    let mut pair_cache: HashMap<(ModelId, ModelId), Placement> = HashMap::new();
+
+    for &mi in &low {
+        while plan.serviced[mi.index()] < targets[mi.index()] {
+            let needy: Vec<ModelId> = high
+                .iter()
+                .copied()
+                .filter(|m| plan.serviced[m.index()] < targets[m.index()])
+                .collect();
+            if needy.is_empty() {
+                let server = evaluate_solo(store, mi);
+                plan.serviced[mi.index()] += server.qps_for(mi);
+                plan.servers.push(server);
+                continue;
+            }
+            let mj = matrix.best_partner(mi, &needy).expect("non-empty needy");
+            let server = pair_cache
+                .entry((mi, mj))
+                .or_insert_with(|| {
+                    evaluate_group(store, matrix, &[mi, mj], ResidencyPolicy::Optimistic)
+                })
+                .clone();
+            plan.serviced[mi.index()] += server.qps_for(mi);
+            plan.serviced[mj.index()] += server.qps_for(mj);
+            plan.servers.push(server);
+        }
+    }
+    for &m in &high {
+        while plan.serviced[m.index()] < targets[m.index()] {
+            let server = evaluate_solo(store, m);
+            plan.serviced[m.index()] += server.qps_for(m);
+            plan.servers.push(server);
+        }
+    }
+    plan
+}
+
+/// Server-by-server comparison, insensitive to the order tenants are
+/// listed within one placement (the memo evaluates in canonical model
+/// order; the seed listed the low model first — same allocations either
+/// way).
+fn assert_plans_match(label: &str, got: &[Placement], want: &[Placement]) {
+    assert_eq!(got.len(), want.len(), "{label}: server count");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let mut gm = g.models();
+        let mut wm = w.models();
+        gm.sort();
+        wm.sort();
+        assert_eq!(gm, wm, "{label}: server {i} members ({g} vs {w})");
+        for m in &gm {
+            let gt = g.get(*m).unwrap();
+            let wt = w.get(*m).unwrap();
+            assert_eq!(gt.rv.workers, wt.rv.workers, "{label}: server {i} {m} workers");
+            assert_eq!(gt.rv.ways, wt.rv.ways, "{label}: server {i} {m} ways");
+            assert_eq!(gt.rv.residency, wt.rv.residency, "{label}: server {i} {m}");
+            assert!(
+                (gt.qps - wt.qps).abs() <= 1e-9 * wt.qps.abs().max(1.0),
+                "{label}: server {i} {m} qps {} vs {}",
+                gt.qps,
+                wt.qps
+            );
+        }
+    }
+}
+
+#[test]
+fn default_scheduler_reproduces_the_pair_loop() {
+    let mut mixes: Vec<(String, [f64; N_MODELS])> = vec![
+        ("uniform_1000".into(), [1000.0; N_MODELS]),
+        ("zero".into(), [0.0; N_MODELS]),
+    ];
+    for frac in [0.5, 1.0, 2.5] {
+        let mut t = [0.0; N_MODELS];
+        for id in ModelId::all() {
+            t[id.index()] = frac * STORE.profile(id).max_load();
+        }
+        mixes.push((format!("scaled_{frac}"), t));
+    }
+    // A skewed mix (Fig. 16 style): demand concentrated on the lows.
+    let (low, high) = STORE.partition_by_scalability();
+    let mut skew = [0.0; N_MODELS];
+    for &m in &low {
+        skew[m.index()] = 12_000.0 / low.len() as f64;
+    }
+    for &m in &high {
+        skew[m.index()] = 4_000.0 / high.len() as f64;
+    }
+    mixes.push(("skewed_low".into(), skew));
+
+    for (label, targets) in &mixes {
+        let want = reference_schedule(&STORE, &MATRIX, targets);
+        let got = ClusterScheduler::new(&STORE, &MATRIX)
+            .schedule(targets)
+            .expect("schedulable targets");
+        assert_plans_match(label, &got.servers, &want.servers);
+        for m in ModelId::all() {
+            assert!(
+                (got.serviced[m.index()] - want.serviced[m.index()]).abs()
+                    <= 1e-9 * want.serviced[m.index()].abs().max(1.0),
+                "{label}: serviced[{m}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn explicit_pair_defaults_change_nothing() {
+    // Spelling out the defaults (max_group 2, any affinity floor) must
+    // not alter the plan: the floor only gates *grown* groups.
+    let targets = [1500.0; N_MODELS];
+    let base = ClusterScheduler::new(&STORE, &MATRIX).schedule(&targets).unwrap();
+    let spelled = ClusterScheduler::new(&STORE, &MATRIX)
+        .with_max_group(2)
+        .with_affinity_floor(0.9)
+        .with_residency(ResidencyPolicy::Optimistic)
+        .schedule(&targets)
+        .unwrap();
+    assert_plans_match("spelled_defaults", &spelled.servers, &base.servers);
+}
