@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Validate `hera-bench-v1` perf-trajectory documents.
+
+Usage:
+    check_bench_schema.py DIR [--universe N] [--provenance P] [--min-models M]
+
+DIR must hold BENCH_affinity.json and BENCH_schedule.json (as written by
+`hera bench-snapshot --out DIR`).  CI runs this twice: once against a
+freshly generated smoke snapshot (--universe/--provenance pinned) and
+once against the baselines checked into the repo root (--min-models 200,
+the trajectory's required scale point).
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+RESIDENCIES = ("optimistic", "strict", "cached")
+
+
+def check_rows(doc, name):
+    rows = doc["results"]
+    assert isinstance(rows, list) and rows, f"{name}: empty results"
+    for r in rows:
+        assert isinstance(r["name"], str) and r["name"], r
+        assert r["iters"] >= 1, r
+        assert r["mean_ns"] > 0, r
+        assert r["p99_ns"] >= r["p50_ns"] > 0, r
+        assert 0 < r["min_ns"] <= r["mean_ns"] + 1e-9, r
+
+
+def check_plans(doc, min_models):
+    plans = doc["plans"]
+    assert isinstance(plans, list) and len(plans) >= 3, (
+        "schedule doc needs seed + universe optimistic/cached plan rows"
+    )
+    for p in plans:
+        assert isinstance(p["name"], str) and p["name"], p
+        assert p["models"] >= 2, p
+        assert p["max_group"] >= 2, p
+        assert p["residency"] in RESIDENCIES, p
+        assert p["servers"] > 0, p
+        assert p["serviced_qps"] > 0, p
+        assert p["target_qps"] > 0, p
+        assert p["meets_targets"] is True, p
+        assert p["memo_entries"] >= 0, p
+    if min_models is not None:
+        biggest = max(p["models"] for p in plans)
+        assert biggest >= min_models, (
+            f"largest plan covers {biggest} models, need >= {min_models}"
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("dir", type=Path)
+    ap.add_argument("--universe", type=int, default=None)
+    ap.add_argument("--provenance", default=None)
+    ap.add_argument("--min-models", type=int, default=None)
+    args = ap.parse_args()
+
+    for name, group in (
+        ("BENCH_affinity.json", "affinity"),
+        ("BENCH_schedule.json", "schedule"),
+    ):
+        doc = json.loads((args.dir / name).read_text())
+        assert doc["schema"] == "hera-bench-v1", f"{name}: schema {doc.get('schema')!r}"
+        assert doc["group"] == group, f"{name}: group {doc.get('group')!r}"
+        assert isinstance(doc["provenance"], str) and doc["provenance"], name
+        if args.provenance is not None:
+            assert doc["provenance"] == args.provenance, doc["provenance"]
+        assert doc["universe_models"] >= 2, name
+        if args.universe is not None:
+            assert doc["universe_models"] == args.universe, doc["universe_models"]
+        assert doc["seed"] >= 0, name
+        assert doc["threads"] >= 1, name
+        check_rows(doc, name)
+        if group == "schedule":
+            assert doc["max_group"] >= 2, name
+            check_plans(doc, args.min_models)
+        print(f"{name}: ok ({len(doc['results'])} results)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

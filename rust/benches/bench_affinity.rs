@@ -1,25 +1,41 @@
 //! Benchmarks for the paper's §VII-E design-overhead claims:
 //! Algorithm 1 (affinity matrix) in < 1 s for hundreds of models,
 //! Algorithm 2 (cluster schedule) in < 100 ms, RMU step latency.
+//!
+//! The Algorithm 1+2 set is shared with the `bench-snapshot` CLI
+//! subcommand via [`hera::benchsnap`]; this target adds the single-pair
+//! extrapolation and the RMU monitor-step bench, which stay out of the
+//! BENCH_*.json trajectory.
 
 use hera::bench_harness::Bench;
-use hera::config::{NodeConfig, N_MODELS};
-use hera::hera::{AffinityMatrix, ClusterScheduler, HeraRmu};
+use hera::benchsnap::SnapshotOpts;
+use hera::config::NodeConfig;
+use hera::hera::{AffinityMatrix, HeraRmu};
 use hera::profiler::ProfileStore;
 use hera::server_sim::{Controller, TenantStats};
 
 fn main() {
+    // Shared Algorithm 1+2 set: seed scale plus a 100-model universe.
+    let opts = SnapshotOpts {
+        universe: 100,
+        ..SnapshotOpts::default()
+    };
+    let (_affinity, schedule) = hera::benchsnap::run(&opts).expect("bench snapshot");
+    println!("\n== plan quality ==");
+    for p in schedule.req("plans").unwrap().as_array().unwrap() {
+        println!(
+            "  {:<32} {:>4} servers  {:>12.0} qps serviced",
+            p.req("name").unwrap().as_str().unwrap(),
+            p.req("servers").unwrap().as_usize().unwrap(),
+            p.req("serviced_qps").unwrap().as_f64().unwrap(),
+        );
+    }
+    println!();
+
     let store = ProfileStore::build(&NodeConfig::paper_default());
-    let matrix = AffinityMatrix::build(&store);
-    let mut b = Bench::new("affinity");
+    let mut b = Bench::new("local");
 
-    b.run("profile_store_build_8_models", || {
-        ProfileStore::build(&NodeConfig::paper_default())
-    });
-
-    b.run("affinity_matrix_8x8", || AffinityMatrix::build(&store));
-
-    // The §VII-E claim scales quadratically: extrapolate 8x8 -> 100x100.
+    // The §VII-E claim scales quadratically: extrapolate a pair -> 100x100.
     let r = b.run("affinity_single_pair", || {
         hera::hera::affinity::co_location_affinity(
             &store,
@@ -33,10 +49,10 @@ fn main() {
         r.mean_ns * pairs_100 / 1e6
     );
 
-    b.run("cluster_schedule_uniform_1000qps", || {
-        ClusterScheduler::new(&store, &matrix)
-            .schedule(&[1000.0; N_MODELS])
-            .unwrap()
+    // Incremental row+column recompute on the seed matrix.
+    let mut matrix = AffinityMatrix::build(&store);
+    b.run("matrix_update_one_model_8", || {
+        matrix.update_model(&store, hera::config::ModelId(3))
     });
 
     // RMU monitor step (Algorithm 3) on a two-tenant node.

@@ -20,7 +20,7 @@
 //! [`crate::hera::cluster::evaluate_group`]; controllers request changes
 //! as [`ResourceVector`]s through [`crate::server_sim::AllocChange`].
 
-use crate::config::{ModelId, NodeConfig, N_MODELS};
+use crate::config::{ModelId, NodeConfig};
 
 /// How a tenant's embedding tables are held in node DRAM.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -256,14 +256,6 @@ impl Placement {
         solve(&store.node, &tenants).tenants.iter().all(|t| t.feasible)
     }
 
-    /// Per-model serviced QPS as a dense vector (plan accounting).
-    pub fn serviced(&self) -> [f64; N_MODELS] {
-        let mut out = [0.0; N_MODELS];
-        for t in &self.tenants {
-            out[t.model.index()] += t.qps;
-        }
-        out
-    }
 }
 
 impl std::fmt::Display for Placement {
@@ -334,7 +326,6 @@ mod tests {
         assert_eq!(p.total_qps(), 1500.0);
         assert!(p.is_colocated());
         assert!(p.fits_node(&node));
-        assert_eq!(p.serviced()[id("din").index()], 500.0);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! Hera scheduler prunes, keeping baseline comparisons apples-to-apples.
 
 use crate::alloc::{Placement, ResidencyPolicy};
-use crate::config::{ModelId, N_MODELS};
+use crate::config::ModelId;
 use crate::hera::affinity::AffinityMatrix;
 use crate::hera::cluster::{
     enumerate_groups, evaluate_solo, ClusterPlan, ClusterScheduler, GroupMemo,
@@ -79,7 +79,7 @@ impl SelectionPolicy {
         self,
         store: &ProfileStore,
         matrix: &AffinityMatrix,
-        targets: &[f64; N_MODELS],
+        targets: &[f64],
         seed: u64,
     ) -> anyhow::Result<ClusterPlan> {
         self.schedule_with(store, matrix, targets, seed, SelectionOpts::default())
@@ -91,7 +91,7 @@ impl SelectionPolicy {
         self,
         store: &ProfileStore,
         matrix: &AffinityMatrix,
-        targets: &[f64; N_MODELS],
+        targets: &[f64],
         seed: u64,
         residency: ResidencyPolicy,
     ) -> anyhow::Result<ClusterPlan> {
@@ -112,7 +112,7 @@ impl SelectionPolicy {
         self,
         store: &ProfileStore,
         matrix: &AffinityMatrix,
-        targets: &[f64; N_MODELS],
+        targets: &[f64],
         seed: u64,
         opts: SelectionOpts,
     ) -> anyhow::Result<ClusterPlan> {
@@ -135,18 +135,24 @@ impl SelectionPolicy {
 /// DeepRecSys: dedicated homogeneous servers only.
 fn schedule_deeprecsys(
     store: &ProfileStore,
-    targets: &[f64; N_MODELS],
+    targets: &[f64],
 ) -> anyhow::Result<ClusterPlan> {
+    anyhow::ensure!(
+        targets.len() == store.len(),
+        "targets length {} does not match the store's {} models",
+        targets.len(),
+        store.len()
+    );
     let mut plan = ClusterPlan {
         servers: Vec::new(),
-        serviced: [0.0; N_MODELS],
+        serviced: vec![0.0; store.len()],
     };
-    for m in ModelId::all() {
-        while plan.serviced[m.index()] < targets[m.index()] {
+    for m in store.ids() {
+        while plan.serviced[store.slot(m)] < targets[store.slot(m)] {
             let s = evaluate_solo(store, m);
             let q = s.qps_for(m);
             anyhow::ensure!(q > 0.0, "{m} has zero max load");
-            plan.serviced[m.index()] += q;
+            plan.serviced[store.slot(m)] += q;
             plan.servers.push(s);
             anyhow::ensure!(plan.servers.len() < 100_000, "budget exhausted");
         }
@@ -156,11 +162,10 @@ fn schedule_deeprecsys(
 
 /// Pairs Hera (Random) may choose: everything except (high, high).
 pub fn allowed_pairs_hera_random(store: &ProfileStore) -> Vec<(ModelId, ModelId)> {
+    let ids: Vec<ModelId> = store.ids().collect();
     let mut out = Vec::new();
-    for i in 0..N_MODELS {
-        for j in (i + 1)..N_MODELS {
-            let a = ModelId(i as u8);
-            let b = ModelId(j as u8);
+    for (i, &a) in ids.iter().enumerate() {
+        for &b in &ids[i + 1..] {
             let both_high = store.scalability(a) == ScalabilityClass::High
                 && store.scalability(b) == ScalabilityClass::High;
             if !both_high {
@@ -189,20 +194,27 @@ fn scalability_admissible(store: &ProfileStore, group: &[ModelId]) -> bool {
 fn schedule_random(
     store: &ProfileStore,
     matrix: &AffinityMatrix,
-    targets: &[f64; N_MODELS],
+    targets: &[f64],
     seed: u64,
     scalability_aware: bool,
     opts: SelectionOpts,
 ) -> anyhow::Result<ClusterPlan> {
+    anyhow::ensure!(
+        targets.len() == store.len(),
+        "targets length {} does not match the store's {} models",
+        targets.len(),
+        store.len()
+    );
     let mut rng = Xoshiro256::seed_from(seed);
     let mut memo = GroupMemo::new();
     let mut plan = ClusterPlan {
         servers: Vec::new(),
-        serviced: [0.0; N_MODELS],
+        serviced: vec![0.0; store.len()],
     };
     let needy = |plan: &ClusterPlan| -> Vec<ModelId> {
-        ModelId::all()
-            .filter(|m| plan.serviced[m.index()] < targets[m.index()])
+        store
+            .ids()
+            .filter(|&m| plan.serviced[store.slot(m)] < targets[store.slot(m)])
             .collect()
     };
 
@@ -223,7 +235,7 @@ fn schedule_random(
             let s = evaluate_solo(store, m);
             let q = s.qps_for(m);
             anyhow::ensure!(q > 0.0, "{m} has zero max load");
-            plan.serviced[m.index()] += q;
+            plan.serviced[store.slot(m)] += q;
             plan.servers.push(s);
             continue;
         }
@@ -233,12 +245,12 @@ fn schedule_random(
         // forever; fall back to solo for the first member.
         if s.tenants.iter().all(|t| t.qps <= 0.0) {
             let solo = evaluate_solo(store, members[0]);
-            plan.serviced[members[0].index()] += solo.qps_for(members[0]);
+            plan.serviced[store.slot(members[0])] += solo.qps_for(members[0]);
             plan.servers.push(solo);
             continue;
         }
         for t in &s.tenants {
-            plan.serviced[t.model.index()] += t.qps;
+            plan.serviced[store.slot(t.model)] += t.qps;
         }
         plan.servers.push(s);
     }
@@ -248,7 +260,7 @@ fn schedule_random(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::NodeConfig;
+    use crate::config::{NodeConfig, N_MODELS};
     use crate::hera::cluster::scaled_targets;
     use once_cell::sync::Lazy;
 

@@ -11,6 +11,8 @@
 
 use std::time::Instant;
 
+use crate::json::Value;
+
 /// One benchmark result.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -20,6 +22,20 @@ pub struct BenchResult {
     pub p50_ns: f64,
     pub p99_ns: f64,
     pub min_ns: f64,
+}
+
+impl BenchResult {
+    /// One row of the `BENCH_*.json` trajectory schema.
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::object();
+        v.set("name", self.name.as_str())
+            .set("iters", self.iters as f64)
+            .set("mean_ns", self.mean_ns)
+            .set("p50_ns", self.p50_ns)
+            .set("p99_ns", self.p99_ns)
+            .set("min_ns", self.min_ns);
+        v
+    }
 }
 
 /// Bench group runner: auto-calibrated iteration counts, warmup,
@@ -94,6 +110,12 @@ impl Bench {
 
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    /// The group's rows as a JSON array (the `results` field of the
+    /// `BENCH_*.json` schema emitted by `hera bench-snapshot`).
+    pub fn to_json(&self) -> Value {
+        Value::Array(self.results.iter().map(BenchResult::to_json).collect())
     }
 }
 

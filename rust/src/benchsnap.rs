@@ -1,0 +1,281 @@
+//! Shared builder for the `bench-snapshot` CLI subcommand and the
+//! `bench_affinity` bench target.
+//!
+//! Runs the standard Algorithm 1 + 2 benchmark set twice — once at seed
+//! scale (the eight Table-I models) and once on a seeded synthetic
+//! universe from [`crate::config::generate_universe`] — and packages the
+//! timings plus plan-quality metrics into two `hera-bench-v1` JSON
+//! documents (`BENCH_affinity.json`, `BENCH_schedule.json`).  Checked-in
+//! snapshots of these files form the perf trajectory tracked across PRs;
+//! CI regenerates and schema-validates them on every push.
+//!
+//! The universe is generated exactly once per [`run`] call (model
+//! registration is append-only and global), so bench closures only ever
+//! rebuild stores/matrices for a fixed id set.
+
+use crate::alloc::ResidencyPolicy;
+use crate::bench_harness::Bench;
+use crate::config::{generate_universe, ModelId, NodeConfig, UniverseSpec};
+use crate::hera::affinity::AffinityMatrix;
+use crate::hera::cluster::{scaled_targets, ClusterPlan, ClusterScheduler, GroupMemo};
+use crate::json::Value;
+use crate::par;
+use crate::profiler::ProfileStore;
+
+/// Knobs for one snapshot run.
+#[derive(Debug, Clone)]
+pub struct SnapshotOpts {
+    /// Synthetic-universe size (the seed-scale benches always run too).
+    pub universe: usize,
+    /// Universe RNG seed.
+    pub seed: u64,
+    /// `max_group` used for the universe-scale schedule benches/plans.
+    pub max_group: usize,
+    /// Worker threads for the parallel build/eval paths.
+    pub threads: usize,
+    /// Fraction of each model's isolated `max_load` used as its target.
+    pub target_frac: f64,
+    /// Per-bench time budget override (seconds).  `None` falls back to
+    /// the `HERA_BENCH_SECS` env var / the harness default of 1 s.
+    pub bench_secs: Option<f64>,
+}
+
+impl Default for SnapshotOpts {
+    fn default() -> SnapshotOpts {
+        SnapshotOpts {
+            universe: 200,
+            seed: 42,
+            max_group: 3,
+            threads: par::default_threads(),
+            target_frac: 0.4,
+            bench_secs: None,
+        }
+    }
+}
+
+/// One plan-quality row of the `BENCH_schedule.json` `plans` array.
+fn plan_json(
+    name: &str,
+    models: usize,
+    residency: &str,
+    max_group: usize,
+    plan: &ClusterPlan,
+    targets: &[f64],
+    memo_entries: usize,
+) -> Value {
+    let mut v = Value::object();
+    v.set("name", name)
+        .set("models", models)
+        .set("residency", residency)
+        .set("max_group", max_group)
+        .set("servers", plan.num_servers())
+        .set("serviced_qps", plan.serviced.iter().sum::<f64>())
+        .set("target_qps", targets.iter().sum::<f64>())
+        .set("meets_targets", plan.meets(targets))
+        .set("memo_entries", memo_entries);
+    v
+}
+
+/// Common envelope shared by both output documents.
+fn doc(group: &str, opts: &SnapshotOpts, bench: &Bench) -> Value {
+    let mut v = Value::object();
+    v.set("schema", "hera-bench-v1")
+        .set("group", group)
+        .set("provenance", "measured")
+        .set("universe_models", opts.universe)
+        .set("seed", opts.seed as i64)
+        .set("threads", opts.threads)
+        .set("results", bench.to_json());
+    v
+}
+
+/// Run the snapshot benchmark set and return
+/// `(BENCH_affinity.json, BENCH_schedule.json)` documents.
+///
+/// Honors `HERA_BENCH_SECS` for the per-bench time budget (CI uses a
+/// small value; `min_iters` is 1 here so universe-scale benches stay
+/// cheap under it).
+pub fn run(opts: &SnapshotOpts) -> anyhow::Result<(Value, Value)> {
+    anyhow::ensure!(opts.universe >= 2, "universe must hold at least 2 models");
+    let node = NodeConfig::paper_default();
+    let threads = opts.threads.max(1);
+    let seed_ids: Vec<ModelId> = ModelId::all().collect();
+    let uni_ids = generate_universe(&UniverseSpec::new(opts.universe, opts.seed));
+    let n_seed = seed_ids.len();
+    let n_uni = uni_ids.len();
+
+    // ---- Algorithm 1: profile store + affinity matrix ----------------
+    let mut ba = Bench::new("affinity");
+    ba.min_iters = 1;
+    if let Some(secs) = opts.bench_secs {
+        ba.target_time_s = secs;
+    }
+
+    ba.run(&format!("profile_store_build_{n_seed}_serial"), || {
+        ProfileStore::build_for_with_threads(&node, &seed_ids, 1)
+    });
+    ba.run(
+        &format!("profile_store_build_{n_uni}_parallel_t{threads}"),
+        || ProfileStore::build_for_with_threads(&node, &uni_ids, threads),
+    );
+
+    let store_seed = ProfileStore::build_for_with_threads(&node, &seed_ids, threads);
+    let store_uni = ProfileStore::build_for_with_threads(&node, &uni_ids, threads);
+
+    ba.run(&format!("affinity_matrix_{n_seed}x{n_seed}_serial"), || {
+        AffinityMatrix::build_with_threads(&store_seed, ResidencyPolicy::Optimistic, 1)
+    });
+    ba.run(&format!("affinity_matrix_{n_uni}x{n_uni}_serial"), || {
+        AffinityMatrix::build_with_threads(&store_uni, ResidencyPolicy::Optimistic, 1)
+    });
+    ba.run(
+        &format!("affinity_matrix_{n_uni}x{n_uni}_parallel_t{threads}"),
+        || AffinityMatrix::build_with_threads(&store_uni, ResidencyPolicy::Optimistic, threads),
+    );
+
+    // Incremental maintenance: one model's profile changed, recompute
+    // its row + column in place.  The store is unchanged here, so the
+    // matrix stays equal to a fresh build (prop_scale.rs proves the
+    // changed-profile case).
+    let mut matrix_uni =
+        AffinityMatrix::build_with_threads(&store_uni, ResidencyPolicy::Optimistic, threads);
+    let probe = uni_ids[n_uni / 2];
+    ba.run(&format!("matrix_update_one_model_{n_uni}"), || {
+        matrix_uni.update_model(&store_uni, probe)
+    });
+
+    let matrix_uni_cached =
+        AffinityMatrix::build_with_threads(&store_uni, ResidencyPolicy::Cached, threads);
+    ba.report();
+
+    // ---- Algorithm 2: cluster schedule -------------------------------
+    let g = opts.max_group.max(2);
+    let mut bs = Bench::new("schedule");
+    bs.min_iters = 1;
+    if let Some(secs) = opts.bench_secs {
+        bs.target_time_s = secs;
+    }
+
+    let matrix_seed =
+        AffinityMatrix::build_with_threads(&store_seed, ResidencyPolicy::Optimistic, threads);
+    let targets_seed = scaled_targets(&store_seed, opts.target_frac);
+    let targets_uni = scaled_targets(&store_uni, opts.target_frac);
+
+    bs.run(&format!("schedule_{n_seed}_g2_optimistic"), || {
+        ClusterScheduler::new(&store_seed, &matrix_seed)
+            .schedule(&targets_seed)
+            .unwrap()
+    });
+    bs.run(&format!("schedule_{n_uni}_g{g}_optimistic"), || {
+        ClusterScheduler::new(&store_uni, &matrix_uni)
+            .with_max_group(g)
+            .with_eval_threads(threads)
+            .schedule(&targets_uni)
+            .unwrap()
+    });
+    bs.run(&format!("schedule_{n_uni}_g{g}_cached"), || {
+        ClusterScheduler::new(&store_uni, &matrix_uni_cached)
+            .with_residency(ResidencyPolicy::Cached)
+            .with_max_group(g)
+            .with_eval_threads(threads)
+            .schedule(&targets_uni)
+            .unwrap()
+    });
+    bs.report();
+
+    // ---- Plan-quality metrics (computed once, untimed) ----------------
+    let mut plans = Vec::new();
+
+    let mut memo = GroupMemo::new();
+    let plan = ClusterScheduler::new(&store_seed, &matrix_seed)
+        .schedule_with_memo(&targets_seed, &mut memo)?;
+    plans.push(plan_json(
+        &format!("seed_{n_seed}_optimistic_g2"),
+        n_seed,
+        "optimistic",
+        2,
+        &plan,
+        &targets_seed,
+        memo.len(),
+    ));
+
+    let mut memo = GroupMemo::new();
+    let plan = ClusterScheduler::new(&store_uni, &matrix_uni)
+        .with_max_group(g)
+        .with_eval_threads(threads)
+        .schedule_with_memo(&targets_uni, &mut memo)?;
+    plans.push(plan_json(
+        &format!("universe_{n_uni}_optimistic_g{g}"),
+        n_uni,
+        "optimistic",
+        g,
+        &plan,
+        &targets_uni,
+        memo.len(),
+    ));
+
+    let mut memo = GroupMemo::new();
+    let plan = ClusterScheduler::new(&store_uni, &matrix_uni_cached)
+        .with_residency(ResidencyPolicy::Cached)
+        .with_max_group(g)
+        .with_eval_threads(threads)
+        .schedule_with_memo(&targets_uni, &mut memo)?;
+    plans.push(plan_json(
+        &format!("universe_{n_uni}_cached_g{g}"),
+        n_uni,
+        "cached",
+        g,
+        &plan,
+        &targets_uni,
+        memo.len(),
+    ));
+
+    let affinity_doc = doc("affinity", opts, &ba);
+    let mut schedule_doc = doc("schedule", opts, &bs);
+    schedule_doc
+        .set("max_group", g)
+        .set("target_frac", opts.target_frac)
+        .set("plans", Value::Array(plans));
+
+    Ok((affinity_doc, schedule_doc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_documents_carry_the_v1_schema() {
+        // Tiny universe + tiny time budget: this is a schema test, not a
+        // benchmark.
+        let opts = SnapshotOpts {
+            universe: 10,
+            seed: 7,
+            max_group: 2,
+            threads: 2,
+            target_frac: 0.3,
+            bench_secs: Some(0.001),
+        };
+        let (aff, sched) = run(&opts).unwrap();
+        for d in [&aff, &sched] {
+            assert_eq!(d.req("schema").unwrap().as_str().unwrap(), "hera-bench-v1");
+            assert_eq!(d.req("provenance").unwrap().as_str().unwrap(), "measured");
+            let rows = d.req("results").unwrap().as_array().unwrap();
+            assert!(!rows.is_empty());
+            for r in rows {
+                assert!(r.req("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+                assert!(r.req("name").unwrap().as_str().is_some());
+            }
+        }
+        let plans = sched.req("plans").unwrap().as_array().unwrap();
+        assert_eq!(plans.len(), 3);
+        for p in plans {
+            assert!(p.req("servers").unwrap().as_usize().unwrap() > 0);
+            assert!(p.req("serviced_qps").unwrap().as_f64().unwrap() > 0.0);
+        }
+        // Round-trips through the parser (what CI's validator consumes).
+        let text = sched.to_string();
+        let back = crate::json::parse(&text).unwrap();
+        assert_eq!(back, sched);
+    }
+}

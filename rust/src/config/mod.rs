@@ -7,9 +7,13 @@
 
 mod models;
 mod node;
+mod universe;
 
-pub use models::{ModelId, ModelSpec, Pooling, DENSE_DIM, MODELS, N_MODELS};
+pub use models::{
+    register_models, total_models, ModelId, ModelSpec, Pooling, DENSE_DIM, MODELS, N_MODELS,
+};
 pub use node::NodeConfig;
+pub use universe::{generate_universe, UniverseSpec};
 
 #[cfg(test)]
 mod tests {
@@ -29,7 +33,9 @@ mod tests {
             assert_eq!(ModelId::from_name(spec.name), Some(id));
             assert_eq!(id.spec().name, spec.name);
         }
-        assert!(ModelId::from_index(8).is_none());
+        // Beyond the zoo only registered synthetics resolve, and the
+        // registry is capped below u16::MAX — the top index never exists.
+        assert!(ModelId::from_index(u16::MAX as usize).is_none());
         assert!(ModelId::from_name("nope").is_none());
     }
 

@@ -1,5 +1,11 @@
 //! The eight Table-I recommendation models, with paper-scale resource
-//! numbers and per-query FLOP/byte accounting used by the node model.
+//! numbers and per-query FLOP/byte accounting used by the node model —
+//! plus an append-only registry for synthetic models beyond the zoo
+//! (`config::universe` populates it for 100–1000-model experiments).
+
+use std::sync::RwLock;
+
+use once_cell::sync::Lazy;
 
 /// Embedding pooling / interaction style (paper Table I "Pooling").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,12 +48,45 @@ pub struct ModelSpec {
     pub skew: f64,
 }
 
-/// Compact model identifier — index into [`MODELS`]; used to index every
-/// profiled lookup table.
+/// Compact model identifier — index into the global model registry.
+/// Ids `0..N_MODELS` are the static Table-I [`MODELS`]; ids beyond come
+/// from [`register_models`] (synthetic universes).  Every profiled
+/// lookup table is indexed by it (via the owning store's slot offset).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct ModelId(pub u8);
+pub struct ModelId(pub u16);
 
 pub const N_MODELS: usize = 8;
+
+/// Synthetic models registered beyond the Table-I zoo.  Specs are leaked
+/// to `'static` so [`ModelId::spec`] keeps returning `&'static ModelSpec`
+/// everywhere; the lock is only touched for ids `>= N_MODELS`, so the
+/// Table-I fast path is exactly the pre-registry code.
+static EXTRA: Lazy<RwLock<Vec<&'static ModelSpec>>> = Lazy::new(|| RwLock::new(Vec::new()));
+
+/// Register a batch of synthetic model specs, returning their ids as one
+/// contiguous ascending block.  The whole batch is assigned under a
+/// single write lock, so concurrent registrants (parallel tests) cannot
+/// interleave a block.  Registration is append-only and permanent for
+/// the process; names should be unique (name lookups return the first
+/// match).
+pub fn register_models(specs: Vec<ModelSpec>) -> Vec<ModelId> {
+    let mut reg = EXTRA.write().expect("model registry poisoned");
+    let base = N_MODELS + reg.len();
+    assert!(
+        base + specs.len() <= u16::MAX as usize,
+        "model registry overflow: {} models",
+        base + specs.len()
+    );
+    for spec in specs {
+        reg.push(Box::leak(Box::new(spec)));
+    }
+    (base..N_MODELS + reg.len()).map(|i| ModelId(i as u16)).collect()
+}
+
+/// Total registered models: the Table-I zoo plus any synthetics.
+pub fn total_models() -> usize {
+    N_MODELS + EXTRA.read().expect("model registry poisoned").len()
+}
 
 pub static MODELS: [ModelSpec; N_MODELS] = [
     ModelSpec {
@@ -173,15 +212,19 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
 ];
 
 impl ModelId {
+    /// Id for registry index `i` (Table-I or synthetic), if registered.
     pub fn from_index(i: usize) -> Option<ModelId> {
-        (i < N_MODELS).then_some(ModelId(i as u8))
+        (i < N_MODELS || i < total_models()).then_some(ModelId(i as u16))
     }
 
     pub fn from_name(name: &str) -> Option<ModelId> {
-        MODELS
-            .iter()
+        if let Some(i) = MODELS.iter().position(|m| m.name == name) {
+            return Some(ModelId(i as u16));
+        }
+        let reg = EXTRA.read().expect("model registry poisoned");
+        reg.iter()
             .position(|m| m.name == name)
-            .map(|i| ModelId(i as u8))
+            .map(|i| ModelId((N_MODELS + i) as u16))
     }
 
     pub fn index(self) -> usize {
@@ -189,16 +232,24 @@ impl ModelId {
     }
 
     pub fn spec(self) -> &'static ModelSpec {
-        &MODELS[self.index()]
+        let i = self.index();
+        if i < N_MODELS {
+            &MODELS[i]
+        } else {
+            EXTRA.read().expect("model registry poisoned")[i - N_MODELS]
+        }
     }
 
     pub fn name(self) -> &'static str {
         self.spec().name
     }
 
-    /// All eight model ids in Table-I order.
+    /// The eight Table-I model ids, in Table-I order.  Synthetic ids are
+    /// deliberately excluded: the registry grows at runtime, so code that
+    /// wants a synthetic universe must hold on to the id block
+    /// [`register_models`] returned.
     pub fn all() -> impl Iterator<Item = ModelId> {
-        (0..N_MODELS).map(|i| ModelId(i as u8))
+        (0..N_MODELS).map(|i| ModelId(i as u16))
     }
 }
 
@@ -406,5 +457,35 @@ mod tests {
             let w = id.spec().top_in_width();
             assert!(w > 0 && w < 100_000, "{}: {w}", id.name());
         }
+    }
+
+    #[test]
+    fn registered_models_get_a_contiguous_block() {
+        let mk = |name: &'static str| {
+            let mut spec = MODELS[0].clone();
+            spec.name = name;
+            spec
+        };
+        let ids = register_models(vec![
+            mk("models_test_reg_a"),
+            mk("models_test_reg_b"),
+            mk("models_test_reg_c"),
+        ]);
+        assert_eq!(ids.len(), 3);
+        for w in ids.windows(2) {
+            assert_eq!(w[1].index(), w[0].index() + 1, "block must be contiguous");
+        }
+        assert!(ids[0].index() >= N_MODELS);
+        assert_eq!(ids[1].name(), "models_test_reg_b");
+        assert_eq!(ModelId::from_name("models_test_reg_c"), Some(ids[2]));
+        assert_eq!(ModelId::from_index(ids[0].index()), Some(ids[0]));
+        assert!(total_models() >= N_MODELS + 3);
+        // Synthetic specs expose the same derived accounting as Table-I.
+        assert_eq!(
+            ids[0].spec().emb_bytes_per_item(),
+            MODELS[0].emb_bytes_per_item()
+        );
+        // `all()` stays the Table-I zoo regardless of registrations.
+        assert_eq!(ModelId::all().count(), N_MODELS);
     }
 }

@@ -1,0 +1,151 @@
+//! Synthetic model universes: seeded 100–1000-model populations for
+//! scaling Algorithms 1 + 2 beyond the Table-I zoo (ROADMAP item 3,
+//! Hercules-style cluster scheduling).
+//!
+//! Each generated model is a jittered clone of a Table-I archetype —
+//! same MLP architecture and pooling (so the analytical node model's
+//! FLOP/byte accounting stays grounded), with table bytes, table count,
+//! popularity skew and SLA drawn from parameterized distributions.
+//! Generation is deterministic per (`seed`, parameters): the draw order
+//! per model is fixed, so the k-th model of a universe has identical
+//! resource numbers in every process.  Only the registry ids and the
+//! (uniquified) names depend on what else the process registered first.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::rng::{Rng, Xoshiro256};
+
+use super::models::{register_models, ModelId, ModelSpec, MODELS, N_MODELS};
+
+/// Parameters of a synthetic universe.  Ranges are multipliers on the
+/// sampled archetype's Table-I numbers; `(lo, hi)` pairs are sampled
+/// log-uniformly so a 0.25–4.0 range is symmetric around 1.0.
+#[derive(Debug, Clone)]
+pub struct UniverseSpec {
+    /// Number of models to generate.
+    pub n_models: usize,
+    /// RNG seed — same seed + parameters, same model resource numbers.
+    pub seed: u64,
+    /// Log-uniform multiplier range on the archetype's embedding bytes.
+    pub emb_scale: (f64, f64),
+    /// Log-uniform multiplier range on the archetype's table count.
+    pub table_scale: (f64, f64),
+    /// Absolute +/- jitter on the archetype's Zipf skew.
+    pub skew_jitter: f64,
+    /// Uniform multiplier range on the archetype's SLA.
+    pub sla_scale: (f64, f64),
+    /// Uniform multiplier range on the archetype's FC weight bytes.
+    pub fc_scale: (f64, f64),
+}
+
+impl UniverseSpec {
+    /// Defaults chosen so a universe spans memory-bound dlrm_b-likes
+    /// scaled up 4x through cache-resident ncf-likes scaled down 4x —
+    /// enough spread to exercise both scalability classes and the
+    /// hot-tier trade at every size.
+    pub fn new(n_models: usize, seed: u64) -> UniverseSpec {
+        UniverseSpec {
+            n_models,
+            seed,
+            emb_scale: (0.25, 4.0),
+            table_scale: (0.5, 2.0),
+            skew_jitter: 0.15,
+            sla_scale: (0.75, 1.5),
+            fc_scale: (0.5, 2.0),
+        }
+    }
+}
+
+/// Per-process universe counter — makes generated names globally unique
+/// even when many tests generate universes from the same seed.
+static UNIVERSES: AtomicUsize = AtomicUsize::new(0);
+
+fn log_uniform(rng: &mut Xoshiro256, (lo, hi): (f64, f64)) -> f64 {
+    debug_assert!(lo > 0.0 && hi >= lo);
+    rng.range_f64(lo.ln(), hi.ln()).exp()
+}
+
+/// Generate `spec.n_models` synthetic models and register them, returning
+/// their ids as one contiguous ascending block (ready for
+/// `ProfileStore::build_for`).  Registered specs are process-global and
+/// permanent, so generate a universe once and share the id block.
+pub fn generate_universe(spec: &UniverseSpec) -> Vec<ModelId> {
+    let stamp = UNIVERSES.fetch_add(1, Ordering::Relaxed);
+    let mut rng = Xoshiro256::seed_from(spec.seed);
+    let mut specs = Vec::with_capacity(spec.n_models);
+    for i in 0..spec.n_models {
+        let arch = &MODELS[rng.next_below(N_MODELS as u64) as usize];
+        // Fixed draw order per model: emb, tables, skew, sla, fc.
+        let emb_gb = (arch.emb_gb * log_uniform(&mut rng, spec.emb_scale)).max(0.05);
+        let n_tables = (arch.n_tables as f64 * log_uniform(&mut rng, spec.table_scale))
+            .round()
+            .max(1.0) as usize;
+        let skew = (arch.skew + rng.range_f64(-spec.skew_jitter, spec.skew_jitter))
+            .clamp(0.7, 1.5);
+        let sla_ms = arch.sla_ms * rng.range_f64(spec.sla_scale.0, spec.sla_scale.1);
+        let fc_mb = arch.fc_mb * rng.range_f64(spec.fc_scale.0, spec.fc_scale.1);
+        let name: &'static str =
+            Box::leak(format!("syn{stamp}_{i}_{}", arch.name).into_boxed_str());
+        specs.push(ModelSpec {
+            name,
+            domain: "synthetic",
+            n_tables,
+            emb_gb,
+            fc_mb,
+            sla_ms,
+            skew,
+            ..arch.clone()
+        });
+    }
+    register_models(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_resource_numbers() {
+        let spec = UniverseSpec::new(12, 0xDECAF);
+        let a = generate_universe(&spec);
+        let b = generate_universe(&spec);
+        assert_eq!(a.len(), 12);
+        assert_ne!(a, b, "each universe gets fresh ids");
+        for (x, y) in a.iter().zip(&b) {
+            let (sx, sy) = (x.spec(), y.spec());
+            assert_eq!(sx.n_tables, sy.n_tables);
+            assert_eq!(sx.emb_gb, sy.emb_gb);
+            assert_eq!(sx.fc_mb, sy.fc_mb);
+            assert_eq!(sx.sla_ms, sy.sla_ms);
+            assert_eq!(sx.skew, sy.skew);
+            assert_eq!(sx.pooling, sy.pooling);
+            assert_ne!(sx.name, sy.name, "names stay globally unique");
+        }
+    }
+
+    #[test]
+    fn generated_geometry_is_sane() {
+        let ids = generate_universe(&UniverseSpec::new(40, 7));
+        for w in ids.windows(2) {
+            assert_eq!(w[1].index(), w[0].index() + 1, "contiguous block");
+        }
+        for id in &ids {
+            let m = id.spec();
+            assert!(m.emb_gb >= 0.05, "{}: emb_gb {}", m.name, m.emb_gb);
+            assert!(m.n_tables >= 1);
+            assert!((0.7..=1.5).contains(&m.skew));
+            assert!(m.sla_ms > 0.0);
+            assert!(m.emb_rows_per_table() >= 1.0);
+            assert!(m.flops_per_item() > 0.0);
+            assert!(m.worker_bytes() > 0.0);
+            assert_eq!(ModelId::from_name(m.name), Some(*id));
+        }
+    }
+
+    #[test]
+    fn universes_cover_both_memory_classes() {
+        let ids = generate_universe(&UniverseSpec::new(64, 42));
+        let mem = ids.iter().filter(|m| m.spec().is_embedding_dominated()).count();
+        assert!(mem > 0 && mem < 64, "memory-dominated: {mem}/64");
+    }
+}

@@ -23,7 +23,7 @@ fn servers_for_with(
     store: &ProfileStore,
     matrix: &AffinityMatrix,
     policy: SelectionPolicy,
-    targets: &[f64; N_MODELS],
+    targets: &[f64],
     opts: SelectionOpts,
 ) -> f64 {
     if matches!(policy, SelectionPolicy::Random | SelectionPolicy::HeraRandom) {
@@ -50,7 +50,7 @@ fn servers_for(
     store: &ProfileStore,
     matrix: &AffinityMatrix,
     policy: SelectionPolicy,
-    targets: &[f64; N_MODELS],
+    targets: &[f64],
 ) -> f64 {
     servers_for_with(store, matrix, policy, targets, SelectionOpts::default())
 }

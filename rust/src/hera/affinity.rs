@@ -26,7 +26,7 @@
 //! hundreds of models (see `benches/bench_affinity.rs`).
 
 use crate::alloc::ResidencyPolicy;
-use crate::config::{ModelId, N_MODELS};
+use crate::config::ModelId;
 use crate::node::for_each_ways_split;
 use crate::profiler::ProfileStore;
 
@@ -191,10 +191,19 @@ pub fn best_group_partition(store: &ProfileStore, models: &[ModelId]) -> Vec<usi
 /// reproduces the seed's scores; a `Cached` build folds each model's
 /// hot-tier QPS retention into every entry, so partner choice (and the
 /// two-tenant partitions the evaluator reads back) see the trade.
+///
+/// Covers whatever contiguous model block its [`ProfileStore`] covers —
+/// the Table-I zoo or a synthetic universe.  Rows are built on scoped
+/// threads (each `(i, j)` entry is independent, so the parallel build is
+/// bit-identical to the serial one), and [`AffinityMatrix::update_model`]
+/// refreshes a single row + column in O(M) after a profile update
+/// instead of the O(M²) rebuild.
 #[derive(Debug, Clone)]
 pub struct AffinityMatrix {
     entries: Vec<Vec<CoAff>>,
     policy: ResidencyPolicy,
+    /// Lowest model index covered (0 for the Table-I matrix).
+    first: usize,
 }
 
 impl AffinityMatrix {
@@ -206,21 +215,28 @@ impl AffinityMatrix {
 
     /// Build the matrix under an explicit residency policy.
     pub fn build_with_policy(store: &ProfileStore, policy: ResidencyPolicy) -> AffinityMatrix {
-        let entries = (0..N_MODELS)
-            .map(|i| {
-                (0..N_MODELS)
-                    .map(|j| {
-                        co_location_affinity_with_policy(
-                            store,
-                            ModelId(i as u8),
-                            ModelId(j as u8),
-                            policy,
-                        )
-                    })
-                    .collect()
-            })
-            .collect();
-        AffinityMatrix { entries, policy }
+        Self::build_with_threads(store, policy, crate::par::default_threads())
+    }
+
+    /// [`AffinityMatrix::build_with_policy`] with an explicit worker
+    /// count; `threads <= 1` is the serial reference the equivalence
+    /// tests compare against.
+    pub fn build_with_threads(
+        store: &ProfileStore,
+        policy: ResidencyPolicy,
+        threads: usize,
+    ) -> AffinityMatrix {
+        let ids: Vec<ModelId> = store.ids().collect();
+        let entries = crate::par::parallel_map(&ids, threads, |&a| {
+            ids.iter()
+                .map(|&b| co_location_affinity_with_policy(store, a, b, policy))
+                .collect()
+        });
+        AffinityMatrix {
+            entries,
+            policy,
+            first: ids[0].index(),
+        }
     }
 
     /// The residency policy this matrix was scored under.
@@ -228,8 +244,30 @@ impl AffinityMatrix {
         self.policy
     }
 
+    /// Number of models covered (matrix is `n_models` × `n_models`).
+    pub fn n_models(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Recompute the row and column of `m` after its profile changed in
+    /// `store` — the dirty-row incremental path: O(M) pair evaluations
+    /// instead of the O(M²) rebuild, with entries bit-identical to a full
+    /// rebuild (`tests/prop_scale.rs`).
+    pub fn update_model(&mut self, store: &ProfileStore, m: ModelId) {
+        let n = self.entries.len();
+        let row = m.index() - self.first;
+        assert!(row < n, "model {m} is outside this matrix");
+        for col in 0..n {
+            let other = ModelId((self.first + col) as u16);
+            self.entries[row][col] =
+                co_location_affinity_with_policy(store, m, other, self.policy);
+            self.entries[col][row] =
+                co_location_affinity_with_policy(store, other, m, self.policy);
+        }
+    }
+
     pub fn get(&self, a: ModelId, b: ModelId) -> CoAff {
-        self.entries[a.index()][b.index()]
+        self.entries[a.index() - self.first][b.index() - self.first]
     }
 
     /// `find_model_with_highest_colocation_affinity` (Algorithm 2 line 8):

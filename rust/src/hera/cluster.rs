@@ -26,19 +26,25 @@
 //! `evaluate_pair_cached` numbers exactly (`tests/parity_group.rs`).
 
 use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::Context;
 
 use crate::alloc::{Placement, ResidencyMode, ResidencyPolicy, ResourceVector, TenantAlloc};
-use crate::config::{ModelId, NodeConfig, N_MODELS};
+use crate::config::{ModelId, NodeConfig};
+use crate::json::{parse, Value};
 use crate::profiler::ProfileStore;
 use crate::server_sim::analytic::{solve, AnalyticTenant};
 
 use super::affinity::{group_affinity, AffinityMatrix};
 
-/// The scheduler's output: server list + per-model serviced QPS.
+/// The scheduler's output: server list + per-model serviced QPS, the
+/// latter indexed by the store's slot order (`== ModelId::index()` for
+/// the Table-I store).
 #[derive(Debug, Clone)]
 pub struct ClusterPlan {
     pub servers: Vec<Placement>,
-    pub serviced: [f64; N_MODELS],
+    pub serviced: Vec<f64>,
 }
 
 impl ClusterPlan {
@@ -46,7 +52,7 @@ impl ClusterPlan {
         self.servers.len()
     }
 
-    pub fn meets(&self, targets: &[f64; N_MODELS]) -> bool {
+    pub fn meets(&self, targets: &[f64]) -> bool {
         self.serviced
             .iter()
             .zip(targets)
@@ -387,6 +393,149 @@ impl GroupMemo {
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
+
+    /// Evaluate the not-yet-memoized groups among `groups` on up to
+    /// `threads` scoped threads.  [`evaluate_group`] is deterministic,
+    /// so prefetching is invisible to later [`GroupMemo::evaluate`]
+    /// calls — same entries, bit-identical placements — it only moves
+    /// the work off the serial selection loop.
+    pub fn prefetch(
+        &mut self,
+        store: &ProfileStore,
+        matrix: &AffinityMatrix,
+        groups: &[Vec<ModelId>],
+        policy: ResidencyPolicy,
+        threads: usize,
+    ) {
+        let mut misses: Vec<Vec<ModelId>> = Vec::new();
+        for g in groups {
+            let mut key = g.clone();
+            key.sort();
+            if !self.entries.contains_key(&(key.clone(), policy)) && !misses.contains(&key) {
+                misses.push(key);
+            }
+        }
+        let placements = crate::par::parallel_map(&misses, threads, |key| {
+            evaluate_group(store, matrix, key, policy)
+        });
+        for (key, p) in misses.into_iter().zip(placements) {
+            self.entries.insert((key, policy), p);
+        }
+    }
+
+    /// Serialize every memoized evaluation.  Keys become
+    /// `"name+name|policy"` strings — models are stored by *name*, so a
+    /// persisted memo survives registry renumbering across processes
+    /// (synthetic universes get fresh ids every run).
+    pub fn to_json(&self) -> Value {
+        let mut root = Value::object();
+        for ((models, policy), placement) in &self.entries {
+            let key = format!(
+                "{}|{}",
+                models.iter().map(|m| m.name()).collect::<Vec<_>>().join("+"),
+                policy_tag(*policy)
+            );
+            let tenants: Vec<Value> = placement
+                .tenants
+                .iter()
+                .map(|t| {
+                    let mut tv = Value::object();
+                    tv.set("model", t.model.name())
+                        .set("workers", t.rv.workers)
+                        .set("ways", t.rv.ways)
+                        .set("qps", t.qps);
+                    if let ResidencyMode::Cached(bytes) = t.rv.residency {
+                        tv.set("cache_bytes", bytes);
+                    }
+                    tv
+                })
+                .collect();
+            root.set(&key, Value::Array(tenants));
+        }
+        root
+    }
+
+    /// Rebuild a memo from [`GroupMemo::to_json`] output.  The JSON
+    /// writer round-trips f64 exactly (shortest-roundtrip formatting),
+    /// so a reloaded memo reproduces the in-memory evaluations
+    /// bit-for-bit (`tests/prop_scale.rs`).  Fails on names not in the
+    /// current registry — reload universes before reloading memos.
+    pub fn from_json(v: &Value) -> anyhow::Result<GroupMemo> {
+        let obj = v.as_object().context("memo root must be a JSON object")?;
+        let mut memo = GroupMemo::new();
+        for (key, tenants_v) in obj {
+            let (names, tag) = key
+                .rsplit_once('|')
+                .with_context(|| format!("memo key {key:?} missing policy tag"))?;
+            let policy = policy_from_tag(tag)?;
+            let mut models = Vec::new();
+            for name in names.split('+') {
+                models.push(
+                    ModelId::from_name(name)
+                        .with_context(|| format!("unknown model {name:?} in memo"))?,
+                );
+            }
+            models.sort();
+            let mut tenants = Vec::new();
+            for tv in tenants_v.as_array().context("memo entry must be an array")? {
+                let model = ModelId::from_name(
+                    tv.req("model")?.as_str().context("tenant model name")?,
+                )
+                .context("unknown tenant model in memo")?;
+                let residency = match tv.get("cache_bytes").and_then(Value::as_f64) {
+                    Some(bytes) => ResidencyMode::Cached(bytes),
+                    None => ResidencyMode::Full,
+                };
+                tenants.push(TenantAlloc {
+                    model,
+                    rv: ResourceVector {
+                        workers: tv.req("workers")?.as_usize().context("workers")?,
+                        ways: tv.req("ways")?.as_usize().context("ways")?,
+                        residency,
+                    },
+                    qps: tv.req("qps")?.as_f64().context("qps")?,
+                });
+            }
+            anyhow::ensure!(
+                {
+                    let mut listed: Vec<ModelId> = tenants.iter().map(|t| t.model).collect();
+                    listed.sort();
+                    listed == models
+                },
+                "memo entry {key:?}: tenants do not match the key"
+            );
+            memo.entries.insert((models, policy), Placement { tenants });
+        }
+        Ok(memo)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing group memo to {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<GroupMemo> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading group memo from {}", path.display()))?;
+        Self::from_json(&parse(&text)?)
+    }
+}
+
+fn policy_tag(policy: ResidencyPolicy) -> &'static str {
+    match policy {
+        ResidencyPolicy::Optimistic => "optimistic",
+        ResidencyPolicy::Strict => "strict",
+        ResidencyPolicy::Cached => "cached",
+    }
+}
+
+fn policy_from_tag(tag: &str) -> anyhow::Result<ResidencyPolicy> {
+    match tag {
+        "optimistic" => Ok(ResidencyPolicy::Optimistic),
+        "strict" => Ok(ResidencyPolicy::Strict),
+        "cached" => Ok(ResidencyPolicy::Cached),
+        _ => anyhow::bail!("unknown residency policy tag {tag:?}"),
+    }
 }
 
 /// Every combination of `min_size..=max_size` members drawn from `pool`,
@@ -427,6 +576,21 @@ pub fn enumerate_groups(
     out
 }
 
+/// How many combinations [`enumerate_groups`] would yield (Σ C(n, k)),
+/// computed without materializing them — the scheduler's
+/// exhaustive-vs-beam decision.  Saturates at `usize::MAX`.
+pub fn count_groups(pool_len: usize, min_size: usize, max_size: usize) -> usize {
+    let mut total = 0usize;
+    for k in min_size.max(1)..=max_size.min(pool_len) {
+        let mut c = 1usize;
+        for i in 0..k {
+            c = c.saturating_mul(pool_len - i) / (i + 1);
+        }
+        total = total.saturating_add(c);
+    }
+    total
+}
+
 /// Hera's cluster scheduler (Algorithm 2), group-native.
 pub struct ClusterScheduler<'a> {
     pub store: &'a ProfileStore,
@@ -445,7 +609,24 @@ pub struct ClusterScheduler<'a> {
     /// Pairwise system-affinity floor for *grown* groups (size > 2): a
     /// candidate is pruned when any internal pair scores below it.  The
     /// affinity-chosen seed pair is never subject to the floor.
+    /// `tests/calibration.rs` checks the 0.25 default never prunes an
+    /// exhaustive-optimal group on the Table-I universe.
     pub affinity_floor: f64,
+    /// Beam width for grown-group search on large pools (see
+    /// [`ClusterScheduler::with_beam_width`]).
+    pub beam_width: usize,
+    /// Candidate-count threshold up to which grown groups are enumerated
+    /// exhaustively.  The default (64) keeps the *whole* Table-I
+    /// universe on the exhaustive path at every legal `max_group`: the
+    /// grow pools there hold at most the 6 high-scalability models, and
+    /// Σ_k C(6, k) = 63 ≤ 64 — so seed-scale plans are bit-identical to
+    /// the pre-beam scheduler.  Synthetic universes overflow the limit
+    /// and engage the beam.
+    pub exhaustive_limit: usize,
+    /// Scoped threads used to prefetch un-memoized candidate-group
+    /// evaluations.  Selection stays serial and deterministic; 1 is the
+    /// serial reference path.
+    pub eval_threads: usize,
 }
 
 impl<'a> ClusterScheduler<'a> {
@@ -457,6 +638,9 @@ impl<'a> ClusterScheduler<'a> {
             residency: ResidencyPolicy::Optimistic,
             max_group: 2,
             affinity_floor: 0.25,
+            beam_width: 8,
+            exhaustive_limit: 64,
+            eval_threads: crate::par::default_threads(),
         }
     }
 
@@ -476,6 +660,27 @@ impl<'a> ClusterScheduler<'a> {
     /// Set the pairwise affinity floor for grown groups.
     pub fn with_affinity_floor(mut self, floor: f64) -> Self {
         self.affinity_floor = floor;
+        self
+    }
+
+    /// Beam width for the grown-group search (clamped to at least 1).
+    pub fn with_beam_width(mut self, width: usize) -> Self {
+        self.beam_width = width.max(1);
+        self
+    }
+
+    /// Candidate-count threshold below which grown groups are enumerated
+    /// exhaustively instead of beam-searched.  `0` forces the beam
+    /// everywhere (the calibration tests use this to compare both paths
+    /// on the same universe).
+    pub fn with_exhaustive_limit(mut self, limit: usize) -> Self {
+        self.exhaustive_limit = limit;
+        self
+    }
+
+    /// Scoped threads for candidate-group prefetch (1 = serial).
+    pub fn with_eval_threads(mut self, threads: usize) -> Self {
+        self.eval_threads = threads.max(1);
         self
     }
 
@@ -510,11 +715,103 @@ impl<'a> ClusterScheduler<'a> {
         true
     }
 
-    /// Enumerate grown groups `anchor ∪ S` with `S` drawn from `pool`
-    /// (`|S| >= min_add`, total size capped at `max_group`), prune them,
+    /// Admissible grown candidates `anchor ∪ S` (`|S| >= min_add`, total
+    /// size capped at `max_group`), in deterministic order.  Small pools
+    /// are enumerated exhaustively — identical set and order to the
+    /// pre-beam scheduler, which is what keeps seed-scale plans
+    /// bit-for-bit (`tests/parity_schedule.rs`); pools whose combination
+    /// count exceeds `exhaustive_limit` go through the beam search.
+    fn candidate_groups(
+        &self,
+        anchor: &[ModelId],
+        pool: &[ModelId],
+        min_add: usize,
+        max_add: usize,
+    ) -> Vec<Vec<ModelId>> {
+        if count_groups(pool.len(), min_add, max_add) <= self.exhaustive_limit {
+            return enumerate_groups(pool, min_add, max_add)
+                .into_iter()
+                .map(|s| {
+                    let mut g = anchor.to_vec();
+                    g.extend_from_slice(&s);
+                    g
+                })
+                .filter(|g| self.group_admissible(g))
+                .collect();
+        }
+        self.beam_groups(anchor, pool, min_add, max_add)
+    }
+
+    /// Beam search over grown groups: partial extensions are scored by
+    /// their weakest internal pairwise system affinity (the same
+    /// quantity the floor prunes on — Algorithm 1's bottleneck score),
+    /// only the `beam_width` best survive each level, and every
+    /// completed level of size >= `min_add` contributes its admissible
+    /// groups.  Extensions walk the pool in index order and ties break
+    /// on member order, so the search is deterministic; evaluation cost
+    /// per server decision drops from Σ C(|pool|, k) to
+    /// O(`beam_width` · |pool| · max_add).  `tests/calibration.rs` pins
+    /// how close the beamed plan stays to the exhaustive one.
+    fn beam_groups(
+        &self,
+        anchor: &[ModelId],
+        pool: &[ModelId],
+        min_add: usize,
+        max_add: usize,
+    ) -> Vec<Vec<ModelId>> {
+        // A beam item: (min internal pairwise affinity, positions into
+        // `pool`, ascending).  The empty extension scores +inf — the
+        // anchor alone is not gated by the floor.
+        let mut beam: Vec<(f64, Vec<usize>)> = vec![(f64::INFINITY, Vec::new())];
+        let mut out: Vec<Vec<ModelId>> = Vec::new();
+        for depth in 1..=max_add {
+            let mut next: Vec<(f64, Vec<usize>)> = Vec::new();
+            for (score, picks) in &beam {
+                let start = picks.last().map_or(0, |&p| p + 1);
+                for (pi, &cand) in pool.iter().enumerate().skip(start) {
+                    let mut s = *score;
+                    for &a in anchor {
+                        s = s.min(self.matrix.get(a, cand).system);
+                    }
+                    for &p in picks {
+                        s = s.min(self.matrix.get(pool[p], cand).system);
+                    }
+                    if s < self.affinity_floor {
+                        // The floor already dooms every completion.
+                        continue;
+                    }
+                    let mut ext = picks.clone();
+                    ext.push(pi);
+                    next.push((s, ext));
+                }
+            }
+            // Highest min-affinity first; ties in pool order.
+            next.sort_by(|x, y| y.0.total_cmp(&x.0).then_with(|| x.1.cmp(&y.1)));
+            next.truncate(self.beam_width);
+            if next.is_empty() {
+                break;
+            }
+            if depth >= min_add {
+                for (_, picks) in &next {
+                    let mut g = anchor.to_vec();
+                    g.extend(picks.iter().map(|&p| pool[p]));
+                    if self.group_admissible(&g) {
+                        out.push(g);
+                    }
+                }
+            }
+            beam = next;
+        }
+        out
+    }
+
+    /// Search grown groups `anchor ∪ S` with `S` drawn from `pool`
+    /// (exhaustive or beamed via [`ClusterScheduler::candidate_groups`]),
     /// and return the admissible candidate with the highest *useful* QPS
     /// — each member's sustained QPS capped at its remaining demand — if
-    /// it strictly beats `incumbent`.
+    /// it strictly beats `incumbent`.  Un-memoized candidates are
+    /// evaluated in parallel up front; the selection loop itself stays
+    /// serial, so the outcome is bit-identical to the serial path.
     fn best_grown_group(
         &self,
         memo: &mut GroupMemo,
@@ -522,24 +819,29 @@ impl<'a> ClusterScheduler<'a> {
         anchor: &[ModelId],
         pool: &[ModelId],
         min_add: usize,
-        serviced: &[f64; N_MODELS],
-        targets: &[f64; N_MODELS],
+        serviced: &[f64],
+        targets: &[f64],
     ) -> Placement {
-        let remaining =
-            |m: ModelId| (targets[m.index()] - serviced[m.index()]).max(0.0);
+        let remaining = |m: ModelId| {
+            let s = self.store.slot(m);
+            (targets[s] - serviced[s]).max(0.0)
+        };
         let useful = |p: &Placement| -> f64 {
             p.tenants.iter().map(|t| t.qps.min(remaining(t.model))).sum()
         };
         let max_add = self.max_group.saturating_sub(anchor.len());
         let mut best = incumbent;
         let mut best_useful = useful(&best);
-        for cand in enumerate_groups(pool, min_add, max_add) {
-            let mut group = anchor.to_vec();
-            group.extend_from_slice(&cand);
-            if !self.group_admissible(&group) {
-                continue;
-            }
-            let p = memo.evaluate(self.store, self.matrix, &group, self.residency);
+        let candidates = self.candidate_groups(anchor, pool, min_add, max_add);
+        memo.prefetch(
+            self.store,
+            self.matrix,
+            &candidates,
+            self.residency,
+            self.eval_threads,
+        );
+        for group in &candidates {
+            let p = memo.evaluate(self.store, self.matrix, group, self.residency);
             // A grown group must still serve the anchor — a candidate
             // that starves it (e.g. joint-DRAM shrink to a zero-QPS
             // slice) could otherwise win on its partners' useful QPS and
@@ -557,7 +859,9 @@ impl<'a> ClusterScheduler<'a> {
     }
 
     /// Allocate servers until every model's target QPS is serviced.
-    pub fn schedule(&self, targets: &[f64; N_MODELS]) -> anyhow::Result<ClusterPlan> {
+    /// `targets` is indexed by store slot (one entry per model in the
+    /// store's block).
+    pub fn schedule(&self, targets: &[f64]) -> anyhow::Result<ClusterPlan> {
         let mut memo = GroupMemo::new();
         self.schedule_with_memo(targets, &mut memo)
     }
@@ -567,9 +871,15 @@ impl<'a> ClusterScheduler<'a> {
     /// sizes) share evaluations.
     pub fn schedule_with_memo(
         &self,
-        targets: &[f64; N_MODELS],
+        targets: &[f64],
         memo: &mut GroupMemo,
     ) -> anyhow::Result<ClusterPlan> {
+        anyhow::ensure!(
+            targets.len() == self.store.len(),
+            "targets length {} does not match the store's {} models",
+            targets.len(),
+            self.store.len()
+        );
         anyhow::ensure!(
             (1..=crate::server_sim::MAX_TENANTS).contains(&self.max_group)
                 && self.max_group <= self.store.node.llc_ways,
@@ -580,13 +890,14 @@ impl<'a> ClusterScheduler<'a> {
         let (low, high) = self.store.partition_by_scalability();
         let mut plan = ClusterPlan {
             servers: Vec::new(),
-            serviced: [0.0; N_MODELS],
+            serviced: vec![0.0; self.store.len()],
         };
+        let slot = |m: ModelId| self.store.slot(m);
 
         // Step A: low-scalability models first, seeded with the
         // best-affinity partner, grown beyond pairs when allowed.
         for &mi in &low {
-            while plan.serviced[mi.index()] < targets[mi.index()] {
+            while plan.serviced[slot(mi)] < targets[slot(mi)] {
                 anyhow::ensure!(
                     plan.servers.len() < self.max_servers,
                     "server budget exhausted for {mi}"
@@ -598,13 +909,13 @@ impl<'a> ClusterScheduler<'a> {
                 let needy: Vec<ModelId> = high
                     .iter()
                     .copied()
-                    .filter(|m| plan.serviced[m.index()] < targets[m.index()])
+                    .filter(|&m| plan.serviced[slot(m)] < targets[slot(m)])
                     .collect();
                 if needy.is_empty() || self.max_group < 2 {
                     let server = evaluate_solo(self.store, mi);
                     let q = server.qps_for(mi);
                     anyhow::ensure!(q > 0.0, "model {mi} has zero isolated max load");
-                    plan.serviced[mi.index()] += q;
+                    plan.serviced[slot(mi)] += q;
                     plan.servers.push(server);
                     continue;
                 }
@@ -631,7 +942,7 @@ impl<'a> ClusterScheduler<'a> {
                     "group {server} cannot serve {mi}"
                 );
                 for t in &server.tenants {
-                    plan.serviced[t.model.index()] += t.qps;
+                    plan.serviced[slot(t.model)] += t.qps;
                 }
                 plan.servers.push(server);
             }
@@ -641,7 +952,7 @@ impl<'a> ClusterScheduler<'a> {
         // beyond the paper's group size they may be shared with other
         // still-needy high models.
         for &m in &high {
-            while plan.serviced[m.index()] < targets[m.index()] {
+            while plan.serviced[slot(m)] < targets[slot(m)] {
                 anyhow::ensure!(
                     plan.servers.len() < self.max_servers,
                     "server budget exhausted for {m}"
@@ -651,8 +962,8 @@ impl<'a> ClusterScheduler<'a> {
                     let needy: Vec<ModelId> = high
                         .iter()
                         .copied()
-                        .filter(|h| {
-                            *h != m && plan.serviced[h.index()] < targets[h.index()]
+                        .filter(|&h| {
+                            h != m && plan.serviced[slot(h)] < targets[slot(h)]
                         })
                         .collect();
                     self.best_grown_group(
@@ -672,7 +983,7 @@ impl<'a> ClusterScheduler<'a> {
                     "model {m} has zero isolated max load"
                 );
                 for t in &server.tenants {
-                    plan.serviced[t.model.index()] += t.qps;
+                    plan.serviced[slot(t.model)] += t.qps;
                 }
                 plan.servers.push(server);
             }
@@ -681,22 +992,21 @@ impl<'a> ClusterScheduler<'a> {
     }
 }
 
-/// Convenience: a target vector with every model at `frac` of its
-/// isolated max load per server times `servers_worth` (the Fig. 15 x-axis
-/// is expressed in units of aggregate cluster QPS).
-pub fn uniform_targets(store: &ProfileStore, qps_per_model: f64) -> [f64; N_MODELS] {
-    let _ = store;
-    [qps_per_model; N_MODELS]
+/// Convenience: a target vector demanding `qps_per_model` from every
+/// model in the store's block.
+pub fn uniform_targets(store: &ProfileStore, qps_per_model: f64) -> Vec<f64> {
+    vec![qps_per_model; store.len()]
 }
 
-/// Normalized targets: each model at `frac` of its isolated max load,
-/// times `n_units` servers' worth of demand.
-pub fn scaled_targets(store: &ProfileStore, frac: f64) -> [f64; N_MODELS] {
-    let mut t = [0.0; N_MODELS];
-    for id in ModelId::all() {
-        t[id.index()] = frac * store.profile(id).max_load();
-    }
-    t
+/// Normalized targets: each model at `frac` of its isolated max load —
+/// heterogeneous universes get per-model-proportional demand, and
+/// zero-max-load models (an over-tight synthetic SLA) get a zero target
+/// instead of an unreachable one.
+pub fn scaled_targets(store: &ProfileStore, frac: f64) -> Vec<f64> {
+    store
+        .ids()
+        .map(|id| frac * store.profile(id).max_load())
+        .collect()
 }
 
 /// Paper-default node helper for tests and examples.
@@ -707,7 +1017,7 @@ pub fn default_node() -> NodeConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::NodeConfig;
+    use crate::config::{NodeConfig, N_MODELS};
     use once_cell::sync::Lazy;
 
     static STORE: Lazy<ProfileStore> =
@@ -907,6 +1217,22 @@ mod tests {
         assert!(enumerate_groups(&pool, 2, 1).is_empty());
         assert!(enumerate_groups(&[], 1, 3).is_empty());
         assert_eq!(enumerate_groups(&pool, 5, 8), Vec::<Vec<ModelId>>::new());
+    }
+
+    #[test]
+    fn count_groups_matches_enumeration() {
+        let pool: Vec<ModelId> = ModelId::all().take(6).collect();
+        for (min, max) in [(1, 1), (2, 2), (1, 3), (2, 6), (3, 2), (7, 9)] {
+            assert_eq!(
+                count_groups(pool.len(), min, max),
+                enumerate_groups(&pool, min, max).len(),
+                "sizes {min}..={max}"
+            );
+        }
+        // The exhaustive-limit default keeps the full zoo exhaustive.
+        assert_eq!(count_groups(6, 1, 6), 63);
+        // Saturates instead of overflowing.
+        assert_eq!(count_groups(10_000, 2, 200), usize::MAX);
     }
 
     #[test]

@@ -33,6 +33,7 @@
 pub mod alloc;
 pub mod baselines;
 pub mod bench_harness;
+pub mod benchsnap;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
@@ -43,6 +44,7 @@ pub mod httpfront;
 pub mod json;
 pub mod metrics;
 pub mod node;
+pub mod par;
 pub mod rng;
 pub mod runtime;
 pub mod profiler;

@@ -9,6 +9,7 @@
 //!   cluster   run the cluster scheduler for a target QPS level
 //!   group-sweep   evaluate N-tenant co-location groups (beyond pairs)
 //!   bench-engine  measure per-model PJRT inference latency
+//!   bench-snapshot  emit BENCH_affinity.json / BENCH_schedule.json perf snapshots
 
 use std::path::Path;
 use std::sync::Arc;
@@ -16,6 +17,7 @@ use std::time::Duration;
 
 use hera::alloc::ResidencyPolicy;
 use hera::baselines::{SelectionOpts, SelectionPolicy};
+use hera::benchsnap::SnapshotOpts;
 use hera::cli::Args;
 use hera::config::{ModelId, NodeConfig, N_MODELS};
 use hera::coordinator::{run_load, Coordinator, LoadGenSpec, TenantConfig};
@@ -43,6 +45,7 @@ fn main() {
         "group-sweep" => cmd_group_sweep(&args),
         "cache-sweep" => cmd_cache_sweep(&args),
         "bench-engine" => cmd_bench_engine(&args),
+        "bench-snapshot" => cmd_bench_snapshot(&args),
         "" | "help" | "--help" => {
             print_help();
             Ok(())
@@ -72,7 +75,8 @@ USAGE: hera <subcommand> [flags]
   cluster  [--target QPS] [--policy name] [--residency optimistic|strict|cached] [--max-group N]
   group-sweep [--models a,b,c] [--residency MODE] [--max-group N]  evaluate N-tenant co-location
   cache-sweep [--model m] [--workers N] [--ways K] [--load-frac F] [--points P]
-  bench-engine [--models a,b] [--batch B] [--iters N]"
+  bench-engine [--models a,b] [--batch B] [--iters N]
+  bench-snapshot [--out DIR] [--universe N] [--seed S] [--max-group G] [--threads T] [--target-frac F]"
     );
 }
 
@@ -427,5 +431,26 @@ fn cmd_bench_engine(args: &Args) -> anyhow::Result<()> {
             batch as f64 / t
         );
     }
+    Ok(())
+}
+
+fn cmd_bench_snapshot(args: &Args) -> anyhow::Result<()> {
+    let out = Path::new(args.get_or("out", "results"));
+    std::fs::create_dir_all(out)?;
+    let opts = SnapshotOpts {
+        universe: args.get_usize("universe", 200)?,
+        seed: args.get_usize("seed", 42)? as u64,
+        max_group: args.get_usize("max-group", 3)?,
+        threads: args.get_usize("threads", hera::par::default_threads())?,
+        target_frac: args.get_f64("target-frac", 0.4)?,
+        bench_secs: None,
+    };
+    let (affinity, schedule) = hera::benchsnap::run(&opts)?;
+    let aff_path = out.join("BENCH_affinity.json");
+    let sched_path = out.join("BENCH_schedule.json");
+    std::fs::write(&aff_path, affinity.to_string())?;
+    std::fs::write(&sched_path, schedule.to_string())?;
+    println!("wrote {}", aff_path.display());
+    println!("wrote {}", sched_path.display());
     Ok(())
 }

@@ -1,0 +1,75 @@
+//! Scoped-thread fork/join helper (rayon is unavailable offline — see
+//! the substitution log in DESIGN.md).
+//!
+//! [`parallel_map`] splits its input into contiguous chunks, runs one
+//! scoped thread per chunk, and concatenates the chunk outputs in chunk
+//! order.  Because every call of the mapped function is independent and
+//! the stitching order is fixed, the result is bit-identical to the
+//! serial map — parallelism here is an execution detail, never a
+//! semantic one (`tests/prop_scale.rs` pins this down for the profile
+//! store, the affinity matrix and the scheduler).
+
+use std::num::NonZeroUsize;
+
+/// Default worker count: the machine's available parallelism (1 if the
+/// runtime cannot tell).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(NonZeroUsize::get)
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` on up to `threads` scoped threads, preserving
+/// input order.  `threads <= 1` (or a single-element input) degenerates
+/// to the plain serial map.
+pub fn parallel_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let threads = threads.clamp(1, items.len().max(1));
+    if threads <= 1 || items.len() < 2 {
+        return items.iter().map(f).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    let f = &f;
+    let mut out: Vec<U> = Vec::with_capacity(items.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|part| s.spawn(move || part.iter().map(f).collect::<Vec<U>>()))
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("parallel_map worker panicked"));
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_map_for_any_thread_count() {
+        let items: Vec<u64> = (0..103).collect();
+        let want: Vec<u64> = items.iter().map(|&x| x * x + 1).collect();
+        for threads in [0, 1, 2, 3, 7, 64, 1000] {
+            let got = parallel_map(&items, threads, |&x| x * x + 1);
+            assert_eq!(got, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(&empty, 8, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[5u32], 8, |&x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

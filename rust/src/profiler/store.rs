@@ -14,7 +14,9 @@ use crate::server_sim::paper_moments;
 
 use super::tables::{ModelProfile, ScalabilityClass};
 
-/// Profiled lookup tables for every Table-I model on one node config.
+/// Profiled lookup tables for one contiguous block of models on one node
+/// config — the Table-I zoo by default, or any synthetic universe block
+/// from [`crate::config::generate_universe`].
 #[derive(Debug, Clone)]
 pub struct ProfileStore {
     pub node: NodeConfig,
@@ -26,28 +28,104 @@ pub struct ProfileStore {
     /// worker, whole LLC) — the `cache_qps_factor` baseline, queried per
     /// grid point by the RMU's cache argmax.
     base_service: Vec<f64>,
+    /// Lowest registry index covered; [`ProfileStore::slot`] translates
+    /// ids to positions in the dense vectors above (0 for the Table-I
+    /// store, so seed-scale indexing is unchanged).
+    first: usize,
 }
 
 impl ProfileStore {
-    /// Profile all eight models (the paper's offline pass).
+    /// Profile all eight Table-I models (the paper's offline pass).
     pub fn build(node: &NodeConfig) -> ProfileStore {
-        let models = ModelId::all()
-            .map(|id| ModelProfile::build(id, node))
-            .collect();
+        let ids: Vec<ModelId> = ModelId::all().collect();
+        Self::build_for(node, &ids)
+    }
+
+    /// Profile an arbitrary contiguous ascending id block (e.g. a
+    /// synthetic universe), one scoped thread per chunk of models — the
+    /// per-model tables are independent, so the result is bit-identical
+    /// to the serial build.
+    pub fn build_for(node: &NodeConfig, ids: &[ModelId]) -> ProfileStore {
+        Self::build_for_with_threads(node, ids, crate::par::default_threads())
+    }
+
+    /// [`ProfileStore::build_for`] with an explicit worker count;
+    /// `threads <= 1` is the serial reference path the equivalence tests
+    /// compare against.
+    pub fn build_for_with_threads(
+        node: &NodeConfig,
+        ids: &[ModelId],
+        threads: usize,
+    ) -> ProfileStore {
+        assert!(!ids.is_empty(), "a profile store needs at least one model");
+        for w in ids.windows(2) {
+            assert_eq!(
+                w[1].index(),
+                w[0].index() + 1,
+                "profile store ids must form one contiguous ascending block"
+            );
+        }
+        let rows = crate::par::parallel_map(ids, threads, |&id| {
+            (
+                ModelProfile::build(id, node),
+                compute_min_cache_for_sla(node, id),
+                compute_base_service(node, id),
+            )
+        });
+        let mut models = Vec::with_capacity(rows.len());
+        let mut min_cache = Vec::with_capacity(rows.len());
+        let mut base_service = Vec::with_capacity(rows.len());
+        for (profile, cache, service) in rows {
+            models.push(profile);
+            min_cache.push(cache);
+            base_service.push(service);
+        }
         ProfileStore {
             node: node.clone(),
             models,
-            min_cache: ModelId::all()
-                .map(|id| compute_min_cache_for_sla(node, id))
-                .collect(),
-            base_service: ModelId::all()
-                .map(|id| compute_base_service(node, id))
-                .collect(),
+            min_cache,
+            base_service,
+            first: ids[0].index(),
         }
     }
 
+    /// Position of `id` in this store's dense per-model vectors
+    /// (`== id.index()` for the Table-I store).  Panics on foreign ids —
+    /// mixing universes in one schedule is a bug, not a fallback.
+    pub fn slot(&self, id: ModelId) -> usize {
+        let i = id.index();
+        assert!(
+            i >= self.first && i < self.first + self.models.len(),
+            "model {id} is not in this profile store"
+        );
+        i - self.first
+    }
+
+    /// Number of models profiled in this store.
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// The ids this store profiles, ascending.
+    pub fn ids(&self) -> impl Iterator<Item = ModelId> + '_ {
+        (self.first..self.first + self.models.len()).map(|i| ModelId(i as u16))
+    }
+
+    /// Replace one model's profiled tables (the online re-profiling hook;
+    /// `AffinityMatrix::update_model` consumes the change).  The derived
+    /// memos (min-cache, base service) depend only on the spec + node, so
+    /// they stay valid.
+    pub fn set_profile(&mut self, id: ModelId, profile: ModelProfile) {
+        let slot = self.slot(id);
+        self.models[slot] = profile;
+    }
+
     pub fn profile(&self, id: ModelId) -> &ModelProfile {
-        &self.models[id.index()]
+        &self.models[self.slot(id)]
     }
 
     pub fn qps(&self, id: ModelId, workers: usize, ways: usize) -> f64 {
@@ -62,7 +140,7 @@ impl ProfileStore {
     pub fn partition_by_scalability(&self) -> (Vec<ModelId>, Vec<ModelId>) {
         let mut low = Vec::new();
         let mut high = Vec::new();
-        for id in ModelId::all() {
+        for id in self.ids() {
             match self.scalability(id) {
                 ScalabilityClass::Low => low.push(id),
                 ScalabilityClass::High => high.push(id),
@@ -96,7 +174,7 @@ impl ProfileStore {
         let spec = id.spec();
         let mean_batch = paper_moments().mean.round() as u32;
         let hit = self.hit_curve(id).hit_rate(cache_bytes);
-        let full = self.base_service[id.index()];
+        let full = self.base_service[self.slot(id)];
         let cached =
             ServiceProfile::build_with_cache(spec, &self.node, 1, self.node.llc_ways, hit)
                 .service_time_s(mean_batch, 1.0);
@@ -110,7 +188,7 @@ impl ProfileStore {
     /// `emb_gb` residency footprint in capacity checks.  Memoized at
     /// store construction.
     pub fn min_cache_for_sla(&self, id: ModelId) -> f64 {
-        self.min_cache[id.index()]
+        self.min_cache[self.slot(id)]
     }
 
     /// Per-worker resident bytes when `id` is served through its minimum
@@ -292,6 +370,7 @@ impl ProfileStore {
             models,
             min_cache,
             base_service,
+            first: 0,
         })
     }
 }

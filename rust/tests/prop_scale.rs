@@ -1,0 +1,158 @@
+//! Equivalence and property tests for the scale machinery behind
+//! 100–1000-model universes:
+//!
+//! * parallel store/matrix builds are bit-identical to serial builds,
+//! * `AffinityMatrix::update_model` after a profile mutation equals a
+//!   full O(M²) rebuild,
+//! * a `GroupMemo` persisted to JSON and reloaded reproduces the
+//!   in-memory results and plans,
+//! * the evaluation thread count never changes a schedule.
+
+use hera::alloc::ResidencyPolicy;
+use hera::config::{generate_universe, ModelId, NodeConfig, UniverseSpec};
+use hera::hera::cluster::{scaled_targets, ClusterScheduler, GroupMemo};
+use hera::hera::AffinityMatrix;
+use hera::profiler::ProfileStore;
+use hera::rng::{Rng, Xoshiro256};
+use once_cell::sync::Lazy;
+
+static NODE: Lazy<NodeConfig> = Lazy::new(NodeConfig::paper_default);
+
+/// One shared 24-model universe for the whole file — registration is
+/// global and append-only, so generate it exactly once.
+static IDS: Lazy<Vec<ModelId>> =
+    Lazy::new(|| generate_universe(&UniverseSpec::new(24, 0xC0FFEE)));
+
+fn assert_stores_equal(a: &ProfileStore, b: &ProfileStore) {
+    assert_eq!(a.len(), b.len());
+    for id in a.ids() {
+        let (pa, pb) = (a.profile(id), b.profile(id));
+        assert_eq!(pa.qps, pb.qps, "qps table differs for {id}");
+        assert_eq!(pa.max_workers, pb.max_workers);
+        assert_eq!(pa.bw_demand_per_worker.to_bits(), pb.bw_demand_per_worker.to_bits());
+        assert_eq!(pa.bw_util_by_workers, pb.bw_util_by_workers);
+        assert_eq!(pa.miss_by_workers, pb.miss_by_workers);
+        assert_eq!(pa.scalability, pb.scalability);
+        assert_eq!(
+            a.min_cache_for_sla(id).to_bits(),
+            b.min_cache_for_sla(id).to_bits(),
+            "min-cache differs for {id}"
+        );
+    }
+}
+
+fn assert_matrices_equal(store: &ProfileStore, a: &AffinityMatrix, b: &AffinityMatrix) {
+    assert_eq!(a.n_models(), b.n_models());
+    for x in store.ids() {
+        for y in store.ids() {
+            assert_eq!(a.get(x, y), b.get(x, y), "CoAff differs at ({x}, {y})");
+        }
+    }
+}
+
+#[test]
+fn parallel_store_build_is_bit_identical_to_serial() {
+    let serial = ProfileStore::build_for_with_threads(&NODE, &IDS, 1);
+    for threads in [2, 3, 8, 64] {
+        let parallel = ProfileStore::build_for_with_threads(&NODE, &IDS, threads);
+        assert_stores_equal(&serial, &parallel);
+    }
+}
+
+#[test]
+fn parallel_matrix_build_is_bit_identical_to_serial() {
+    let store = ProfileStore::build_for_with_threads(&NODE, &IDS, 4);
+    for policy in [ResidencyPolicy::Optimistic, ResidencyPolicy::Cached] {
+        let serial = AffinityMatrix::build_with_threads(&store, policy, 1);
+        for threads in [2, 7, 32] {
+            let parallel = AffinityMatrix::build_with_threads(&store, policy, threads);
+            assert_matrices_equal(&store, &serial, &parallel);
+        }
+    }
+}
+
+#[test]
+fn incremental_update_matches_full_rebuild() {
+    let mut store = ProfileStore::build_for_with_threads(&NODE, &IDS, 4);
+    let mut incremental =
+        AffinityMatrix::build_with_threads(&store, ResidencyPolicy::Optimistic, 4);
+    let mut rng = Xoshiro256::seed_from(7);
+    let ids: Vec<ModelId> = store.ids().collect();
+
+    for step in 0..12 {
+        // Online re-profiling: one model's measured tables drift.
+        let id = ids[rng.next_below(ids.len() as u64) as usize];
+        let mut profile = store.profile(id).clone();
+        let qps_scale = rng.range_f64(0.6, 1.4);
+        for row in &mut profile.qps {
+            for q in row {
+                *q *= qps_scale;
+            }
+        }
+        profile.bw_demand_per_worker *= rng.range_f64(0.7, 1.3);
+        store.set_profile(id, profile);
+
+        incremental.update_model(&store, id);
+        let rebuilt = AffinityMatrix::build_with_threads(&store, ResidencyPolicy::Optimistic, 1);
+        assert_eq!(incremental.n_models(), rebuilt.n_models());
+        for x in &ids {
+            for y in &ids {
+                assert_eq!(
+                    incremental.get(*x, *y),
+                    rebuilt.get(*x, *y),
+                    "step {step}: dirty-row update of {id} diverged at ({x}, {y})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn memo_roundtrip_reproduces_results_and_plans() {
+    let store = ProfileStore::build_for_with_threads(&NODE, &IDS, 4);
+    let matrix = AffinityMatrix::build_with_threads(&store, ResidencyPolicy::Optimistic, 4);
+    let targets = scaled_targets(&store, 0.35);
+    let sched = ClusterScheduler::new(&store, &matrix).with_max_group(3);
+
+    let mut memo = GroupMemo::new();
+    let plan = sched.schedule_with_memo(&targets, &mut memo).unwrap();
+    assert!(!memo.is_empty(), "a 24-model grow pass must memoize groups");
+
+    let path = std::env::temp_dir().join(format!("hera_memo_{}.json", std::process::id()));
+    memo.save(&path).unwrap();
+    let reloaded = GroupMemo::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // Bit-exact persistence: the vendored JSON writer round-trips f64.
+    assert_eq!(memo.to_json(), reloaded.to_json());
+    assert_eq!(memo.len(), reloaded.len());
+
+    // Scheduling out of the reloaded memo yields the identical plan.
+    let mut warm = reloaded;
+    let replay = sched.schedule_with_memo(&targets, &mut warm).unwrap();
+    assert_eq!(plan.servers, replay.servers);
+    assert_eq!(plan.serviced, replay.serviced);
+    // Fully warm: no new entries were needed.
+    assert_eq!(warm.len(), memo.len());
+}
+
+#[test]
+fn eval_thread_count_never_changes_the_plan() {
+    let store = ProfileStore::build_for_with_threads(&NODE, &IDS, 4);
+    let matrix = AffinityMatrix::build_with_threads(&store, ResidencyPolicy::Optimistic, 4);
+    let targets = scaled_targets(&store, 0.35);
+    let base = ClusterScheduler::new(&store, &matrix)
+        .with_max_group(3)
+        .with_eval_threads(1)
+        .schedule(&targets)
+        .unwrap();
+    for threads in [2, 8, 29] {
+        let plan = ClusterScheduler::new(&store, &matrix)
+            .with_max_group(3)
+            .with_eval_threads(threads)
+            .schedule(&targets)
+            .unwrap();
+        assert_eq!(base.servers, plan.servers, "{threads} eval threads changed the plan");
+        assert_eq!(base.serviced, plan.serviced);
+    }
+}
