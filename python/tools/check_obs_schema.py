@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""Validate `hera-obs-v1` observability artifacts.
+
+Usage:
+    check_obs_schema.py DIR [--require-decisions] [--metrics-text FILE]
+
+DIR must hold obs_registry.json and obs_events.jsonl (as written by
+`hera obs-dump --out DIR`).  --metrics-text additionally parses a saved
+Prometheus text exposition (e.g. a `curl /metrics` capture from
+`hera obs-serve`) and cross-checks the per-tenant stage histograms and
+RMU counters CI's smoke test expects.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+SCHEMA = "hera-obs-v1"
+METRIC_TYPES = ("counter", "gauge", "histogram")
+EVENT_KINDS = ("alloc_change", "alloc_outcome")
+STAGES = ("queue", "compute", "cache", "total")
+
+
+def check_registry(path):
+    doc = json.loads(path.read_text())
+    assert doc["schema"] == SCHEMA, f"registry schema {doc.get('schema')!r}"
+    metrics = doc["metrics"]
+    assert isinstance(metrics, list) and metrics, "registry snapshot is empty"
+    names = set()
+    for m in metrics:
+        assert isinstance(m["name"], str) and m["name"], m
+        assert m["type"] in METRIC_TYPES, m
+        assert isinstance(m["labels"], dict), m
+        if m["type"] == "histogram":
+            buckets = m["buckets"]
+            assert isinstance(buckets, list) and buckets, m
+            total = sum(b["count"] for b in buckets)
+            assert total == m["count"], (
+                f"{m['name']}: bucket sum {total} != count {m['count']}"
+            )
+            bounds = [b["le"] for b in buckets if b["le"] != "+Inf"]
+            assert bounds == sorted(bounds), f"{m['name']}: bounds not ascending"
+            assert m["p95"] >= 0, m
+        else:
+            assert isinstance(m["value"], (int, float)), m
+        names.add(m["name"])
+    return doc, names
+
+
+def check_journal(path, require_decisions):
+    lines = [l for l in path.read_text().splitlines() if l.strip()]
+    if require_decisions:
+        assert lines, "journal is empty but decisions were required"
+    kinds = {k: 0 for k in EVENT_KINDS}
+    for i, line in enumerate(lines):
+        e = json.loads(line)
+        assert e["schema"] == SCHEMA, f"line {i + 1}: schema {e.get('schema')!r}"
+        assert e["seq"] == i, f"line {i + 1}: seq {e['seq']} breaks the 0..n order"
+        assert isinstance(e["t_s"], (int, float)), e
+        kind = e["event"]
+        assert kind in EVENT_KINDS, f"line {i + 1}: unknown event {kind!r}"
+        kinds[kind] += 1
+        if kind == "alloc_change":
+            for key in ("tenant", "model", "from", "to", "window_p95_s",
+                        "window_arrival_qps", "slack", "predicted_qps"):
+                assert key in e, f"alloc_change line {i + 1} missing {key!r}"
+            for side in ("from", "to"):
+                assert set(e[side]) == {"workers", "ways", "cache_bytes"}, e[side]
+        else:
+            for key in ("tenant", "model", "decided_t_s", "predicted_qps",
+                        "realized_qps", "delta_qps"):
+                assert key in e, f"alloc_outcome line {i + 1} missing {key!r}"
+            delta = e["realized_qps"] - e["predicted_qps"]
+            assert abs(e["delta_qps"] - delta) < 1e-9, e
+    if require_decisions:
+        assert kinds["alloc_change"] > 0, "no alloc_change events recorded"
+        assert kinds["alloc_outcome"] > 0, "no alloc_outcome events recorded"
+    return kinds
+
+
+def parse_prometheus(text):
+    """Parse Prometheus text exposition into {(name, labels_str): value}."""
+    samples = {}
+    for ln, line in enumerate(text.splitlines(), 1):
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = line.rsplit(" ", 1)
+        assert len(parts) == 2, f"metrics line {ln}: {line!r}"
+        key, value = parts
+        samples[key] = float(value)  # raises on malformed values
+    return samples
+
+
+def check_metrics_text(path, require_decisions):
+    samples = parse_prometheus(path.read_text())
+    assert samples, "metrics text holds no samples"
+    stage_counts = [
+        k for k in samples
+        if k.startswith("hera_query_stage_latency_seconds_count{")
+    ]
+    assert stage_counts, "no per-tenant stage histograms exported"
+    for stage in STAGES:
+        matching = [k for k in stage_counts if f'stage="{stage}"' in k]
+        assert matching, f"stage {stage!r} missing from the exposition"
+    assert any(k.startswith("hera_emu_percent") for k in samples), "EMU gauge missing"
+    assert any(k.startswith("hera_rmu_windows_total") for k in samples)
+    if require_decisions:
+        decided = sum(
+            v for k, v in samples.items()
+            if k.startswith("hera_rmu_decisions_total{")
+        )
+        assert decided > 0, "RMU decision counters are all zero"
+        p95s = [
+            v for k, v in samples.items()
+            if k.startswith("hera_query_stage_latency_seconds_p95{")
+            and 'stage="total"' in k
+        ]
+        assert p95s and all(v > 0 for v in p95s), "per-tenant total p95 gauges empty"
+    return len(samples)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("dir", type=Path)
+    ap.add_argument("--require-decisions", action="store_true")
+    ap.add_argument("--metrics-text", type=Path, default=None)
+    args = ap.parse_args()
+
+    _, names = check_registry(args.dir / "obs_registry.json")
+    assert "hera_query_stage_latency_seconds" in names, names
+    kinds = check_journal(args.dir / "obs_events.jsonl", args.require_decisions)
+    print(f"obs_registry.json: ok ({len(names)} metric families)")
+    print(
+        "obs_events.jsonl: ok "
+        f"({kinds['alloc_change']} changes, {kinds['alloc_outcome']} outcomes)"
+    )
+    if args.metrics_text is not None:
+        n = check_metrics_text(args.metrics_text, args.require_decisions)
+        print(f"{args.metrics_text}: ok ({n} samples)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -85,7 +85,10 @@ fn doc(group: &str, opts: &SnapshotOpts, bench: &Bench) -> Value {
         .set("universe_models", opts.universe)
         .set("seed", opts.seed as i64)
         .set("threads", opts.threads)
-        .set("results", bench.to_json());
+        .set("results", bench.to_json())
+        // Search-cost counters (memo hit/miss, beam generated/pruned,
+        // affinity build timings) accumulated by the benches above.
+        .set("obs", crate::obs::global().snapshot_json());
     v
 }
 
@@ -266,6 +269,11 @@ mod tests {
                 assert!(r.req("mean_ns").unwrap().as_f64().unwrap() > 0.0);
                 assert!(r.req("name").unwrap().as_str().is_some());
             }
+            // The obs registry snapshot rides along: scheduler search
+            // counters for the run are inspectable from the document.
+            let obs = d.req("obs").unwrap();
+            assert_eq!(obs.req("schema").unwrap().as_str(), Some("hera-obs-v1"));
+            assert!(!obs.req("metrics").unwrap().as_array().unwrap().is_empty());
         }
         let plans = sched.req("plans").unwrap().as_array().unwrap();
         assert_eq!(plans.len(), 3);

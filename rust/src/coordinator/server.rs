@@ -6,7 +6,8 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::metrics::LatencyStats;
+use crate::metrics::{LatencyStats, QpsCounter};
+use crate::obs::{QuerySpan, StageObs};
 use crate::runtime::Engine;
 
 use super::stats::TenantSnapshot;
@@ -27,6 +28,15 @@ struct Query {
     dense: Vec<f32>,
     indices: Vec<i32>,
     t_enqueue: Instant,
+    span: QuerySpan,
+}
+
+/// Rolling monitor-window state, reset at every snapshot.
+struct WindowState {
+    lat: LatencyStats,
+    qps: QpsCounter,
+    arrivals: u64,
+    since: Instant,
 }
 
 struct TenantShared {
@@ -42,7 +52,9 @@ struct TenantShared {
     violations: AtomicU64,
     shutdown: AtomicBool,
     stats: Mutex<LatencyStats>,
-    window: Mutex<(LatencyStats, u64, u64, Instant)>, // (lat, completed, arrivals, since)
+    window: Mutex<WindowState>,
+    /// Per-tenant stage histograms + query counters (global registry).
+    obs: StageObs,
 }
 
 /// Multi-tenant inference server over a shared PJRT engine.
@@ -77,7 +89,13 @@ impl Coordinator {
                 violations: AtomicU64::new(0),
                 shutdown: AtomicBool::new(false),
                 stats: Mutex::new(LatencyStats::new()),
-                window: Mutex::new((LatencyStats::new(), 0, 0, Instant::now())),
+                window: Mutex::new(WindowState {
+                    lat: LatencyStats::new(),
+                    qps: QpsCounter::new(),
+                    arrivals: 0,
+                    since: Instant::now(),
+                }),
+                obs: StageObs::for_model(crate::obs::global(), &cfg.model),
             });
             for wid in 0..t.max_workers {
                 let t2 = t.clone();
@@ -109,18 +127,34 @@ impl Coordinator {
         dense: Vec<f32>,
         indices: Vec<i32>,
     ) -> anyhow::Result<()> {
+        self.submit_traced(model, batch, dense, indices, QuerySpan::start())
+    }
+
+    /// [`Coordinator::submit`] with a caller-opened [`QuerySpan`] — the
+    /// HTTP frontend opens the span at request receive, so the ingress
+    /// stage covers parse + routing.
+    pub fn submit_traced(
+        &self,
+        model: &str,
+        batch: usize,
+        dense: Vec<f32>,
+        indices: Vec<i32>,
+        mut span: QuerySpan,
+    ) -> anyhow::Result<()> {
         let t = self.tenant(model)?;
         t.arrivals.fetch_add(1, Ordering::Relaxed);
         {
             let mut w = t.window.lock().unwrap();
-            w.2 += 1;
+            w.arrivals += 1;
         }
+        span.mark_enqueue();
         let mut q = t.queue.lock().unwrap();
         q.push_back(Query {
             batch,
             dense,
             indices,
             t_enqueue: Instant::now(),
+            span,
         });
         drop(q);
         t.cv.notify_one();
@@ -129,8 +163,18 @@ impl Coordinator {
 
     /// Convenience: submit a deterministic synthetic query of `batch` items.
     pub fn submit_synthetic(&self, model: &str, batch: usize) -> anyhow::Result<()> {
+        self.submit_synthetic_traced(model, batch, QuerySpan::start())
+    }
+
+    /// [`Coordinator::submit_synthetic`] with a caller-opened span.
+    pub fn submit_synthetic_traced(
+        &self,
+        model: &str,
+        batch: usize,
+        span: QuerySpan,
+    ) -> anyhow::Result<()> {
         let (dense, idx) = self.engine.example_inputs(model, batch);
-        self.submit(model, batch, dense, idx)
+        self.submit_traced(model, batch, dense, idx, span)
     }
 
     /// RMU hook: resize a tenant's active worker pool.
@@ -150,7 +194,8 @@ impl Coordinator {
             (stats.p50(), stats.p95(), stats.p99(), stats.mean());
         drop(stats);
         let mut w = t.window.lock().unwrap();
-        let elapsed = w.3.elapsed().as_secs_f64().max(1e-9);
+        let elapsed = w.since.elapsed().as_secs_f64().max(1e-9);
+        w.qps.set_window(elapsed);
         let snap = TenantSnapshot {
             model: t.model.clone(),
             workers: t.worker_limit.load(Ordering::SeqCst),
@@ -169,14 +214,16 @@ impl Coordinator {
                 }
             },
             queue_depth: t.queue.lock().unwrap().len(),
-            window_completed: w.1,
-            window_p95_ms: w.0.p95() * 1e3,
-            window_arrival_qps: w.2 as f64 / elapsed,
+            window_completed: w.qps.window_completed(),
+            window_p95_ms: w.lat.p95() * 1e3,
+            window_arrival_qps: w.arrivals as f64 / elapsed,
+            window_qps: w.qps.qps(),
+            window_violation_rate: w.qps.violation_rate(),
         };
-        w.0.clear();
-        w.1 = 0;
-        w.2 = 0;
-        w.3 = Instant::now();
+        w.lat.clear();
+        w.qps.reset_window();
+        w.arrivals = 0;
+        w.since = Instant::now();
         Ok(snap)
     }
 
@@ -252,18 +299,24 @@ fn worker_loop(wid: usize, t: Arc<TenantShared>, engine: Arc<Engine>) {
                 q = guard;
             }
         };
-        let Some(query) = query else { continue };
+        let Some(mut query) = query else { continue };
+        query.span.mark_dequeue();
+        query.span.mark_compute_start();
         match engine.infer(&t.model, query.batch, &query.dense, &query.indices) {
             Ok(_) => {
+                query.span.mark_compute_end();
                 let latency = query.t_enqueue.elapsed().as_secs_f64();
+                let met_sla = latency <= t.sla_s;
                 t.completed.fetch_add(1, Ordering::Relaxed);
-                if latency > t.sla_s {
+                if !met_sla {
                     t.violations.fetch_add(1, Ordering::Relaxed);
                 }
                 t.stats.lock().unwrap().record(latency);
                 let mut w = t.window.lock().unwrap();
-                w.0.record(latency);
-                w.1 += 1;
+                w.lat.record(latency);
+                w.qps.record(met_sla);
+                drop(w);
+                query.span.finish(&t.obs, met_sla);
             }
             Err(e) => {
                 // Count as completed to keep drain() live; surfaces in logs.

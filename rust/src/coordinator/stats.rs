@@ -21,6 +21,10 @@ pub struct TenantSnapshot {
     pub window_p95_ms: f64,
     /// Arrival rate observed in the last monitor window (QPS).
     pub window_arrival_qps: f64,
+    /// Completion rate over the last monitor window (QPS).
+    pub window_qps: f64,
+    /// Fraction of last-window completions over the model SLA.
+    pub window_violation_rate: f64,
 }
 
 #[cfg(test)]
@@ -43,6 +47,8 @@ mod tests {
             window_completed: 5,
             window_p95_ms: 2.0,
             window_arrival_qps: 100.0,
+            window_qps: 90.0,
+            window_violation_rate: 0.0,
         };
         let c = s.clone();
         assert_eq!(c.model, "ncf");

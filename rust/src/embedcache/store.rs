@@ -4,9 +4,18 @@
 //! on a Zipf(1.0) trace) and the workload behind `bench_embedcache`.
 
 use crate::config::ModelId;
+use crate::obs::{names, Counter};
 use crate::rng::Rng;
 
 use super::{EvictionPolicy, HitCurve, HotTierCache, Zipf};
+
+/// Per-tier lookup counters in the global obs registry (optional — the
+/// micro-benchmarks run uninstrumented).
+#[derive(Debug, Clone)]
+struct CacheObs {
+    hot: Counter,
+    backing: Counter,
+}
 
 /// Hot-tier configuration for one tenant/model.
 #[derive(Debug, Clone, Copy)]
@@ -25,6 +34,7 @@ pub struct TieredEmbeddingStore {
     lookups_per_table: usize,
     row_bytes: f64,
     backing_bytes: f64,
+    obs: Option<CacheObs>,
 }
 
 impl TieredEmbeddingStore {
@@ -50,7 +60,25 @@ impl TieredEmbeddingStore {
             lookups_per_table,
             row_bytes,
             backing_bytes: 0.0,
+            obs: None,
         }
+    }
+
+    /// Publish this store's lookups as `hera_cache_lookups_total{model,
+    /// tier}` counters.  Purely additive: hit/miss behaviour and the
+    /// byte accounting are unchanged.
+    pub fn attach_obs(&mut self, model: &str) {
+        let r = crate::obs::global();
+        let tier = |t: &str| {
+            r.counter(
+                names::CACHE_LOOKUPS_TOTAL,
+                &[("model", model.to_string()), ("tier", t.to_string())],
+            )
+        };
+        self.obs = Some(CacheObs {
+            hot: tier("hot"),
+            backing: tier("backing"),
+        });
     }
 
     /// A paper-scale store for one Table-I model.  Intended for bench and
@@ -87,13 +115,22 @@ impl TieredEmbeddingStore {
     /// its hot tier; misses stream rows in from the backing tier.
     pub fn access_item<R: Rng>(&mut self, rng: &mut R) {
         let zipf = self.zipf;
+        let mut hot = 0u64;
+        let mut backing = 0u64;
         for table in &mut self.tables {
             for _ in 0..self.lookups_per_table {
                 let row = zipf.sample(rng);
-                if !table.access(row) {
+                if table.access(row) {
+                    hot += 1;
+                } else {
                     self.backing_bytes += self.row_bytes;
+                    backing += 1;
                 }
             }
+        }
+        if let Some(obs) = &self.obs {
+            obs.hot.add(hot);
+            obs.backing.add(backing);
         }
     }
 
@@ -222,6 +259,39 @@ mod tests {
             (store.backing_bytes() - misses as f64 * 128.0).abs() < 128.0,
             "backing bytes must equal miss count x row bytes"
         );
+    }
+
+    #[test]
+    fn attached_obs_counts_every_lookup_by_tier() {
+        let mut store = TieredEmbeddingStore::new(
+            1,
+            1000,
+            2,
+            128.0,
+            1.0,
+            CacheConfig {
+                policy: EvictionPolicy::Lfu,
+                capacity_bytes: 100.0 * 128.0,
+            },
+        );
+        store.attach_obs("embedcache_selftest");
+        let mut rng = Xoshiro256::seed_from(9);
+        for _ in 0..1000 {
+            store.access_item(&mut rng);
+        }
+        let r = crate::obs::global();
+        let count = |tier: &str| {
+            r.counter(
+                names::CACHE_LOOKUPS_TOTAL,
+                &[
+                    ("model", "embedcache_selftest".to_string()),
+                    ("tier", tier.to_string()),
+                ],
+            )
+            .get()
+        };
+        assert_eq!(count("hot") + count("backing"), store.accesses());
+        assert!(count("hot") > 0 && count("backing") > 0);
     }
 
     #[test]

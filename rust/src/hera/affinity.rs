@@ -25,10 +25,30 @@
 //! a 2-D array indexed by model ids; the paper measures < 1 s for
 //! hundreds of models (see `benches/bench_affinity.rs`).
 
+use once_cell::sync::Lazy;
+
 use crate::alloc::ResidencyPolicy;
 use crate::config::ModelId;
 use crate::node::for_each_ways_split;
+use crate::obs::{names, Histogram, BUILD_BUCKETS_S};
 use crate::profiler::ProfileStore;
+
+// Wall-time histograms for matrix construction and incremental refresh
+// (`bench-snapshot` reads them back out of the registry snapshot).
+static BUILD_SECONDS: Lazy<Histogram> = Lazy::new(|| {
+    crate::obs::global().histogram(
+        names::AFFINITY_BUILD_SECONDS,
+        &[("op", "build".to_string())],
+        &BUILD_BUCKETS_S,
+    )
+});
+static UPDATE_SECONDS: Lazy<Histogram> = Lazy::new(|| {
+    crate::obs::global().histogram(
+        names::AFFINITY_BUILD_SECONDS,
+        &[("op", "update".to_string())],
+        &BUILD_BUCKETS_S,
+    )
+});
 
 /// Affinity decomposition for one model pair.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -226,12 +246,14 @@ impl AffinityMatrix {
         policy: ResidencyPolicy,
         threads: usize,
     ) -> AffinityMatrix {
+        let t0 = std::time::Instant::now();
         let ids: Vec<ModelId> = store.ids().collect();
         let entries = crate::par::parallel_map(&ids, threads, |&a| {
             ids.iter()
                 .map(|&b| co_location_affinity_with_policy(store, a, b, policy))
                 .collect()
         });
+        BUILD_SECONDS.observe(t0.elapsed().as_secs_f64());
         AffinityMatrix {
             entries,
             policy,
@@ -254,6 +276,7 @@ impl AffinityMatrix {
     /// instead of the O(M²) rebuild, with entries bit-identical to a full
     /// rebuild (`tests/prop_scale.rs`).
     pub fn update_model(&mut self, store: &ProfileStore, m: ModelId) {
+        let t0 = std::time::Instant::now();
         let n = self.entries.len();
         let row = m.index() - self.first;
         assert!(row < n, "model {m} is outside this matrix");
@@ -264,6 +287,7 @@ impl AffinityMatrix {
             self.entries[col][row] =
                 co_location_affinity_with_policy(store, other, m, self.policy);
         }
+        UPDATE_SECONDS.observe(t0.elapsed().as_secs_f64());
     }
 
     pub fn get(&self, a: ModelId, b: ModelId) -> CoAff {

@@ -25,18 +25,36 @@
 //! groups reproduce the pre-redesign `evaluate_pair` /
 //! `evaluate_pair_cached` numbers exactly (`tests/parity_group.rs`).
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::path::Path;
 
 use anyhow::Context;
+use once_cell::sync::Lazy;
 
 use crate::alloc::{Placement, ResidencyMode, ResidencyPolicy, ResourceVector, TenantAlloc};
 use crate::config::{ModelId, NodeConfig};
 use crate::json::{parse, Value};
+use crate::obs::{names, Counter};
 use crate::profiler::ProfileStore;
 use crate::server_sim::analytic::{solve, AnalyticTenant};
 
 use super::affinity::{group_affinity, AffinityMatrix};
+
+// Scheduler search counters in the global obs registry.  Statics rather
+// than struct fields so the all-pub `ClusterScheduler` / `GroupMemo`
+// construction sites stay untouched; observation-only (never read back
+// into the search), so plans stay bit-for-bit (`parity_schedule`).
+static MEMO_HITS: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::GROUP_MEMO_HITS_TOTAL, &[]));
+static MEMO_MISSES: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::GROUP_MEMO_MISSES_TOTAL, &[]));
+static BEAM_CANDIDATES: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::BEAM_CANDIDATES_TOTAL, &[]));
+static BEAM_PRUNED: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::BEAM_PRUNED_TOTAL, &[]));
+static GROWN_DISPLACEMENTS: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::GROWN_DISPLACEMENTS_TOTAL, &[]));
 
 /// The scheduler's output: server list + per-model serviced QPS, the
 /// latter indexed by the store's slot order (`== ModelId::index()` for
@@ -373,10 +391,17 @@ impl GroupMemo {
     ) -> Placement {
         let mut key: Vec<ModelId> = models.to_vec();
         key.sort();
-        let stored = self
-            .entries
-            .entry((key.clone(), policy))
-            .or_insert_with(|| evaluate_group(store, matrix, &key, policy));
+        let stored = match self.entries.entry((key.clone(), policy)) {
+            Entry::Occupied(e) => {
+                MEMO_HITS.inc();
+                e.into_mut()
+            }
+            Entry::Vacant(v) => {
+                MEMO_MISSES.inc();
+                let p = evaluate_group(store, matrix, &key, policy);
+                v.insert(p)
+            }
+        };
         Placement {
             tenants: models
                 .iter()
@@ -415,6 +440,7 @@ impl GroupMemo {
                 misses.push(key);
             }
         }
+        MEMO_MISSES.add(misses.len() as u64);
         let placements = crate::par::parallel_map(&misses, threads, |key| {
             evaluate_group(store, matrix, key, policy)
         });
@@ -729,15 +755,25 @@ impl<'a> ClusterScheduler<'a> {
         max_add: usize,
     ) -> Vec<Vec<ModelId>> {
         if count_groups(pool.len(), min_add, max_add) <= self.exhaustive_limit {
-            return enumerate_groups(pool, min_add, max_add)
+            let mut generated = 0u64;
+            let mut pruned = 0u64;
+            let out: Vec<Vec<ModelId>> = enumerate_groups(pool, min_add, max_add)
                 .into_iter()
                 .map(|s| {
                     let mut g = anchor.to_vec();
                     g.extend_from_slice(&s);
                     g
                 })
-                .filter(|g| self.group_admissible(g))
+                .filter(|g| {
+                    generated += 1;
+                    let keep = self.group_admissible(g);
+                    pruned += u64::from(!keep);
+                    keep
+                })
                 .collect();
+            BEAM_CANDIDATES.add(generated);
+            BEAM_PRUNED.add(pruned);
+            return out;
         }
         self.beam_groups(anchor, pool, min_add, max_add)
     }
@@ -764,6 +800,9 @@ impl<'a> ClusterScheduler<'a> {
         // anchor alone is not gated by the floor.
         let mut beam: Vec<(f64, Vec<usize>)> = vec![(f64::INFINITY, Vec::new())];
         let mut out: Vec<Vec<ModelId>> = Vec::new();
+        // Search-cost tallies, flushed to the registry once per call.
+        let mut generated = 0u64;
+        let mut pruned = 0u64;
         for depth in 1..=max_add {
             let mut next: Vec<(f64, Vec<usize>)> = Vec::new();
             for (score, picks) in &beam {
@@ -778,15 +817,18 @@ impl<'a> ClusterScheduler<'a> {
                     }
                     if s < self.affinity_floor {
                         // The floor already dooms every completion.
+                        pruned += 1;
                         continue;
                     }
                     let mut ext = picks.clone();
                     ext.push(pi);
+                    generated += 1;
                     next.push((s, ext));
                 }
             }
             // Highest min-affinity first; ties in pool order.
             next.sort_by(|x, y| y.0.total_cmp(&x.0).then_with(|| x.1.cmp(&y.1)));
+            pruned += next.len().saturating_sub(self.beam_width) as u64;
             next.truncate(self.beam_width);
             if next.is_empty() {
                 break;
@@ -797,11 +839,15 @@ impl<'a> ClusterScheduler<'a> {
                     g.extend(picks.iter().map(|&p| pool[p]));
                     if self.group_admissible(&g) {
                         out.push(g);
+                    } else {
+                        pruned += 1;
                     }
                 }
             }
             beam = next;
         }
+        BEAM_CANDIDATES.add(generated);
+        BEAM_PRUNED.add(pruned);
         out
     }
 
@@ -832,6 +878,9 @@ impl<'a> ClusterScheduler<'a> {
         let max_add = self.max_group.saturating_sub(anchor.len());
         let mut best = incumbent;
         let mut best_useful = useful(&best);
+        // Counts once per call, on the first candidate beating the
+        // incumbent (later improvements displace a candidate, not it).
+        let mut incumbent_standing = true;
         let candidates = self.candidate_groups(anchor, pool, min_add, max_add);
         memo.prefetch(
             self.store,
@@ -851,6 +900,10 @@ impl<'a> ClusterScheduler<'a> {
             }
             let u = useful(&p);
             if u > best_useful {
+                if incumbent_standing {
+                    GROWN_DISPLACEMENTS.inc();
+                    incumbent_standing = false;
+                }
                 best_useful = u;
                 best = p;
             }

@@ -29,13 +29,49 @@
 
 use crate::alloc::{ResidencyMode, ResourceVector};
 use crate::config::ModelId;
+use crate::json::Value;
+use crate::metrics::emu_percent;
 use crate::node::for_each_ways_split;
+use crate::obs::{names, Counter, EventJournal, Gauge};
 use crate::profiler::ProfileStore;
 use crate::server_sim::{AllocChange, Controller, TenantStats};
 
 /// Slack band: outside [LOW, HIGH] triggers adjustment (paper defaults).
 const SLACK_HIGH: f64 = 1.0;
 const SLACK_LOW: f64 = 0.8;
+
+/// Registry handles for the RMU's counters and the node EMU gauge.
+struct RmuObs {
+    windows: Counter,
+    decisions_workers: Counter,
+    decisions_ways: Counter,
+    decisions_cache: Counter,
+    emu: Gauge,
+}
+
+impl RmuObs {
+    fn resolve() -> RmuObs {
+        let r = crate::obs::global();
+        let knob = |k: &str| {
+            r.counter(names::RMU_DECISIONS_TOTAL, &[("knob", k.to_string())])
+        };
+        RmuObs {
+            windows: r.counter(names::RMU_WINDOWS_TOTAL, &[]),
+            decisions_workers: knob("workers"),
+            decisions_ways: knob("ways"),
+            decisions_cache: knob("cache"),
+            emu: r.gauge(names::EMU_PERCENT, &[]),
+        }
+    }
+}
+
+/// A decision whose realized QPS is measured one window later.
+struct PendingOutcome {
+    tenant: usize,
+    model: ModelId,
+    decided_t_s: f64,
+    predicted_qps: f64,
+}
 
 /// Hera node-level RMU for an N-tenant node.
 pub struct HeraRmu<'a> {
@@ -46,6 +82,14 @@ pub struct HeraRmu<'a> {
     /// three knobs, including the hot-tier bytes (for Fig. 13/14-style
     /// traces).
     pub decisions: Vec<(f64, usize, ResourceVector)>,
+    /// Structured audit log: one `alloc_change` event per decision (with
+    /// the triggering window stats and a predicted QPS from the profile
+    /// tables), one `alloc_outcome` event one window later with the
+    /// realized QPS and the prediction delta.
+    pub journal: EventJournal,
+    pending: Vec<PendingOutcome>,
+    last_tick_s: Option<f64>,
+    obs: RmuObs,
 }
 
 impl<'a> HeraRmu<'a> {
@@ -54,6 +98,100 @@ impl<'a> HeraRmu<'a> {
             store,
             headroom: 1.15,
             decisions: Vec::new(),
+            journal: EventJournal::new(),
+            pending: Vec::new(),
+            last_tick_s: None,
+            obs: RmuObs::resolve(),
+        }
+    }
+
+    /// Profile-table QPS prediction for an allocation (cache factor
+    /// applied for cached tenants) — what the audit log scores decisions
+    /// against one window later.
+    fn predict_qps(&self, model: ModelId, rv: &ResourceVector) -> f64 {
+        let base = self.store.profile(model).qps_at(rv.workers, rv.ways);
+        match rv.cache_bytes() {
+            Some(b) => base * self.store.cache_qps_factor(model, b),
+            None => base,
+        }
+    }
+
+    /// Record one applied decision everywhere it is observable: the
+    /// `decisions` timeline, the knob counters, the audit journal and the
+    /// pending list for next-window outcome scoring.
+    fn record_decision(
+        &mut self,
+        now: f64,
+        tenant: usize,
+        s: &TenantStats,
+        rv: ResourceVector,
+    ) {
+        self.decisions.push((now, tenant, rv));
+        if rv.workers != s.alloc.workers {
+            self.obs.decisions_workers.inc();
+        }
+        if rv.ways != s.alloc.ways {
+            self.obs.decisions_ways.inc();
+        }
+        if rv.cache_bytes() != s.alloc.cache_bytes() {
+            self.obs.decisions_cache.inc();
+        }
+        let predicted = self.predict_qps(s.model, &rv);
+        let sla_s = s.model.spec().sla_ms / 1e3;
+        let mut f = Value::object();
+        f.set("tenant", tenant)
+            .set("model", s.model.name())
+            .set("from", rv_json(&s.alloc))
+            .set("to", rv_json(&rv))
+            .set("window_p95_s", s.window_p95_s)
+            .set("window_arrival_qps", s.window_arrival_qps)
+            .set("window_completed", s.window_completed as usize)
+            .set("queue_depth", s.queue_depth)
+            .set("window_hit_rate", s.window_hit_rate)
+            .set("slack", s.window_p95_s / sla_s)
+            .set("predicted_qps", predicted);
+        self.journal.record("alloc_change", now, f);
+        self.pending.push(PendingOutcome {
+            tenant,
+            model: s.model,
+            decided_t_s: now,
+            predicted_qps: predicted,
+        });
+    }
+
+    /// Score last window's decisions against what the window realized,
+    /// and refresh the node EMU gauge.
+    fn observe_window(&mut self, now: f64, stats: &[TenantStats]) {
+        self.obs.windows.inc();
+        let dt = now - self.last_tick_s.unwrap_or(0.0);
+        self.last_tick_s = Some(now);
+        if dt > 0.0 && !stats.is_empty() {
+            let loads: Vec<(f64, f64)> = stats
+                .iter()
+                .map(|s| {
+                    (
+                        s.window_completed as f64 / dt,
+                        self.store.profile(s.model).max_load(),
+                    )
+                })
+                .collect();
+            self.obs.emu.set(emu_percent(&loads));
+        }
+        for p in std::mem::take(&mut self.pending) {
+            let Some(s) = stats.get(p.tenant) else { continue };
+            let window = now - p.decided_t_s;
+            if window <= 0.0 {
+                continue;
+            }
+            let realized = s.window_completed as f64 / window;
+            let mut f = Value::object();
+            f.set("tenant", p.tenant)
+                .set("model", p.model.name())
+                .set("decided_t_s", p.decided_t_s)
+                .set("predicted_qps", p.predicted_qps)
+                .set("realized_qps", realized)
+                .set("delta_qps", realized - p.predicted_qps);
+            self.journal.record("alloc_outcome", now, f);
         }
     }
 
@@ -196,8 +334,22 @@ impl<'a> HeraRmu<'a> {
     }
 }
 
+/// A [`ResourceVector`] as a JSON object (`cache_bytes` null when fully
+/// resident) — the journal's `from`/`to` shape.
+fn rv_json(rv: &ResourceVector) -> Value {
+    let mut v = Value::object();
+    v.set("workers", rv.workers).set("ways", rv.ways);
+    match rv.cache_bytes() {
+        Some(b) => v.set("cache_bytes", b),
+        None => v.set("cache_bytes", Value::Null),
+    };
+    v
+}
+
 impl Controller for HeraRmu<'_> {
     fn on_monitor(&mut self, now: f64, stats: &[TenantStats]) -> Vec<AllocChange> {
+        // Settle last window's audit (realized QPS, EMU) before deciding.
+        self.observe_window(now, stats);
         // Compute desired workers per tenant where the slack band triggers.
         let mut desired: Vec<usize> = stats.iter().map(|s| s.alloc.workers).collect();
         let mut any_change = false;
@@ -308,7 +460,7 @@ impl Controller for HeraRmu<'_> {
                         ways: k,
                         residency,
                     };
-                    self.decisions.push((now, i, rv));
+                    self.record_decision(now, i, s, rv);
                     changes.push(AllocChange { tenant: i, rv });
                 }
             }
@@ -320,7 +472,7 @@ impl Controller for HeraRmu<'_> {
                         ways: s.alloc.ways,
                         residency: s.alloc.residency,
                     };
-                    self.decisions.push((now, i, rv));
+                    self.record_decision(now, i, s, rv);
                     changes.push(AllocChange { tenant: i, rv });
                 }
             }
@@ -610,6 +762,55 @@ mod tests {
             rv.cache_bytes().is_some(),
             "decision history must carry the cache knob: {rv:?}"
         );
+    }
+
+    #[test]
+    fn journal_audits_decisions_and_scores_them_next_window() {
+        let mut rmu = HeraRmu::new(&STORE);
+        // Window 1: din violating hard -> worker decision + alloc_change.
+        let s1 = vec![
+            stats(id("din"), 2, 6, 0.200, 8000.0),
+            stats(id("dlrm_d"), 12, 5, 0.050, 10.0),
+        ];
+        let changes = rmu.on_monitor(1.0, &s1);
+        assert!(!changes.is_empty());
+        let change_events: Vec<_> = rmu
+            .journal
+            .events()
+            .iter()
+            .filter(|e| e.req("event").unwrap().as_str() == Some("alloc_change"))
+            .collect();
+        assert_eq!(change_events.len(), changes.len());
+        let e = change_events[0];
+        assert_eq!(e.req("model").unwrap().as_str(), Some("din"));
+        assert!(e.req("predicted_qps").unwrap().as_f64().unwrap() > 0.0);
+        assert!(e.req("slack").unwrap().as_f64().unwrap() > 1.0);
+        assert_eq!(
+            e.req("from").unwrap().req("workers").unwrap().as_usize(),
+            Some(2)
+        );
+        // Window 2 (quiet): every pending decision resolves to an
+        // alloc_outcome carrying realized vs predicted.
+        let s2 = vec![
+            stats(id("din"), changes[0].rv.workers, 6, 0.09, 1000.0),
+            stats(id("dlrm_d"), 12, 5, 0.050, 10.0),
+        ];
+        let n_before = rmu.journal.len();
+        rmu.on_monitor(2.0, &s2);
+        let outcomes: Vec<_> = rmu.journal.events()[n_before..]
+            .iter()
+            .filter(|e| e.req("event").unwrap().as_str() == Some("alloc_outcome"))
+            .collect();
+        assert_eq!(outcomes.len(), changes.len());
+        let o = outcomes[0];
+        // realized = window_completed / (2.0 - 1.0) = 100 QPS.
+        assert_eq!(o.req("realized_qps").unwrap().as_f64(), Some(100.0));
+        let delta = o.req("delta_qps").unwrap().as_f64().unwrap();
+        let pred = o.req("predicted_qps").unwrap().as_f64().unwrap();
+        assert!((delta - (100.0 - pred)).abs() < 1e-9);
+        // The journal is valid replayable JSONL end to end.
+        let parsed = EventJournal::parse_jsonl(&rmu.journal.to_jsonl()).unwrap();
+        assert_eq!(parsed.len(), rmu.journal.len());
     }
 
     #[test]

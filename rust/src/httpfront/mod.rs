@@ -1,10 +1,16 @@
 //! Minimal HTTP/1.1 frontend for the coordinator — the paper's inference
 //! servers receive client queries "through the NIC over an HTTP/REST
-//! protocol" (§VI-B).  One endpoint:
+//! protocol" (§VI-B).  Endpoints:
 //!
 //!   POST /infer?model=<name>&batch=<n>     body ignored (synthetic inputs)
 //!   GET  /stats?model=<name>               JSON tenant snapshot
+//!   GET  /metrics                          Prometheus text exposition
 //!   GET  /healthz                          liveness
+//!
+//! `/metrics` serves the process-wide [`crate::obs`] registry, so it is
+//! available even in standalone mode ([`HttpFront::start_standalone`])
+//! where no coordinator is attached — the `obs-serve` CLI uses that to
+//! export simulation-driven metrics without a PJRT engine.
 //!
 //! The paper also observes that network bandwidth is never the bottleneck
 //! (< 1.9 Gbps of 10 Gbps); this frontend exists to complete the serving
@@ -20,6 +26,7 @@ use std::thread::JoinHandle;
 
 use crate::coordinator::Coordinator;
 use crate::json::Value;
+use crate::obs::QuerySpan;
 
 /// A running HTTP frontend.
 pub struct HttpFront {
@@ -28,10 +35,46 @@ pub struct HttpFront {
     handle: Option<JoinHandle<()>>,
 }
 
+/// One HTTP response: status line, content type, body.
+struct Response {
+    status: &'static str,
+    content_type: &'static str,
+    body: String,
+}
+
+impl Response {
+    fn json(status: &'static str, v: Value) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: v.to_string(),
+        }
+    }
+
+    fn text(status: &'static str, body: String) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; version=0.0.4",
+            body,
+        }
+    }
+}
+
 impl HttpFront {
     /// Bind `addr` (e.g. "127.0.0.1:0") and serve requests routed to
     /// `coord` on a dedicated acceptor thread.
     pub fn start(addr: &str, coord: Arc<Coordinator>) -> anyhow::Result<HttpFront> {
+        HttpFront::start_inner(addr, Some(coord))
+    }
+
+    /// Bind `addr` with no coordinator: only `/healthz` and `/metrics`
+    /// respond (the latter exports the global obs registry).  Used by
+    /// `obs-serve` to scrape simulation-driven metrics.
+    pub fn start_standalone(addr: &str) -> anyhow::Result<HttpFront> {
+        HttpFront::start_inner(addr, None)
+    }
+
+    fn start_inner(addr: &str, coord: Option<Arc<Coordinator>>) -> anyhow::Result<HttpFront> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -46,7 +89,7 @@ impl HttpFront {
                         // this serving architecture are small (the load
                         // balancer fans in), so this stays simple.
                         std::thread::spawn(move || {
-                            let _ = handle_conn(stream, &c);
+                            let _ = handle_conn(stream, c.as_deref());
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -75,7 +118,7 @@ impl HttpFront {
     }
 }
 
-fn handle_conn(stream: TcpStream, coord: &Coordinator) -> anyhow::Result<()> {
+fn handle_conn(stream: TcpStream, coord: Option<&Coordinator>) -> anyhow::Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     loop {
@@ -83,6 +126,9 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> anyhow::Result<()> {
         if reader.read_line(&mut line)? == 0 {
             return Ok(()); // connection closed
         }
+        // The span opens at request receive, so its ingress stage covers
+        // header parse + routing + enqueue.
+        let span = QuerySpan::start();
         let mut parts = line.split_whitespace();
         let method = parts.next().unwrap_or("").to_string();
         let target = parts.next().unwrap_or("").to_string();
@@ -112,15 +158,16 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> anyhow::Result<()> {
             reader.read_exact(&mut body)?;
         }
 
-        let (status, payload) = route(&method, &target, coord);
+        let resp = route(&method, &target, coord, span);
         let mut out = stream.try_clone()?;
-        let body = payload.to_string();
         write!(
             out,
-            "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
-            body.len(),
+            "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
+            resp.status,
+            resp.content_type,
+            resp.body.len(),
             if keep_alive { "keep-alive" } else { "close" },
-            body
+            resp.body
         )?;
         out.flush()?;
         if !keep_alive {
@@ -137,16 +184,25 @@ fn query_param<'a>(target: &'a str, key: &str) -> Option<&'a str> {
     })
 }
 
-fn route(method: &str, target: &str, coord: &Coordinator) -> (&'static str, Value) {
+fn route(method: &str, target: &str, coord: Option<&Coordinator>, span: QuerySpan) -> Response {
     let path = target.split('?').next().unwrap_or("");
     match (method, path) {
         ("GET", "/healthz") => {
             let mut v = Value::object();
-            v.set("ok", true)
-                .set("uptime_s", coord.uptime().as_secs_f64());
-            ("200 OK", v)
+            v.set("ok", true);
+            match coord {
+                Some(c) => v.set("uptime_s", c.uptime().as_secs_f64()),
+                None => v.set("standalone", true),
+            };
+            Response::json("200 OK", v)
+        }
+        ("GET", "/metrics") => {
+            Response::text("200 OK", crate::obs::global().render_prometheus())
         }
         ("GET", "/stats") => {
+            let Some(coord) = coord else {
+                return bad_request("no coordinator attached");
+            };
             let Some(model) = query_param(target, "model") else {
                 return bad_request("missing ?model=");
             };
@@ -160,13 +216,18 @@ fn route(method: &str, target: &str, coord: &Coordinator) -> (&'static str, Valu
                         .set("p95_ms", s.p95_ms)
                         .set("p99_ms", s.p99_ms)
                         .set("violation_rate", s.violation_rate)
-                        .set("queue_depth", s.queue_depth);
-                    ("200 OK", v)
+                        .set("queue_depth", s.queue_depth)
+                        .set("window_qps", s.window_qps)
+                        .set("window_violation_rate", s.window_violation_rate);
+                    Response::json("200 OK", v)
                 }
                 Err(e) => bad_request(&e.to_string()),
             }
         }
         ("POST", "/infer") => {
+            let Some(coord) = coord else {
+                return bad_request("no coordinator attached");
+            };
             let Some(model) = query_param(target, "model") else {
                 return bad_request("missing ?model=");
             };
@@ -176,11 +237,11 @@ fn route(method: &str, target: &str, coord: &Coordinator) -> (&'static str, Valu
             if batch == 0 || batch > 1024 {
                 return bad_request("batch must be in 1..=1024");
             }
-            match coord.submit_synthetic(model, batch) {
+            match coord.submit_synthetic_traced(model, batch, span) {
                 Ok(()) => {
                     let mut v = Value::object();
                     v.set("accepted", true).set("batch", batch);
-                    ("202 Accepted", v)
+                    Response::json("202 Accepted", v)
                 }
                 Err(e) => bad_request(&e.to_string()),
             }
@@ -188,15 +249,15 @@ fn route(method: &str, target: &str, coord: &Coordinator) -> (&'static str, Valu
         _ => {
             let mut v = Value::object();
             v.set("error", "not found");
-            ("404 Not Found", v)
+            Response::json("404 Not Found", v)
         }
     }
 }
 
-fn bad_request(msg: &str) -> (&'static str, Value) {
+fn bad_request(msg: &str) -> Response {
     let mut v = Value::object();
     v.set("error", msg);
-    ("400 Bad Request", v)
+    Response::json("400 Bad Request", v)
 }
 
 /// Tiny blocking HTTP client for tests and examples.
@@ -231,6 +292,25 @@ mod tests {
         assert_eq!(query_param("/infer?model=ncf&batch=8", "batch"), Some("8"));
         assert_eq!(query_param("/infer?model=ncf", "batch"), None);
         assert_eq!(query_param("/infer", "model"), None);
+    }
+
+    #[test]
+    fn standalone_front_serves_metrics_without_a_coordinator() {
+        crate::obs::global()
+            .counter("httpfront_selftest_total", &[])
+            .inc();
+        let front = HttpFront::start_standalone("127.0.0.1:0").unwrap();
+        let addr = front.addr();
+        let (status, body) = http_request(addr, "GET", "/metrics").unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("httpfront_selftest_total"));
+        let (status, body) = http_request(addr, "GET", "/healthz").unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("standalone"));
+        // Routes needing a coordinator degrade to 400, not a panic.
+        let (status, _) = http_request(addr, "GET", "/stats?model=ncf").unwrap();
+        assert_eq!(status, 400);
+        front.stop();
     }
 
     // Full loop tests (bind, POST /infer, GET /stats) live in

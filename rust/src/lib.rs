@@ -44,6 +44,7 @@ pub mod httpfront;
 pub mod json;
 pub mod metrics;
 pub mod node;
+pub mod obs;
 pub mod par;
 pub mod rng;
 pub mod runtime;

@@ -10,6 +10,8 @@
 //!   group-sweep   evaluate N-tenant co-location groups (beyond pairs)
 //!   bench-engine  measure per-model PJRT inference latency
 //!   bench-snapshot  emit BENCH_affinity.json / BENCH_schedule.json perf snapshots
+//!   obs-dump   run the Fig. 14-style RMU scenario, dump metrics + audit JSONL
+//!   obs-serve  same scenario, then serve GET /metrics for scraping
 
 use std::path::Path;
 use std::sync::Arc;
@@ -46,6 +48,8 @@ fn main() {
         "cache-sweep" => cmd_cache_sweep(&args),
         "bench-engine" => cmd_bench_engine(&args),
         "bench-snapshot" => cmd_bench_snapshot(&args),
+        "obs-dump" => cmd_obs_dump(&args),
+        "obs-serve" => cmd_obs_serve(&args),
         "" | "help" | "--help" => {
             print_help();
             Ok(())
@@ -76,7 +80,9 @@ USAGE: hera <subcommand> [flags]
   group-sweep [--models a,b,c] [--residency MODE] [--max-group N]  evaluate N-tenant co-location
   cache-sweep [--model m] [--workers N] [--ways K] [--load-frac F] [--points P]
   bench-engine [--models a,b] [--batch B] [--iters N]
-  bench-snapshot [--out DIR] [--universe N] [--seed S] [--max-group G] [--threads T] [--target-frac F]"
+  bench-snapshot [--out DIR] [--universe N] [--seed S] [--max-group G] [--threads T] [--target-frac F]
+  obs-dump  [--out DIR] [--secs S] [--seed N]          RMU scenario -> registry snapshot + audit JSONL
+  obs-serve [--http ADDR] [--secs S] [--serve-secs S]  RMU scenario, then export GET /metrics"
     );
 }
 
@@ -431,6 +437,93 @@ fn cmd_bench_engine(args: &Args) -> anyhow::Result<()> {
             batch as f64 / t
         );
     }
+    Ok(())
+}
+
+/// The Fig. 14-style fluctuating-load RMU scenario behind `obs-dump` and
+/// `obs-serve`: two cached tenants under the paper's load trace, the Hera
+/// RMU on a 0.5 s monitor.  Populates the global obs registry (stage
+/// histograms, EMU gauge, RMU counters) and returns the decision journal.
+fn run_obs_scenario(secs: f64, seed: u64) -> anyhow::Result<hera::obs::EventJournal> {
+    anyhow::ensure!(secs >= 2.0, "--secs must be >= 2");
+    let node = NodeConfig::paper_default();
+    let store = ProfileStore::build(&node);
+    let d = ModelId::from_name("dlrm_d").unwrap();
+    let n = ModelId::from_name("ncf").unwrap();
+    let cache0 = |m: ModelId| 0.25 * store.min_cache_for_sla(m);
+    let tenants = [
+        SimulatedTenant {
+            model: d,
+            workers: 8,
+            ways: 5,
+            arrival_qps: store.profile(d).max_load(),
+            cache_bytes: Some(cache0(d)),
+        },
+        SimulatedTenant {
+            model: n,
+            workers: 8,
+            ways: 6,
+            arrival_qps: store.profile(n).max_load(),
+            cache_bytes: Some(cache0(n)),
+        },
+    ];
+    let mut sim = Simulation::new(node, &tenants, seed);
+    sim.set_monitor_interval(0.5);
+    sim.set_load_trace(vec![
+        (0.0, vec![0.3, 0.3]),
+        (secs * 0.15, vec![0.5, 0.4]),
+        (secs * 0.28, vec![0.7, 0.5]),
+        (secs * 0.4, vec![0.7, 0.2]),
+        (secs * 0.7, vec![0.1, 0.6]),
+    ]);
+    let mut rmu = hera::hera::HeraRmu::new(&store);
+    let out = sim.run(secs, (secs * 0.15).min(5.0), &mut rmu);
+    for o in &out {
+        println!(
+            "{:8} qps {:8.1}  p95 {:7.2} ms (SLA {:.0} ms)  final {} workers / {} ways",
+            o.model.name(),
+            o.qps,
+            o.p95_s * 1e3,
+            o.model.spec().sla_ms,
+            o.final_workers,
+            o.final_ways
+        );
+    }
+    println!(
+        "RMU: {} decisions, {} journal events",
+        rmu.decisions.len(),
+        rmu.journal.len()
+    );
+    Ok(rmu.journal)
+}
+
+fn cmd_obs_dump(args: &Args) -> anyhow::Result<()> {
+    let out = Path::new(args.get_or("out", "results"));
+    let secs = args.get_f64("secs", 30.0)?;
+    let seed = args.get_usize("seed", 0xF1614)? as u64;
+    let journal = run_obs_scenario(secs, seed)?;
+    std::fs::create_dir_all(out)?;
+    let reg_path = out.join("obs_registry.json");
+    let jsonl_path = out.join("obs_events.jsonl");
+    std::fs::write(&reg_path, hera::obs::global().snapshot_json().to_string())?;
+    journal.save(&jsonl_path)?;
+    println!("wrote {}", reg_path.display());
+    println!("wrote {}", jsonl_path.display());
+    Ok(())
+}
+
+fn cmd_obs_serve(args: &Args) -> anyhow::Result<()> {
+    let addr = args.get_or("http", "127.0.0.1:9464");
+    let secs = args.get_f64("secs", 10.0)?;
+    let serve_secs = args.get_f64("serve-secs", 30.0)?;
+    let _ = run_obs_scenario(secs, 0xF1614)?;
+    let front = hera::httpfront::HttpFront::start_standalone(addr)?;
+    println!(
+        "metrics on http://{}/metrics for {serve_secs:.0}s",
+        front.addr()
+    );
+    std::thread::sleep(Duration::from_secs_f64(serve_secs));
+    front.stop();
     Ok(())
 }
 

@@ -10,11 +10,18 @@ pub use emu::{emu_percent, EmuDistribution, EmuStat};
 pub use latency::LatencyStats;
 pub use pearson::pearson;
 
-/// Simple throughput counter over a time window (seconds).
+/// Throughput counter with rolling-window semantics: cumulative totals
+/// accumulate forever, while the window tallies reset at each
+/// [`QpsCounter::reset_window`] (the coordinator calls it once per
+/// monitor snapshot, so `qps()`/`violation_rate()` describe the *last
+/// window*, not the whole run).  Before the first reset the window
+/// equals the cumulative history, preserving the original one-shot use.
 #[derive(Debug, Clone, Default)]
 pub struct QpsCounter {
     completed: u64,
     violated: u64,
+    win_completed: u64,
+    win_violated: u64,
     window_s: f64,
 }
 
@@ -25,8 +32,10 @@ impl QpsCounter {
 
     pub fn record(&mut self, met_sla: bool) {
         self.completed += 1;
+        self.win_completed += 1;
         if !met_sla {
             self.violated += 1;
+            self.win_violated += 1;
         }
     }
 
@@ -34,12 +43,35 @@ impl QpsCounter {
         self.window_s = seconds;
     }
 
+    /// Start a fresh window: zero the window tallies (cumulative totals
+    /// are untouched).
+    pub fn reset_window(&mut self) {
+        self.win_completed = 0;
+        self.win_violated = 0;
+    }
+
+    /// Cumulative completions since construction.
     pub fn completed(&self) -> u64 {
         self.completed
     }
 
-    /// Fraction of completed queries that violated their SLA.
+    /// Completions in the current window.
+    pub fn window_completed(&self) -> u64 {
+        self.win_completed
+    }
+
+    /// Fraction of completed queries in the current window that
+    /// violated their SLA.
     pub fn violation_rate(&self) -> f64 {
+        if self.win_completed == 0 {
+            0.0
+        } else {
+            self.win_violated as f64 / self.win_completed as f64
+        }
+    }
+
+    /// Fraction of all completed queries that violated their SLA.
+    pub fn cumulative_violation_rate(&self) -> f64 {
         if self.completed == 0 {
             0.0
         } else {
@@ -47,12 +79,13 @@ impl QpsCounter {
         }
     }
 
-    /// Queries per second over the recorded window.
+    /// Queries per second over the current window (window length set by
+    /// [`QpsCounter::set_window`]).
     pub fn qps(&self) -> f64 {
         if self.window_s <= 0.0 {
             0.0
         } else {
-            self.completed as f64 / self.window_s
+            self.win_completed as f64 / self.window_s
         }
     }
 }
@@ -76,6 +109,30 @@ mod tests {
     #[test]
     fn qps_zero_window_is_zero() {
         let c = QpsCounter::new();
+        assert_eq!(c.qps(), 0.0);
+        assert_eq!(c.violation_rate(), 0.0);
+    }
+
+    #[test]
+    fn reset_window_makes_rates_rolling() {
+        let mut c = QpsCounter::new();
+        c.set_window(1.0);
+        for i in 0..100 {
+            c.record(i % 10 != 0); // 10% violations
+        }
+        c.reset_window();
+        // A clean window: rates describe it, not the history.
+        for _ in 0..50 {
+            c.record(true);
+        }
+        assert_eq!(c.window_completed(), 50);
+        assert_eq!(c.qps(), 50.0);
+        assert_eq!(c.violation_rate(), 0.0);
+        // Cumulative totals keep the whole run.
+        assert_eq!(c.completed(), 150);
+        assert!((c.cumulative_violation_rate() - 10.0 / 150.0).abs() < 1e-9);
+        // An empty fresh window reads zero, not stale history.
+        c.reset_window();
         assert_eq!(c.qps(), 0.0);
         assert_eq!(c.violation_rate(), 0.0);
     }

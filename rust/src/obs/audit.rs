@@ -1,0 +1,155 @@
+//! Structured JSONL event journal — the RMU decision audit log.
+//!
+//! Every event is one JSON object per line, stamped with the
+//! `hera-obs-v1` schema tag, an event name, a monotonically increasing
+//! sequence number and the (simulated or wall-clock) timestamp.  The
+//! writer is the in-repo [`crate::json`] module, whose shortest-roundtrip
+//! f64 formatting makes journals replayable bit-for-bit; the Python-side
+//! validator is `python/tools/check_obs_schema.py`.
+
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::json::{parse, Value};
+
+/// Append-only JSONL event journal.
+#[derive(Debug, Clone, Default)]
+pub struct EventJournal {
+    events: Vec<Value>,
+    seq: u64,
+}
+
+impl EventJournal {
+    pub fn new() -> EventJournal {
+        EventJournal::default()
+    }
+
+    /// Stamp `fields` (must be a JSON object) with the envelope —
+    /// `schema`, `event`, `seq`, `t_s` — and append it.
+    pub fn record(&mut self, event: &str, t_s: f64, mut fields: Value) {
+        assert!(
+            fields.as_object().is_some(),
+            "journal events must be JSON objects"
+        );
+        fields
+            .set("schema", crate::obs::OBS_SCHEMA)
+            .set("event", event)
+            .set("seq", self.seq as f64)
+            .set("t_s", t_s);
+        self.seq += 1;
+        self.events.push(fields);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[Value] {
+        &self.events
+    }
+
+    /// Render the journal as JSONL (one event per line, trailing newline
+    /// when non-empty).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            out.push_str(&e.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the journal to `path`, creating parent directories.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        std::fs::write(path, self.to_jsonl())
+            .with_context(|| format!("writing journal {}", path.display()))
+    }
+
+    /// Parse and validate a JSONL journal: every line must be an object
+    /// carrying the `hera-obs-v1` envelope, with `seq` increasing by one
+    /// from zero (replayability check).
+    pub fn parse_jsonl(text: &str) -> anyhow::Result<Vec<Value>> {
+        let mut events = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = parse(line).with_context(|| format!("journal line {}", i + 1))?;
+            let schema = v.req("schema")?.as_str().unwrap_or("");
+            anyhow::ensure!(
+                schema == crate::obs::OBS_SCHEMA,
+                "line {}: schema {schema:?} != {:?}",
+                i + 1,
+                crate::obs::OBS_SCHEMA
+            );
+            anyhow::ensure!(
+                v.req("event")?.as_str().is_some(),
+                "line {}: event must be a string",
+                i + 1
+            );
+            let seq = v.req("seq")?.as_usize().context("seq must be an integer")?;
+            anyhow::ensure!(
+                seq == events.len(),
+                "line {}: seq {seq} breaks the 0..n sequence",
+                i + 1
+            );
+            v.req("t_s")?.as_f64().context("t_s must be a number")?;
+            events.push(v);
+        }
+        Ok(events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_round_trips_through_the_in_repo_parser() {
+        let mut j = EventJournal::new();
+        let mut f = Value::object();
+        f.set("tenant", 0usize).set("predicted_qps", 1234.5678901234567);
+        j.record("alloc_change", 1.5, f);
+        let mut f = Value::object();
+        f.set("tenant", 1usize).set("delta_qps", -3.25);
+        j.record("alloc_outcome", 2.0, f);
+        let text = j.to_jsonl();
+        assert_eq!(text.lines().count(), 2);
+        let back = EventJournal::parse_jsonl(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0], j.events()[0], "f64s must round-trip exactly");
+        assert_eq!(back[1].req("event").unwrap().as_str(), Some("alloc_outcome"));
+        assert_eq!(back[1].req("seq").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn validation_rejects_broken_sequences() {
+        let mut j = EventJournal::new();
+        j.record("a", 0.0, Value::object());
+        j.record("b", 1.0, Value::object());
+        let text = j.to_jsonl();
+        // Drop the first line: seq starts at 1, not 0.
+        let tail = text.lines().nth(1).unwrap();
+        assert!(EventJournal::parse_jsonl(tail).is_err());
+        // Foreign schema tags are rejected.
+        let alien = "{\"event\":\"x\",\"schema\":\"other-v9\",\"seq\":0,\"t_s\":0}";
+        assert!(EventJournal::parse_jsonl(alien).is_err());
+        // Blank lines are tolerated.
+        let padded = format!("\n{}\n", text.trim_end());
+        assert_eq!(EventJournal::parse_jsonl(&padded).unwrap().len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_object_events_panic() {
+        EventJournal::new().record("bad", 0.0, Value::Num(1.0));
+    }
+}

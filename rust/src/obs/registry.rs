@@ -1,0 +1,551 @@
+//! Lock-cheap metrics registry: counters, gauges and fixed-bucket
+//! histograms keyed by a `&'static str` name plus a label set.
+//!
+//! The registry mutex is touched only on *registration* — every handle
+//! ([`Counter`], [`Gauge`], [`Histogram`]) is an `Arc` over atomics, so
+//! hot paths (per-query spans, per-dispatch stage records, scheduler
+//! search loops) pay one `fetch_add` per event and never contend on the
+//! map.  Iteration order is deterministic (`BTreeMap` over
+//! `(name, labels)`), so rendered expositions and JSON snapshots diff
+//! cleanly across runs, matching the repo's results-file convention.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::json::Value;
+
+/// A label set: `(key, value)` pairs.  Kept sorted by construction at
+/// each call site (all in-tree sites pass 0–2 labels already ordered);
+/// the registry key sorts them defensively so equivalent sets unify.
+pub type Labels = Vec<(&'static str, String)>;
+
+fn canonical(labels: &[(&'static str, String)]) -> Labels {
+    let mut l: Labels = labels.to_vec();
+    l.sort();
+    l
+}
+
+/// Monotonic event counter.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge holding an `f64` (stored as bits in an `AtomicU64`).
+#[derive(Debug, Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge(Arc::new(AtomicU64::new(0f64.to_bits())))
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Default latency buckets (seconds): 0.25 ms .. 5 s plus the overflow
+/// bucket — wide enough for both the sub-ms serving path and the
+/// deeply-backlogged tails the overload experiments produce.
+pub const LATENCY_BUCKETS_S: [f64; 14] = [
+    0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0,
+];
+
+/// Buckets for sub-second build/search timings (scheduler profiling).
+pub const BUILD_BUCKETS_S: [f64; 12] = [
+    1e-6, 1e-5, 1e-4, 5e-4, 1e-3, 5e-3, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0,
+];
+
+#[derive(Debug)]
+struct HistogramCore {
+    /// Upper bounds, ascending; `counts` has one extra overflow slot.
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    sum_bits: AtomicU64,
+}
+
+/// Fixed-bucket histogram with Prometheus `le` semantics
+/// (`v <= bound` lands in the bucket) and an overflow bucket.
+#[derive(Debug, Clone)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Histogram {
+    /// Build an unregistered histogram (tests and merges); registry users
+    /// go through [`Registry::histogram`].
+    pub fn with_bounds(bounds: &[f64]) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "bucket bounds must be strictly ascending"
+        );
+        Histogram(Arc::new(HistogramCore {
+            bounds: bounds.to_vec(),
+            counts: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }))
+    }
+
+    pub fn observe(&self, v: f64) {
+        let c = &self.0;
+        let idx = c
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(c.bounds.len());
+        c.counts[idx].fetch_add(1, Ordering::Relaxed);
+        // CAS-add the f64 sum; contention here is rare (per-event, and
+        // the loop converges in one round absent a concurrent add).
+        let mut cur = c.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match c.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Bucket upper bounds (without the overflow bucket).
+    pub fn bounds(&self) -> &[f64] {
+        &self.0.bounds
+    }
+
+    /// Per-bucket counts, overflow last (`bounds().len() + 1` entries).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.0
+            .counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Quantile estimate (`q` in [0, 1]) by rank over the buckets with
+    /// linear interpolation inside the landing bucket.  Values in the
+    /// overflow bucket report the last finite bound (a floor — the true
+    /// quantile is at least this).  Empty histograms report 0.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= rank {
+                let hi = match self.0.bounds.get(i) {
+                    Some(&b) => b,
+                    None => return *self.0.bounds.last().unwrap(),
+                };
+                let lo = if i == 0 { 0.0 } else { self.0.bounds[i - 1] };
+                let frac = (rank - seen) as f64 / c as f64;
+                return lo + frac * (hi - lo);
+            }
+            seen += c;
+        }
+        *self.0.bounds.last().unwrap()
+    }
+
+    /// Add `other`'s buckets and sum into `self`.  Bucket layouts must
+    /// match — merging histograms with different bounds is a bug.
+    pub fn merge_from(&self, other: &Histogram) {
+        assert_eq!(
+            self.0.bounds, other.0.bounds,
+            "cannot merge histograms with different buckets"
+        );
+        for (dst, src) in self.0.counts.iter().zip(&other.0.counts) {
+            dst.fetch_add(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        let s = other.sum();
+        if s != 0.0 {
+            let mut cur = self.0.sum_bits.load(Ordering::Relaxed);
+            loop {
+                let next = (f64::from_bits(cur) + s).to_bits();
+                match self.0.sum_bits.compare_exchange_weak(
+                    cur,
+                    next,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(actual) => cur = actual,
+                }
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+/// The metric registry.  One global instance serves the whole process
+/// (see [`crate::obs::global`]); tests build private registries.
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<(&'static str, Labels), Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or register the counter `name{labels}`.
+    pub fn counter(&self, name: &'static str, labels: &[(&'static str, String)]) -> Counter {
+        let key = (name, canonical(labels));
+        let mut m = self.metrics.lock().unwrap();
+        match m.entry(key).or_insert_with(|| Metric::Counter(Counter::default())) {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric {name} already registered with another type"),
+        }
+    }
+
+    /// Get or register the gauge `name{labels}`.
+    pub fn gauge(&self, name: &'static str, labels: &[(&'static str, String)]) -> Gauge {
+        let key = (name, canonical(labels));
+        let mut m = self.metrics.lock().unwrap();
+        match m.entry(key).or_insert_with(|| Metric::Gauge(Gauge::default())) {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric {name} already registered with another type"),
+        }
+    }
+
+    /// Get or register the histogram `name{labels}` with `bounds`.  A
+    /// pre-existing histogram keeps its original buckets.
+    pub fn histogram(
+        &self,
+        name: &'static str,
+        labels: &[(&'static str, String)],
+        bounds: &[f64],
+    ) -> Histogram {
+        let key = (name, canonical(labels));
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(key)
+            .or_insert_with(|| Metric::Histogram(Histogram::with_bounds(bounds)))
+        {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric {name} already registered with another type"),
+        }
+    }
+
+    /// Render the registry in the Prometheus text exposition format:
+    /// one `# TYPE` line per family, `_bucket`/`_sum`/`_count` series
+    /// per histogram, plus a derived `<name>_p95` gauge family per
+    /// histogram family (scrapers without quantile math — and the CI
+    /// smoke — read tails directly).
+    pub fn render_prometheus(&self) -> String {
+        let m = self.metrics.lock().unwrap();
+        let mut out = String::new();
+        let mut last_family = "";
+        for ((name, labels), metric) in m.iter() {
+            if *name != last_family {
+                let kind = match metric {
+                    Metric::Counter(_) => "counter",
+                    Metric::Gauge(_) => "gauge",
+                    Metric::Histogram(_) => "histogram",
+                };
+                out.push_str(&format!("# TYPE {name} {kind}\n"));
+                last_family = name;
+            }
+            match metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!(
+                        "{name}{} {}\n",
+                        fmt_labels(labels, None),
+                        c.get()
+                    ));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!(
+                        "{name}{} {}\n",
+                        fmt_labels(labels, None),
+                        g.get()
+                    ));
+                }
+                Metric::Histogram(h) => {
+                    let counts = h.bucket_counts();
+                    let mut cum = 0u64;
+                    for (i, c) in counts.iter().enumerate() {
+                        cum += c;
+                        let le = match h.bounds().get(i) {
+                            Some(b) => b.to_string(),
+                            None => "+Inf".to_string(),
+                        };
+                        out.push_str(&format!(
+                            "{name}_bucket{} {cum}\n",
+                            fmt_labels(labels, Some(&le)),
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{name}_sum{} {}\n",
+                        fmt_labels(labels, None),
+                        h.sum()
+                    ));
+                    out.push_str(&format!(
+                        "{name}_count{} {cum}\n",
+                        fmt_labels(labels, None)
+                    ));
+                }
+            }
+        }
+        // Second pass: derived p95 gauges for every histogram series.
+        let mut last_family = "";
+        for ((name, labels), metric) in m.iter() {
+            if let Metric::Histogram(h) = metric {
+                if *name != last_family {
+                    out.push_str(&format!("# TYPE {name}_p95 gauge\n"));
+                    last_family = name;
+                }
+                out.push_str(&format!(
+                    "{name}_p95{} {}\n",
+                    fmt_labels(labels, None),
+                    h.quantile(0.95)
+                ));
+            }
+        }
+        out
+    }
+
+    /// Deterministic JSON snapshot of every metric — the `obs-dump`
+    /// payload and the `"obs"` key of `bench-snapshot` documents.
+    pub fn snapshot_json(&self) -> Value {
+        let m = self.metrics.lock().unwrap();
+        let mut rows = Vec::new();
+        for ((name, labels), metric) in m.iter() {
+            let mut row = Value::object();
+            row.set("name", *name);
+            let mut lv = Value::object();
+            for (k, v) in labels {
+                lv.set(k, v.as_str());
+            }
+            row.set("labels", lv);
+            match metric {
+                Metric::Counter(c) => {
+                    row.set("type", "counter").set("value", c.get() as f64);
+                }
+                Metric::Gauge(g) => {
+                    row.set("type", "gauge").set("value", g.get());
+                }
+                Metric::Histogram(h) => {
+                    let counts = h.bucket_counts();
+                    let mut buckets = Vec::new();
+                    for (i, &c) in counts.iter().enumerate() {
+                        let mut b = Value::object();
+                        match h.bounds().get(i) {
+                            Some(&le) => b.set("le", le),
+                            None => b.set("le", "+Inf"),
+                        };
+                        b.set("count", c as f64);
+                        buckets.push(b);
+                    }
+                    row.set("type", "histogram")
+                        .set("buckets", Value::Array(buckets))
+                        .set("sum", h.sum())
+                        .set("count", h.count() as f64)
+                        .set("p95", h.quantile(0.95));
+                }
+            }
+            rows.push(row);
+        }
+        let mut root = Value::object();
+        root.set("schema", crate::obs::OBS_SCHEMA)
+            .set("metrics", Value::Array(rows));
+        root
+    }
+}
+
+/// `{k="v",...}` with an optional trailing `le` label (histogram
+/// buckets); empty label sets render as nothing.
+fn fmt_labels(labels: &Labels, le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("events_total", &[("kind", "a".into())]);
+        c.inc();
+        c.add(4);
+        // Re-fetching the same (name, labels) returns the same cell.
+        assert_eq!(r.counter("events_total", &[("kind", "a".into())]).get(), 5);
+        let g = r.gauge("level", &[]);
+        g.set(2.5);
+        assert_eq!(r.gauge("level", &[]).get(), 2.5);
+    }
+
+    #[test]
+    fn histogram_boundary_values_use_le_semantics() {
+        let h = Histogram::with_bounds(&[1.0, 2.0, 4.0]);
+        // Exactly on a bound lands in that bucket (Prometheus `le`).
+        h.observe(1.0);
+        h.observe(2.0);
+        h.observe(0.5);
+        h.observe(3.0);
+        assert_eq!(h.bucket_counts(), vec![2, 1, 1, 0]);
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 6.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_overflow_bucket_catches_the_tail() {
+        let h = Histogram::with_bounds(&[1.0, 2.0]);
+        h.observe(100.0);
+        h.observe(2.0000001);
+        assert_eq!(h.bucket_counts(), vec![0, 0, 2]);
+        // Overflow quantiles floor at the last finite bound.
+        assert_eq!(h.quantile(0.95), 2.0);
+    }
+
+    #[test]
+    fn histogram_quantile_interpolates() {
+        let h = Histogram::with_bounds(&[1.0, 2.0, 4.0]);
+        for _ in 0..50 {
+            h.observe(0.5);
+        }
+        for _ in 0..50 {
+            h.observe(3.0);
+        }
+        let p50 = h.quantile(0.5);
+        assert!((0.0..=1.0).contains(&p50), "p50={p50}");
+        let p95 = h.quantile(0.95);
+        assert!((2.0..=4.0).contains(&p95), "p95={p95}");
+        // rank 100 exhausts the top bucket: interpolation reaches its
+        // upper bound exactly.
+        assert_eq!(h.quantile(1.0), 4.0);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_zero() {
+        let h = Histogram::with_bounds(&[1.0]);
+        assert_eq!(h.quantile(0.95), 0.0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_adds_buckets_and_sums() {
+        let a = Histogram::with_bounds(&[1.0, 2.0]);
+        let b = Histogram::with_bounds(&[1.0, 2.0]);
+        a.observe(0.5);
+        b.observe(1.5);
+        b.observe(9.0);
+        a.merge_from(&b);
+        assert_eq!(a.bucket_counts(), vec![1, 1, 1]);
+        assert!((a.sum() - 11.0).abs() < 1e-12);
+        assert_eq!(a.count(), 3);
+        // The source is unchanged.
+        assert_eq!(b.count(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_rejects_mismatched_buckets() {
+        let a = Histogram::with_bounds(&[1.0]);
+        let b = Histogram::with_bounds(&[2.0]);
+        a.merge_from(&b);
+    }
+
+    #[test]
+    fn prometheus_rendering_is_well_formed() {
+        let r = Registry::new();
+        r.counter("hera_queries_total", &[("model", "ncf".into())]).add(3);
+        let h = r.histogram(
+            "hera_stage_seconds",
+            &[("model", "ncf".into()), ("stage", "queue".into())],
+            &[0.001, 0.01],
+        );
+        h.observe(0.0005);
+        h.observe(0.5);
+        r.gauge("hera_emu_percent", &[]).set(120.5);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE hera_queries_total counter"));
+        assert!(text.contains("hera_queries_total{model=\"ncf\"} 3"));
+        assert!(text.contains("# TYPE hera_stage_seconds histogram"));
+        assert!(text.contains(
+            "hera_stage_seconds_bucket{model=\"ncf\",stage=\"queue\",le=\"0.001\"} 1"
+        ));
+        assert!(text.contains(
+            "hera_stage_seconds_bucket{model=\"ncf\",stage=\"queue\",le=\"+Inf\"} 2"
+        ));
+        assert!(text.contains("hera_stage_seconds_count{model=\"ncf\",stage=\"queue\"} 2"));
+        assert!(text.contains("hera_emu_percent 120.5"));
+        assert!(text.contains("# TYPE hera_stage_seconds_p95 gauge"));
+        // Every non-comment line is `series value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split(' ').count(), 2, "malformed line: {line}");
+        }
+    }
+
+    #[test]
+    fn snapshot_json_is_deterministic() {
+        let r = Registry::new();
+        r.counter("b_total", &[]).inc();
+        r.counter("a_total", &[]).add(2);
+        let s1 = r.snapshot_json().to_string();
+        let s2 = r.snapshot_json().to_string();
+        assert_eq!(s1, s2);
+        // BTreeMap ordering: a_total renders before b_total.
+        let a = s1.find("a_total").unwrap();
+        let b = s1.find("b_total").unwrap();
+        assert!(a < b);
+    }
+}

@@ -1,0 +1,231 @@
+//! Per-query spans and per-tenant stage observers.
+//!
+//! A [`QuerySpan`] rides one query through the serving path
+//! (`httpfront` ingress → coordinator queue → worker compute) collecting
+//! wall-clock marks; [`QuerySpan::finish`] folds the stage durations into
+//! a tenant's [`StageObs`] histograms.  The discrete-event simulation
+//! feeds the *same* histograms through [`StageObs::record_dispatch`] /
+//! [`StageObs::record_completion`] with simulated durations, so
+//! co-location interference shows up as a fatter `queue` or `cache`
+//! stage rather than an opaque end-to-end p95.
+
+use std::time::Instant;
+
+use super::names;
+use super::registry::{Counter, Histogram, Registry, LATENCY_BUCKETS_S};
+
+/// Pipeline stages a query's latency decomposes into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Frontend receive/parse until the query is enqueued.
+    Ingress,
+    /// Enqueued until a worker dequeues it.
+    Queue,
+    /// Worker compute (engine inference / simulated service time).
+    Compute,
+    /// Backing-tier embedding fetch (cache-miss leg; sim path only).
+    Cache,
+    /// End-to-end.
+    Total,
+}
+
+impl Stage {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Ingress => "ingress",
+            Stage::Queue => "queue",
+            Stage::Compute => "compute",
+            Stage::Cache => "cache",
+            Stage::Total => "total",
+        }
+    }
+}
+
+/// Per-tenant bundle of stage histograms and query counters.  Handles
+/// are resolved once at tenant setup, so the per-event cost is atomic
+/// adds only — the registry mutex is never touched on the query path.
+#[derive(Debug, Clone)]
+pub struct StageObs {
+    ingress: Histogram,
+    queue: Histogram,
+    compute: Histogram,
+    cache: Histogram,
+    total: Histogram,
+    queries: Counter,
+    violations: Counter,
+}
+
+impl StageObs {
+    /// Resolve the stage handles for `model` in `registry`.
+    pub fn for_model(registry: &Registry, model: &str) -> StageObs {
+        let hist = |stage: Stage| {
+            registry.histogram(
+                names::QUERY_STAGE_SECONDS,
+                &[("model", model.to_string()), ("stage", stage.as_str().to_string())],
+                &LATENCY_BUCKETS_S,
+            )
+        };
+        StageObs {
+            ingress: hist(Stage::Ingress),
+            queue: hist(Stage::Queue),
+            compute: hist(Stage::Compute),
+            cache: hist(Stage::Cache),
+            total: hist(Stage::Total),
+            queries: registry
+                .counter(names::QUERIES_TOTAL, &[("model", model.to_string())]),
+            violations: registry
+                .counter(names::SLA_VIOLATIONS_TOTAL, &[("model", model.to_string())]),
+        }
+    }
+
+    /// Record one stage duration directly (simulation / tests).
+    pub fn observe(&self, stage: Stage, seconds: f64) {
+        match stage {
+            Stage::Ingress => &self.ingress,
+            Stage::Queue => &self.queue,
+            Stage::Compute => &self.compute,
+            Stage::Cache => &self.cache,
+            Stage::Total => &self.total,
+        }
+        .observe(seconds);
+    }
+
+    /// Simulation dispatch hook: queue wait plus the attributed service
+    /// legs of the query being started.
+    pub fn record_dispatch(&self, queue_s: f64, compute_s: f64, cache_s: f64) {
+        self.queue.observe(queue_s);
+        self.compute.observe(compute_s);
+        if cache_s > 0.0 {
+            self.cache.observe(cache_s);
+        }
+    }
+
+    /// Simulation completion hook: end-to-end latency + SLA accounting.
+    pub fn record_completion(&self, total_s: f64, met_sla: bool) {
+        self.total.observe(total_s);
+        self.queries.inc();
+        if !met_sla {
+            self.violations.inc();
+        }
+    }
+
+    /// The per-tenant `total` histogram (tests read quantiles off it).
+    pub fn total_histogram(&self) -> &Histogram {
+        &self.total
+    }
+}
+
+/// Wall-clock trace of one query through the real serving path.
+#[derive(Debug, Clone)]
+pub struct QuerySpan {
+    t_start: Instant,
+    t_enqueue: Option<Instant>,
+    t_dequeue: Option<Instant>,
+    t_compute_start: Option<Instant>,
+    t_compute_end: Option<Instant>,
+}
+
+impl Default for QuerySpan {
+    fn default() -> QuerySpan {
+        QuerySpan::start()
+    }
+}
+
+impl QuerySpan {
+    /// Open a span at ingress (frontend receive or direct submit).
+    pub fn start() -> QuerySpan {
+        QuerySpan {
+            t_start: Instant::now(),
+            t_enqueue: None,
+            t_dequeue: None,
+            t_compute_start: None,
+            t_compute_end: None,
+        }
+    }
+
+    pub fn mark_enqueue(&mut self) {
+        self.t_enqueue = Some(Instant::now());
+    }
+
+    pub fn mark_dequeue(&mut self) {
+        self.t_dequeue = Some(Instant::now());
+    }
+
+    pub fn mark_compute_start(&mut self) {
+        self.t_compute_start = Some(Instant::now());
+    }
+
+    pub fn mark_compute_end(&mut self) {
+        self.t_compute_end = Some(Instant::now());
+    }
+
+    /// Seconds since the span opened.
+    pub fn elapsed_s(&self) -> f64 {
+        self.t_start.elapsed().as_secs_f64()
+    }
+
+    /// Close the span: fold whatever stages were marked into `obs` and
+    /// count the query.  Unmarked stages are skipped, so partially
+    /// traced paths (e.g. an error before compute) stay consistent.
+    pub fn finish(&self, obs: &StageObs, met_sla: bool) {
+        let end = Instant::now();
+        if let Some(t_enq) = self.t_enqueue {
+            obs.observe(Stage::Ingress, (t_enq - self.t_start).as_secs_f64());
+            if let Some(t_deq) = self.t_dequeue {
+                obs.observe(Stage::Queue, (t_deq - t_enq).as_secs_f64());
+            }
+        }
+        if let (Some(t0), Some(t1)) = (self.t_compute_start, self.t_compute_end) {
+            obs.observe(Stage::Compute, (t1 - t0).as_secs_f64());
+        }
+        obs.record_completion((end - self.t_start).as_secs_f64(), met_sla);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_populates_stage_histograms() {
+        let r = Registry::new();
+        let obs = StageObs::for_model(&r, "ncf");
+        let mut span = QuerySpan::start();
+        span.mark_enqueue();
+        span.mark_dequeue();
+        span.mark_compute_start();
+        span.mark_compute_end();
+        span.finish(&obs, true);
+        let text = r.render_prometheus();
+        assert!(text.contains("hera_queries_total{model=\"ncf\"} 1"));
+        assert!(text.contains("hera_sla_violations_total{model=\"ncf\"} 0"));
+        for stage in ["ingress", "queue", "compute", "total"] {
+            assert!(
+                text.contains(&format!(
+                    "hera_query_stage_latency_seconds_count{{model=\"ncf\",stage=\"{stage}\"}} 1"
+                )),
+                "missing stage {stage} in:\n{text}"
+            );
+        }
+    }
+
+    #[test]
+    fn sim_hooks_feed_the_same_histograms() {
+        let r = Registry::new();
+        let obs = StageObs::for_model(&r, "dlrm_b");
+        obs.record_dispatch(0.002, 0.001, 0.0005);
+        obs.record_completion(0.0035, false);
+        assert_eq!(
+            r.counter(names::SLA_VIOLATIONS_TOTAL, &[("model", "dlrm_b".into())]).get(),
+            1
+        );
+        assert!(obs.total_histogram().quantile(0.95) > 0.0);
+        // Resident tenants (cache leg 0) record no cache-stage samples.
+        let obs2 = StageObs::for_model(&r, "ncf");
+        obs2.record_dispatch(0.001, 0.001, 0.0);
+        let text = r.render_prometheus();
+        assert!(text.contains(
+            "hera_query_stage_latency_seconds_count{model=\"ncf\",stage=\"cache\"} 0"
+        ));
+    }
+}

@@ -13,6 +13,7 @@ use crate::config::{ModelId, NodeConfig};
 use crate::embedcache::MIN_CACHE_BYTES;
 use crate::metrics::LatencyStats;
 use crate::node::{BandwidthModel, ServiceProfile};
+use crate::obs::StageObs;
 use crate::rng::{BatchSizeDist, Exponential, Xoshiro256};
 use crate::simkernel::EventQueue;
 use std::collections::VecDeque;
@@ -134,6 +135,9 @@ struct TenantState {
     busy_time: f64,
     bw_util_sum: f64,
     bw_util_n: u64,
+    /// Stage histograms in the global obs registry (same family the real
+    /// serving path feeds) — observation only, never read by the sim.
+    obs: StageObs,
 }
 
 /// Aggregate per-tenant outcome of a run.
@@ -212,6 +216,7 @@ impl Simulation {
                     busy_time: 0.0,
                     bw_util_sum: 0.0,
                     bw_util_n: 0,
+                    obs: StageObs::for_model(crate::obs::global(), t.model.name()),
                 }
             })
             .collect();
@@ -250,7 +255,7 @@ impl Simulation {
         }
     }
 
-    fn dispatch(&mut self, tenant: usize, q: &mut EventQueue<Event>) {
+    fn dispatch(&mut self, tenant: usize, now: f64, q: &mut EventQueue<Event>) {
         loop {
             let free = {
                 let t = &self.tenants[tenant];
@@ -286,6 +291,14 @@ impl Simulation {
             t.bw_util_n += 1;
             let service = t.profile.service_time_s(batch, slowdown) * friction;
             t.busy_time += service;
+            // Stage attribution: queue wait so far, the service leg being
+            // started, and the backing-tier fetch share of that service
+            // (zero for fully resident tenants).
+            t.obs.record_dispatch(
+                now - t_arr,
+                service,
+                batch as f64 * t.profile.backing_leg_per_item(),
+            );
             q.schedule_in(service, Event::Completion {
                 tenant,
                 t_arrival: t_arr,
@@ -351,13 +364,14 @@ impl Simulation {
                             self.batch_dist.sample(&mut t.rng_batch)
                         };
                         self.tenants[tenant].queue.push_back((now, batch));
-                        self.dispatch(tenant, &mut q);
+                        self.dispatch(tenant, now, &mut q);
                     }
                     self.schedule_next_arrival(tenant, &mut q);
                 }
                 Event::Completion { tenant, t_arrival } => {
                     let latency = now - t_arrival;
                     let t = &mut self.tenants[tenant];
+                    let sla_s = t.cfg.model.spec().sla_ms / 1e3;
                     t.busy -= 1;
                     t.completed += 1;
                     t.window_completed += 1;
@@ -365,7 +379,8 @@ impl Simulation {
                         t.lat_all.record(latency);
                     }
                     t.lat_window.record(latency);
-                    self.dispatch(tenant, &mut q);
+                    t.obs.record_completion(latency, latency <= sla_s);
+                    self.dispatch(tenant, now, &mut q);
                 }
                 Event::Monitor => {
                     let stats: Vec<TenantStats> = self
@@ -421,7 +436,7 @@ impl Simulation {
                             let applied = t.cfg.alloc();
                             self.rebuild_profile(c.tenant);
                             self.alloc_timeline.push((now, c.tenant, applied));
-                            self.dispatch(c.tenant, &mut q);
+                            self.dispatch(c.tenant, now, &mut q);
                         }
                     }
                     for t in &mut self.tenants {

@@ -1,0 +1,127 @@
+//! End-to-end observability: a simulated RMU run must populate the
+//! global registry (stage histograms, EMU gauge, RMU counters), emit a
+//! replayable JSONL audit journal, be scrapeable over HTTP in Prometheus
+//! text format — and change nothing about the simulation itself.
+
+use hera::config::{ModelId, NodeConfig};
+use hera::hera::HeraRmu;
+use hera::httpfront::{http_request, HttpFront};
+use hera::obs::{names, EventJournal};
+use hera::profiler::ProfileStore;
+use hera::server_sim::{SimulatedTenant, Simulation};
+
+fn fig14_scenario(secs: f64, seed: u64, store: &ProfileStore) -> (Vec<f64>, HeraRmu<'_>) {
+    let d = ModelId::from_name("dlrm_d").unwrap();
+    let n = ModelId::from_name("ncf").unwrap();
+    let cache0 = |m: ModelId| 0.25 * store.min_cache_for_sla(m);
+    let tenants = [
+        SimulatedTenant {
+            model: d,
+            workers: 8,
+            ways: 5,
+            arrival_qps: store.profile(d).max_load(),
+            cache_bytes: Some(cache0(d)),
+        },
+        SimulatedTenant {
+            model: n,
+            workers: 8,
+            ways: 6,
+            arrival_qps: store.profile(n).max_load(),
+            cache_bytes: Some(cache0(n)),
+        },
+    ];
+    let mut sim = Simulation::new(NodeConfig::paper_default(), &tenants, seed);
+    sim.set_monitor_interval(0.5);
+    sim.set_load_trace(vec![
+        (0.0, vec![0.3, 0.3]),
+        (secs * 0.15, vec![0.5, 0.4]),
+        (secs * 0.4, vec![0.7, 0.2]),
+        (secs * 0.7, vec![0.1, 0.6]),
+    ]);
+    let mut rmu = HeraRmu::new(store);
+    let out = sim.run(secs, 1.0, &mut rmu);
+    (out.iter().map(|o| o.p95_s).collect(), rmu)
+}
+
+#[test]
+fn rmu_run_populates_registry_journal_and_scrape() {
+    let store = ProfileStore::build(&NodeConfig::paper_default());
+    let (_, rmu) = fig14_scenario(12.0, 0xF1614, &store);
+
+    // The audit journal: decisions were made, every alloc_change carries
+    // its trigger stats and prediction, and the JSONL replays exactly.
+    assert!(!rmu.decisions.is_empty(), "the trace must force decisions");
+    assert!(rmu.journal.len() >= rmu.decisions.len());
+    let text = rmu.journal.to_jsonl();
+    let events = EventJournal::parse_jsonl(&text).unwrap();
+    assert_eq!(events.len(), rmu.journal.len());
+    let mut saw_change = false;
+    let mut saw_outcome = false;
+    for e in &events {
+        match e.req("event").unwrap().as_str().unwrap() {
+            "alloc_change" => {
+                saw_change = true;
+                assert!(e.req("predicted_qps").unwrap().as_f64().unwrap() >= 0.0);
+                assert!(e.req("window_p95_s").unwrap().as_f64().is_some());
+                e.req("to").unwrap().req("workers").unwrap().as_usize().unwrap();
+            }
+            "alloc_outcome" => {
+                saw_outcome = true;
+                let r = e.req("realized_qps").unwrap().as_f64().unwrap();
+                let p = e.req("predicted_qps").unwrap().as_f64().unwrap();
+                let delta = e.req("delta_qps").unwrap().as_f64().unwrap();
+                assert!((delta - (r - p)).abs() < 1e-9);
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert!(saw_change && saw_outcome, "both event kinds must appear");
+
+    // The registry: per-tenant stage histograms (including a non-empty
+    // cache stage — both tenants are cache-served), the EMU gauge and
+    // the RMU counters, all visible in the Prometheus rendering.
+    let text = hera::obs::global().render_prometheus();
+    for model in ["dlrm_d", "ncf"] {
+        for stage in ["queue", "compute", "cache", "total"] {
+            let needle = format!(
+                "hera_query_stage_latency_seconds_count{{model=\"{model}\",stage=\"{stage}\"}}"
+            );
+            let line = text
+                .lines()
+                .find(|l| l.starts_with(&needle))
+                .unwrap_or_else(|| panic!("missing {needle}"));
+            let v: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v > 0.0, "{needle} must have samples");
+        }
+    }
+    assert!(text.contains(names::EMU_PERCENT));
+    assert!(text.contains("hera_rmu_decisions_total{knob=\"workers\"}"));
+    assert!(text.contains(names::RMU_WINDOWS_TOTAL));
+    // p95 convenience gauges ride along for every histogram family.
+    assert!(text.contains("hera_query_stage_latency_seconds_p95{"));
+
+    // The scrape path: a standalone frontend serves the same text.
+    let front = HttpFront::start_standalone("127.0.0.1:0").unwrap();
+    let (status, body) = http_request(front.addr(), "GET", "/metrics").unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("hera_query_stage_latency_seconds_bucket"));
+    assert!(body.contains(names::EMU_PERCENT));
+    front.stop();
+}
+
+#[test]
+fn instrumentation_never_perturbs_the_simulation() {
+    // Two identical runs (same seed) with the registry live and already
+    // warm from other tests: outcomes must stay bit-for-bit equal, i.e.
+    // the metrics are observation-only.
+    let store = ProfileStore::build(&NodeConfig::paper_default());
+    let (a, rmu_a) = fig14_scenario(8.0, 7, &store);
+    let (b, rmu_b) = fig14_scenario(8.0, 7, &store);
+    assert_eq!(a, b, "p95s must be bit-identical across reruns");
+    assert_eq!(rmu_a.decisions, rmu_b.decisions);
+    assert_eq!(
+        rmu_a.journal.to_jsonl(),
+        rmu_b.journal.to_jsonl(),
+        "the audit journal is deterministic given the seed"
+    );
+}
