@@ -2,13 +2,17 @@
 """Validate `hera-obs-v1` observability artifacts.
 
 Usage:
-    check_obs_schema.py DIR [--require-decisions] [--metrics-text FILE]
+    check_obs_schema.py DIR [--require-decisions] [--require-hps]
+                            [--metrics-text FILE]
 
 DIR must hold obs_registry.json and obs_events.jsonl (as written by
 `hera obs-dump --out DIR`).  --metrics-text additionally parses a saved
 Prometheus text exposition (e.g. a `curl /metrics` capture from
 `hera obs-serve`) and cross-checks the per-tenant stage histograms and
-RMU counters CI's smoke test expects.
+RMU counters CI's smoke test expects.  --require-hps checks that the
+hierarchical-parameter-server families (per-(model, tier) read counters,
+per-tier latency histograms, queue-depth and prefetch-overlap gauges)
+made it into the registry snapshot.
 """
 
 import argparse
@@ -18,8 +22,14 @@ from pathlib import Path
 
 SCHEMA = "hera-obs-v1"
 METRIC_TYPES = ("counter", "gauge", "histogram")
-EVENT_KINDS = ("alloc_change", "alloc_outcome")
+EVENT_KINDS = ("alloc_change", "alloc_outcome", "hps_decision")
 STAGES = ("queue", "compute", "cache", "total")
+HPS_FAMILIES = {
+    "hera_hps_reads_total": ("model", "tier"),
+    "hera_hps_tier_latency_seconds": ("model", "tier"),
+    "hera_hps_queue_depth": ("tier",),
+    "hera_hps_prefetch_overlap": ("model",),
+}
 
 
 def check_registry(path):
@@ -67,6 +77,17 @@ def check_journal(path, require_decisions):
                 assert key in e, f"alloc_change line {i + 1} missing {key!r}"
             for side in ("from", "to"):
                 assert set(e[side]) == {"workers", "ways", "cache_bytes"}, e[side]
+        elif kind == "hps_decision":
+            # Prefetch-overlap knob steps: from/to are scalar fractions,
+            # not allocation objects.
+            for key in ("tenant", "model", "knob", "from", "to", "slack",
+                        "window_p95_s", "window_arrival_qps"):
+                assert key in e, f"hps_decision line {i + 1} missing {key!r}"
+            assert e["knob"] == "prefetch", e
+            for side in ("from", "to"):
+                v = e[side]
+                assert isinstance(v, (int, float)) and 0.0 <= v <= 1.0, e
+            assert e["from"] != e["to"], f"hps_decision line {i + 1} is a no-op"
         else:
             for key in ("tenant", "model", "decided_t_s", "predicted_qps",
                         "realized_qps", "delta_qps"):
@@ -77,6 +98,34 @@ def check_journal(path, require_decisions):
         assert kinds["alloc_change"] > 0, "no alloc_change events recorded"
         assert kinds["alloc_outcome"] > 0, "no alloc_outcome events recorded"
     return kinds
+
+
+def check_hps_registry(doc):
+    """Every HPS family present, correctly typed and labelled, non-empty."""
+    expected_type = {
+        "hera_hps_reads_total": "counter",
+        "hera_hps_tier_latency_seconds": "histogram",
+        "hera_hps_queue_depth": "gauge",
+        "hera_hps_prefetch_overlap": "gauge",
+    }
+    by_name = {}
+    for m in doc["metrics"]:
+        by_name.setdefault(m["name"], []).append(m)
+    for family, label_keys in HPS_FAMILIES.items():
+        series = by_name.get(family)
+        assert series, f"HPS family {family!r} missing from the registry"
+        for m in series:
+            assert m["type"] == expected_type[family], m
+            assert set(m["labels"]) == set(label_keys), (
+                f"{family}: labels {sorted(m['labels'])} != {sorted(label_keys)}"
+            )
+    tiers = {m["labels"]["tier"] for m in by_name["hera_hps_reads_total"]}
+    assert tiers, "no tier ever served a read"
+    reads = sum(m["value"] for m in by_name["hera_hps_reads_total"])
+    assert reads > 0, "hera_hps_reads_total is all zero"
+    for m in by_name["hera_hps_tier_latency_seconds"]:
+        assert m["count"] > 0, f"empty tier latency histogram: {m['labels']}"
+    return tiers
 
 
 def parse_prometheus(text):
@@ -125,17 +174,22 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("dir", type=Path)
     ap.add_argument("--require-decisions", action="store_true")
+    ap.add_argument("--require-hps", action="store_true")
     ap.add_argument("--metrics-text", type=Path, default=None)
     args = ap.parse_args()
 
-    _, names = check_registry(args.dir / "obs_registry.json")
+    doc, names = check_registry(args.dir / "obs_registry.json")
     assert "hera_query_stage_latency_seconds" in names, names
     kinds = check_journal(args.dir / "obs_events.jsonl", args.require_decisions)
     print(f"obs_registry.json: ok ({len(names)} metric families)")
     print(
         "obs_events.jsonl: ok "
-        f"({kinds['alloc_change']} changes, {kinds['alloc_outcome']} outcomes)"
+        f"({kinds['alloc_change']} changes, {kinds['alloc_outcome']} outcomes, "
+        f"{kinds['hps_decision']} hps decisions)"
     )
+    if args.require_hps:
+        tiers = check_hps_registry(doc)
+        print(f"hps families: ok (tiers: {', '.join(sorted(tiers))})")
     if args.metrics_text is not None:
         n = check_metrics_text(args.metrics_text, args.require_decisions)
         print(f"{args.metrics_text}: ok ({n} samples)")

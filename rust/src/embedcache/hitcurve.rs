@@ -61,10 +61,12 @@ pub struct HitCurve {
 }
 
 impl HitCurve {
+    /// `skew = 0` is the uniform limit: `H(k, 0) = k` exactly, so the
+    /// curve degenerates to `hit = cached_rows / total_rows`.
     pub fn new(rows_per_table: f64, n_tables: usize, row_bytes: f64, skew: f64) -> HitCurve {
         assert!(rows_per_table >= 1.0, "need at least one row per table");
         assert!(n_tables >= 1, "need at least one table");
-        assert!(row_bytes > 0.0 && skew > 0.0);
+        assert!(row_bytes > 0.0 && skew >= 0.0);
         HitCurve {
             rows_per_table,
             n_tables: n_tables as f64,

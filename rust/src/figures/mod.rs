@@ -7,11 +7,13 @@
 mod cache_figs;
 mod emu;
 mod group_figs;
+mod hps_figs;
 mod static_figs;
 mod dynamic_figs;
 mod cluster_figs;
 
 pub use cache_figs::{sweep_points, CachePoint};
+pub use hps_figs::{sweep_hps_points, HpsPoint};
 pub use emu::{emu_pair_analytic, emu_sweep_curve, measured_pair_qps_sim};
 pub use group_figs::{normalized_qps_pct, sweep_groups, sweep_groups_with_memo};
 
@@ -92,6 +94,7 @@ impl FigureContext {
             "16" => cluster_figs::fig16(self),
             "17" => cluster_figs::fig17(self),
             "cache" => cache_figs::cache_sweep(self),
+            "hps" => hps_figs::hps_sweep(self),
             "group" => group_figs::group_sweep(self),
             "group-scaling" => cluster_figs::group_scaling(self),
             "strict" => cluster_figs::strict_delta(self),
@@ -102,8 +105,8 @@ impl FigureContext {
     pub fn run_all(&self) -> anyhow::Result<()> {
         for id in [
             "table1", "table2", "3", "4", "5", "6", "7", "9", "10", "11", "12",
-            "13", "14", "15", "16", "17", "cache", "group", "group-scaling",
-            "strict",
+            "13", "14", "15", "16", "17", "cache", "hps", "group",
+            "group-scaling", "strict",
         ] {
             println!("== figure {id} ==");
             self.run(id)?;

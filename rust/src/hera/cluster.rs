@@ -34,10 +34,11 @@ use once_cell::sync::Lazy;
 
 use crate::alloc::{Placement, ResidencyMode, ResidencyPolicy, ResourceVector, TenantAlloc};
 use crate::config::{ModelId, NodeConfig};
+use crate::hps::{TenantMissDemand, TierStack};
 use crate::json::{parse, Value};
 use crate::obs::{names, Counter};
 use crate::profiler::ProfileStore;
-use crate::server_sim::analytic::{solve, AnalyticTenant};
+use crate::server_sim::analytic::{solve, solve_hps, AnalyticTenant};
 
 use super::affinity::{group_affinity, AffinityMatrix};
 
@@ -111,10 +112,45 @@ pub fn evaluate_group(
         "at most {} tenants per node",
         crate::server_sim::MAX_TENANTS
     );
+    evaluate_group_inner(store, matrix, models, policy, None)
+}
+
+/// [`evaluate_group`] with hot-tier misses costed through a hierarchical
+/// parameter server: the proportional-scaling bisection validates each
+/// candidate load with `solve_hps` (shared tier queues couple the
+/// tenants) *and* requires every tier to stay under its utilization
+/// ceiling — tier fit is part of placement feasibility, so a group whose
+/// aggregate miss traffic saturates the SSD's op budget scales down even
+/// when DRAM and cores would allow more.  Passing
+/// [`TierStack::flat_seed`] reproduces [`evaluate_group`] bit-for-bit
+/// (`tests/parity_hps.rs`).
+pub fn evaluate_group_hps(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    models: &[ModelId],
+    policy: ResidencyPolicy,
+    stack: &TierStack,
+) -> Placement {
+    assert!(!models.is_empty(), "a group needs at least one tenant");
+    assert!(
+        models.len() <= crate::server_sim::MAX_TENANTS,
+        "at most {} tenants per node",
+        crate::server_sim::MAX_TENANTS
+    );
+    evaluate_group_inner(store, matrix, models, policy, Some(stack))
+}
+
+fn evaluate_group_inner(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    models: &[ModelId],
+    policy: ResidencyPolicy,
+    hps: Option<&TierStack>,
+) -> Placement {
     let mut order: Vec<usize> = (0..models.len()).collect();
     order.sort_by_key(|&i| models[i]);
     let sorted: Vec<ModelId> = order.iter().map(|&i| models[i]).collect();
-    let canonical = evaluate_group_canonical(store, matrix, &sorted, policy);
+    let canonical = evaluate_group_canonical(store, matrix, &sorted, policy, hps);
     let mut tenants: Vec<Option<TenantAlloc>> = vec![None; models.len()];
     for (&slot, t) in order.iter().zip(canonical.tenants) {
         tenants[slot] = Some(t);
@@ -134,6 +170,7 @@ fn evaluate_group_canonical(
     matrix: &AffinityMatrix,
     models: &[ModelId],
     policy: ResidencyPolicy,
+    hps: Option<&TierStack>,
 ) -> Placement {
     let node = &store.node;
     if models.len() == 1 {
@@ -245,7 +282,18 @@ fn evaluate_group_canonical(
                 cache_bytes: residency[i].cache_bytes(),
             })
             .collect();
-        solve(node, &tenants).tenants.iter().all(|t| t.feasible)
+        match hps {
+            None => solve(node, &tenants).tenants.iter().all(|t| t.feasible),
+            Some(stack) => {
+                // Tier-resolved miss costs (no prefetch credit at
+                // planning time), plus tier fit: a load that drives any
+                // tier past its utilization ceiling is infeasible even
+                // if every SLA would nominally hold.
+                let overlaps = vec![0.0; tenants.len()];
+                let (out, loads) = solve_hps(node, &tenants, stack, &overlaps);
+                out.tenants.iter().all(|t| t.feasible) && stack.feasible(&loads)
+            }
+        }
     };
     let mut lo = 0.0;
     let mut hi = 1.0;
@@ -653,6 +701,13 @@ pub struct ClusterScheduler<'a> {
     /// evaluations.  Selection stays serial and deterministic; 1 is the
     /// serial reference path.
     pub eval_threads: usize,
+    /// Optional hierarchical parameter server behind the hot tiers.
+    /// When set (and the residency policy is `Cached`), candidate groups
+    /// must also fit the tier stack: the members' aggregate miss traffic
+    /// at their nominal operating points must keep every tier under its
+    /// utilization ceiling ([`TierStack::feasible`]).  `None` (default)
+    /// is the seed flat-backing world — plans stay bit-for-bit.
+    pub hps: Option<TierStack>,
 }
 
 impl<'a> ClusterScheduler<'a> {
@@ -667,7 +722,15 @@ impl<'a> ClusterScheduler<'a> {
             beam_width: 8,
             exhaustive_limit: 64,
             eval_threads: crate::par::default_threads(),
+            hps: None,
         }
+    }
+
+    /// Attach a hierarchical parameter server: tier fit joins the
+    /// group-admissibility checks for `Cached` placements.
+    pub fn with_hps_stack(mut self, stack: TierStack) -> Self {
+        self.hps = Some(stack);
+        self
     }
 
     /// Select the residency/DRAM policy for co-located groups.
@@ -735,6 +798,36 @@ impl<'a> ClusterScheduler<'a> {
                 })
                 .sum();
             if bytes > self.store.node.dram_capacity_gb * 1e9 {
+                return false;
+            }
+        }
+        // Tier fit: under `Cached` with an hps stack attached, the
+        // group's aggregate miss traffic at nominal operating points
+        // (each member at its standalone max load, split evenly across
+        // the group) must keep every tier under its utilization ceiling.
+        if let (Some(stack), ResidencyPolicy::Cached) = (&self.hps, self.residency) {
+            let curves: Vec<_> = group
+                .iter()
+                .map(|&m| self.store.hit_curve(m))
+                .collect();
+            let demands: Vec<TenantMissDemand> = group
+                .iter()
+                .zip(&curves)
+                .map(|(&m, curve)| {
+                    let spec = m.spec();
+                    let cache = self.store.min_cache_for_sla(m);
+                    TenantMissDemand::at_qps(
+                        curve,
+                        cache,
+                        spec.row_bytes(),
+                        spec.row_accesses_per_item() as f64,
+                        self.store.profile(m).max_load() / group.len() as f64,
+                        curve.hit_rate(cache),
+                    )
+                })
+                .collect();
+            let (_, loads) = stack.resolve_group(&demands);
+            if !stack.feasible(&loads) {
                 return false;
             }
         }
@@ -1109,6 +1202,89 @@ mod tests {
         assert_eq!(split_cores_n(16, &[2, 16, 16]), vec![2, 5, 9]);
         let w = split_cores_n(16, &[8, 8, 8]);
         assert_eq!(w.iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn evaluate_group_hps_flat_seed_is_bit_identical() {
+        let seed = TierStack::flat_seed();
+        for group in [
+            vec![id("dlrm_d"), id("ncf")],
+            vec![id("dlrm_b"), id("wnd")],
+            vec![id("ncf"), id("wnd"), id("din")],
+        ] {
+            for policy in [ResidencyPolicy::Optimistic, ResidencyPolicy::Cached] {
+                let flat = evaluate_group(&STORE, &MATRIX, &group, policy);
+                let hps = evaluate_group_hps(&STORE, &MATRIX, &group, policy, &seed);
+                for (a, b) in flat.tenants.iter().zip(&hps.tenants) {
+                    assert_eq!(a.model, b.model);
+                    assert_eq!(a.rv, b.rv);
+                    assert_eq!(a.qps.to_bits(), b.qps.to_bits(), "{:?}", a.model);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn starved_tier_stack_caps_group_qps() {
+        // A nearly-opless SSD forces every cached miss through a queue
+        // that saturates instantly, so the tier-aware evaluation must
+        // scale the group down versus the flat seed path.
+        let throttled = TierStack::new(vec![crate::hps::Tier {
+            name: "ssd",
+            capacity_bytes: f64::INFINITY,
+            stream_bw: crate::node::BACKING_BW_PER_WORKER,
+            device_bw: 1e7,
+            op_latency_s: 5e-3,
+            iops_ceiling: 2e3,
+            channels: 4,
+            worker_parallelism: 1.0,
+        }]);
+        let group = vec![id("dlrm_b"), id("wnd")];
+        let flat = evaluate_group(&STORE, &MATRIX, &group, ResidencyPolicy::Cached);
+        let hps = evaluate_group_hps(
+            &STORE,
+            &MATRIX,
+            &group,
+            ResidencyPolicy::Cached,
+            &throttled,
+        );
+        let total = |p: &Placement| p.tenants.iter().map(|t| t.qps).sum::<f64>();
+        assert!(
+            total(&hps) < total(&flat),
+            "throttled stack must cost QPS: {} vs {}",
+            total(&hps),
+            total(&flat)
+        );
+    }
+
+    #[test]
+    fn hps_scheduler_rejects_tier_infeasible_groups() {
+        // With a throttled stack, grown cached groups whose nominal miss
+        // traffic saturates the tier must be pruned at admission.
+        let throttled = TierStack::new(vec![crate::hps::Tier {
+            name: "ssd",
+            capacity_bytes: f64::INFINITY,
+            stream_bw: crate::node::BACKING_BW_PER_WORKER,
+            device_bw: 1e7,
+            op_latency_s: 5e-3,
+            iops_ceiling: 2e3,
+            channels: 4,
+            worker_parallelism: 1.0,
+        }]);
+        let sched = ClusterScheduler::new(&STORE, &MATRIX)
+            .with_residency(ResidencyPolicy::Cached)
+            .with_hps_stack(throttled);
+        assert!(!sched.group_admissible(&[id("dlrm_b"), id("dlrm_d")]));
+        // The seed stack never prunes on tier fit.
+        let seed_sched = ClusterScheduler::new(&STORE, &MATRIX)
+            .with_residency(ResidencyPolicy::Cached)
+            .with_hps_stack(TierStack::flat_seed());
+        assert_eq!(
+            seed_sched.group_admissible(&[id("dlrm_b"), id("dlrm_d")]),
+            ClusterScheduler::new(&STORE, &MATRIX)
+                .with_residency(ResidencyPolicy::Cached)
+                .group_admissible(&[id("dlrm_b"), id("dlrm_d")])
+        );
     }
 
     #[test]

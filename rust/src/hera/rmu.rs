@@ -29,6 +29,7 @@
 
 use crate::alloc::{ResidencyMode, ResourceVector};
 use crate::config::ModelId;
+use crate::hps::TierStack;
 use crate::json::Value;
 use crate::metrics::emu_percent;
 use crate::node::for_each_ways_split;
@@ -46,6 +47,7 @@ struct RmuObs {
     decisions_workers: Counter,
     decisions_ways: Counter,
     decisions_cache: Counter,
+    decisions_prefetch: Counter,
     emu: Gauge,
 }
 
@@ -60,9 +62,18 @@ impl RmuObs {
             decisions_workers: knob("workers"),
             decisions_ways: knob("ways"),
             decisions_cache: knob("cache"),
+            decisions_prefetch: knob("prefetch"),
             emu: r.gauge(names::EMU_PERCENT, &[]),
         }
     }
+}
+
+/// Control-plane state for an attached hierarchical parameter server:
+/// the tier stack plus the per-tenant async-prefetch overlap fraction
+/// (the fourth knob, stepped on the same slack band as cores/ways/cache).
+struct HpsState {
+    stack: TierStack,
+    overlap: Vec<f64>,
 }
 
 /// A decision whose realized QPS is measured one window later.
@@ -90,6 +101,7 @@ pub struct HeraRmu<'a> {
     pending: Vec<PendingOutcome>,
     last_tick_s: Option<f64>,
     obs: RmuObs,
+    hps: Option<HpsState>,
 }
 
 impl<'a> HeraRmu<'a> {
@@ -102,6 +114,86 @@ impl<'a> HeraRmu<'a> {
             pending: Vec::new(),
             last_tick_s: None,
             obs: RmuObs::resolve(),
+            hps: None,
+        }
+    }
+
+    /// Attach a hierarchical parameter server: enables the fourth knob,
+    /// the per-tenant async-prefetch overlap fraction, stepped on a 0.25
+    /// grid within [0, 1] on the same slack band as the other knobs
+    /// (violating → hide more of the backing leg; over-provisioned →
+    /// back off, since speculative reads spend tier op/byte budget).
+    /// Decisions are journaled as `hps_decision` events and published on
+    /// the `hera_hps_prefetch_overlap` gauge.  Without this call the RMU
+    /// behaves exactly as before (seed parity).
+    pub fn with_hps(mut self, stack: TierStack) -> Self {
+        self.hps = Some(HpsState {
+            stack,
+            overlap: Vec::new(),
+        });
+        self
+    }
+
+    /// Current prefetch-overlap knob for `tenant` (0 when no hps stack
+    /// is attached or the tenant has not been adjusted yet).
+    pub fn prefetch_overlap(&self, tenant: usize) -> f64 {
+        self.hps
+            .as_ref()
+            .and_then(|h| h.overlap.get(tenant).copied())
+            .unwrap_or(0.0)
+    }
+
+    /// The attached tier stack, if any.
+    pub fn hps_stack(&self) -> Option<&TierStack> {
+        self.hps.as_ref().map(|h| &h.stack)
+    }
+
+    /// The prefetch-knob pass: step each cached tenant's overlap on the
+    /// slack band.  Runs before the core/way/cache passes so a window
+    /// that only needs prefetch still gets its decision journaled even
+    /// when the allocation knobs conclude nothing changed.
+    fn adjust_prefetch(&mut self, now: f64, stats: &[TenantStats]) {
+        const STEP: f64 = 0.25;
+        let Some(hps) = self.hps.as_mut() else { return };
+        if hps.overlap.len() < stats.len() {
+            hps.overlap.resize(stats.len(), 0.0);
+        }
+        for (i, s) in stats.iter().enumerate() {
+            if s.alloc.cache_bytes().is_none()
+                || (s.window_completed == 0 && s.queue_depth == 0)
+            {
+                continue; // no backing leg to hide, or idle
+            }
+            let sla_s = s.model.spec().sla_ms / 1e3;
+            let slack = s.window_p95_s / sla_s;
+            let cur = hps.overlap[i];
+            let next = if slack > SLACK_HIGH {
+                (cur + STEP).min(1.0)
+            } else if slack < SLACK_LOW {
+                (cur - STEP).max(0.0)
+            } else {
+                cur
+            };
+            if next != cur {
+                hps.overlap[i] = next;
+                self.obs.decisions_prefetch.inc();
+                crate::obs::global()
+                    .gauge(
+                        names::HPS_PREFETCH_OVERLAP,
+                        &[("model", s.model.name().to_string())],
+                    )
+                    .set(next);
+                let mut f = Value::object();
+                f.set("tenant", i)
+                    .set("model", s.model.name())
+                    .set("knob", "prefetch")
+                    .set("from", cur)
+                    .set("to", next)
+                    .set("slack", slack)
+                    .set("window_p95_s", s.window_p95_s)
+                    .set("window_arrival_qps", s.window_arrival_qps);
+                self.journal.record("hps_decision", now, f);
+            }
         }
     }
 
@@ -350,6 +442,8 @@ impl Controller for HeraRmu<'_> {
     fn on_monitor(&mut self, now: f64, stats: &[TenantStats]) -> Vec<AllocChange> {
         // Settle last window's audit (realized QPS, EMU) before deciding.
         self.observe_window(now, stats);
+        // Fourth knob (when an hps stack is attached): prefetch overlap.
+        self.adjust_prefetch(now, stats);
         // Compute desired workers per tenant where the slack band triggers.
         let mut desired: Vec<usize> = stats.iter().map(|s| s.alloc.workers).collect();
         let mut any_change = false;
@@ -511,6 +605,71 @@ mod tests {
             queue_depth: 0,
             window_hit_rate: 1.0,
         }
+    }
+
+    fn cached_stats(
+        model: ModelId,
+        workers: usize,
+        ways: usize,
+        p95_s: f64,
+        qps: f64,
+        cache_bytes: f64,
+    ) -> TenantStats {
+        let mut s = stats(model, workers, ways, p95_s, qps);
+        s.alloc = ResourceVector {
+            workers,
+            ways,
+            residency: ResidencyMode::Cached(cache_bytes),
+        };
+        s.window_hit_rate = 0.9;
+        s
+    }
+
+    #[test]
+    fn prefetch_knob_steps_on_slack_band_and_journals() {
+        let mut rmu = HeraRmu::new(&STORE).with_hps(TierStack::paper_default());
+        // Violating cached tenant: overlap must step up by 0.25.
+        let hot = vec![cached_stats(id("dlrm_b"), 8, 6, 0.800, 100.0, 2e9)];
+        rmu.on_monitor(1.0, &hot);
+        assert_eq!(rmu.prefetch_overlap(0), 0.25);
+        rmu.on_monitor(2.0, &hot);
+        assert_eq!(rmu.prefetch_overlap(0), 0.50);
+        // Over-provisioned window: overlap backs off.
+        let idle = vec![cached_stats(id("dlrm_b"), 8, 6, 0.010, 100.0, 2e9)];
+        rmu.on_monitor(3.0, &idle);
+        assert_eq!(rmu.prefetch_overlap(0), 0.25);
+        // Every step was journaled as an hps_decision with the knob tag.
+        let decisions: Vec<_> = rmu
+            .journal
+            .events()
+            .iter()
+            .filter(|e| e.req("event").unwrap().as_str() == Some("hps_decision"))
+            .collect();
+        assert_eq!(decisions.len(), 3);
+        for d in &decisions {
+            assert_eq!(d.req("knob").unwrap().as_str(), Some("prefetch"));
+            assert_eq!(d.req("model").unwrap().as_str(), Some("dlrm_b"));
+        }
+        // The gauge tracks the latest value.
+        let g = crate::obs::global().gauge(
+            names::HPS_PREFETCH_OVERLAP,
+            &[("model", "dlrm_b".to_string())],
+        );
+        assert_eq!(g.get(), 0.25);
+    }
+
+    #[test]
+    fn prefetch_knob_ignores_resident_tenants() {
+        let mut rmu = HeraRmu::new(&STORE).with_hps(TierStack::paper_default());
+        // Fully resident tenant violating hard: no backing leg to hide.
+        let s = vec![stats(id("din"), 2, 6, 0.200, 8000.0)];
+        rmu.on_monitor(1.0, &s);
+        assert_eq!(rmu.prefetch_overlap(0), 0.0);
+        assert!(rmu
+            .journal
+            .events()
+            .iter()
+            .all(|e| e.req("event").unwrap().as_str() != Some("hps_decision")));
     }
 
     #[test]

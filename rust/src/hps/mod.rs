@@ -1,0 +1,39 @@
+//! `hps` — hierarchical parameter server for embedding storage.
+//!
+//! Real recommendation deployments do not serve embedding-table misses
+//! from one flat device: HugeCTR's Hierarchical Parameter Server layers a
+//! GPU/DRAM hot cache over local SSD over a remote parameter-server
+//! cluster, and Hercules shows at-scale serving is shaped by exactly this
+//! storage heterogeneity.  The seed model collapsed all of that into a
+//! single constant (`node::BACKING_BW_PER_WORKER`), so every miss cost
+//! pure bandwidth and small-row models could never hit an IOPS wall.
+//!
+//! This module generalizes the backing leg to a [`TierStack`]:
+//!
+//! * Each [`Tier`] has a capacity, per-worker streaming bandwidth, a
+//!   device-wide streaming ceiling, a per-op latency, an IOPS ceiling and
+//!   an M/M/c queue model, so per-miss latency *degrades with offered
+//!   load*.  Narrow-row (32-dim) models exhaust the op/queue budget long
+//!   before the byte budget — they go IOPS-bound — while wide-row
+//!   (256-dim) models saturate streaming bandwidth first.
+//! * A tenant's hot-tier misses cascade DRAM → SSD → remote: per-tier
+//!   shares come from the model's `embedcache::HitCurve` evaluated at
+//!   cumulative capacities, so popularity skew decides how much traffic
+//!   each tier absorbs.
+//! * The resolved cascade is handed to the node layer as a pure-data
+//!   [`node::MissPath`](crate::node::MissPath) — `node` stays independent
+//!   of this module — and `ServiceProfile::build_with_hps` adds an async
+//!   prefetch pipeline that hides a profiled fraction of the backing leg
+//!   behind the dense legs (an RMU knob; see `hera::rmu`).
+//!
+//! Seed parity is pinned: the degenerate single-tier
+//! [`TierStack::flat_seed`] resolves to exactly
+//! [`MissPath::flat_seed`](crate::node::MissPath::flat_seed) (share of
+//! exactly 1.0, zero op latency), so every pre-hps number reproduces
+//! bit-for-bit — see `tests/parity_hps.rs` and DESIGN.md §10.
+
+mod tier;
+
+pub use tier::{
+    TenantMissDemand, Tier, TierLoad, TierStack, MEAN_BATCH_ITEMS, TIER_UTIL_CEILING,
+};

@@ -1,0 +1,621 @@
+//! Tier stack: per-tier device model, queue-aware miss latency, and the
+//! HitCurve-driven DRAM → SSD → remote cascade (DESIGN.md §10).
+
+use crate::embedcache::HitCurve;
+use crate::node::{MissLeg, MissPath, BACKING_BW_PER_WORKER};
+use crate::obs::{names, Registry, FINE_LATENCY_BUCKETS_S};
+
+/// Mean query batch (items) used to convert query rates into row-access
+/// rates — the same operating point the profiler uses for `ServiceProfile`
+/// service times (`service_time_s(220, ..)` throughout the repo).
+pub const MEAN_BATCH_ITEMS: f64 = 220.0;
+
+/// Keep offered load strictly below saturation so the M/M/c wait stays
+/// finite with a smooth (steep) blowup instead of a pole — mirrors the
+/// clamp in `server_sim::analytic`.
+const SATURATION_CLAMP: f64 = 0.995;
+
+/// Utilization ceiling a placement may plan up to on any tier (ops or
+/// bytes); beyond this the queue model predicts SLA-hostile waits.
+pub const TIER_UTIL_CEILING: f64 = 0.95;
+
+/// One storage tier below the `embedcache` DRAM hot tier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tier {
+    /// Tier name (`"ssd"`, `"remote"`, or `"backing"` for the seed).
+    pub name: &'static str,
+    /// Row bytes this tier can hold (`f64::INFINITY` = bottomless).
+    pub capacity_bytes: f64,
+    /// Per-worker streaming bandwidth (B/s) — same semantics as the seed
+    /// [`BACKING_BW_PER_WORKER`] constant it generalizes.
+    pub stream_bw: f64,
+    /// Device-wide streaming ceiling (B/s) shared by all tenants.
+    pub device_bw: f64,
+    /// Per-op device access time (s): NAND read / network RTT.  A value
+    /// of exactly `0.0` (with an infinite IOPS ceiling) marks the tier as
+    /// *unqueued* — the degenerate seed tier — and every op-latency path
+    /// below returns exactly `0.0` for it (bit-for-bit parity).
+    pub op_latency_s: f64,
+    /// Device IOPS wall (`f64::INFINITY` = none).
+    pub iops_ceiling: f64,
+    /// Parallel service channels (the `c` of the M/M/c queue): NVMe queue
+    /// pairs, or outstanding RPC slots on the remote PS.
+    pub channels: usize,
+    /// Outstanding reads one worker keeps in flight; per-op stalls are
+    /// amortized over this window (a worker overlapping 8 reads feels
+    /// 1/8th of each op's latency on its critical path).
+    pub worker_parallelism: f64,
+}
+
+impl Tier {
+    /// The degenerate seed tier: pure per-worker streaming, no op cost,
+    /// no queue, bottomless.
+    pub fn flat_seed() -> Tier {
+        Tier {
+            name: "backing",
+            capacity_bytes: f64::INFINITY,
+            stream_bw: BACKING_BW_PER_WORKER,
+            device_bw: f64::INFINITY,
+            op_latency_s: 0.0,
+            iops_ceiling: f64::INFINITY,
+            channels: 1,
+            worker_parallelism: 1.0,
+        }
+    }
+
+    /// True for the degenerate seed tier: no per-op cost and no IOPS
+    /// wall, so the queue model is bypassed entirely (exact zeros).
+    pub fn is_unqueued(&self) -> bool {
+        self.op_latency_s == 0.0 && self.iops_ceiling.is_infinite()
+    }
+
+    /// Mean per-op service time for `row_bytes` rows on one channel.
+    pub fn op_service_s(&self, row_bytes: f64) -> f64 {
+        self.op_latency_s + row_bytes / self.stream_bw
+    }
+
+    /// Effective per-channel service time including IOPS-wall inflation:
+    /// when raw channel throughput exceeds the device IOPS ceiling, ops
+    /// serialize behind the wall and each effectively takes
+    /// `channels / iops_ceiling`.  Returns `op_service_s` untouched (no
+    /// recomputation through reciprocals) when the wall is not binding.
+    pub fn op_service_eff_s(&self, row_bytes: f64) -> f64 {
+        let t_op = self.op_service_s(row_bytes);
+        if self.channels as f64 / t_op <= self.iops_ceiling {
+            t_op
+        } else {
+            self.channels as f64 / self.iops_ceiling
+        }
+    }
+
+    /// Sustainable ops/s for `row_bytes` rows: channel-limited or
+    /// IOPS-wall-limited, whichever binds first.
+    pub fn capacity_ops(&self, row_bytes: f64) -> f64 {
+        (self.channels as f64 / self.op_service_s(row_bytes)).min(self.iops_ceiling)
+    }
+
+    /// Mean M/M/c queue wait (s) at an offered load of `lambda_ops`
+    /// ops/s.  Offered load is clamped just below saturation so the wait
+    /// blows up steeply but stays finite.
+    pub fn queue_wait_s(&self, row_bytes: f64, lambda_ops: f64) -> f64 {
+        if self.is_unqueued() || lambda_ops <= 0.0 {
+            return 0.0;
+        }
+        let t_eff = self.op_service_eff_s(row_bytes);
+        let c = self.channels as f64;
+        let lam = lambda_ops.min(SATURATION_CLAMP * c / t_eff);
+        let a = lam * t_eff; // offered Erlangs
+        erlang_c(self.channels, a) * t_eff / (c - a)
+    }
+
+    /// Mean number of ops waiting in queue (Little: `λ · Wq`).
+    pub fn queue_depth(&self, row_bytes: f64, lambda_ops: f64) -> f64 {
+        if self.is_unqueued() || lambda_ops <= 0.0 {
+            return 0.0;
+        }
+        let c = self.channels as f64;
+        let lam = lambda_ops.min(SATURATION_CLAMP * c / self.op_service_eff_s(row_bytes));
+        lam * self.queue_wait_s(row_bytes, lambda_ops)
+    }
+
+    /// Per-row stall (s) a worker feels beyond pure streaming, at offered
+    /// load `lambda_ops`: op latency (IOPS-inflated) plus queue wait,
+    /// amortized over the worker's outstanding-read window.  Exactly
+    /// `0.0` for an unqueued tier — this is the `MissLeg::op_latency_s`
+    /// the node layer consumes.
+    pub fn miss_op_latency_s(&self, row_bytes: f64, lambda_ops: f64) -> f64 {
+        if self.is_unqueued() {
+            return 0.0;
+        }
+        let stream_time = row_bytes / self.stream_bw;
+        let stall = (self.op_service_eff_s(row_bytes) - stream_time).max(0.0)
+            + self.queue_wait_s(row_bytes, lambda_ops);
+        stall / self.worker_parallelism
+    }
+}
+
+/// Erlang-C probability of queueing for `c` channels at `a` offered
+/// Erlangs (same log-safe recurrence as `server_sim::analytic`).
+fn erlang_c(c: usize, a: f64) -> f64 {
+    if a >= c as f64 {
+        return 1.0;
+    }
+    let mut inv_b = 1.0;
+    for k in 1..=c {
+        inv_b = 1.0 + (k as f64 / a) * inv_b;
+    }
+    let b = 1.0 / inv_b;
+    let rho = a / c as f64;
+    b / (1.0 - rho + rho * b)
+}
+
+/// One tenant's miss traffic offered to the stack.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantMissDemand<'a> {
+    /// The model's hit-rate-vs-capacity curve.
+    pub curve: &'a HitCurve,
+    /// DRAM hot-tier allocation (bytes) — the cascade starts below it.
+    pub cache_bytes: f64,
+    /// Row width (bytes) of the model's embedding tables.
+    pub row_bytes: f64,
+    /// Missed-row rate (ops/s) the tenant offers at its operating point.
+    pub miss_ops_per_s: f64,
+}
+
+impl<'a> TenantMissDemand<'a> {
+    /// Demand for a tenant serving `qps` queries/s of mean batch
+    /// [`MEAN_BATCH_ITEMS`] with `accesses_per_item` row gathers per item
+    /// at hot-tier hit rate `hit`.
+    pub fn at_qps(
+        curve: &'a HitCurve,
+        cache_bytes: f64,
+        row_bytes: f64,
+        accesses_per_item: f64,
+        qps: f64,
+        hit: f64,
+    ) -> TenantMissDemand<'a> {
+        TenantMissDemand {
+            curve,
+            cache_bytes,
+            row_bytes,
+            miss_ops_per_s: qps * MEAN_BATCH_ITEMS * accesses_per_item * (1.0 - hit),
+        }
+    }
+}
+
+/// Aggregate load and queue state of one tier under a set of demands.
+#[derive(Debug, Clone, Copy)]
+pub struct TierLoad {
+    pub name: &'static str,
+    /// Aggregate offered miss ops/s routed to this tier.
+    pub lambda_ops: f64,
+    /// Aggregate useful byte rate (B/s) routed to this tier.
+    pub byte_rate: f64,
+    /// Mean queue wait (s) at the traffic-weighted mean row width.
+    pub wait_s: f64,
+    /// Mean ops waiting in queue (Little's law).
+    pub queue_depth: f64,
+    /// `lambda_ops / capacity_ops` — the IOPS-side utilization.
+    pub ops_util: f64,
+    /// `byte_rate / device_bw` — the bandwidth-side utilization.
+    pub bw_util: f64,
+}
+
+impl TierLoad {
+    /// Whether the op/queue budget, not the byte budget, is the binding
+    /// constraint at this operating point (IOPS-bound).
+    pub fn iops_bound(&self) -> bool {
+        self.ops_util > self.bw_util
+    }
+}
+
+/// An ordered stack of backing tiers (fast → slow) below the DRAM hot
+/// tier.  The last tier must be bottomless so every miss lands somewhere.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierStack {
+    tiers: Vec<Tier>,
+}
+
+impl TierStack {
+    pub fn new(tiers: Vec<Tier>) -> TierStack {
+        assert!(!tiers.is_empty(), "stack needs at least one tier");
+        assert!(
+            tiers.last().unwrap().capacity_bytes.is_infinite(),
+            "last tier must be bottomless (every miss must land somewhere)"
+        );
+        TierStack { tiers }
+    }
+
+    /// The degenerate single-tier stack reproducing the seed flat-backing
+    /// model bit-for-bit: [`Self::resolve`] on it returns exactly
+    /// [`MissPath::flat_seed`] (golden-pinned in `tests/parity_hps.rs`).
+    pub fn flat_seed() -> TierStack {
+        TierStack::new(vec![Tier::flat_seed()])
+    }
+
+    /// The default deployment topology: a local NVMe SSD tier under the
+    /// DRAM hot tier, a remote parameter server at the bottom.
+    ///
+    /// The SSD's op/byte budgets are sized so the IOPS/bandwidth
+    /// crossover row width `device_bw / capacity_ops` = 1000 B sits
+    /// between narrow (32-dim = 128 B) and wide (256-dim = 1024 B) rows:
+    /// narrow-row miss traffic exhausts the op budget first (IOPS-bound)
+    /// while wide rows saturate streaming bandwidth first.
+    pub fn paper_default() -> TierStack {
+        TierStack::new(vec![
+            Tier {
+                name: "ssd",
+                capacity_bytes: 1.6e12,
+                stream_bw: 2.0e9,
+                device_bw: 3.0e9,
+                op_latency_s: 80e-6,
+                iops_ceiling: 3.0e6,
+                channels: 256,
+                worker_parallelism: 8.0,
+            },
+            Tier {
+                name: "remote",
+                capacity_bytes: f64::INFINITY,
+                stream_bw: 1.2e9,
+                device_bw: 12.5e9,
+                op_latency_s: 250e-6,
+                iops_ceiling: 5.0e6,
+                channels: 1024,
+                worker_parallelism: 16.0,
+            },
+        ])
+    }
+
+    /// A topology with the SSD shrunk to `ssd_bytes` — used by the sweep
+    /// to show the remote tier absorbing SSD overflow.
+    pub fn with_ssd_capacity(ssd_bytes: f64) -> TierStack {
+        let mut s = TierStack::paper_default();
+        s.tiers[0].capacity_bytes = ssd_bytes;
+        s
+    }
+
+    pub fn tiers(&self) -> &[Tier] {
+        &self.tiers
+    }
+
+    /// Per-tier share of one tenant's miss traffic: tier `i` absorbs the
+    /// hit-rate gain of its capacity placed after everything above it,
+    /// normalized by the hot-tier miss fraction.  The last tier takes the
+    /// exact remainder, so a single-tier stack yields a share of exactly
+    /// `1.0` (seed parity) and shares always sum to 1.
+    pub fn shares(&self, curve: &HitCurve, cache_bytes: f64) -> Vec<f64> {
+        let h0 = curve.hit_rate(cache_bytes);
+        let m0 = 1.0 - h0;
+        let n = self.tiers.len();
+        if m0 <= 0.0 {
+            // No miss traffic — route the (empty) stream to the top tier.
+            let mut s = vec![0.0; n];
+            s[0] = 1.0;
+            return s;
+        }
+        let mut shares = Vec::with_capacity(n);
+        let mut cum_bytes = cache_bytes;
+        let mut h_prev = h0;
+        let mut assigned = 0.0;
+        for tier in &self.tiers[..n - 1] {
+            cum_bytes += tier.capacity_bytes;
+            let h = curve.hit_rate(cum_bytes).max(h_prev);
+            let share = (h - h_prev) / m0;
+            assigned += share;
+            shares.push(share);
+            h_prev = h;
+        }
+        shares.push(1.0 - assigned);
+        shares
+    }
+
+    /// Resolve a group of co-located tenants against the shared stack:
+    /// per-tenant [`MissPath`]s whose op latencies reflect the *aggregate*
+    /// queue state, plus per-tier [`TierLoad`]s.  Open-system model: the
+    /// offered load is the input, so one pass suffices (no fixed point).
+    pub fn resolve_group(
+        &self,
+        demands: &[TenantMissDemand],
+    ) -> (Vec<MissPath>, Vec<TierLoad>) {
+        let n = self.tiers.len();
+        let all_shares: Vec<Vec<f64>> = demands
+            .iter()
+            .map(|d| self.shares(d.curve, d.cache_bytes))
+            .collect();
+
+        // Aggregate per-tier offered load and its mean row width.
+        let mut lambda = vec![0.0; n];
+        let mut bytes = vec![0.0; n];
+        for (d, shares) in demands.iter().zip(&all_shares) {
+            for i in 0..n {
+                lambda[i] += d.miss_ops_per_s * shares[i];
+                bytes[i] += d.miss_ops_per_s * shares[i] * d.row_bytes;
+            }
+        }
+
+        let loads: Vec<TierLoad> = self
+            .tiers
+            .iter()
+            .enumerate()
+            .map(|(i, tier)| {
+                let mean_row = if lambda[i] > 0.0 {
+                    bytes[i] / lambda[i]
+                } else {
+                    0.0
+                };
+                TierLoad {
+                    name: tier.name,
+                    lambda_ops: lambda[i],
+                    byte_rate: bytes[i],
+                    wait_s: tier.queue_wait_s(mean_row, lambda[i]),
+                    queue_depth: tier.queue_depth(mean_row, lambda[i]),
+                    // The degenerate seed tier models no op budget at
+                    // all, so it must never look op-saturated (its
+                    // feasibility is exactly the seed's: none).
+                    ops_util: if lambda[i] > 0.0 && !tier.is_unqueued() {
+                        lambda[i] / tier.capacity_ops(mean_row)
+                    } else {
+                        0.0
+                    },
+                    bw_util: bytes[i] / tier.device_bw,
+                }
+            })
+            .collect();
+
+        let paths = demands
+            .iter()
+            .zip(&all_shares)
+            .map(|(d, shares)| {
+                MissPath::new(
+                    self.tiers
+                        .iter()
+                        .enumerate()
+                        .map(|(i, tier)| MissLeg {
+                            tier: tier.name,
+                            share: shares[i],
+                            bw: tier.stream_bw,
+                            op_latency_s: tier.miss_op_latency_s(d.row_bytes, lambda[i]),
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        (paths, loads)
+    }
+
+    /// Resolve a single tenant (its own offered load is the only queue
+    /// pressure).
+    pub fn resolve(&self, demand: &TenantMissDemand) -> MissPath {
+        let (mut paths, _) = self.resolve_group(std::slice::from_ref(demand));
+        paths.pop().unwrap()
+    }
+
+    /// Placement feasibility: every tier must keep both its op/queue and
+    /// byte utilization under [`TIER_UTIL_CEILING`], and the finite tiers
+    /// plus the bottomless base must be able to hold the group's
+    /// non-resident bytes (which the bottomless base guarantees).
+    pub fn feasible(&self, loads: &[TierLoad]) -> bool {
+        loads
+            .iter()
+            .all(|l| l.ops_util <= TIER_UTIL_CEILING && l.bw_util <= TIER_UTIL_CEILING)
+    }
+
+    /// Record one monitor window into the obs registry: per-(model, tier)
+    /// read counters and per-read latency samples (µs ladder), using the
+    /// queue state in `loads`.
+    pub fn record_window(
+        &self,
+        reg: &Registry,
+        model: &str,
+        demand: &TenantMissDemand,
+        path: &MissPath,
+        loads: &[TierLoad],
+        window_s: f64,
+    ) {
+        for (i, leg) in path.legs().iter().enumerate() {
+            if leg.share <= 0.0 || demand.miss_ops_per_s <= 0.0 {
+                continue;
+            }
+            let reads = demand.miss_ops_per_s * leg.share * window_s;
+            reg.counter(
+                names::HPS_READS_TOTAL,
+                &[
+                    ("model", model.to_string()),
+                    ("tier", leg.tier.to_string()),
+                ],
+            )
+            .add(reads.round() as u64);
+            // One representative per-read latency sample per window.
+            let tier = &self.tiers[i];
+            let lat = tier.op_service_eff_s(demand.row_bytes) + loads[i].wait_s;
+            reg.histogram(
+                names::HPS_TIER_LATENCY_SECONDS,
+                &[
+                    ("model", model.to_string()),
+                    ("tier", leg.tier.to_string()),
+                ],
+                &FINE_LATENCY_BUCKETS_S,
+            )
+            .observe(lat);
+        }
+    }
+
+    /// Publish per-tier queue-depth gauges.
+    pub fn record_gauges(&self, reg: &Registry, loads: &[TierLoad]) {
+        for load in loads {
+            reg.gauge(names::HPS_QUEUE_DEPTH, &[("tier", load.name.to_string())])
+                .set(load.queue_depth);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelId;
+
+    fn demand_for<'a>(
+        curve: &'a HitCurve,
+        cache_frac: f64,
+        row_bytes: f64,
+        miss_ops: f64,
+    ) -> TenantMissDemand<'a> {
+        TenantMissDemand {
+            curve,
+            cache_bytes: cache_frac * curve.full_bytes(),
+            row_bytes,
+            miss_ops_per_s: miss_ops,
+        }
+    }
+
+    #[test]
+    fn flat_seed_resolves_to_exact_seed_path() {
+        let stack = TierStack::flat_seed();
+        let curve = HitCurve::for_model(ModelId::from_name("dlrm_b").unwrap());
+        for cache_frac in [0.0, 0.3, 0.9] {
+            for miss_ops in [0.0, 1e4, 1e7] {
+                let d = demand_for(&curve, cache_frac, 256.0, miss_ops);
+                assert_eq!(stack.resolve(&d), MissPath::flat_seed());
+            }
+        }
+    }
+
+    #[test]
+    fn shares_sum_to_one_and_last_takes_remainder() {
+        let stack = TierStack::with_ssd_capacity(2e9);
+        let curve = HitCurve::for_model(ModelId::from_name("dlrm_b").unwrap());
+        for cache_frac in [0.0, 0.1, 0.5, 0.95] {
+            let shares = stack.shares(&curve, cache_frac * curve.full_bytes());
+            let sum: f64 = shares.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12, "shares sum {sum}");
+            assert!(shares.iter().all(|&s| (-1e-12..=1.0 + 1e-12).contains(&s)));
+        }
+        // Single-tier stack: exact 1.0 (seed parity depends on it).
+        let seed_shares = TierStack::flat_seed().shares(&curve, 0.2 * curve.full_bytes());
+        assert_eq!(seed_shares, vec![1.0]);
+    }
+
+    #[test]
+    fn small_ssd_overflows_to_remote() {
+        // dlrm_b (25 GB tables) behind a 2 GB SSD slice must push traffic
+        // to the remote tier; the default 1.6 TB SSD absorbs everything.
+        let curve = HitCurve::for_model(ModelId::from_name("dlrm_b").unwrap());
+        let cache = 0.05 * curve.full_bytes();
+        let small = TierStack::with_ssd_capacity(2e9).shares(&curve, cache);
+        assert!(small[1] > 0.05, "remote share {}", small[1]);
+        let big = TierStack::paper_default().shares(&curve, cache);
+        assert!(big[1] < 1e-9, "1.6 TB SSD should absorb: {}", big[1]);
+        assert!(big[0] > 1.0 - 1e-9);
+    }
+
+    #[test]
+    fn full_residency_routes_nothing() {
+        let curve = HitCurve::for_model(ModelId::from_name("ncf").unwrap());
+        let stack = TierStack::paper_default();
+        let d = TenantMissDemand {
+            curve: &curve,
+            cache_bytes: curve.full_bytes(),
+            row_bytes: 256.0,
+            miss_ops_per_s: 0.0,
+        };
+        let (paths, loads) = stack.resolve_group(&[d]);
+        assert_eq!(paths[0].secs_per_item(0.0, 0.0), 0.0);
+        for l in &loads {
+            assert_eq!(l.lambda_ops, 0.0);
+            assert_eq!(l.wait_s, 0.0);
+            assert_eq!(l.queue_depth, 0.0);
+        }
+        assert!(stack.feasible(&loads));
+    }
+
+    #[test]
+    fn queue_wait_is_monotone_and_finite() {
+        let ssd = TierStack::paper_default().tiers()[0];
+        let mut prev = -1.0;
+        for frac in [0.01, 0.2, 0.5, 0.8, 0.95, 1.1, 10.0] {
+            let lam = frac * ssd.capacity_ops(128.0);
+            let w = ssd.queue_wait_s(128.0, lam);
+            assert!(w.is_finite(), "wait must stay finite at {frac}x");
+            assert!(w >= prev, "wait must be monotone in load");
+            prev = w;
+        }
+        // Saturated wait dwarfs the idle wait.
+        assert!(
+            ssd.queue_wait_s(128.0, ssd.capacity_ops(128.0))
+                > 100.0 * ssd.queue_wait_s(128.0, 0.1 * ssd.capacity_ops(128.0))
+        );
+    }
+
+    #[test]
+    fn narrow_rows_are_iops_bound_wide_rows_bandwidth_bound() {
+        let stack = TierStack::paper_default();
+        let ssd = stack.tiers()[0];
+        // Same useful byte rate through the SSD, two row widths.
+        let byte_rate = 2.0e9;
+        for (row_bytes, want_iops_bound) in [(128.0, true), (1024.0, false)] {
+            let lam = byte_rate / row_bytes;
+            let ops_util = lam / ssd.capacity_ops(row_bytes);
+            let bw_util = byte_rate / ssd.device_bw;
+            assert_eq!(
+                ops_util > bw_util,
+                want_iops_bound,
+                "row {row_bytes}: ops_util {ops_util:.3} bw_util {bw_util:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn group_queueing_couples_tenants() {
+        // A second tenant's ops raise the first tenant's per-op latency.
+        let stack = TierStack::paper_default();
+        let curve_b = HitCurve::for_model(ModelId::from_name("dlrm_b").unwrap());
+        let curve_c = HitCurve::for_model(ModelId::from_name("dlrm_c").unwrap());
+        let quiet = demand_for(&curve_b, 0.5, 256.0, 1e5);
+        let noisy = demand_for(&curve_c, 0.2, 128.0, 2.5e6);
+        let alone = stack.resolve(&quiet);
+        let (together, loads) = stack.resolve_group(&[quiet, noisy]);
+        let op_alone = alone.legs()[0].op_latency_s;
+        let op_together = together[0].legs()[0].op_latency_s;
+        assert!(
+            op_together > op_alone,
+            "shared queue must inflate: {op_together} vs {op_alone}"
+        );
+        assert!(loads[0].queue_depth > 0.0);
+    }
+
+    #[test]
+    fn feasibility_rejects_saturated_tiers() {
+        let stack = TierStack::paper_default();
+        let curve = HitCurve::for_model(ModelId::from_name("dlrm_c").unwrap());
+        let ssd_cap = stack.tiers()[0].capacity_ops(128.0);
+        let ok = demand_for(&curve, 0.5, 128.0, 0.5 * ssd_cap);
+        let (_, loads) = stack.resolve_group(&[ok]);
+        assert!(stack.feasible(&loads));
+        let too_much = demand_for(&curve, 0.5, 128.0, 1.2 * ssd_cap);
+        let (_, loads) = stack.resolve_group(&[too_much]);
+        assert!(!stack.feasible(&loads));
+    }
+
+    #[test]
+    fn record_window_publishes_counters_and_gauges() {
+        let reg = Registry::new();
+        let stack = TierStack::paper_default();
+        let curve = HitCurve::for_model(ModelId::from_name("dlrm_b").unwrap());
+        let d = demand_for(&curve, 0.3, 256.0, 1e5);
+        let (paths, loads) = stack.resolve_group(&[d]);
+        stack.record_window(&reg, "dlrm_b", &d, &paths[0], &loads, 2.0);
+        stack.record_gauges(&reg, &loads);
+        let reads = reg
+            .counter(
+                names::HPS_READS_TOTAL,
+                &[("model", "dlrm_b".into()), ("tier", "ssd".into())],
+            )
+            .get();
+        assert_eq!(reads, 2e5 as u64, "2 s of 1e5 ops/s all on the SSD");
+        // Gauge exists for every tier.
+        for tier in stack.tiers() {
+            reg.gauge(names::HPS_QUEUE_DEPTH, &[("tier", tier.name.to_string())])
+                .get();
+        }
+    }
+}

@@ -40,6 +40,7 @@ pub mod coordinator;
 pub mod embedcache;
 pub mod figures;
 pub mod hera;
+pub mod hps;
 pub mod httpfront;
 pub mod json;
 pub mod metrics;

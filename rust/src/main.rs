@@ -46,6 +46,7 @@ fn main() {
         "cluster" => cmd_cluster(&args),
         "group-sweep" => cmd_group_sweep(&args),
         "cache-sweep" => cmd_cache_sweep(&args),
+        "hps-sweep" => cmd_hps_sweep(&args),
         "bench-engine" => cmd_bench_engine(&args),
         "bench-snapshot" => cmd_bench_snapshot(&args),
         "obs-dump" => cmd_obs_dump(&args),
@@ -79,6 +80,7 @@ USAGE: hera <subcommand> [flags]
   cluster  [--target QPS] [--policy name] [--residency optimistic|strict|cached] [--max-group N]
   group-sweep [--models a,b,c] [--residency MODE] [--max-group N]  evaluate N-tenant co-location
   cache-sweep [--model m] [--workers N] [--ways K] [--load-frac F] [--points P]
+  hps-sweep [--model m] [--workers N] [--ways K] [--cache-frac F] [--points P]  tiered-miss-path load sweep
   bench-engine [--models a,b] [--batch B] [--iters N]
   bench-snapshot [--out DIR] [--universe N] [--seed S] [--max-group G] [--threads T] [--target-frac F]
   obs-dump  [--out DIR] [--secs S] [--seed N]          RMU scenario -> registry snapshot + audit JSONL
@@ -420,6 +422,66 @@ fn cmd_cache_sweep(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_hps_sweep(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "dlrm_b");
+    let m = ModelId::from_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let store = ProfileStore::build(&NodeConfig::paper_default());
+    let workers = args
+        .get_usize("workers", store.profile(m).max_workers.min(8).max(1))?;
+    let ways = args.get_usize("ways", 6)?;
+    let cache_frac = args.get_f64("cache-frac", 0.10)?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&cache_frac),
+        "--cache-frac must be in [0, 1]"
+    );
+    let points = args.get_usize("points", 9)?.max(2);
+    println!(
+        "{model}: DRAM -> SSD -> remote load sweep at {workers} workers / {ways} ways, \
+         hot tier {:.1}% of tables ({} B rows, SLA {} ms)",
+        100.0 * cache_frac,
+        m.spec().row_bytes(),
+        m.spec().sla_ms
+    );
+    println!(
+        "{:>6} {:>12} {:>12} {:>14} {:>10} {:>9} {:>9}  {}",
+        "load", "p95-flat(ms)", "p95-hps(ms)", "p95-prefetch", "ssd-depth", "ops-util", "bw-util",
+        "binding"
+    );
+    let fmt_ms = |p95_s: f64| {
+        if p95_s.is_finite() {
+            format!("{:.2}", p95_s * 1e3)
+        } else {
+            "inf".into()
+        }
+    };
+    for p in
+        hera::figures::sweep_hps_points(&store, m, workers, ways, cache_frac, points)
+    {
+        println!(
+            "{:>5.0}% {:>12} {:>12} {:>14} {:>10.2} {:>8.1}% {:>8.1}%  {}",
+            100.0 * p.load_frac,
+            fmt_ms(p.p95_flat_s),
+            fmt_ms(p.p95_hps_s),
+            fmt_ms(p.p95_prefetch_s),
+            p.ssd.queue_depth,
+            100.0 * p.ssd.ops_util,
+            100.0 * p.ssd.bw_util,
+            if p.ssd.iops_bound() { "IOPS" } else { "bandwidth" },
+        );
+    }
+    println!(
+        "min-cache-for-SLA vs tiers: flat {:.3} GB, paper stack {:.3} GB",
+        store.min_cache_for_sla(m) / 1e9,
+        store.min_cache_for_sla_with(
+            m,
+            &hera::hps::TierStack::paper_default(),
+            0.35 * store.profile(m).max_load(),
+        ) / 1e9
+    );
+    Ok(())
+}
+
 fn cmd_bench_engine(args: &Args) -> anyhow::Result<()> {
     let dir = default_artifact_dir();
     let models = args
@@ -476,7 +538,8 @@ fn run_obs_scenario(secs: f64, seed: u64) -> anyhow::Result<hera::obs::EventJour
         (secs * 0.4, vec![0.7, 0.2]),
         (secs * 0.7, vec![0.1, 0.6]),
     ]);
-    let mut rmu = hera::hera::HeraRmu::new(&store);
+    let stack = hera::hps::TierStack::paper_default();
+    let mut rmu = hera::hera::HeraRmu::new(&store).with_hps(stack.clone());
     let out = sim.run(secs, (secs * 0.15).min(5.0), &mut rmu);
     for o in &out {
         println!(
@@ -494,6 +557,39 @@ fn run_obs_scenario(secs: f64, seed: u64) -> anyhow::Result<hera::obs::EventJour
         rmu.decisions.len(),
         rmu.journal.len()
     );
+    // One analytic HPS pass at the scenario operating points so the
+    // per-tier read counters, latency histograms and queue gauges land in
+    // the registry snapshot alongside the simulated-window metrics.
+    let reg = hera::obs::global();
+    let models = [d, n];
+    let curves = [store.hit_curve(d), store.hit_curve(n)];
+    let demands: Vec<hera::hps::TenantMissDemand> = models
+        .iter()
+        .zip(curves.iter())
+        .map(|(&m, curve)| {
+            let cache = cache0(m);
+            hera::hps::TenantMissDemand::at_qps(
+                curve,
+                cache,
+                m.spec().row_bytes(),
+                m.spec().row_accesses_per_item() as f64,
+                store.profile(m).max_load(),
+                curve.hit_rate(cache),
+            )
+        })
+        .collect();
+    let (paths, loads) = stack.resolve_group(&demands);
+    for ((m, demand), path) in models.iter().zip(&demands).zip(&paths) {
+        stack.record_window(reg, m.name(), demand, path, &loads, secs);
+    }
+    stack.record_gauges(reg, &loads);
+    for (i, m) in models.iter().enumerate() {
+        reg.gauge(
+            hera::obs::names::HPS_PREFETCH_OVERLAP,
+            &[("model", m.name().to_string())],
+        )
+        .set(rmu.prefetch_overlap(i));
+    }
     Ok(rmu.journal)
 }
 

@@ -15,7 +15,8 @@ mod perf;
 pub use contention::BandwidthModel;
 pub use llc::{enumerate_partitions, for_each_ways_split, CatPartition};
 pub use perf::{
-    cross_tenant_friction, ServiceProfile, CROSS_TENANT_FRICTION, DISPATCH_OVERHEAD_S,
+    cross_tenant_friction, MissLeg, MissPath, ServiceProfile, BACKING_BW_PER_WORKER,
+    CROSS_TENANT_FRICTION, DISPATCH_OVERHEAD_S,
 };
 
 #[cfg(test)]

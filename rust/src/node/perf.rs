@@ -42,8 +42,71 @@ pub fn cross_tenant_friction(
 /// Per-worker streaming bandwidth to the slow embedding backing tier
 /// (NVMe-class random row reads behind the `embedcache` hot tier).  Cache
 /// misses stream rows through this leg, so latency depends on the
-/// tenant's hot-tier allocation.
-const BACKING_BW_PER_WORKER: f64 = 0.5e9;
+/// tenant's hot-tier allocation.  This is the *seed* flat-backing model;
+/// the `hps` subsystem generalizes it to a tier stack whose degenerate
+/// single-tier form ([`MissPath::flat_seed`]) reproduces it bit-for-bit.
+pub const BACKING_BW_PER_WORKER: f64 = 0.5e9;
+
+/// One tier's share of a tenant's hot-tier miss traffic, as resolved by
+/// `hps::TierStack`: `share` of the miss bytes stream at `bw` B/s per
+/// worker, and each missed row additionally stalls the worker for
+/// `op_latency_s` (per-op setup + queueing + IOPS-wall inflation, already
+/// amortized over the worker's outstanding-read window).  Pure data — the
+/// node layer stays independent of `hps`/`embedcache`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MissLeg {
+    /// Name of the serving tier (`"backing"`, `"ssd"`, `"remote"`, ...).
+    pub tier: &'static str,
+    /// Fraction of miss traffic served by this tier (legs sum to 1).
+    pub share: f64,
+    /// Per-worker streaming bandwidth of this tier (B/s).
+    pub bw: f64,
+    /// Per-row op stall beyond pure streaming (s); 0 for the flat seed.
+    pub op_latency_s: f64,
+}
+
+/// The resolved DRAM→SSD→remote cascade for one tenant's miss traffic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MissPath {
+    legs: Vec<MissLeg>,
+}
+
+impl MissPath {
+    /// Build a path from already-resolved legs (the `hps` cascade).
+    pub fn new(legs: Vec<MissLeg>) -> MissPath {
+        MissPath { legs }
+    }
+
+    /// The seed flat-backing model as a one-leg path: every miss streams
+    /// at [`BACKING_BW_PER_WORKER`] with zero per-op latency.  Guaranteed
+    /// to reproduce the pre-hps `ServiceProfile` numbers bit-for-bit
+    /// (`share` of exactly 1.0 and an op term of exactly 0.0 are identity
+    /// operations in IEEE-754) — pinned by `tests/parity_hps.rs`.
+    pub fn flat_seed() -> MissPath {
+        MissPath {
+            legs: vec![MissLeg {
+                tier: "backing",
+                share: 1.0,
+                bw: BACKING_BW_PER_WORKER,
+                op_latency_s: 0.0,
+            }],
+        }
+    }
+
+    pub fn legs(&self) -> &[MissLeg] {
+        &self.legs
+    }
+
+    /// Seconds per item spent on the backing cascade for `bytes` of miss
+    /// traffic and `ops` missed rows per item.
+    pub fn secs_per_item(&self, bytes: f64, ops: f64) -> f64 {
+        let mut t = 0.0;
+        for leg in &self.legs {
+            t += leg.share * bytes / leg.bw + leg.share * ops * leg.op_latency_s;
+        }
+        t
+    }
+}
 
 /// Effective DRAM latency for a dependent gather chain (s).
 const GATHER_LATENCY_S: f64 = 80e-9;
@@ -114,6 +177,9 @@ pub struct ServiceProfile {
     t_backing_item: f64,
     /// Hot-tier hit fraction of embedding gathers (1.0 = fully resident).
     emb_hit: f64,
+    /// Fraction of the backing leg hidden behind the dense legs by the
+    /// async prefetch pipeline (0 = seed behaviour, no overlap).
+    prefetch_overlap: f64,
     workers: usize,
 }
 
@@ -141,6 +207,25 @@ impl ServiceProfile {
         ways: usize,
         emb_hit: f64,
     ) -> ServiceProfile {
+        Self::build_with_hps(model, node, workers, ways, emb_hit, &MissPath::flat_seed(), 0.0)
+    }
+
+    /// Build the profile when misses cascade through a resolved
+    /// hierarchical-parameter-server [`MissPath`] (DRAM hot tier → SSD →
+    /// remote PS; see `hps::TierStack`), with `prefetch_overlap` of the
+    /// backing leg hidden behind the dense legs by the async prefetch
+    /// pipeline.  `build_with_cache` is the degenerate call with
+    /// [`MissPath::flat_seed`] and zero overlap, and reproduces the seed
+    /// numbers bit-for-bit.
+    pub fn build_with_hps(
+        model: &ModelSpec,
+        node: &NodeConfig,
+        workers: usize,
+        ways: usize,
+        emb_hit: f64,
+        path: &MissPath,
+        prefetch_overlap: f64,
+    ) -> ServiceProfile {
         assert!(workers >= 1, "profile needs at least one worker");
         assert!(
             (1..=node.llc_ways).contains(&ways),
@@ -151,6 +236,11 @@ impl ServiceProfile {
             (0.0..=1.0).contains(&emb_hit),
             "emb_hit {emb_hit} outside [0, 1]"
         );
+        assert!(
+            (0.0..=1.0).contains(&prefetch_overlap),
+            "prefetch_overlap {prefetch_overlap} outside [0, 1]"
+        );
+        assert!(!path.legs().is_empty(), "miss path needs at least one leg");
 
         let (ws_bytes, miss_penalty) = cache_params(model);
         let llc_slice = node.way_bytes() * ways as f64;
@@ -171,9 +261,13 @@ impl ServiceProfile {
         let fc_traffic_item = ws_bytes * (1.0 - fc_hit) / 220.0; // amortized/query
 
         // Hot-tier misses: the missing fraction of gather bytes streams in
-        // from the backing tier (slow leg) and transits DRAM on the way.
+        // from the backing cascade (slow leg) and transits DRAM on the way.
+        // Each leg charges its share of miss bytes at its bandwidth plus a
+        // per-row op stall (queueing / IOPS wall); the flat seed path has
+        // one full-share leg at BACKING_BW_PER_WORKER with zero op stall.
         let backing_bytes_item = model.emb_bytes_per_item() * (1.0 - emb_hit);
-        let t_backing_item = backing_bytes_item / BACKING_BW_PER_WORKER;
+        let backing_ops_item = model.row_accesses_per_item() as f64 * (1.0 - emb_hit);
+        let t_backing_item = path.secs_per_item(backing_bytes_item, backing_ops_item);
 
         let dram_bytes_item = emb_traffic + fc_traffic_item + backing_bytes_item;
         let t_mem_item = (emb_traffic + fc_traffic_item) / gather_bw;
@@ -200,6 +294,7 @@ impl ServiceProfile {
             sensitivity: (miss_penalty / 2.5).min(1.0),
             t_backing_item,
             emb_hit,
+            prefetch_overlap,
             workers,
         }
     }
@@ -226,7 +321,13 @@ impl ServiceProfile {
         } else {
             (t_mem, t_comp)
         };
-        DISPATCH_OVERHEAD_S + hi + 0.3 * lo + b * self.t_backing_item
+        // Async prefetch pipeline: the predictable head of the embedding
+        // gather overlaps the dense legs, hiding up to `prefetch_overlap` of
+        // the backing leg (never more than the dominant dense leg itself).
+        // overlap = 0 subtracts exactly 0.0 — bit-identical to the seed form.
+        let t_back = b * self.t_backing_item;
+        let hidden = (self.prefetch_overlap * t_back).min(hi);
+        DISPATCH_OVERHEAD_S + hi + 0.3 * lo + t_back - hidden
     }
 
     /// Unconstrained DRAM bandwidth demand of one busy worker (B/s).
@@ -266,6 +367,12 @@ impl ServiceProfile {
     /// Seconds per item on the backing-tier leg (0 under full residency).
     pub fn backing_leg_per_item(&self) -> f64 {
         self.t_backing_item
+    }
+
+    /// Fraction of the backing leg hidden by the async prefetch pipeline
+    /// (0 = seed behaviour: fully serial backing leg).
+    pub fn prefetch_overlap(&self) -> f64 {
+        self.prefetch_overlap
     }
 }
 
@@ -426,5 +533,108 @@ mod tests {
         // slowdown must stretch service time far less than 2x.
         assert!(t2 < 1.5 * t1, "backing-dominated: {t2} vs {t1}");
         assert!(t2 > t1, "DRAM leg still counts");
+    }
+
+    #[test]
+    fn flat_seed_path_is_bit_identical_to_cache_build() {
+        let node = NodeConfig::paper_default();
+        for name in ["dlrm_b", "dlrm_d", "ncf", "wnd"] {
+            let spec = ModelId::from_name(name).unwrap().spec();
+            for hit in [1.0, 0.9, 0.5, 0.0] {
+                let a = ServiceProfile::build_with_cache(spec, &node, 8, 5, hit);
+                let b = ServiceProfile::build_with_hps(
+                    spec,
+                    &node,
+                    8,
+                    5,
+                    hit,
+                    &MissPath::flat_seed(),
+                    0.0,
+                );
+                for batch in [1u32, 64, 220, 1024] {
+                    assert_eq!(
+                        a.service_time_s(batch, 1.3).to_bits(),
+                        b.service_time_s(batch, 1.3).to_bits(),
+                        "{name} hit {hit} batch {batch}"
+                    );
+                }
+                assert_eq!(
+                    a.backing_leg_per_item().to_bits(),
+                    b.backing_leg_per_item().to_bits()
+                );
+                assert_eq!(
+                    a.per_worker_bw_demand().to_bits(),
+                    b.per_worker_bw_demand().to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn op_latency_leg_penalizes_narrow_rows_hardest() {
+        // Equal per-op stall costs more per byte for 128 B rows (dlrm_c,
+        // 32-dim) than for 1 KB rows (dlrm_d, 256-dim): the op term scales
+        // with row count, not bytes — the IOPS-wall asymmetry the flat
+        // bandwidth constant could not express.
+        let node = NodeConfig::paper_default();
+        let op = 20e-6;
+        let stalled = MissPath::new(vec![MissLeg {
+            tier: "ssd",
+            share: 1.0,
+            bw: BACKING_BW_PER_WORKER,
+            op_latency_s: op,
+        }]);
+        for (name, min_ratio) in [("dlrm_c", 2.0), ("dlrm_d", 1.01)] {
+            let spec = ModelId::from_name(name).unwrap().spec();
+            let flat =
+                ServiceProfile::build_with_cache(spec, &node, 8, 5, 0.5).backing_leg_per_item();
+            let hps = ServiceProfile::build_with_hps(spec, &node, 8, 5, 0.5, &stalled, 0.0)
+                .backing_leg_per_item();
+            assert!(hps > flat, "{name}: op stall must add latency");
+            if min_ratio > 1.5 {
+                assert!(
+                    hps > min_ratio * flat,
+                    "{name}: narrow rows should be op-dominated ({hps} vs {flat})"
+                );
+            }
+        }
+        // Per byte of miss traffic, the narrow-row model pays more.
+        let c = ModelId::from_name("dlrm_c").unwrap().spec();
+        let d = ModelId::from_name("dlrm_d").unwrap().spec();
+        let per_byte = |spec: &crate::config::ModelSpec| {
+            ServiceProfile::build_with_hps(spec, &node, 8, 5, 0.0, &stalled, 0.0)
+                .backing_leg_per_item()
+                / spec.emb_bytes_per_item()
+        };
+        assert!(per_byte(c) > 2.0 * per_byte(d));
+    }
+
+    #[test]
+    fn prefetch_overlap_hides_backing_leg() {
+        let node = NodeConfig::paper_default();
+        let spec = ModelId::from_name("dlrm_b").unwrap().spec();
+        let path = MissPath::flat_seed();
+        let base = ServiceProfile::build_with_hps(spec, &node, 8, 5, 0.6, &path, 0.0);
+        let half = ServiceProfile::build_with_hps(spec, &node, 8, 5, 0.6, &path, 0.5);
+        let full = ServiceProfile::build_with_hps(spec, &node, 8, 5, 0.6, &path, 1.0);
+        let (t0, t5, t1) = (
+            base.service_time_s(220, 1.0),
+            half.service_time_s(220, 1.0),
+            full.service_time_s(220, 1.0),
+        );
+        assert!(t5 < t0, "overlap 0.5 must lower service time");
+        assert!(t1 < t5, "more overlap hides more");
+        // Hidden work can never exceed the dominant dense leg.
+        let (c, m) = full.legs_per_item();
+        let hi = 220.0 * c.max(m * 1.0);
+        assert!(t1 >= DISPATCH_OVERHEAD_S + hi, "overlap clamped by dense leg");
+    }
+
+    #[test]
+    #[should_panic]
+    fn prefetch_overlap_out_of_range_rejected() {
+        let node = NodeConfig::paper_default();
+        let spec = ModelId::from_name("ncf").unwrap().spec();
+        ServiceProfile::build_with_hps(spec, &node, 4, 4, 1.0, &MissPath::flat_seed(), 1.5);
     }
 }

@@ -76,6 +76,15 @@ pub const BUILD_BUCKETS_S: [f64; 12] = [
     1e-6, 1e-5, 1e-4, 5e-4, 1e-3, 5e-3, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0,
 ];
 
+/// Fine-grained latency buckets (seconds) for the `hps` tier families:
+/// per-miss SSD/remote service times are µs-scale, so the ms-scale
+/// [`LATENCY_BUCKETS_S`] ladder would alias them all into its bottom
+/// bucket (everything ≤ 250 µs is one bin).  This ladder resolves
+/// 1 µs – 5 ms with headroom to 50 ms for queue-inflated remote reads.
+pub const FINE_LATENCY_BUCKETS_S: [f64; 14] = [
+    1e-6, 2.5e-6, 5e-6, 1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 5e-2,
+];
+
 #[derive(Debug)]
 struct HistogramCore {
     /// Upper bounds, ascending; `counts` has one extra overflow slot.

@@ -8,6 +8,7 @@ use anyhow::Context;
 
 use crate::config::{ModelId, NodeConfig, N_MODELS};
 use crate::embedcache::{HitCurve, MIN_CACHE_BYTES};
+use crate::hps::{TenantMissDemand, TierStack};
 use crate::json::{parse, Value};
 use crate::node::ServiceProfile;
 use crate::server_sim::paper_moments;
@@ -189,6 +190,59 @@ impl ProfileStore {
     /// store construction.
     pub fn min_cache_for_sla(&self, id: ModelId) -> f64 {
         self.min_cache[self.slot(id)]
+    }
+
+    /// [`Self::min_cache_for_sla`] against a hierarchical parameter
+    /// server instead of the flat backing constant: the bisection
+    /// re-resolves the tenant's miss cascade at every probe (per-tier
+    /// shares shift as the hot tier grows, and the queue state follows
+    /// the shrinking miss volume) at an offered load of `qps` queries/s,
+    /// with no prefetch credit (conservative planning).  Not memoized —
+    /// tier-aware placement calls this on demand per candidate.  With
+    /// `TierStack::flat_seed()` the result equals
+    /// [`Self::min_cache_for_sla`] bit-for-bit.
+    pub fn min_cache_for_sla_with(&self, id: ModelId, stack: &TierStack, qps: f64) -> f64 {
+        let spec = id.spec();
+        let curve = HitCurve::for_model(id);
+        let full_bytes = curve.full_bytes();
+        let tail_batch = paper_moments().p95.round() as u32;
+        let service_at = |bytes: f64| -> f64 {
+            let hit = curve.hit_rate(bytes);
+            let path = stack.resolve(&TenantMissDemand::at_qps(
+                &curve,
+                bytes,
+                spec.row_bytes(),
+                spec.row_accesses_per_item() as f64,
+                qps,
+                hit,
+            ));
+            ServiceProfile::build_with_hps(
+                spec,
+                &self.node,
+                1,
+                self.node.llc_ways,
+                hit,
+                &path,
+                0.0,
+            )
+            .service_time_s(tail_batch, 1.0)
+        };
+        let target = (0.85 * spec.sla_ms / 1e3).max(1.1 * service_at(full_bytes));
+        let mut lo = MIN_CACHE_BYTES.min(full_bytes);
+        let mut hi = full_bytes;
+        if service_at(lo) <= target {
+            hi = lo;
+        } else {
+            for _ in 0..48 {
+                let mid = 0.5 * (lo + hi);
+                if service_at(mid) <= target {
+                    hi = mid;
+                } else {
+                    lo = mid;
+                }
+            }
+        }
+        hi.max(0.01 * full_bytes).max(MIN_CACHE_BYTES).min(full_bytes)
     }
 
     /// Per-worker resident bytes when `id` is served through its minimum
@@ -442,6 +496,34 @@ mod tests {
             let hit = store.hit_curve(id).hit_rate(min);
             assert!(hit > 0.5, "{name}: hit at min cache {hit}");
         }
+    }
+
+    #[test]
+    fn min_cache_with_flat_seed_is_bit_identical() {
+        let store = ProfileStore::build(&NodeConfig::paper_default());
+        let seed = TierStack::flat_seed();
+        for id in ModelId::all() {
+            assert_eq!(
+                store.min_cache_for_sla_with(id, &seed, 50.0).to_bits(),
+                store.min_cache_for_sla(id).to_bits(),
+                "{}",
+                id.name()
+            );
+        }
+    }
+
+    #[test]
+    fn queue_pressure_raises_min_cache() {
+        // A loaded tier stack makes misses dearer, so the SLA-safe hot
+        // tier can only grow (never shrink) with offered load.
+        let store = ProfileStore::build(&NodeConfig::paper_default());
+        let stack = TierStack::paper_default();
+        let id = ModelId::from_name("dlrm_b").unwrap();
+        let light = store.min_cache_for_sla_with(id, &stack, 5.0);
+        let heavy = store.min_cache_for_sla_with(id, &stack, 500.0);
+        let full = id.spec().emb_gb * 1e9;
+        assert!(light <= heavy + 1.0, "load must not shrink min cache");
+        assert!((0.01 * full - 1.0..=full).contains(&heavy));
     }
 
     #[test]

@@ -11,6 +11,7 @@
 use crate::alloc::{ResidencyMode, ResourceVector};
 use crate::config::{ModelId, NodeConfig};
 use crate::embedcache::HitCurve;
+use crate::hps::{TenantMissDemand, TierLoad, TierStack};
 use crate::node::{cross_tenant_friction, BandwidthModel, ServiceProfile};
 
 use super::batch_moments::paper_moments;
@@ -112,12 +113,85 @@ fn erlang_c(c: usize, a: f64) -> f64 {
 
 /// Predict the steady state of up to N co-located tenants.
 pub fn solve(node: &NodeConfig, tenants: &[AnalyticTenant]) -> NodeSteadyState {
-    let bm = paper_moments();
-    let bw = BandwidthModel::new(node.dram_bw_gbs * 1e9);
     let profiles: Vec<ServiceProfile> = tenants
         .iter()
         .map(|t| tenant_profile(node, t.model, t.workers, t.ways, t.cache_bytes))
         .collect();
+    solve_with_profiles(node, tenants, profiles)
+}
+
+/// [`solve`] with hot-tier misses resolved through a hierarchical
+/// parameter server instead of the flat backing constant: each cached
+/// tenant's miss traffic cascades through `stack` (shared queues — one
+/// tenant's load inflates everyone's per-miss latency), and
+/// `prefetch_overlap[i]` of tenant `i`'s backing leg is hidden behind its
+/// dense legs.  Returns the per-tier loads alongside the steady state.
+/// With `TierStack::flat_seed()` and zero overlaps this reproduces
+/// [`solve`] bit-for-bit (pinned in `tests/parity_hps.rs`).
+pub fn solve_hps(
+    node: &NodeConfig,
+    tenants: &[AnalyticTenant],
+    stack: &TierStack,
+    prefetch_overlap: &[f64],
+) -> (NodeSteadyState, Vec<TierLoad>) {
+    assert_eq!(tenants.len(), prefetch_overlap.len());
+    let curves: Vec<Option<HitCurve>> = tenants
+        .iter()
+        .map(|t| t.cache_bytes.map(|_| HitCurve::for_model(t.model)))
+        .collect();
+
+    // Offered miss demand of every cached tenant, resolved as one group
+    // so the stack's queue state reflects the aggregate load.
+    let mut cached_idx = Vec::new();
+    let mut demands = Vec::new();
+    for (i, t) in tenants.iter().enumerate() {
+        if let (Some(bytes), Some(curve)) = (t.cache_bytes, curves[i].as_ref()) {
+            let spec = t.model.spec();
+            demands.push(TenantMissDemand::at_qps(
+                curve,
+                bytes,
+                spec.row_bytes(),
+                spec.row_accesses_per_item() as f64,
+                t.arrival_qps,
+                curve.hit_rate(bytes),
+            ));
+            cached_idx.push(i);
+        }
+    }
+    let (paths, loads) = stack.resolve_group(&demands);
+
+    let mut path_of = vec![None; tenants.len()];
+    for (k, &i) in cached_idx.iter().enumerate() {
+        path_of[i] = Some(&paths[k]);
+    }
+    let profiles: Vec<ServiceProfile> = tenants
+        .iter()
+        .enumerate()
+        .map(|(i, t)| match (t.cache_bytes, path_of[i]) {
+            (Some(bytes), Some(path)) => ServiceProfile::build_with_hps(
+                t.model.spec(),
+                node,
+                t.workers.max(1),
+                t.ways,
+                curves[i].as_ref().unwrap().hit_rate(bytes),
+                path,
+                prefetch_overlap[i],
+            ),
+            _ => ServiceProfile::build(t.model.spec(), node, t.workers.max(1), t.ways),
+        })
+        .collect();
+    (solve_with_profiles(node, tenants, profiles), loads)
+}
+
+/// Shared steady-state core: the fixed point + per-tenant queueing math
+/// over already-built profiles.
+fn solve_with_profiles(
+    node: &NodeConfig,
+    tenants: &[AnalyticTenant],
+    profiles: Vec<ServiceProfile>,
+) -> NodeSteadyState {
+    let bm = paper_moments();
+    let bw = BandwidthModel::new(node.dram_bw_gbs * 1e9);
 
     // Fixed point on the contention slowdown + cross-tenant friction.
     let mut slowdown = 1.0;
@@ -316,6 +390,61 @@ mod tests {
             "starving the hot tier must hurt: {} vs {}",
             p(&starved),
             p(&comfortable)
+        );
+    }
+
+    #[test]
+    fn solve_hps_flat_seed_matches_solve_exactly() {
+        let node = NodeConfig::paper_default();
+        let m = ModelId::from_name("dlrm_b").unwrap();
+        let tenants = vec![
+            AnalyticTenant {
+                model: m,
+                workers: 8,
+                ways: 5,
+                arrival_qps: 20.0,
+                cache_bytes: Some(0.2 * m.spec().emb_gb * 1e9),
+            },
+            tenant("ncf", 8, 6, 200.0),
+        ];
+        let base = solve(&node, &tenants);
+        let (hps, loads) =
+            solve_hps(&node, &tenants, &TierStack::flat_seed(), &[0.0, 0.0]);
+        for (a, b) in base.tenants.iter().zip(&hps.tenants) {
+            assert_eq!(a.p95_sojourn_s.to_bits(), b.p95_sojourn_s.to_bits());
+            assert_eq!(a.mean_service_s.to_bits(), b.mean_service_s.to_bits());
+            assert_eq!(a.rho.to_bits(), b.rho.to_bits());
+        }
+        assert_eq!(base.slowdown.to_bits(), hps.slowdown.to_bits());
+        assert_eq!(loads.len(), 1);
+    }
+
+    #[test]
+    fn prefetch_overlap_lowers_hps_p95() {
+        let node = NodeConfig::paper_default();
+        let m = ModelId::from_name("dlrm_b").unwrap();
+        // Low offered load: SSD-resident misses make service times much
+        // longer than the flat seed's, so the probe must sit well inside
+        // the tiered capacity for p95 to stay finite.
+        let tenants = vec![AnalyticTenant {
+            model: m,
+            workers: 8,
+            ways: 5,
+            arrival_qps: 2.0,
+            cache_bytes: Some(0.5 * m.spec().emb_gb * 1e9),
+        }];
+        let stack = TierStack::paper_default();
+        let (none, _) = solve_hps(&node, &tenants, &stack, &[0.0]);
+        let (full, _) = solve_hps(&node, &tenants, &stack, &[1.0]);
+        assert!(
+            none.tenants[0].p95_sojourn_s.is_finite(),
+            "probe load must be sustainable without prefetch"
+        );
+        assert!(
+            full.tenants[0].p95_sojourn_s < none.tenants[0].p95_sojourn_s,
+            "prefetch must lower p95: {} vs {}",
+            full.tenants[0].p95_sojourn_s,
+            none.tenants[0].p95_sojourn_s
         );
     }
 

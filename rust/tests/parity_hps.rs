@@ -1,0 +1,131 @@
+//! Golden parity for the hierarchical parameter server (ISSUE 8): the
+//! degenerate single-tier stack (`TierStack::flat_seed`, one bottomless
+//! tier streaming at `BACKING_BW_PER_WORKER` with no per-op cost and no
+//! queue) must reproduce the pre-HPS flat backing model **bit-for-bit**
+//! at every layer that grew a tier-aware twin:
+//!
+//! * `ServiceProfile::build_with_hps`   vs `build_with_cache`
+//! * `solve_hps`                        vs `solve`
+//! * `evaluate_group_hps`               vs `evaluate_group`
+//! * `ProfileStore::min_cache_for_sla_with` vs `min_cache_for_sla`
+//!
+//! Equality is asserted on `f64::to_bits` — same floats, not same-ish.
+
+use hera::alloc::ResidencyPolicy;
+use hera::config::{ModelId, NodeConfig};
+use hera::hera::cluster::{evaluate_group, evaluate_group_hps};
+use hera::hera::AffinityMatrix;
+use hera::hps::TierStack;
+use hera::node::{MissPath, ServiceProfile};
+use hera::profiler::ProfileStore;
+use hera::server_sim::analytic::{solve, solve_hps, AnalyticTenant};
+use once_cell::sync::Lazy;
+
+static STORE: Lazy<ProfileStore> =
+    Lazy::new(|| ProfileStore::build(&NodeConfig::paper_default()));
+static MATRIX: Lazy<AffinityMatrix> = Lazy::new(|| AffinityMatrix::build(&STORE));
+
+fn id(name: &str) -> ModelId {
+    ModelId::from_name(name).unwrap()
+}
+
+#[test]
+fn service_profile_flat_seed_parity() {
+    let node = NodeConfig::paper_default();
+    let flat = MissPath::flat_seed();
+    for m in ModelId::all() {
+        let spec = m.spec();
+        for &hit in &[0.0, 0.37, 0.9, 1.0] {
+            let a = ServiceProfile::build_with_cache(spec, &node, 4, 6, hit);
+            let b = ServiceProfile::build_with_hps(spec, &node, 4, 6, hit, &flat, 0.0);
+            for &batch in &[1u32, 64, 220, 512] {
+                for &slow in &[1.0, 1.8] {
+                    assert_eq!(
+                        a.service_time_s(batch, slow).to_bits(),
+                        b.service_time_s(batch, slow).to_bits(),
+                        "{} hit {hit} batch {batch} slow {slow}",
+                        m.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn solve_flat_seed_parity() {
+    let node = NodeConfig::paper_default();
+    let stack = TierStack::flat_seed();
+    let mk = |m: &str, workers, ways, qps, cache| AnalyticTenant {
+        model: id(m),
+        workers,
+        ways,
+        arrival_qps: qps,
+        cache_bytes: cache,
+    };
+    let scenarios: Vec<Vec<AnalyticTenant>> = vec![
+        vec![mk("dlrm_b", 8, 6, 400.0, Some(2e9))],
+        vec![mk("dlrm_a", 6, 5, 900.0, None), mk("ncf", 10, 6, 2.0e4, Some(5e8))],
+        vec![
+            mk("dlrm_c", 10, 4, 1500.0, Some(1e8)),
+            mk("dlrm_d", 8, 4, 800.0, Some(4e8)),
+            mk("din", 4, 3, 5.0e3, None),
+        ],
+    ];
+    for tenants in &scenarios {
+        let a = solve(&node, tenants);
+        let overlaps = vec![0.0; tenants.len()];
+        let (b, loads) = solve_hps(&node, tenants, &stack, &overlaps);
+        assert_eq!(a.slowdown.to_bits(), b.slowdown.to_bits());
+        assert_eq!(a.bw_utilization.to_bits(), b.bw_utilization.to_bits());
+        assert_eq!(a.tenants.len(), b.tenants.len());
+        for (x, y) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(x.rho.to_bits(), y.rho.to_bits());
+            assert_eq!(x.mean_service_s.to_bits(), y.mean_service_s.to_bits());
+            assert_eq!(x.p95_sojourn_s.to_bits(), y.p95_sojourn_s.to_bits());
+            assert_eq!(x.feasible, y.feasible);
+            assert_eq!(x.bw_demand.to_bits(), y.bw_demand.to_bits());
+        }
+        // The degenerate tier never queues and never looks saturated.
+        for l in &loads {
+            assert_eq!(l.wait_s, 0.0);
+            assert_eq!(l.queue_depth, 0.0);
+            assert_eq!(l.ops_util, 0.0);
+        }
+    }
+}
+
+#[test]
+fn evaluate_group_flat_seed_parity() {
+    let stack = TierStack::flat_seed();
+    let groups: Vec<Vec<ModelId>> = vec![
+        vec![id("dlrm_a"), id("wnd")],
+        vec![id("dlrm_b"), id("dlrm_d")],
+        vec![id("dlrm_c"), id("ncf"), id("din")],
+    ];
+    for group in &groups {
+        for policy in [ResidencyPolicy::Optimistic, ResidencyPolicy::Cached] {
+            let a = evaluate_group(&STORE, &MATRIX, group, policy);
+            let b = evaluate_group_hps(&STORE, &MATRIX, group, policy, &stack);
+            assert_eq!(a.tenants.len(), b.tenants.len());
+            for (x, y) in a.tenants.iter().zip(&b.tenants) {
+                assert_eq!(x.model, y.model);
+                assert_eq!(x.rv, y.rv, "{:?} {:?}", group, policy);
+                assert_eq!(x.qps.to_bits(), y.qps.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn min_cache_for_sla_flat_seed_parity() {
+    let stack = TierStack::flat_seed();
+    for m in ModelId::all() {
+        let flat = STORE.min_cache_for_sla(m);
+        // The flat path has no queue state, so the probe load is inert.
+        for &qps in &[10.0, 1.0e3, 5.0e4] {
+            let tiered = STORE.min_cache_for_sla_with(m, &stack, qps);
+            assert_eq!(flat.to_bits(), tiered.to_bits(), "{} @ {qps}", m.name());
+        }
+    }
+}

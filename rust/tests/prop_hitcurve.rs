@@ -1,0 +1,141 @@
+//! Property tests for the `embedcache` hit curve at the edges the
+//! hierarchical parameter server leans on (ISSUE 8 satellite):
+//!
+//! * `skew = 0` is the exact uniform limit — the hit rate equals the
+//!   cached row fraction;
+//! * a hot tier at (or beyond) full residency hits exactly 1.0 and
+//!   offers **zero** miss traffic to the tier stack — no share, no
+//!   queue, no backing latency;
+//! * `hit_rate` is monotone non-decreasing in capacity for arbitrary
+//!   (rows, tables, width, skew) curves, and so is the tier cascade
+//!   built on top of it.
+//!
+//! Uses the seeded driver in `hera::testutil` (proptest substitute —
+//! failures print a replay seed).
+
+use hera::config::{ModelId, NodeConfig};
+use hera::embedcache::HitCurve;
+use hera::hps::{TenantMissDemand, TierStack};
+use hera::node::ServiceProfile;
+use hera::prop_assert;
+use hera::rng::{Rng, Xoshiro256};
+use hera::testutil::{check, default_cases};
+
+/// Random but well-conditioned curve parameters.
+fn random_curve(rng: &mut Xoshiro256) -> HitCurve {
+    let rows = 16.0 + rng.next_below(100_000) as f64;
+    let tables = 1 + rng.next_below(64) as usize;
+    let row_bytes = 4.0 * (1 + rng.next_below(256)) as f64;
+    let skew = rng.range_f64(0.0, 2.0);
+    HitCurve::new(rows, tables, row_bytes, skew)
+}
+
+#[test]
+fn prop_zero_skew_is_uniform() {
+    check("zero_skew_is_uniform", default_cases(), |rng| {
+        // Stay under the 2048-row exact-summation head so the uniform
+        // identity H(k, 0) = k holds to rounding error.
+        let rows = 32.0 + rng.next_below(2000) as f64;
+        let tables = 1 + rng.next_below(32) as usize;
+        let curve = HitCurve::new(rows, tables, 128.0, 0.0);
+        let frac = rng.next_f64();
+        let cache = frac * curve.full_bytes();
+        let hit = curve.hit_rate(cache);
+        prop_assert!(
+            (hit - frac).abs() < 1e-9,
+            "uniform limit: hit {hit} != cached fraction {frac} (rows {rows}, tables {tables})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_full_residency_routes_no_miss_traffic() {
+    let node = NodeConfig::paper_default();
+    let stack = TierStack::paper_default();
+    check("full_residency_no_misses", default_cases(), |rng| {
+        let models: Vec<ModelId> = ModelId::all().collect();
+        let m = models[rng.next_below(models.len() as u64) as usize];
+        let spec = m.spec();
+        let curve = HitCurve::for_model(m);
+        // At or beyond full residency: hit is exactly 1.0, not 1-eps.
+        let over = 1.0 + rng.next_f64();
+        let cache = over * curve.full_bytes();
+        let hit = curve.hit_rate(cache);
+        prop_assert!(hit == 1.0, "{}: hit at {over:.2}x full = {hit}", m.name());
+        let demand = TenantMissDemand::at_qps(
+            &curve,
+            cache,
+            spec.row_bytes(),
+            spec.row_accesses_per_item() as f64,
+            1.0e4,
+            hit,
+        );
+        prop_assert!(
+            demand.miss_ops_per_s == 0.0,
+            "{}: resident tenant offered {} miss ops/s",
+            m.name(),
+            demand.miss_ops_per_s
+        );
+        let (paths, loads) = stack.resolve_group(std::slice::from_ref(&demand));
+        for l in &loads {
+            prop_assert!(
+                l.lambda_ops == 0.0 && l.wait_s == 0.0 && l.queue_depth == 0.0,
+                "{}: tier {} sees load from a resident tenant",
+                m.name(),
+                l.name
+            );
+        }
+        // The backing leg of the service profile is exactly zero: tiered
+        // and fully-resident builds agree bit-for-bit at hit 1.0.
+        let tiered = ServiceProfile::build_with_hps(spec, &node, 2, 6, 1.0, &paths[0], 0.0);
+        let resident = ServiceProfile::build(spec, &node, 2, 6);
+        prop_assert!(
+            tiered.service_time_s(220, 1.0).to_bits()
+                == resident.service_time_s(220, 1.0).to_bits(),
+            "{}: resident service time differs through the tier stack",
+            m.name()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hit_rate_is_monotone_in_capacity() {
+    check("hit_rate_monotone", default_cases(), |rng| {
+        let curve = random_curve(rng);
+        let full = curve.full_bytes();
+        let mut a = rng.next_f64() * 1.2 * full;
+        let mut b = rng.next_f64() * 1.2 * full;
+        if a > b {
+            std::mem::swap(&mut a, &mut b);
+        }
+        let (ha, hb) = (curve.hit_rate(a), curve.hit_rate(b));
+        prop_assert!(
+            hb >= ha,
+            "hit must not drop with capacity: H({a}) = {ha} > H({b}) = {hb} (skew {})",
+            curve.skew()
+        );
+        prop_assert!((0.0..=1.0).contains(&ha) && (0.0..=1.0).contains(&hb), "range");
+        // More hot tier never pushes more traffic below the DRAM line.
+        let stack = TierStack::paper_default();
+        let mk = |cache: f64| {
+            TenantMissDemand::at_qps(&curve, cache, 128.0, 50.0, 1.0e3, curve.hit_rate(cache))
+        };
+        let (da, db) = (mk(a), mk(b));
+        prop_assert!(
+            db.miss_ops_per_s <= da.miss_ops_per_s,
+            "miss traffic must shrink with capacity"
+        );
+        let (_, la) = stack.resolve_group(std::slice::from_ref(&da));
+        let (_, lb) = stack.resolve_group(std::slice::from_ref(&db));
+        let tot = |ls: &[hera::hps::TierLoad]| -> f64 {
+            ls.iter().map(|l| l.lambda_ops).sum()
+        };
+        prop_assert!(
+            tot(&lb) <= tot(&la) + 1e-9 * tot(&la).max(1.0),
+            "tier cascade must carry less load at the larger hot tier"
+        );
+        Ok(())
+    });
+}
