@@ -2,21 +2,68 @@
 """Validate `hera-bench-v1` perf-trajectory documents.
 
 Usage:
-    check_bench_schema.py DIR [--universe N] [--provenance P] [--min-models M]
+    check_bench_schema.py DIR [--universe N] [--provenance P]
+                              [--min-models M] [--require-solver]
 
-DIR must hold BENCH_affinity.json and BENCH_schedule.json (as written by
-`hera bench-snapshot --out DIR`).  CI runs this twice: once against a
-freshly generated smoke snapshot (--universe/--provenance pinned) and
-once against the baselines checked into the repo root (--min-models 200,
-the trajectory's required scale point).
+DIR must hold BENCH_affinity.json, BENCH_schedule.json and
+BENCH_solver.json (as written by `hera bench-snapshot --out DIR`).  CI
+runs this three ways: against a freshly generated smoke snapshot
+(--universe/--provenance pinned), against the fast-solver perf smoke
+with --require-solver (the counter-based acceptance: memo hits, beam
+counters and probes-per-search ratios, which are deterministic where
+wall-clock speedups are not), and against the baselines at the repo
+root (--min-models 200).
+
+`estimated-bootstrap` provenance is tolerated only where no Rust
+toolchain exists (the authoring container has none): when `cargo` is on
+PATH the measured numbers are one command away, so an estimated
+document is a hard FAIL, not a warning.
 """
 
 import argparse
 import json
+import shutil
 import sys
 from pathlib import Path
 
 RESIDENCIES = ("optimistic", "strict", "cached")
+
+# Per-mode search-cost counter deltas reported by the solver document
+# (must mirror `benchsnap::SOLVER_COUNTERS`).
+SOLVER_COUNTERS = (
+    "hera_solver_searches_total",
+    "hera_solver_probes_total",
+    "hera_solver_fast_path_total",
+    "hera_hitcurve_memo_hits_total",
+    "hera_hitcurve_memo_misses_total",
+    "hera_erlang_table_hits_total",
+    "hera_erlang_table_misses_total",
+    "hera_hitcurve_table_hits_total",
+    "hera_hitcurve_table_misses_total",
+    "hera_group_memo_hits_total",
+    "hera_group_memo_misses_total",
+    "hera_beam_candidates_total",
+    "hera_beam_pruned_total",
+)
+
+# The legacy coupled-solver search: 12 rounds of fixed-grid bisection,
+# one probe per round.  The slow A/B pass must reproduce it exactly.
+BISECTION_PROBES_PER_SEARCH = 12.0
+
+
+def check_provenance(doc, name, pinned):
+    prov = doc["provenance"]
+    assert isinstance(prov, str) and prov, name
+    if pinned is not None:
+        assert prov == pinned, f"{name}: provenance {prov!r}, pinned {pinned!r}"
+    if prov.startswith("estimated"):
+        msg = (
+            f"{name}: provenance is {prov!r} but a rust toolchain is "
+            "available — regenerate with `cargo run --release -- "
+            "bench-snapshot` instead of shipping estimates"
+        )
+        assert shutil.which("cargo") is None, msg
+        print(f"{name}: WARNING estimated provenance (no toolchain here)")
 
 
 def check_rows(doc, name):
@@ -52,24 +99,101 @@ def check_plans(doc, min_models):
         )
 
 
+def check_solver(doc, require_solver):
+    name = "BENCH_solver.json"
+    assert doc["plans_identical"] is True, (
+        f"{name}: the fast solver changed a plan — the A/B passes must "
+        "be bit-identical"
+    )
+    assert doc["fast_solver"] in ("on", "off", "auto"), doc["fast_solver"]
+    assert doc["beam_score"] in ("affinity", "demand"), doc["beam_score"]
+
+    phase = doc["schedule_phase"]
+    assert phase["slow_total_ns"] > 0, phase
+    assert phase["fast_total_ns"] > 0, phase
+    assert phase["speedup"] > 0, phase
+    for policy in ("optimistic", "cached"):
+        row = phase[policy]
+        assert row["slow_ns"] > 0 and row["fast_ns"] > 0, row
+        assert row["speedup"] > 0, row
+
+    counters = doc["counters"]
+    for mode in ("slow", "fast"):
+        c = counters[mode]
+        for key in SOLVER_COUNTERS:
+            assert isinstance(c[key], (int, float)) and c[key] >= 0, (
+                f"{name}: counters.{mode}.{key} missing or negative"
+            )
+        assert c["hera_solver_searches_total"] > 0, (
+            f"{name}: {mode} pass ran no scale searches"
+        )
+    slow, fast = counters["slow"], counters["fast"]
+    slow_ratio = (
+        slow["hera_solver_probes_total"] / slow["hera_solver_searches_total"]
+    )
+    fast_ratio = (
+        fast["hera_solver_probes_total"] / fast["hera_solver_searches_total"]
+    )
+    assert slow_ratio == BISECTION_PROBES_PER_SEARCH, (
+        f"{name}: slow pass spent {slow_ratio} probes/search, the legacy "
+        f"bisection spends exactly {BISECTION_PROBES_PER_SEARCH}"
+    )
+    assert fast_ratio < slow_ratio, (
+        f"{name}: fast pass spent {fast_ratio} probes/search — no better "
+        "than bisection"
+    )
+    assert slow["hera_solver_fast_path_total"] == 0, (
+        f"{name}: the slow pass took the fast path"
+    )
+    assert fast["hera_solver_fast_path_total"] > 0, (
+        f"{name}: the fast pass never took the fast path"
+    )
+
+    if not require_solver:
+        return
+    # Counter-based perf acceptance (deterministic under CI noise).
+    memo = fast["hera_hitcurve_memo_hits_total"]
+    memo_total = memo + fast["hera_hitcurve_memo_misses_total"]
+    assert memo_total > 0 and memo > 0, (
+        f"{name}: fast pass recorded no hit-rate memo hits "
+        f"({memo}/{memo_total})"
+    )
+    print(
+        f"{name}: hitcurve memo hit-rate "
+        f"{memo / memo_total:.3f} ({memo:.0f}/{memo_total:.0f})"
+    )
+    assert fast["hera_group_memo_hits_total"] > 0, (
+        f"{name}: fast pass recorded no group-memo hits"
+    )
+    for mode in ("slow", "fast"):
+        assert counters[mode]["hera_beam_candidates_total"] > 0, (
+            f"{name}: {mode} pass generated no beam candidates"
+        )
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("dir", type=Path)
     ap.add_argument("--universe", type=int, default=None)
     ap.add_argument("--provenance", default=None)
     ap.add_argument("--min-models", type=int, default=None)
+    ap.add_argument(
+        "--require-solver",
+        action="store_true",
+        help="enforce the fast-solver counter acceptance (memo hit-rate "
+        "> 0, group-memo hits, beam counters) on BENCH_solver.json",
+    )
     args = ap.parse_args()
 
     for name, group in (
         ("BENCH_affinity.json", "affinity"),
         ("BENCH_schedule.json", "schedule"),
+        ("BENCH_solver.json", "solver"),
     ):
         doc = json.loads((args.dir / name).read_text())
         assert doc["schema"] == "hera-bench-v1", f"{name}: schema {doc.get('schema')!r}"
         assert doc["group"] == group, f"{name}: group {doc.get('group')!r}"
-        assert isinstance(doc["provenance"], str) and doc["provenance"], name
-        if args.provenance is not None:
-            assert doc["provenance"] == args.provenance, doc["provenance"]
+        check_provenance(doc, name, args.provenance)
         assert doc["universe_models"] >= 2, name
         if args.universe is not None:
             assert doc["universe_models"] == args.universe, doc["universe_models"]
@@ -79,6 +203,9 @@ def main():
         if group == "schedule":
             assert doc["max_group"] >= 2, name
             check_plans(doc, args.min_models)
+        if group == "solver":
+            assert doc["max_group"] >= 2, name
+            check_solver(doc, args.require_solver)
         print(f"{name}: ok ({len(doc['results'])} results)")
     return 0
 

@@ -18,7 +18,7 @@ use crate::alloc::{Placement, ResidencyPolicy};
 use crate::config::ModelId;
 use crate::hera::affinity::AffinityMatrix;
 use crate::hera::cluster::{
-    enumerate_groups, evaluate_solo, ClusterPlan, ClusterScheduler, GroupMemo,
+    enumerate_groups, evaluate_solo, BeamScore, ClusterPlan, ClusterScheduler, GroupMemo,
 };
 use crate::profiler::{ProfileStore, ScalabilityClass};
 use crate::rng::{Rng, Xoshiro256};
@@ -30,6 +30,9 @@ pub struct SelectionOpts {
     pub residency: ResidencyPolicy,
     /// Largest co-located group (2 = the paper's pairs).
     pub max_group: usize,
+    /// Beam-extension ranking for the Hera scheduler's large-pool
+    /// search (ignored by the random baselines, which never beam).
+    pub beam_score: BeamScore,
 }
 
 impl Default for SelectionOpts {
@@ -37,6 +40,7 @@ impl Default for SelectionOpts {
         SelectionOpts {
             residency: ResidencyPolicy::default(),
             max_group: 2,
+            beam_score: BeamScore::default(),
         }
     }
 }
@@ -120,6 +124,7 @@ impl SelectionPolicy {
             SelectionPolicy::Hera => ClusterScheduler::new(store, matrix)
                 .with_residency(opts.residency)
                 .with_max_group(opts.max_group)
+                .with_beam_score(opts.beam_score)
                 .schedule(targets),
             SelectionPolicy::DeepRecSys => schedule_deeprecsys(store, targets),
             SelectionPolicy::Random => {

@@ -4,10 +4,15 @@
 //! Runs the standard Algorithm 1 + 2 benchmark set twice — once at seed
 //! scale (the eight Table-I models) and once on a seeded synthetic
 //! universe from [`crate::config::generate_universe`] — and packages the
-//! timings plus plan-quality metrics into two `hera-bench-v1` JSON
-//! documents (`BENCH_affinity.json`, `BENCH_schedule.json`).  Checked-in
-//! snapshots of these files form the perf trajectory tracked across PRs;
-//! CI regenerates and schema-validates them on every push.
+//! timings plus plan-quality metrics into three `hera-bench-v1` JSON
+//! documents (`BENCH_affinity.json`, `BENCH_schedule.json`,
+//! `BENCH_solver.json`).  The solver document is an A/B section: the
+//! universe-scale schedule phase timed under [`SolverMode::Off`] (the
+//! pristine legacy bisection) and again under [`SolverMode::On`], with
+//! per-mode search-counter deltas and a plan bit-identity check riding
+//! along.  Checked-in snapshots of these files form the perf trajectory
+//! tracked across PRs; CI regenerates and schema-validates them on
+//! every push.
 //!
 //! The universe is generated exactly once per [`run`] call (model
 //! registration is append-only and global), so bench closures only ever
@@ -17,9 +22,13 @@ use crate::alloc::ResidencyPolicy;
 use crate::bench_harness::Bench;
 use crate::config::{generate_universe, ModelId, NodeConfig, UniverseSpec};
 use crate::hera::affinity::AffinityMatrix;
-use crate::hera::cluster::{scaled_targets, ClusterPlan, ClusterScheduler, GroupMemo};
+use crate::hera::cluster::{
+    scaled_targets, BeamScore, ClusterPlan, ClusterScheduler, GroupMemo,
+};
 use crate::json::Value;
+use crate::obs::names;
 use crate::par;
+use crate::perfcache::{set_solver_mode, SolverMode};
 use crate::profiler::ProfileStore;
 
 /// Knobs for one snapshot run.
@@ -38,6 +47,11 @@ pub struct SnapshotOpts {
     /// Per-bench time budget override (seconds).  `None` falls back to
     /// the `HERA_BENCH_SECS` env var / the harness default of 1 s.
     pub bench_secs: Option<f64>,
+    /// Ambient solver mode for the affinity/schedule phases (the solver
+    /// A/B section always times both `Off` and `On` regardless).
+    pub fast_solver: SolverMode,
+    /// Beam-extension ranking for the universe-scale schedules.
+    pub beam_score: BeamScore,
 }
 
 impl Default for SnapshotOpts {
@@ -49,6 +63,8 @@ impl Default for SnapshotOpts {
             threads: par::default_threads(),
             target_frac: 0.4,
             bench_secs: None,
+            fast_solver: SolverMode::Auto,
+            beam_score: BeamScore::Affinity,
         }
     }
 }
@@ -92,14 +108,71 @@ fn doc(group: &str, opts: &SnapshotOpts, bench: &Bench) -> Value {
     v
 }
 
+/// Restores the ambient solver mode when dropped, so an early `?` exit
+/// from [`run`] cannot leave the process stuck in a bench-local mode.
+struct ModeGuard(SolverMode);
+
+impl Drop for ModeGuard {
+    fn drop(&mut self) {
+        set_solver_mode(self.0);
+    }
+}
+
+/// The search-cost counters the solver document reports per-mode deltas
+/// of (all zero-label counters in the global registry).
+const SOLVER_COUNTERS: [&str; 13] = [
+    names::SOLVER_SEARCHES_TOTAL,
+    names::SOLVER_PROBES_TOTAL,
+    names::SOLVER_FAST_PATH_TOTAL,
+    names::HITCURVE_MEMO_HITS_TOTAL,
+    names::HITCURVE_MEMO_MISSES_TOTAL,
+    names::ERLANG_TABLE_HITS_TOTAL,
+    names::ERLANG_TABLE_MISSES_TOTAL,
+    names::HITCURVE_TABLE_HITS_TOTAL,
+    names::HITCURVE_TABLE_MISSES_TOTAL,
+    names::GROUP_MEMO_HITS_TOTAL,
+    names::GROUP_MEMO_MISSES_TOTAL,
+    names::BEAM_CANDIDATES_TOTAL,
+    names::BEAM_PRUNED_TOTAL,
+];
+
+fn counter_snapshot() -> Vec<u64> {
+    SOLVER_COUNTERS
+        .iter()
+        .map(|n| crate::obs::global().counter(n, &[]).get())
+        .collect()
+}
+
+fn counter_deltas(before: &[u64], after: &[u64]) -> Value {
+    let mut v = Value::object();
+    for (i, n) in SOLVER_COUNTERS.iter().enumerate() {
+        v.set(*n, (after[i] - before[i]) as i64);
+    }
+    v
+}
+
+/// `true` when two plans are bit-for-bit the same deployment: identical
+/// server list (every tenant's model, resource slice and QPS) and
+/// identical serviced vector.
+fn plans_identical(a: &ClusterPlan, b: &ClusterPlan) -> bool {
+    a.servers == b.servers
+        && a.serviced.len() == b.serviced.len()
+        && a.serviced
+            .iter()
+            .zip(&b.serviced)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
 /// Run the snapshot benchmark set and return
-/// `(BENCH_affinity.json, BENCH_schedule.json)` documents.
+/// `(BENCH_affinity.json, BENCH_schedule.json, BENCH_solver.json)`
+/// documents.
 ///
 /// Honors `HERA_BENCH_SECS` for the per-bench time budget (CI uses a
 /// small value; `min_iters` is 1 here so universe-scale benches stay
 /// cheap under it).
-pub fn run(opts: &SnapshotOpts) -> anyhow::Result<(Value, Value)> {
+pub fn run(opts: &SnapshotOpts) -> anyhow::Result<(Value, Value, Value)> {
     anyhow::ensure!(opts.universe >= 2, "universe must hold at least 2 models");
+    let _ambient = ModeGuard(set_solver_mode(opts.fast_solver));
     let node = NodeConfig::paper_default();
     let threads = opts.threads.max(1);
     let seed_ids: Vec<ModelId> = ModelId::all().collect();
@@ -173,6 +246,7 @@ pub fn run(opts: &SnapshotOpts) -> anyhow::Result<(Value, Value)> {
         ClusterScheduler::new(&store_uni, &matrix_uni)
             .with_max_group(g)
             .with_eval_threads(threads)
+            .with_beam_score(opts.beam_score)
             .schedule(&targets_uni)
             .unwrap()
     });
@@ -181,6 +255,7 @@ pub fn run(opts: &SnapshotOpts) -> anyhow::Result<(Value, Value)> {
             .with_residency(ResidencyPolicy::Cached)
             .with_max_group(g)
             .with_eval_threads(threads)
+            .with_beam_score(opts.beam_score)
             .schedule(&targets_uni)
             .unwrap()
     });
@@ -233,14 +308,112 @@ pub fn run(opts: &SnapshotOpts) -> anyhow::Result<(Value, Value)> {
         memo.len(),
     ));
 
+    // ---- Fast-solver A/B (the BENCH_solver.json document) -------------
+    // Same stores/matrices/targets as the schedule phase above, so the
+    // only variable between the two timed passes is the solver mode —
+    // which is exactly the claim `plans_identical` checks.
+    let mut bf = Bench::new("solver");
+    bf.min_iters = 1;
+    if let Some(secs) = opts.bench_secs {
+        bf.target_time_s = secs;
+    }
+
+    let mut run_mode = |bf: &mut Bench,
+                        mode: SolverMode|
+     -> (f64, f64, Value, ClusterPlan, ClusterPlan) {
+        let tag = if mode.fast() { "fast" } else { "slow" };
+        let _guard = ModeGuard(set_solver_mode(mode));
+        let before = counter_snapshot();
+        let opt_ns = bf
+            .run(&format!("schedule_{n_uni}_g{g}_optimistic_{tag}"), || {
+                ClusterScheduler::new(&store_uni, &matrix_uni)
+                    .with_max_group(g)
+                    .with_eval_threads(threads)
+                    .with_beam_score(opts.beam_score)
+                    .schedule(&targets_uni)
+                    .unwrap()
+            })
+            .mean_ns;
+        let cached_ns = bf
+            .run(&format!("schedule_{n_uni}_g{g}_cached_{tag}"), || {
+                ClusterScheduler::new(&store_uni, &matrix_uni_cached)
+                    .with_residency(ResidencyPolicy::Cached)
+                    .with_max_group(g)
+                    .with_eval_threads(threads)
+                    .with_beam_score(opts.beam_score)
+                    .schedule(&targets_uni)
+                    .unwrap()
+            })
+            .mean_ns;
+        let counters = counter_deltas(&before, &counter_snapshot());
+        // Untimed reference plans for the bit-identity check.
+        let plan_opt = ClusterScheduler::new(&store_uni, &matrix_uni)
+            .with_max_group(g)
+            .with_eval_threads(threads)
+            .with_beam_score(opts.beam_score)
+            .schedule(&targets_uni)
+            .unwrap();
+        let plan_cached = ClusterScheduler::new(&store_uni, &matrix_uni_cached)
+            .with_residency(ResidencyPolicy::Cached)
+            .with_max_group(g)
+            .with_eval_threads(threads)
+            .with_beam_score(opts.beam_score)
+            .schedule(&targets_uni)
+            .unwrap();
+        (opt_ns, cached_ns, counters, plan_opt, plan_cached)
+    };
+
+    let (slow_opt, slow_cached, slow_counters, slow_plan_opt, slow_plan_cached) =
+        run_mode(&mut bf, SolverMode::Off);
+    let (fast_opt, fast_cached, fast_counters, fast_plan_opt, fast_plan_cached) =
+        run_mode(&mut bf, SolverMode::On);
+    bf.report();
+
+    let identical = plans_identical(&slow_plan_opt, &fast_plan_opt)
+        && plans_identical(&slow_plan_cached, &fast_plan_cached);
+    let slow_total = slow_opt + slow_cached;
+    let fast_total = fast_opt + fast_cached;
+    let speedup = slow_total / fast_total.max(1e-9);
+    println!(
+        "solver A/B: schedule phase {speedup:.2}x faster with the fast \
+         solver (plans identical: {identical})"
+    );
+
+    let mut phase = Value::object();
+    let policy_row = |slow_ns: f64, fast_ns: f64| {
+        let mut v = Value::object();
+        v.set("slow_ns", slow_ns)
+            .set("fast_ns", fast_ns)
+            .set("speedup", slow_ns / fast_ns.max(1e-9));
+        v
+    };
+    phase
+        .set("slow_total_ns", slow_total)
+        .set("fast_total_ns", fast_total)
+        .set("speedup", speedup)
+        .set("optimistic", policy_row(slow_opt, fast_opt))
+        .set("cached", policy_row(slow_cached, fast_cached));
+
+    let mut counters = Value::object();
+    counters.set("slow", slow_counters).set("fast", fast_counters);
+
     let affinity_doc = doc("affinity", opts, &ba);
     let mut schedule_doc = doc("schedule", opts, &bs);
     schedule_doc
         .set("max_group", g)
         .set("target_frac", opts.target_frac)
         .set("plans", Value::Array(plans));
+    let mut solver_doc = doc("solver", opts, &bf);
+    solver_doc
+        .set("max_group", g)
+        .set("target_frac", opts.target_frac)
+        .set("fast_solver", opts.fast_solver.tag())
+        .set("beam_score", opts.beam_score.tag())
+        .set("plans_identical", identical)
+        .set("schedule_phase", phase)
+        .set("counters", counters);
 
-    Ok((affinity_doc, schedule_doc))
+    Ok((affinity_doc, schedule_doc, solver_doc))
 }
 
 #[cfg(test)]
@@ -258,9 +431,10 @@ mod tests {
             threads: 2,
             target_frac: 0.3,
             bench_secs: Some(0.001),
+            ..SnapshotOpts::default()
         };
-        let (aff, sched) = run(&opts).unwrap();
-        for d in [&aff, &sched] {
+        let (aff, sched, solver) = run(&opts).unwrap();
+        for d in [&aff, &sched, &solver] {
             assert_eq!(d.req("schema").unwrap().as_str().unwrap(), "hera-bench-v1");
             assert_eq!(d.req("provenance").unwrap().as_str().unwrap(), "measured");
             let rows = d.req("results").unwrap().as_array().unwrap();
@@ -281,9 +455,49 @@ mod tests {
             assert!(p.req("servers").unwrap().as_usize().unwrap() > 0);
             assert!(p.req("serviced_qps").unwrap().as_f64().unwrap() > 0.0);
         }
+        // The solver A/B document.  Plan identity is computed from the
+        // actual plans (robust to other unit tests touching the global
+        // counters in parallel); the exact probes-per-search ratios are
+        // asserted by `check_bench_schema.py --require-solver` in CI,
+        // where the process runs one clean snapshot.
+        assert_eq!(solver.req("plans_identical").unwrap().as_bool(), Some(true));
+        let phase = solver.req("schedule_phase").unwrap();
+        assert!(phase.req("speedup").unwrap().as_f64().unwrap() > 0.0);
+        assert!(phase.req("slow_total_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(phase.req("fast_total_ns").unwrap().as_f64().unwrap() > 0.0);
+        let counters = solver.req("counters").unwrap();
+        for mode in ["slow", "fast"] {
+            let c = counters.req(mode).unwrap();
+            let searches = c
+                .req(crate::obs::names::SOLVER_SEARCHES_TOTAL)
+                .unwrap()
+                .as_f64()
+                .unwrap();
+            let probes = c
+                .req(crate::obs::names::SOLVER_PROBES_TOTAL)
+                .unwrap()
+                .as_f64()
+                .unwrap();
+            assert!(searches > 0.0, "{mode}: no scale searches ran");
+            assert!(probes >= searches, "{mode}: every search probes");
+        }
+        // Counters only ever grow, so the fast pass's own memo hits
+        // survive any parallel-test interleaving.
+        let fast = counters.req("fast").unwrap();
+        assert!(
+            fast.req(crate::obs::names::HITCURVE_MEMO_HITS_TOTAL)
+                .unwrap()
+                .as_f64()
+                .unwrap()
+                > 0.0,
+            "fast pass must hit the hit-rate memo"
+        );
         // Round-trips through the parser (what CI's validator consumes).
         let text = sched.to_string();
         let back = crate::json::parse(&text).unwrap();
         assert_eq!(back, sched);
+        let text = solver.to_string();
+        let back = crate::json::parse(&text).unwrap();
+        assert_eq!(back, solver);
     }
 }

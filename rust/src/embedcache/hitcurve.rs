@@ -109,7 +109,9 @@ impl HitCurve {
         let mut hi = full;
         for _ in 0..64 {
             let mid = 0.5 * (lo + hi);
-            if self.hit_rate(mid) >= target {
+            // Through the exact memo: repeated inversions of the same
+            // curve re-probe identical dyadic midpoints.
+            if crate::perfcache::hit_rate_memo(self, mid) >= target {
                 hi = mid;
             } else {
                 lo = mid;
@@ -129,6 +131,15 @@ impl HitCurve {
 
     pub fn rows_per_table(&self) -> f64 {
         self.rows_per_table
+    }
+
+    /// Table count, as the f64 the internal arithmetic divides by.
+    pub fn n_tables(&self) -> f64 {
+        self.n_tables
+    }
+
+    pub fn row_bytes(&self) -> f64 {
+        self.row_bytes
     }
 }
 

@@ -34,7 +34,7 @@ use once_cell::sync::Lazy;
 
 use crate::alloc::{Placement, ResidencyMode, ResidencyPolicy, ResourceVector, TenantAlloc};
 use crate::config::{ModelId, NodeConfig};
-use crate::hps::{TenantMissDemand, TierStack};
+use crate::hps::{TenantMissDemand, TierStack, TIER_UTIL_CEILING};
 use crate::json::{parse, Value};
 use crate::obs::{names, Counter};
 use crate::profiler::ProfileStore;
@@ -112,7 +112,27 @@ pub fn evaluate_group(
         "at most {} tenants per node",
         crate::server_sim::MAX_TENANTS
     );
-    evaluate_group_inner(store, matrix, models, policy, None)
+    evaluate_group_inner(store, matrix, models, policy, None, &mut EvalScratch::default())
+}
+
+/// Reusable buffers for the evaluator's feasibility probes: the tenant
+/// descriptors are built once per evaluation and only their arrival
+/// rates change probe to probe, and workers keep one scratch across all
+/// the evaluations of a prefetch chunk — candidate enumeration stops
+/// allocating per-probe `Vec`s.
+#[derive(Default)]
+struct EvalScratch {
+    tenants: Vec<AnalyticTenant>,
+    overlaps: Vec<f64>,
+}
+
+/// Search-cost tallies for one candidate-generation call, flushed to the
+/// `BEAM_CANDIDATES` / `BEAM_PRUNED` registry counters in a single pair
+/// of atomic adds instead of one per combination.
+#[derive(Default)]
+struct CandidateTally {
+    generated: u64,
+    pruned: u64,
 }
 
 /// [`evaluate_group`] with hot-tier misses costed through a hierarchical
@@ -137,7 +157,7 @@ pub fn evaluate_group_hps(
         "at most {} tenants per node",
         crate::server_sim::MAX_TENANTS
     );
-    evaluate_group_inner(store, matrix, models, policy, Some(stack))
+    evaluate_group_inner(store, matrix, models, policy, Some(stack), &mut EvalScratch::default())
 }
 
 fn evaluate_group_inner(
@@ -146,11 +166,18 @@ fn evaluate_group_inner(
     models: &[ModelId],
     policy: ResidencyPolicy,
     hps: Option<&TierStack>,
+    scratch: &mut EvalScratch,
 ) -> Placement {
+    assert!(!models.is_empty(), "a group needs at least one tenant");
+    assert!(
+        models.len() <= crate::server_sim::MAX_TENANTS,
+        "at most {} tenants per node",
+        crate::server_sim::MAX_TENANTS
+    );
     let mut order: Vec<usize> = (0..models.len()).collect();
     order.sort_by_key(|&i| models[i]);
     let sorted: Vec<ModelId> = order.iter().map(|&i| models[i]).collect();
-    let canonical = evaluate_group_canonical(store, matrix, &sorted, policy, hps);
+    let canonical = evaluate_group_canonical(store, matrix, &sorted, policy, hps, scratch);
     let mut tenants: Vec<Option<TenantAlloc>> = vec![None; models.len()];
     for (&slot, t) in order.iter().zip(canonical.tenants) {
         tenants[slot] = Some(t);
@@ -171,6 +198,7 @@ fn evaluate_group_canonical(
     models: &[ModelId],
     policy: ResidencyPolicy,
     hps: Option<&TierStack>,
+    scratch: &mut EvalScratch,
 ) -> Placement {
     let node = &store.node;
     if models.len() == 1 {
@@ -269,44 +297,63 @@ fn evaluate_group_canonical(
         .collect();
 
     // Proportional joint scaling, validated with the coupled analytic
-    // model over all N tenants.
-    let feasible = |s: f64| -> bool {
-        let tenants: Vec<AnalyticTenant> = models
-            .iter()
-            .enumerate()
-            .map(|(i, &m)| AnalyticTenant {
-                model: m,
-                workers: workers[i],
-                ways: ways[i],
-                arrival_qps: s * q0[i],
-                cache_bytes: residency[i].cache_bytes(),
-            })
-            .collect();
-        match hps {
-            None => solve(node, &tenants).tenants.iter().all(|t| t.feasible),
+    // model over all N tenants.  The tenant descriptors are built once;
+    // each probe only rewrites the arrival rates.  The feasibility
+    // verdict is computed exactly as the legacy bisection's; the signed
+    // margin (SLA headroom, tier headroom) only steers probe placement
+    // inside `bracket_scale`, which terminates in the same final
+    // 1/4096 grid interval — the returned scale is bit-identical.
+    scratch.tenants.clear();
+    scratch
+        .tenants
+        .extend(models.iter().enumerate().map(|(i, &m)| AnalyticTenant {
+            model: m,
+            workers: workers[i],
+            ways: ways[i],
+            arrival_qps: 0.0,
+            cache_bytes: residency[i].cache_bytes(),
+        }));
+    scratch.overlaps.clear();
+    scratch.overlaps.resize(models.len(), 0.0);
+    let probe = |s: f64| -> crate::perfcache::Probe {
+        for (t, &q) in scratch.tenants.iter_mut().zip(&q0) {
+            t.arrival_qps = s * q;
+        }
+        let (out, mut margin, tier_ok) = match hps {
+            None => (solve(node, &scratch.tenants), f64::INFINITY, true),
             Some(stack) => {
                 // Tier-resolved miss costs (no prefetch credit at
                 // planning time), plus tier fit: a load that drives any
                 // tier past its utilization ceiling is infeasible even
                 // if every SLA would nominally hold.
-                let overlaps = vec![0.0; tenants.len()];
-                let (out, loads) = solve_hps(node, &tenants, stack, &overlaps);
-                out.tenants.iter().all(|t| t.feasible) && stack.feasible(&loads)
+                let (out, loads) = solve_hps(node, &scratch.tenants, stack, &scratch.overlaps);
+                let headroom = loads
+                    .iter()
+                    .map(|l| (TIER_UTIL_CEILING - l.ops_util.max(l.bw_util)) / TIER_UTIL_CEILING)
+                    .fold(f64::INFINITY, f64::min);
+                let ok = stack.feasible(&loads);
+                (out, headroom, ok)
             }
-        }
-    };
-    let mut lo = 0.0;
-    let mut hi = 1.0;
-    if q0.iter().any(|&q| q > 0.0) {
-        for _ in 0..12 {
-            let mid = 0.5 * (lo + hi);
-            if feasible(mid) {
-                lo = mid;
+        };
+        let feasible = out.tenants.iter().all(|t| t.feasible) && tier_ok;
+        for t in &out.tenants {
+            let sla_s = t.model.spec().sla_ms / 1e3;
+            let m = if t.p95_sojourn_s.is_finite() {
+                (sla_s - t.p95_sojourn_s) / sla_s
             } else {
-                hi = mid;
-            }
+                // Unstable: strongly negative, graded by overload depth
+                // so false position still has a gradient to follow.
+                -(10.0 + t.rho)
+            };
+            margin = margin.min(m);
         }
-    }
+        crate::perfcache::Probe { feasible, margin }
+    };
+    let lo = if q0.iter().any(|&q| q > 0.0) {
+        crate::perfcache::bracket_scale(12, probe)
+    } else {
+        0.0
+    };
 
     Placement {
         tenants: models
@@ -416,14 +463,50 @@ pub fn evaluate_solo_cached(store: &ProfileStore, m: ModelId) -> Placement {
 /// baseline policies and the figure sweeps.  Entries are specific to the
 /// (store, matrix) they were evaluated against — do not reuse one memo
 /// across different profile stores or affinity matrices.
+/// Entries are also scoped to the hps topology the scheduling run was
+/// configured with: the first [`ClusterScheduler::schedule_with_memo`]
+/// call binds the memo to its stack fingerprint (or to the flat world),
+/// and later runs against a *different* topology are refused instead of
+/// silently replaying stale admissibility decisions.
 #[derive(Debug, Default)]
 pub struct GroupMemo {
     entries: HashMap<(Vec<ModelId>, ResidencyPolicy), Placement>,
+    /// `None` = not yet bound; `Some(None)` = bound to the flat world
+    /// (no hps stack); `Some(Some(fp))` = bound to
+    /// [`TierStack::fingerprint`] `fp`.
+    stack_fp: Option<Option<u64>>,
 }
 
 impl GroupMemo {
     pub fn new() -> GroupMemo {
         GroupMemo::default()
+    }
+
+    /// Bind this memo to an hps topology (`None` = no stack).  The first
+    /// binding sticks; a later rebind to a different fingerprint fails,
+    /// which is what stops a memo persisted from a flat-seed run being
+    /// replayed against a tiered run (and vice versa).
+    pub fn bind_stack(&mut self, fp: Option<u64>) -> anyhow::Result<()> {
+        match self.stack_fp {
+            None => {
+                self.stack_fp = Some(fp);
+                Ok(())
+            }
+            Some(bound) => {
+                anyhow::ensure!(
+                    bound == fp,
+                    "group memo is bound to hps topology {:?} but this run uses {:?}",
+                    bound.map(|f| format!("{f:016x}")),
+                    fp.map(|f| format!("{f:016x}"))
+                );
+                Ok(())
+            }
+        }
+    }
+
+    /// The topology this memo is bound to, if any.
+    pub fn stack_fingerprint(&self) -> Option<Option<u64>> {
+        self.stack_fp
     }
 
     /// Evaluate (or recall) `models` under `policy`.  Members must be
@@ -489,20 +572,34 @@ impl GroupMemo {
             }
         }
         MEMO_MISSES.add(misses.len() as u64);
-        let placements = crate::par::parallel_map(&misses, threads, |key| {
-            evaluate_group(store, matrix, key, policy)
-        });
+        let placements = crate::par::parallel_map_with(
+            &misses,
+            threads,
+            EvalScratch::default,
+            |scratch, key| evaluate_group_inner(store, matrix, key, policy, None, scratch),
+        );
         for (key, p) in misses.into_iter().zip(placements) {
             self.entries.insert((key, policy), p);
         }
     }
 
-    /// Serialize every memoized evaluation.  Keys become
-    /// `"name+name|policy"` strings — models are stored by *name*, so a
-    /// persisted memo survives registry renumbering across processes
-    /// (synthetic universes get fresh ids every run).
+    /// Serialize every memoized evaluation into a
+    /// `{"stack": null|"<hex fp>", "entries": {...}}` envelope.  Entry
+    /// keys become `"name+name|policy"` strings — models are stored by
+    /// *name*, so a persisted memo survives registry renumbering across
+    /// processes (synthetic universes get fresh ids every run).
     pub fn to_json(&self) -> Value {
         let mut root = Value::object();
+        root.set(
+            "stack",
+            match self.stack_fp {
+                Some(Some(fp)) => Value::from(format!("{fp:016x}")),
+                // Unbound memos serialize like flat ones: their entries
+                // were evaluated without a stack.
+                _ => Value::Null,
+            },
+        );
+        let mut entries = Value::object();
         for ((models, policy), placement) in &self.entries {
             let key = format!(
                 "{}|{}",
@@ -524,8 +621,9 @@ impl GroupMemo {
                     tv
                 })
                 .collect();
-            root.set(&key, Value::Array(tenants));
+            entries.set(&key, Value::Array(tenants));
         }
+        root.set("entries", entries);
         root
     }
 
@@ -534,9 +632,28 @@ impl GroupMemo {
     /// so a reloaded memo reproduces the in-memory evaluations
     /// bit-for-bit (`tests/prop_scale.rs`).  Fails on names not in the
     /// current registry — reload universes before reloading memos.
+    /// Pre-envelope files (a bare entry object with no `"entries"` key)
+    /// still load, as unbound flat-world memos.
     pub fn from_json(v: &Value) -> anyhow::Result<GroupMemo> {
-        let obj = v.as_object().context("memo root must be a JSON object")?;
+        let root = v.as_object().context("memo root must be a JSON object")?;
         let mut memo = GroupMemo::new();
+        let obj = match root.get("entries") {
+            Some(entries) => {
+                memo.stack_fp = Some(match v.get("stack") {
+                    None | Some(Value::Null) => None,
+                    Some(s) => {
+                        let hex = s.as_str().context("memo stack must be null or hex")?;
+                        Some(
+                            u64::from_str_radix(hex, 16)
+                                .with_context(|| format!("bad stack fingerprint {hex:?}"))?,
+                        )
+                    }
+                });
+                entries.as_object().context("memo entries must be an object")?
+            }
+            // Legacy flat layout: the root object *is* the entry map.
+            None => root,
+        };
         for (key, tenants_v) in obj {
             let (names, tag) = key
                 .rsplit_once('|')
@@ -665,6 +782,41 @@ pub fn count_groups(pool_len: usize, min_size: usize, max_size: usize) -> usize 
     total
 }
 
+/// How the beam search ranks partial group extensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BeamScore {
+    /// Weakest internal pairwise system affinity — Algorithm 1's
+    /// bottleneck score, and the quantity the floor prunes on.  The
+    /// default; beamed plans are bit-identical to the pre-scoring beam.
+    #[default]
+    Affinity,
+    /// Demand-weighted useful-QPS upper bound (ROADMAP item 2): each
+    /// member contributes `min(remaining demand, max_load · weakest
+    /// affinity to the rest)`, so a high-affinity partner whose target
+    /// is nearly met no longer crowds out a lower-affinity one that
+    /// would absorb real load.  Ranking only — floor pruning still uses
+    /// the affinity bottleneck, so `Demand` never *admits* more than
+    /// `Affinity`, it reorders which survivors ride the beam.
+    Demand,
+}
+
+impl BeamScore {
+    pub fn tag(self) -> &'static str {
+        match self {
+            BeamScore::Affinity => "affinity",
+            BeamScore::Demand => "demand",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BeamScore> {
+        match s {
+            "affinity" => Some(BeamScore::Affinity),
+            "demand" => Some(BeamScore::Demand),
+            _ => None,
+        }
+    }
+}
+
 /// Hera's cluster scheduler (Algorithm 2), group-native.
 pub struct ClusterScheduler<'a> {
     pub store: &'a ProfileStore,
@@ -708,6 +860,9 @@ pub struct ClusterScheduler<'a> {
     /// utilization ceiling ([`TierStack::feasible`]).  `None` (default)
     /// is the seed flat-backing world — plans stay bit-for-bit.
     pub hps: Option<TierStack>,
+    /// Beam-extension ranking (see [`BeamScore`]).  [`BeamScore::Affinity`]
+    /// (default) reproduces the pre-scoring beam bit-for-bit.
+    pub beam_score: BeamScore,
 }
 
 impl<'a> ClusterScheduler<'a> {
@@ -723,6 +878,7 @@ impl<'a> ClusterScheduler<'a> {
             exhaustive_limit: 64,
             eval_threads: crate::par::default_threads(),
             hps: None,
+            beam_score: BeamScore::default(),
         }
     }
 
@@ -770,6 +926,12 @@ impl<'a> ClusterScheduler<'a> {
     /// Scoped threads for candidate-group prefetch (1 = serial).
     pub fn with_eval_threads(mut self, threads: usize) -> Self {
         self.eval_threads = threads.max(1);
+        self
+    }
+
+    /// Select the beam-extension ranking.
+    pub fn with_beam_score(mut self, score: BeamScore) -> Self {
+        self.beam_score = score;
         self
     }
 
@@ -822,7 +984,7 @@ impl<'a> ClusterScheduler<'a> {
                         spec.row_bytes(),
                         spec.row_accesses_per_item() as f64,
                         self.store.profile(m).max_load() / group.len() as f64,
-                        curve.hit_rate(cache),
+                        crate::perfcache::hit_rate_memo(curve, cache),
                     )
                 })
                 .collect();
@@ -846,29 +1008,59 @@ impl<'a> ClusterScheduler<'a> {
         pool: &[ModelId],
         min_add: usize,
         max_add: usize,
+        serviced: &[f64],
+        targets: &[f64],
     ) -> Vec<Vec<ModelId>> {
         if count_groups(pool.len(), min_add, max_add) <= self.exhaustive_limit {
-            let mut generated = 0u64;
-            let mut pruned = 0u64;
-            let out: Vec<Vec<ModelId>> = enumerate_groups(pool, min_add, max_add)
-                .into_iter()
-                .map(|s| {
-                    let mut g = anchor.to_vec();
-                    g.extend_from_slice(&s);
-                    g
-                })
-                .filter(|g| {
-                    generated += 1;
-                    let keep = self.group_admissible(g);
-                    pruned += u64::from(!keep);
-                    keep
-                })
-                .collect();
-            BEAM_CANDIDATES.add(generated);
-            BEAM_PRUNED.add(pruned);
+            // Enumerate in place on one reusable buffer, checking
+            // admissibility *before* materializing a candidate — same
+            // set, order and tallies as mapping `enumerate_groups`
+            // through an admissibility filter, without allocating a
+            // `Vec` per pruned combination.
+            let mut tally = CandidateTally::default();
+            let mut out: Vec<Vec<ModelId>> = Vec::new();
+            let mut cur = anchor.to_vec();
+            for size in min_add.max(1)..=max_add.min(pool.len()) {
+                self.rec_candidates(pool, 0, size, &mut cur, &mut out, &mut tally);
+            }
+            BEAM_CANDIDATES.add(tally.generated);
+            BEAM_PRUNED.add(tally.pruned);
             return out;
         }
-        self.beam_groups(anchor, pool, min_add, max_add)
+        self.beam_groups(anchor, pool, min_add, max_add, serviced, targets)
+    }
+
+    /// Depth-first extension walk behind the exhaustive path of
+    /// [`ClusterScheduler::candidate_groups`]: `cur` holds
+    /// `anchor ∪ picks-so-far` and is pushed/popped in place, in the
+    /// exact [`enumerate_groups`] visit order (pool positions ascending).
+    fn rec_candidates(
+        &self,
+        pool: &[ModelId],
+        start: usize,
+        left: usize,
+        cur: &mut Vec<ModelId>,
+        out: &mut Vec<Vec<ModelId>>,
+        tally: &mut CandidateTally,
+    ) {
+        if left == 0 {
+            tally.generated += 1;
+            if self.group_admissible(cur) {
+                out.push(cur.clone());
+            } else {
+                tally.pruned += 1;
+            }
+            return;
+        }
+        for i in start..pool.len() {
+            // Not enough members left to finish this combination.
+            if pool.len() - i < left {
+                break;
+            }
+            cur.push(pool[i]);
+            self.rec_candidates(pool, i + 1, left - 1, cur, out, tally);
+            cur.pop();
+        }
     }
 
     /// Beam search over grown groups: partial extensions are scored by
@@ -887,21 +1079,30 @@ impl<'a> ClusterScheduler<'a> {
         pool: &[ModelId],
         min_add: usize,
         max_add: usize,
+        serviced: &[f64],
+        targets: &[f64],
     ) -> Vec<Vec<ModelId>> {
-        // A beam item: (min internal pairwise affinity, positions into
-        // `pool`, ascending).  The empty extension scores +inf — the
+        // A beam item: (rank, min internal pairwise affinity, positions
+        // into `pool`, ascending).  Under [`BeamScore::Affinity`] the
+        // rank *is* the min affinity, reproducing the pre-scoring beam
+        // bit-for-bit; under [`BeamScore::Demand`] the rank is the
+        // demand-weighted useful-QPS bound.  The floor always prunes on
+        // the min affinity.  The empty extension scores +inf — the
         // anchor alone is not gated by the floor.
-        let mut beam: Vec<(f64, Vec<usize>)> = vec![(f64::INFINITY, Vec::new())];
+        let mut beam: Vec<(f64, f64, Vec<usize>)> =
+            vec![(f64::INFINITY, f64::INFINITY, Vec::new())];
         let mut out: Vec<Vec<ModelId>> = Vec::new();
         // Search-cost tallies, flushed to the registry once per call.
         let mut generated = 0u64;
         let mut pruned = 0u64;
+        // Scratch member list for demand ranking, reused per extension.
+        let mut members: Vec<ModelId> = Vec::with_capacity(anchor.len() + max_add);
         for depth in 1..=max_add {
-            let mut next: Vec<(f64, Vec<usize>)> = Vec::new();
-            for (score, picks) in &beam {
+            let mut next: Vec<(f64, f64, Vec<usize>)> = Vec::new();
+            for (_, minaff, picks) in &beam {
                 let start = picks.last().map_or(0, |&p| p + 1);
                 for (pi, &cand) in pool.iter().enumerate().skip(start) {
-                    let mut s = *score;
+                    let mut s = *minaff;
                     for &a in anchor {
                         s = s.min(self.matrix.get(a, cand).system);
                     }
@@ -913,21 +1114,31 @@ impl<'a> ClusterScheduler<'a> {
                         pruned += 1;
                         continue;
                     }
+                    let rank = match self.beam_score {
+                        BeamScore::Affinity => s,
+                        BeamScore::Demand => {
+                            members.clear();
+                            members.extend_from_slice(anchor);
+                            members.extend(picks.iter().map(|&p| pool[p]));
+                            members.push(cand);
+                            self.demand_rank(&members, serviced, targets)
+                        }
+                    };
                     let mut ext = picks.clone();
                     ext.push(pi);
                     generated += 1;
-                    next.push((s, ext));
+                    next.push((rank, s, ext));
                 }
             }
-            // Highest min-affinity first; ties in pool order.
-            next.sort_by(|x, y| y.0.total_cmp(&x.0).then_with(|| x.1.cmp(&y.1)));
+            // Highest rank first; ties in pool order.
+            next.sort_by(|x, y| y.0.total_cmp(&x.0).then_with(|| x.2.cmp(&y.2)));
             pruned += next.len().saturating_sub(self.beam_width) as u64;
             next.truncate(self.beam_width);
             if next.is_empty() {
                 break;
             }
             if depth >= min_add {
-                for (_, picks) in &next {
+                for (_, _, picks) in &next {
                     let mut g = anchor.to_vec();
                     g.extend(picks.iter().map(|&p| pool[p]));
                     if self.group_admissible(&g) {
@@ -942,6 +1153,27 @@ impl<'a> ClusterScheduler<'a> {
         BEAM_CANDIDATES.add(generated);
         BEAM_PRUNED.add(pruned);
         out
+    }
+
+    /// [`BeamScore::Demand`]'s ranking: an upper bound on the group's
+    /// useful QPS read straight off the affinity matrix, *before* any
+    /// evaluation — each member contributes its remaining demand capped
+    /// by `max_load · (weakest affinity to the rest)`, the matrix's
+    /// estimate of what co-location retention allows it to sustain.
+    fn demand_rank(&self, members: &[ModelId], serviced: &[f64], targets: &[f64]) -> f64 {
+        let mut total = 0.0;
+        for (x, &mx) in members.iter().enumerate() {
+            let mut aff = f64::INFINITY;
+            for (y, &my) in members.iter().enumerate() {
+                if x != y {
+                    aff = aff.min(self.matrix.get(mx, my).system);
+                }
+            }
+            let slot = self.store.slot(mx);
+            let remaining = (targets[slot] - serviced[slot]).max(0.0);
+            total += remaining.min(self.store.profile(mx).max_load() * aff);
+        }
+        total
     }
 
     /// Search grown groups `anchor ∪ S` with `S` drawn from `pool`
@@ -974,7 +1206,7 @@ impl<'a> ClusterScheduler<'a> {
         // Counts once per call, on the first candidate beating the
         // incumbent (later improvements displace a candidate, not it).
         let mut incumbent_standing = true;
-        let candidates = self.candidate_groups(anchor, pool, min_add, max_add);
+        let candidates = self.candidate_groups(anchor, pool, min_add, max_add, serviced, targets);
         memo.prefetch(
             self.store,
             self.matrix,
@@ -1033,6 +1265,7 @@ impl<'a> ClusterScheduler<'a> {
             self.max_group,
             crate::server_sim::MAX_TENANTS.min(self.store.node.llc_ways)
         );
+        memo.bind_stack(self.hps.as_ref().map(TierStack::fingerprint))?;
         let (low, high) = self.store.partition_by_scalability();
         let mut plan = ClusterPlan {
             servers: Vec::new(),
@@ -1497,6 +1730,112 @@ mod tests {
             ResidencyPolicy::Cached,
         );
         assert_eq!(memo.len(), 2);
+    }
+
+    #[test]
+    fn memo_envelope_round_trips_the_stack_binding() {
+        // An hps-bound memo survives JSON persistence: the fingerprint
+        // rides the envelope and the reloaded memo refuses a different
+        // topology.
+        let stack = TierStack::paper_default();
+        let mut memo = GroupMemo::new();
+        memo.evaluate(
+            &STORE,
+            &MATRIX,
+            &[id("ncf"), id("dlrm_d")],
+            ResidencyPolicy::Cached,
+        );
+        memo.bind_stack(Some(stack.fingerprint())).unwrap();
+        assert_eq!(memo.stack_fingerprint(), Some(Some(stack.fingerprint())));
+        let json = memo.to_json();
+        assert_eq!(
+            json.req("stack").unwrap().as_str(),
+            Some(format!("{:016x}", stack.fingerprint()).as_str())
+        );
+        let mut back = GroupMemo::from_json(&json).unwrap();
+        assert_eq!(back.stack_fingerprint(), memo.stack_fingerprint());
+        assert_eq!(back.to_json(), json);
+        // The reloaded memo replays only against the same topology.
+        assert!(back.bind_stack(Some(stack.fingerprint())).is_ok());
+        assert!(back.bind_stack(None).is_err());
+        assert!(back
+            .bind_stack(Some(TierStack::flat_seed().fingerprint()))
+            .is_err());
+    }
+
+    #[test]
+    fn legacy_flat_memo_json_loads_unbound() {
+        // Pre-envelope files are a bare entry map: they load as unbound
+        // memos (and an empty bare object is the degenerate case).
+        let mut memo = GroupMemo::new();
+        memo.evaluate(
+            &STORE,
+            &MATRIX,
+            &[id("ncf"), id("dlrm_d")],
+            ResidencyPolicy::Optimistic,
+        );
+        let envelope = memo.to_json();
+        // Strip the envelope down to the legacy layout.
+        let legacy = envelope.req("entries").unwrap().clone();
+        let mut back = GroupMemo::from_json(&legacy).unwrap();
+        assert_eq!(back.stack_fingerprint(), None);
+        assert_eq!(back.len(), 1);
+        // And a legacy memo binds to whatever the next run uses.
+        assert!(back.bind_stack(None).is_ok());
+        assert_eq!(back.stack_fingerprint(), Some(None));
+    }
+
+    #[test]
+    fn flat_schedules_bind_the_memo_to_the_flat_world() {
+        let targets = scaled_targets(&STORE, 0.3);
+        let mut memo = GroupMemo::new();
+        ClusterScheduler::new(&STORE, &MATRIX)
+            .schedule_with_memo(&targets, &mut memo)
+            .unwrap();
+        assert_eq!(memo.stack_fingerprint(), Some(None));
+        // Re-running flat is fine; an hps run against the same memo is
+        // refused instead of replaying flat-world admissibility.
+        ClusterScheduler::new(&STORE, &MATRIX)
+            .schedule_with_memo(&targets, &mut memo)
+            .unwrap();
+        let err = ClusterScheduler::new(&STORE, &MATRIX)
+            .with_residency(ResidencyPolicy::Cached)
+            .with_hps_stack(TierStack::paper_default())
+            .schedule_with_memo(&targets, &mut memo);
+        assert!(err.is_err(), "hps run must refuse a flat-bound memo");
+    }
+
+    #[test]
+    fn demand_beam_score_stays_deterministic_and_admissible() {
+        // Force the beam everywhere; the demand ranking must produce a
+        // valid deterministic plan and never admit below the floor.
+        let targets = scaled_targets(&STORE, 0.3);
+        let mk = |score: BeamScore| {
+            ClusterScheduler::new(&STORE, &MATRIX)
+                .with_max_group(3)
+                .with_exhaustive_limit(0)
+                .with_beam_score(score)
+                .schedule(&targets)
+                .unwrap()
+        };
+        let d1 = mk(BeamScore::Demand);
+        let d2 = mk(BeamScore::Demand);
+        assert_eq!(d1.num_servers(), d2.num_servers());
+        for (a, b) in d1.servers.iter().zip(&d2.servers) {
+            assert_eq!(a, b, "demand-scored plans must be deterministic");
+        }
+        assert!(d1.meets(&targets));
+        for s in d1.servers.iter().filter(|s| s.tenants.len() > 2) {
+            let ms = s.models();
+            for i in 0..ms.len() {
+                for j in (i + 1)..ms.len() {
+                    assert!(
+                        MATRIX.get(ms[i], ms[j]).system >= 0.25,
+                        "floor must bind under demand scoring"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

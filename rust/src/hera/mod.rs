@@ -29,7 +29,7 @@ pub use affinity::{
     GroupAffinity,
 };
 pub use cluster::{
-    enumerate_groups, evaluate_group, evaluate_group_hps, ClusterPlan, ClusterScheduler,
-    GroupMemo,
+    enumerate_groups, evaluate_group, evaluate_group_hps, BeamScore, ClusterPlan,
+    ClusterScheduler, GroupMemo,
 };
 pub use rmu::HeraRmu;

@@ -105,7 +105,7 @@ impl Tier {
         let c = self.channels as f64;
         let lam = lambda_ops.min(SATURATION_CLAMP * c / t_eff);
         let a = lam * t_eff; // offered Erlangs
-        erlang_c(self.channels, a) * t_eff / (c - a)
+        crate::perfcache::erlang_c_fast(self.channels, a) * t_eff / (c - a)
     }
 
     /// Mean number of ops waiting in queue (Little: `λ · Wq`).
@@ -132,21 +132,6 @@ impl Tier {
             + self.queue_wait_s(row_bytes, lambda_ops);
         stall / self.worker_parallelism
     }
-}
-
-/// Erlang-C probability of queueing for `c` channels at `a` offered
-/// Erlangs (same log-safe recurrence as `server_sim::analytic`).
-fn erlang_c(c: usize, a: f64) -> f64 {
-    if a >= c as f64 {
-        return 1.0;
-    }
-    let mut inv_b = 1.0;
-    for k in 1..=c {
-        inv_b = 1.0 + (k as f64 / a) * inv_b;
-    }
-    let b = 1.0 / inv_b;
-    let rho = a / c as f64;
-    b / (1.0 - rho + rho * b)
 }
 
 /// One tenant's miss traffic offered to the stack.
@@ -278,13 +263,51 @@ impl TierStack {
         &self.tiers
     }
 
+    /// Stable identity of this topology: FNV-1a over every tier's name
+    /// and parameter bits, in stack order.  Two stacks fingerprint equal
+    /// iff they produce identical miss-path math, which is what lets a
+    /// persisted `GroupMemo` refuse replay against a different topology.
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |byte: u8| {
+            h ^= byte as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        };
+        for tier in &self.tiers {
+            for b in tier.name.bytes() {
+                eat(b);
+            }
+            eat(0xff); // name terminator so "ab"+"c" != "a"+"bc"
+            for bits in [
+                tier.capacity_bytes.to_bits(),
+                tier.stream_bw.to_bits(),
+                tier.device_bw.to_bits(),
+                tier.op_latency_s.to_bits(),
+                tier.iops_ceiling.to_bits(),
+                tier.channels as u64,
+                tier.worker_parallelism.to_bits(),
+            ] {
+                for b in bits.to_le_bytes() {
+                    eat(b);
+                }
+            }
+        }
+        h
+    }
+
     /// Per-tier share of one tenant's miss traffic: tier `i` absorbs the
     /// hit-rate gain of its capacity placed after everything above it,
     /// normalized by the hot-tier miss fraction.  The last tier takes the
     /// exact remainder, so a single-tier stack yields a share of exactly
     /// `1.0` (seed parity) and shares always sum to 1.
     pub fn shares(&self, curve: &HitCurve, cache_bytes: f64) -> Vec<f64> {
-        let h0 = curve.hit_rate(cache_bytes);
+        // Hit rates through the interpolating LUT (≤ 1e-9 absolute):
+        // shares only split miss traffic between backing tiers, so a
+        // single-tier stack still yields exactly `[1.0]` (seed parity)
+        // under either evaluator.
+        let h0 = crate::perfcache::hit_rate_lut(curve, cache_bytes);
         let m0 = 1.0 - h0;
         let n = self.tiers.len();
         if m0 <= 0.0 {
@@ -299,7 +322,7 @@ impl TierStack {
         let mut assigned = 0.0;
         for tier in &self.tiers[..n - 1] {
             cum_bytes += tier.capacity_bytes;
-            let h = curve.hit_rate(cum_bytes).max(h_prev);
+            let h = crate::perfcache::hit_rate_lut(curve, cum_bytes).max(h_prev);
             let share = (h - h_prev) / m0;
             assigned += share;
             shares.push(share);

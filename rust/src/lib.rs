@@ -47,6 +47,7 @@ pub mod metrics;
 pub mod node;
 pub mod obs;
 pub mod par;
+pub mod perfcache;
 pub mod rng;
 pub mod runtime;
 pub mod profiler;

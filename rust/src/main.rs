@@ -24,7 +24,8 @@ use hera::cli::Args;
 use hera::config::{ModelId, NodeConfig, N_MODELS};
 use hera::coordinator::{run_load, Coordinator, LoadGenSpec, TenantConfig};
 use hera::figures::FigureContext;
-use hera::hera::AffinityMatrix;
+use hera::hera::{AffinityMatrix, BeamScore};
+use hera::perfcache::SolverMode;
 use hera::profiler::ProfileStore;
 use hera::runtime::{manifest::default_artifact_dir, Engine};
 use hera::server_sim::{NullController, SimulatedTenant, Simulation};
@@ -78,11 +79,13 @@ USAGE: hera <subcommand> [flags]
   serve    --models a,b --workers n,m --qps x,y [--secs S] [--http 127.0.0.1:8080]
   simulate --models a,b --workers n,m --ways p,q --qps x,y [--secs S]
   cluster  [--target QPS] [--policy name] [--residency optimistic|strict|cached] [--max-group N]
+           [--fast-solver on|off|auto] [--beam-score affinity|demand]
   group-sweep [--models a,b,c] [--residency MODE] [--max-group N]  evaluate N-tenant co-location
   cache-sweep [--model m] [--workers N] [--ways K] [--load-frac F] [--points P]
   hps-sweep [--model m] [--workers N] [--ways K] [--cache-frac F] [--points P]  tiered-miss-path load sweep
   bench-engine [--models a,b] [--batch B] [--iters N]
   bench-snapshot [--out DIR] [--universe N] [--seed S] [--max-group G] [--threads T] [--target-frac F]
+                 [--fast-solver on|off|auto] [--beam-score affinity|demand]
   obs-dump  [--out DIR] [--secs S] [--seed N]          RMU scenario -> registry snapshot + audit JSONL
   obs-serve [--http ADDR] [--secs S] [--serve-secs S]  RMU scenario, then export GET /metrics"
     );
@@ -280,6 +283,25 @@ fn parse_max_group(args: &Args, default: usize) -> anyhow::Result<usize> {
     Ok(n)
 }
 
+/// Shared `--fast-solver on|off|auto` flag: sets the process-wide
+/// [`SolverMode`] (Illinois bracketing + memo tables vs the pristine
+/// legacy bisection) and returns the mode for the caller to record.
+fn parse_fast_solver(args: &Args) -> anyhow::Result<SolverMode> {
+    let raw = args.get_or("fast-solver", "auto");
+    let mode = SolverMode::parse(raw)
+        .ok_or_else(|| anyhow::anyhow!("unknown fast-solver {raw:?} (on|off|auto)"))?;
+    hera::perfcache::set_solver_mode(mode);
+    Ok(mode)
+}
+
+/// Shared `--beam-score affinity|demand` flag (ROADMAP item 2's
+/// demand-aware beam ranking; `affinity` is the bit-parity default).
+fn parse_beam_score(args: &Args) -> anyhow::Result<BeamScore> {
+    let raw = args.get_or("beam-score", "affinity");
+    BeamScore::parse(raw)
+        .ok_or_else(|| anyhow::anyhow!("unknown beam-score {raw:?} (affinity|demand)"))
+}
+
 /// Shared `--residency` flag (with `--cache-aware` kept as an alias for
 /// the cached mode).
 fn parse_residency(args: &Args) -> anyhow::Result<ResidencyPolicy> {
@@ -305,6 +327,8 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     };
     let residency = parse_residency(args)?;
     let max_group = parse_max_group(args, 2)?;
+    let fast_solver = parse_fast_solver(args)?;
+    let beam_score = parse_beam_score(args)?;
     let store = ProfileStore::build(&NodeConfig::paper_default());
     // Cache-aware Algorithm 1: score the affinity matrix under the same
     // residency policy the scheduler deploys with.
@@ -314,14 +338,16 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let opts = SelectionOpts {
         residency,
         max_group,
+        beam_score,
     };
     let plan = policy.schedule_with(&store, &matrix, &targets, 42, opts)?;
     println!(
         "{}: {} servers for {target:.0} QPS/model (scheduled in {:.1} ms, \
-         {residency:?} residency, groups up to {max_group})",
+         {residency:?} residency, groups up to {max_group}, solver {})",
         policy.name(),
         plan.num_servers(),
-        t0.elapsed().as_secs_f64() * 1e3
+        t0.elapsed().as_secs_f64() * 1e3,
+        fast_solver.tag()
     );
     for (i, s) in plan.servers.iter().enumerate().take(20) {
         let kind = if s.is_colocated() { "group" } else { "solo " };
@@ -633,13 +659,18 @@ fn cmd_bench_snapshot(args: &Args) -> anyhow::Result<()> {
         threads: args.get_usize("threads", hera::par::default_threads())?,
         target_frac: args.get_f64("target-frac", 0.4)?,
         bench_secs: None,
+        fast_solver: parse_fast_solver(args)?,
+        beam_score: parse_beam_score(args)?,
     };
-    let (affinity, schedule) = hera::benchsnap::run(&opts)?;
+    let (affinity, schedule, solver) = hera::benchsnap::run(&opts)?;
     let aff_path = out.join("BENCH_affinity.json");
     let sched_path = out.join("BENCH_schedule.json");
+    let solver_path = out.join("BENCH_solver.json");
     std::fs::write(&aff_path, affinity.to_string())?;
     std::fs::write(&sched_path, schedule.to_string())?;
+    std::fs::write(&solver_path, solver.to_string())?;
     println!("wrote {}", aff_path.display());
     println!("wrote {}", sched_path.display());
+    println!("wrote {}", solver_path.display());
     Ok(())
 }

@@ -28,17 +28,40 @@ where
     U: Send,
     F: Fn(&T) -> U + Sync,
 {
+    parallel_map_with(items, threads, || (), |(), item| f(item))
+}
+
+/// [`parallel_map`] with a per-thread scratch value: `mk_scratch` runs
+/// once per worker (and once for the serial path) and the scratch is
+/// threaded through every call that worker makes, so the mapped
+/// function can reuse allocations across items instead of building
+/// per-item buffers.  Chunking and stitch order are identical to
+/// [`parallel_map`], so results stay bit-identical to the serial map.
+pub fn parallel_map_with<T, U, S, M, F>(items: &[T], threads: usize, mk_scratch: M, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    M: Fn() -> S + Sync,
+    F: Fn(&mut S, &T) -> U + Sync,
+{
     let threads = threads.clamp(1, items.len().max(1));
     if threads <= 1 || items.len() < 2 {
-        return items.iter().map(f).collect();
+        let mut scratch = mk_scratch();
+        return items.iter().map(|item| f(&mut scratch, item)).collect();
     }
     let chunk = items.len().div_ceil(threads);
     let f = &f;
+    let mk_scratch = &mk_scratch;
     let mut out: Vec<U> = Vec::with_capacity(items.len());
     std::thread::scope(|s| {
         let handles: Vec<_> = items
             .chunks(chunk)
-            .map(|part| s.spawn(move || part.iter().map(f).collect::<Vec<U>>()))
+            .map(|part| {
+                s.spawn(move || {
+                    let mut scratch = mk_scratch();
+                    part.iter().map(|item| f(&mut scratch, item)).collect::<Vec<U>>()
+                })
+            })
             .collect();
         for h in handles {
             out.extend(h.join().expect("parallel_map worker panicked"));
@@ -71,5 +94,25 @@ mod tests {
     #[test]
     fn default_threads_is_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn scratch_variant_matches_serial_and_reuses_buffers() {
+        let items: Vec<usize> = (0..57).collect();
+        let want: Vec<usize> = items.iter().map(|&x| x * 3).collect();
+        for threads in [1, 2, 5, 57] {
+            let got = parallel_map_with(
+                &items,
+                threads,
+                Vec::<usize>::new,
+                |buf, &x| {
+                    // The scratch persists across items on one worker.
+                    buf.push(x);
+                    assert!(!buf.is_empty());
+                    x * 3
+                },
+            );
+            assert_eq!(got, want, "threads = {threads}");
+        }
     }
 }

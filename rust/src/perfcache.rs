@@ -1,0 +1,768 @@
+//! `perfcache` — the performance layer under the placement search
+//! (DESIGN.md §11).
+//!
+//! Three independent accelerations, all gated by one global
+//! [`SolverMode`] switch (`--fast-solver on|off|auto`):
+//!
+//! * [`bracket_scale`] — a bracketed Illinois/false-position search that
+//!   replaces the scheduler's fixed-grid feasibility bisection.  The
+//!   boolean feasibility verdict stays authoritative for every bracket
+//!   update (margins only *place* probes), the bracket endpoints live on
+//!   the same `2^iters` dyadic grid the bisection walks, and the search
+//!   terminates in the identical final grid interval — so the returned
+//!   scale is **bit-for-bit** the bisection's answer whenever the
+//!   feasibility oracle is monotone on the grid (every parity suite and
+//!   `tests/prop_solver.rs` pin this).
+//! * An exact hit-rate memo ([`hit_rate_memo`], [`curve_for_model`]) —
+//!   the coupled-analytic inner loop re-evaluates `HitCurve::hit_rate`
+//!   at the *same* (curve, bytes) points thousands of times per
+//!   schedule (each one a ~2048-term generalized-harmonic sum).  The
+//!   memo is keyed on the f64 *bits* of the curve parameters and the
+//!   byte count and stores the exact evaluation, so hits are
+//!   bit-identical to the slow path by construction.
+//! * Interpolated lookup tables for the hps tier math
+//!   ([`erlang_c_fast`], [`hit_rate_lut`]) — Erlang-C delay keyed by
+//!   (channels, utilization) and the hit curve keyed by curve
+//!   parameters, both built by adaptive subdivision to a ≤ 1e-9
+//!   absolute error bound, exact at their knots/endpoints, monotone
+//!   between knots, with an exact-eval fallback outside the tabulated
+//!   domain.  These serve only the multi-tier `hps` paths (flat-seed
+//!   parity never reads an interpolated value — see DESIGN.md §11).
+//!
+//! [`SolverMode::Off`] bypasses *everything*: the legacy bisection and
+//! direct exact evaluations run untouched, which is what `bench-snapshot`
+//! times as the "slow path" of the recorded speedup.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, RwLock};
+
+use once_cell::sync::Lazy;
+
+use crate::config::ModelId;
+use crate::embedcache::HitCurve;
+use crate::obs::{names, Counter};
+
+// ---------------------------------------------------------------------------
+// Solver mode
+// ---------------------------------------------------------------------------
+
+/// Global fast-solver switch.  `Auto` (the default) behaves like `On`;
+/// it exists so the CLI can distinguish "explicitly requested" from
+/// "default" in emitted documents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverMode {
+    /// Pristine legacy path: fixed-grid bisection, direct exact
+    /// evaluations, no tables.  This is the measured "slow path".
+    Off,
+    /// Illinois bracketing + memo/tables.
+    On,
+    /// Same as `On` (default).
+    Auto,
+}
+
+impl SolverMode {
+    /// Whether this mode engages the fast paths.
+    pub fn fast(self) -> bool {
+        !matches!(self, SolverMode::Off)
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            SolverMode::Off => "off",
+            SolverMode::On => "on",
+            SolverMode::Auto => "auto",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SolverMode> {
+        match s {
+            "off" => Some(SolverMode::Off),
+            "on" => Some(SolverMode::On),
+            "auto" => Some(SolverMode::Auto),
+            _ => None,
+        }
+    }
+}
+
+static MODE: AtomicU8 = AtomicU8::new(2); // Auto
+
+/// The process-wide solver mode.
+pub fn solver_mode() -> SolverMode {
+    match MODE.load(Ordering::Relaxed) {
+        0 => SolverMode::Off,
+        1 => SolverMode::On,
+        _ => SolverMode::Auto,
+    }
+}
+
+/// Set the process-wide solver mode, returning the previous one (so
+/// benchmark A/B sections can restore the ambient mode).
+pub fn set_solver_mode(mode: SolverMode) -> SolverMode {
+    let prev = solver_mode();
+    MODE.store(
+        match mode {
+            SolverMode::Off => 0,
+            SolverMode::On => 1,
+            SolverMode::Auto => 2,
+        },
+        Ordering::Relaxed,
+    );
+    prev
+}
+
+/// Whether the fast paths are currently engaged.
+pub fn fast_enabled() -> bool {
+    solver_mode().fast()
+}
+
+// ---------------------------------------------------------------------------
+// Counters
+// ---------------------------------------------------------------------------
+
+static SOLVER_SEARCHES: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::SOLVER_SEARCHES_TOTAL, &[]));
+static SOLVER_PROBES: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::SOLVER_PROBES_TOTAL, &[]));
+static SOLVER_FAST: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::SOLVER_FAST_PATH_TOTAL, &[]));
+static HIT_MEMO_HITS: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::HITCURVE_MEMO_HITS_TOTAL, &[]));
+static HIT_MEMO_MISSES: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::HITCURVE_MEMO_MISSES_TOTAL, &[]));
+static ERLANG_HITS: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::ERLANG_TABLE_HITS_TOTAL, &[]));
+static ERLANG_MISSES: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::ERLANG_TABLE_MISSES_TOTAL, &[]));
+static HIT_TABLE_HITS: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::HITCURVE_TABLE_HITS_TOTAL, &[]));
+static HIT_TABLE_MISSES: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::HITCURVE_TABLE_MISSES_TOTAL, &[]));
+
+// ---------------------------------------------------------------------------
+// Bracketed Illinois scale search
+// ---------------------------------------------------------------------------
+
+/// One feasibility probe: the authoritative boolean verdict plus a
+/// signed margin (positive = feasible with headroom, negative =
+/// infeasible by that much).  The margin is *advisory*: it only steers
+/// probe placement in [`bracket_scale`]; a nonsensical margin (NaN,
+/// wrong sign) degrades the search to plain bisection, never changes
+/// the answer.
+#[derive(Debug, Clone, Copy)]
+pub struct Probe {
+    pub feasible: bool,
+    pub margin: f64,
+}
+
+/// Largest proportional scale in `[0, 1)` on the `2^iters` dyadic grid
+/// whose probe is feasible — exactly what `iters` rounds of the legacy
+/// `lo/hi` bisection return when the oracle is monotone on the grid.
+///
+/// Under [`SolverMode::Off`] this *is* the legacy bisection, replayed
+/// operation-for-operation.  Under the fast modes an integer bracket
+/// `[ja, jb]` (feasible / infeasible endpoints, verified by probes)
+/// shrinks via Illinois-damped false position on the probe margins,
+/// with midpoint fallbacks whenever margins are unusable, two
+/// false-position steps have not paid off, or the probe budget runs
+/// out.  Every grid point `j/2^iters` is exactly representable and
+/// equals the value the bisection's repeated `0.5*(lo+hi)` arithmetic
+/// produces, so the returned scale is bit-identical.
+pub fn bracket_scale<F: FnMut(f64) -> Probe>(iters: u32, mut probe: F) -> f64 {
+    assert!((1..=52).contains(&iters), "iters outside the exact dyadic range");
+    SOLVER_SEARCHES.inc();
+    if !fast_enabled() {
+        let mut lo = 0.0;
+        let mut hi = 1.0;
+        for _ in 0..iters {
+            let mid = 0.5 * (lo + hi);
+            if probe(mid).feasible {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        SOLVER_PROBES.add(iters as u64);
+        return lo;
+    }
+
+    SOLVER_FAST.inc();
+    let n: u64 = 1 << iters;
+    let nf = n as f64;
+    let mut ja: u64 = 0; // feasible (or never probed when 0)
+    let mut jb: u64 = n; // infeasible (or never probed when n)
+    let mut ma = f64::NAN;
+    let mut mb = f64::NAN;
+    let mut probes: u64 = 0;
+    let mut last_feasible: Option<bool> = None;
+    let mut fp_streak: u32 = 0;
+
+    let mut step = |j: u64,
+                    ja: &mut u64,
+                    jb: &mut u64,
+                    ma: &mut f64,
+                    mb: &mut f64,
+                    probes: &mut u64|
+     -> bool {
+        let p = probe(j as f64 / nf);
+        *probes += 1;
+        if p.feasible {
+            *ja = j;
+            *ma = p.margin;
+        } else {
+            *jb = j;
+            *mb = p.margin;
+        }
+        p.feasible
+    };
+
+    // Seed with the bisection's own first probe, then jump straight to
+    // the grid edge the verdict points at: jointly-feasible groups
+    // resolve in 2 probes (vs `iters`), hopeless ones likewise.
+    if jb - ja > 1 {
+        if step(n / 2, &mut ja, &mut jb, &mut ma, &mut mb, &mut probes) {
+            if jb - ja > 1 {
+                step(n - 1, &mut ja, &mut jb, &mut ma, &mut mb, &mut probes);
+            }
+        } else if jb - ja > 1 {
+            step(1, &mut ja, &mut jb, &mut ma, &mut mb, &mut probes);
+        }
+    }
+
+    while jb - ja > 1 {
+        let width = jb - ja;
+        // False position needs a properly signed margin pair; cap the
+        // streak (Illinois can crawl on hard nonlinearities) and the
+        // total probe budget, then bisect the remaining bracket.
+        let use_fp = fp_streak < 2
+            && probes < iters as u64 + 4
+            && ma.is_finite()
+            && mb.is_finite()
+            && ma > 0.0
+            && mb < 0.0;
+        let jp = if use_fp {
+            let t = ma / (ma - mb);
+            ((ja as f64 + t * width as f64).floor() as u64).clamp(ja + 1, jb - 1)
+        } else {
+            ja + width / 2
+        };
+        if use_fp {
+            fp_streak += 1;
+        } else {
+            fp_streak = 0;
+        }
+        let was = last_feasible;
+        let feas = step(jp, &mut ja, &mut jb, &mut ma, &mut mb, &mut probes);
+        // Illinois damping: when the same endpoint survives two probes
+        // running, halve the *retained* endpoint's margin so the next
+        // false-position probe moves toward it.
+        if feas {
+            if was == Some(true) && mb.is_finite() {
+                mb *= 0.5;
+            }
+        } else if was == Some(false) && ma.is_finite() {
+            ma *= 0.5;
+        }
+        last_feasible = Some(feas);
+    }
+    SOLVER_PROBES.add(probes);
+    ja as f64 / nf
+}
+
+// ---------------------------------------------------------------------------
+// Exact hit-rate memo + per-model curve cache
+// ---------------------------------------------------------------------------
+
+/// A curve's identity: the f64 bits of its four construction
+/// parameters (`h_total` is a deterministic function of them).
+type CurveKey = (u64, u64, u64, u64);
+
+fn curve_key(curve: &HitCurve) -> CurveKey {
+    (
+        curve.rows_per_table().to_bits(),
+        curve.n_tables().to_bits(),
+        curve.row_bytes().to_bits(),
+        curve.skew().to_bits(),
+    )
+}
+
+static CURVES: Lazy<RwLock<HashMap<ModelId, HitCurve>>> =
+    Lazy::new(|| RwLock::new(HashMap::new()));
+
+/// [`HitCurve::for_model`] through a per-model cache: constructing a
+/// curve evaluates a ~2048-term harmonic sum for `h_total`, which the
+/// scheduler's inner loop would otherwise redo on every probe.  The
+/// cached copy is the deterministic constructor output — bit-identical
+/// to a fresh build — and [`SolverMode::Off`] bypasses the cache
+/// entirely.
+pub fn curve_for_model(model: ModelId) -> HitCurve {
+    if !fast_enabled() {
+        return HitCurve::for_model(model);
+    }
+    if let Some(c) = CURVES.read().expect("curve cache poisoned").get(&model) {
+        return *c;
+    }
+    let c = HitCurve::for_model(model);
+    CURVES
+        .write()
+        .expect("curve cache poisoned")
+        .entry(model)
+        .or_insert(c);
+    c
+}
+
+/// Bounded so a pathological caller sweeping unique byte counts cannot
+/// grow the memo without limit; past the cap evaluations still return
+/// exact values, they just stop being remembered.
+const HIT_MEMO_CAP: usize = 1 << 20;
+
+static HIT_MEMO: Lazy<RwLock<HashMap<(CurveKey, u64), f64>>> =
+    Lazy::new(|| RwLock::new(HashMap::new()));
+
+/// Exact, memoized `curve.hit_rate(bytes)`.  Keys are parameter *bits*,
+/// values are the exact evaluation — a hit is bit-identical to the slow
+/// path by construction, which is what lets every hit-rate consumer on
+/// the plan-shaping path share this memo without disturbing the golden
+/// parity suites.  [`SolverMode::Off`] evaluates directly.
+pub fn hit_rate_memo(curve: &HitCurve, bytes: f64) -> f64 {
+    if !fast_enabled() {
+        return curve.hit_rate(bytes);
+    }
+    let key = (curve_key(curve), bytes.to_bits());
+    if let Some(&h) = HIT_MEMO.read().expect("hit memo poisoned").get(&key) {
+        HIT_MEMO_HITS.inc();
+        return h;
+    }
+    HIT_MEMO_MISSES.inc();
+    let h = curve.hit_rate(bytes);
+    let mut w = HIT_MEMO.write().expect("hit memo poisoned");
+    if w.len() < HIT_MEMO_CAP {
+        w.insert(key, h);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Erlang-C delay table
+// ---------------------------------------------------------------------------
+
+/// Tabulated utilization domain: matches the `hps` saturation clamp, so
+/// every queue-wait call lands inside it (up to clamp round-off).
+const ERLANG_RHO_MAX: f64 = 0.995;
+
+/// Erlang-C probability that an arrival waits (`c` channels, `a`
+/// offered Erlangs) — the exact log-safe inverse Erlang-B recurrence
+/// shared (verbatim) with `server_sim::analytic` and `hps::tier`.
+pub fn erlang_c_exact(c: usize, a: f64) -> f64 {
+    if a >= c as f64 {
+        return 1.0;
+    }
+    let mut inv_b = 1.0;
+    for k in 1..=c {
+        inv_b = 1.0 + (k as f64 / a) * inv_b;
+    }
+    let b = 1.0 / inv_b;
+    let rho = a / c as f64;
+    b / (1.0 - rho + rho * b)
+}
+
+/// Piecewise-linear table over utilization with exact values at every
+/// knot.  Knots come from adaptive subdivision against a ≤ `tol` chord
+/// error sampled at the quarter points, so interpolated values stay
+/// within 1e-9 of the exact evaluation everywhere in the domain.
+struct LinearTable {
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+}
+
+impl LinearTable {
+    /// `None` when `x` falls outside the tabulated domain (caller falls
+    /// back to exact evaluation).
+    fn eval(&self, x: f64) -> Option<f64> {
+        let last = *self.xs.last().expect("table has knots");
+        if !(x >= self.xs[0]) || x > last {
+            return None;
+        }
+        let j = self.xs.partition_point(|&k| k <= x);
+        if j == self.xs.len() {
+            // x == last knot exactly.
+            return Some(*self.ys.last().expect("table has knots"));
+        }
+        if j == 0 {
+            return Some(self.ys[0]);
+        }
+        let (x0, x1) = (self.xs[j - 1], self.xs[j]);
+        let (y0, y1) = (self.ys[j - 1], self.ys[j]);
+        let t = (x - x0) / (x1 - x0);
+        Some(y0 + t * (y1 - y0))
+    }
+}
+
+/// In-order adaptive subdivision against a ≤ `tol` chord-error bound:
+/// splits while the linear chord misses `f` by more than `tol` at any
+/// quarter point (or until `min_depth` guarantees a base density /
+/// `max_depth` bounds work), appending knots left-to-right.  The caller
+/// seeds the left endpoint `(a, f(a))` before calling [`Subdivider::run`].
+struct Subdivider<'a, F> {
+    f: &'a F,
+    min_depth: u32,
+    max_depth: u32,
+    tol: f64,
+    xs: &'a mut Vec<f64>,
+    ys: &'a mut Vec<f64>,
+}
+
+impl<F: Fn(f64) -> f64> Subdivider<'_, F> {
+    fn run(&mut self, a: f64, fa: f64, b: f64, fb: f64, depth: u32) {
+        let mid = 0.5 * (a + b);
+        let split = mid > a
+            && mid < b
+            && (depth < self.min_depth
+                || (depth < self.max_depth && {
+                    let err = |t: f64| {
+                        let x = a + t * (b - a);
+                        ((fa + t * (fb - fa)) - (self.f)(x)).abs()
+                    };
+                    err(0.25) > self.tol || err(0.5) > self.tol || err(0.75) > self.tol
+                }));
+        if split {
+            let fm = (self.f)(mid);
+            self.run(a, fa, mid, fm, depth + 1);
+            self.run(mid, fm, b, fb, depth + 1);
+        } else {
+            self.xs.push(b);
+            self.ys.push(fb);
+        }
+    }
+}
+
+static ERLANG_TABLES: Lazy<RwLock<HashMap<usize, Arc<LinearTable>>>> =
+    Lazy::new(|| RwLock::new(HashMap::new()));
+
+fn erlang_table(c: usize) -> Arc<LinearTable> {
+    if let Some(t) = ERLANG_TABLES.read().expect("erlang tables poisoned").get(&c) {
+        return Arc::clone(t);
+    }
+    ERLANG_MISSES.inc();
+    let f = |rho: f64| erlang_c_exact(c, rho * c as f64);
+    let mut xs = vec![0.0];
+    // C(c, a) -> 0 as a -> 0+; the exact limit anchors the left edge.
+    let mut ys = vec![0.0];
+    let top = f(ERLANG_RHO_MAX);
+    Subdivider {
+        f: &f,
+        min_depth: 6,
+        max_depth: 26,
+        tol: 2.5e-10,
+        xs: &mut xs,
+        ys: &mut ys,
+    }
+    .run(0.0, 0.0, ERLANG_RHO_MAX, top, 0);
+    let t = Arc::new(LinearTable { xs, ys });
+    let mut w = ERLANG_TABLES.write().expect("erlang tables poisoned");
+    Arc::clone(w.entry(c).or_insert(t))
+}
+
+/// Erlang-C through the per-channel-count delay table, keyed by
+/// quantized utilization; exact at knots, ≤ 1e-9 absolute in between,
+/// exact-eval fallback outside `(0, 0.995]` (and everywhere under
+/// [`SolverMode::Off`]).
+pub fn erlang_c_fast(c: usize, a: f64) -> f64 {
+    if !fast_enabled() || c == 0 || !(a > 0.0) {
+        return erlang_c_exact(c, a);
+    }
+    let rho = a / c as f64;
+    // The saturation clamp computes `(0.995*c/t)*t`, which can land a
+    // couple of ulps above 0.995 — treat that as the top knot.
+    let rho = if rho > ERLANG_RHO_MAX && rho <= ERLANG_RHO_MAX * (1.0 + 1e-12) {
+        ERLANG_RHO_MAX
+    } else {
+        rho
+    };
+    match erlang_table(c).eval(rho) {
+        Some(v) => {
+            ERLANG_HITS.inc();
+            v
+        }
+        None => {
+            ERLANG_MISSES.inc();
+            erlang_c_exact(c, a)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HitCurve lookup table
+// ---------------------------------------------------------------------------
+
+/// Hit-rate LUT in the byte domain.  Below `k0` rows per table the
+/// curve is *exactly* piecewise linear between integer row counts (the
+/// harmonic head is an exact sum plus a linear partial term), so the
+/// table stores one knot per integer row — interpolation there is the
+/// same linear function the exact evaluator computes, to round-off.
+/// The smooth integral-tail region beyond `k0` is covered by adaptive
+/// subdivision to the same ≤ 1e-9 bound.
+struct HitTable {
+    /// Bytes per whole row across all tables (`n_tables * row_bytes`).
+    quantum: f64,
+    full_bytes: f64,
+    /// Hit rate at `j` rows per table, `j = 0..=k0` (exact).
+    ints: Vec<f64>,
+    /// Adaptive knots covering `[k0 * quantum, full_bytes]` (exact).
+    tail: LinearTable,
+}
+
+impl HitTable {
+    fn build(curve: &HitCurve) -> HitTable {
+        let rows = curve.rows_per_table();
+        let skew = curve.skew();
+        let quantum = curve.n_tables() * curve.row_bytes();
+        let full_bytes = curve.full_bytes();
+        let k0 = rows.floor().min(2048.0) as usize;
+        // Exact prefix of the harmonic head, in the same summation
+        // order as `embedcache::harmonic`, normalized like `hit_rate`.
+        let h_total = crate::embedcache::harmonic(rows, skew);
+        let mut ints = Vec::with_capacity(k0 + 1);
+        let mut h = 0.0;
+        ints.push(0.0);
+        for j in 1..=k0 {
+            h += (j as f64).powf(-skew);
+            ints.push((h / h_total).clamp(0.0, 1.0));
+        }
+        let tail_lo = k0 as f64 * quantum;
+        let f = |bytes: f64| curve.hit_rate(bytes);
+        let mut xs = vec![tail_lo];
+        let mut ys = vec![f(tail_lo)];
+        if full_bytes > tail_lo {
+            let lo = ys[0];
+            let top = f(full_bytes);
+            Subdivider {
+                f: &f,
+                min_depth: 4,
+                max_depth: 32,
+                tol: 3.0e-10,
+                xs: &mut xs,
+                ys: &mut ys,
+            }
+            .run(tail_lo, lo, full_bytes, top, 0);
+        }
+        HitTable {
+            quantum,
+            full_bytes,
+            ints,
+            tail: LinearTable { xs, ys },
+        }
+    }
+
+    fn eval(&self, curve: &HitCurve, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            // hit_rate(<= 0) is exactly 0.0; keep the endpoint exact.
+            return 0.0;
+        }
+        if bytes >= self.full_bytes {
+            // Full residency saturates at exactly 1.0 (monotone cap).
+            return 1.0;
+        }
+        let x = bytes / self.quantum; // fractional rows per table
+        let k0 = self.ints.len() - 1;
+        if x < k0 as f64 {
+            let j = x as usize;
+            let t = x - j as f64;
+            let v = self.ints[j] + t * (self.ints[j + 1] - self.ints[j]);
+            return v.clamp(0.0, 1.0);
+        }
+        match self.tail.eval(bytes) {
+            Some(v) => v.clamp(0.0, 1.0),
+            None => curve.hit_rate(bytes), // exact-eval fallback
+        }
+    }
+}
+
+static HIT_TABLES: Lazy<RwLock<HashMap<CurveKey, Arc<HitTable>>>> =
+    Lazy::new(|| RwLock::new(HashMap::new()));
+
+/// Interpolated `curve.hit_rate(bytes)` for the hps tier-share math:
+/// exact at `0` and at/beyond full residency, monotone (linear
+/// interpolation between monotone exact knots), within 1e-9 of the
+/// exact evaluation everywhere, with an exact-eval fallback off-table.
+/// Flat-seed parity never observes an interpolated value: a single-tier
+/// stack's share vector is `[1.0]` regardless of the hit rate (see
+/// `TierStack::shares`), and every plan-shaping consumer uses
+/// [`hit_rate_memo`] instead.  [`SolverMode::Off`] evaluates directly.
+pub fn hit_rate_lut(curve: &HitCurve, bytes: f64) -> f64 {
+    if !fast_enabled() {
+        return curve.hit_rate(bytes);
+    }
+    let key = curve_key(curve);
+    let table = {
+        let hit = HIT_TABLES
+            .read()
+            .expect("hit tables poisoned")
+            .get(&key)
+            .map(Arc::clone);
+        match hit {
+            Some(t) => {
+                HIT_TABLE_HITS.inc();
+                t
+            }
+            None => {
+                HIT_TABLE_MISSES.inc();
+                let t = Arc::new(HitTable::build(curve));
+                let mut w = HIT_TABLES.write().expect("hit tables poisoned");
+                Arc::clone(w.entry(key).or_insert(t))
+            }
+        }
+    };
+    table.eval(curve, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serialize mode flips: the mode is process-global and unit tests
+    /// run on parallel threads.
+    static MODE_LOCK: Lazy<std::sync::Mutex<()>> = Lazy::new(|| std::sync::Mutex::new(()));
+
+    fn with_mode<R>(mode: SolverMode, f: impl FnOnce() -> R) -> R {
+        let _guard = MODE_LOCK.lock().unwrap();
+        let prev = set_solver_mode(mode);
+        let out = f();
+        set_solver_mode(prev);
+        out
+    }
+
+    fn slow_bisect(iters: u32, f: impl Fn(f64) -> bool) -> f64 {
+        let mut lo = 0.0;
+        let mut hi = 1.0;
+        for _ in 0..iters {
+            let mid = 0.5 * (lo + hi);
+            if f(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    #[test]
+    fn bracket_matches_bisection_on_thresholds() {
+        with_mode(SolverMode::On, || {
+            for &t in &[0.0, 1e-6, 0.1, 0.25, 0.5, 1.0 / 4096.0, 4095.0 / 4096.0, 0.73, 1.0, 2.0] {
+                let want = slow_bisect(12, |s| s <= t);
+                let got = bracket_scale(12, |s| Probe {
+                    feasible: s <= t,
+                    margin: t - s,
+                });
+                assert_eq!(got.to_bits(), want.to_bits(), "threshold {t}");
+            }
+        });
+    }
+
+    #[test]
+    fn bracket_survives_adversarial_margins() {
+        with_mode(SolverMode::On, || {
+            let t = 0.371;
+            let want = slow_bisect(12, |s| s <= t);
+            let margins: [fn(f64) -> f64; 4] = [
+                |_s| f64::NAN,
+                |_s| 0.0,
+                |s| s - 0.371, // inverted sign
+                |s| (0.371 - s) * 1e12,
+            ];
+            for margin in margins {
+                let got = bracket_scale(12, |s| Probe {
+                    feasible: s <= t,
+                    margin: margin(s),
+                });
+                assert_eq!(got.to_bits(), want.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn off_mode_replays_the_legacy_bisection() {
+        with_mode(SolverMode::Off, || {
+            let t = 0.617;
+            let want = slow_bisect(12, |s| s <= t);
+            let got = bracket_scale(12, |s| Probe {
+                feasible: s <= t,
+                margin: t - s,
+            });
+            assert_eq!(got.to_bits(), want.to_bits());
+        });
+    }
+
+    #[test]
+    fn erlang_table_is_accurate_and_exact_at_the_clamp() {
+        with_mode(SolverMode::On, || {
+            for &c in &[1usize, 2, 8, 64, 256, 1024] {
+                for i in 1..=40 {
+                    let rho = ERLANG_RHO_MAX * i as f64 / 40.0;
+                    let a = rho * c as f64;
+                    let exact = erlang_c_exact(c, a);
+                    let fast = erlang_c_fast(c, a);
+                    assert!(
+                        (fast - exact).abs() <= 1e-9,
+                        "c={c} rho={rho}: {fast} vs {exact}"
+                    );
+                }
+                // The clamp endpoint is a knot: bit-exact.
+                let a_top = ERLANG_RHO_MAX * c as f64;
+                assert_eq!(
+                    erlang_c_fast(c, a_top).to_bits(),
+                    erlang_c_exact(c, a_top).to_bits(),
+                    "c={c} top knot"
+                );
+                // Outside the domain: exact fallback.
+                let a_over = 0.999 * c as f64;
+                assert_eq!(
+                    erlang_c_fast(c, a_over).to_bits(),
+                    erlang_c_exact(c, a_over).to_bits()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn hit_memo_is_bit_identical_to_exact() {
+        with_mode(SolverMode::On, || {
+            let curve = HitCurve::new(1e6, 8, 256.0, 1.05);
+            for i in 0..=17 {
+                let bytes = curve.full_bytes() * i as f64 / 16.0;
+                let exact = curve.hit_rate(bytes);
+                assert_eq!(hit_rate_memo(&curve, bytes).to_bits(), exact.to_bits());
+                // Second call hits the memo and stays identical.
+                assert_eq!(hit_rate_memo(&curve, bytes).to_bits(), exact.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn hit_lut_is_accurate_monotone_and_exact_at_endpoints() {
+        with_mode(SolverMode::On, || {
+            for curve in [
+                HitCurve::new(1e6, 8, 256.0, 1.05),
+                HitCurve::new(500.0, 4, 128.0, 0.8),
+                HitCurve::new(3.0e4, 1, 1024.0, 1.3),
+            ] {
+                assert_eq!(hit_rate_lut(&curve, 0.0), 0.0);
+                assert_eq!(hit_rate_lut(&curve, curve.full_bytes()), 1.0);
+                assert_eq!(hit_rate_lut(&curve, 2.0 * curve.full_bytes()), 1.0);
+                let mut prev = -1.0;
+                for i in 0..=400 {
+                    let bytes = curve.full_bytes() * i as f64 / 397.0;
+                    let fast = hit_rate_lut(&curve, bytes);
+                    let exact = curve.hit_rate(bytes);
+                    assert!(
+                        (fast - exact).abs() <= 1e-9,
+                        "bytes {bytes:.3e}: {fast} vs {exact}"
+                    );
+                    assert!(fast >= prev, "LUT must stay monotone");
+                    prev = fast;
+                }
+            }
+        });
+    }
+}

@@ -65,7 +65,10 @@ pub(crate) fn tenant_profile(
     match cache_bytes {
         None => ServiceProfile::build(model.spec(), node, workers.max(1), ways),
         Some(bytes) => {
-            let hit = HitCurve::for_model(model).hit_rate(bytes);
+            // Exact hit rate through the `perfcache` memo: the scale
+            // search re-probes the same (curve, bytes) points per group.
+            let curve = crate::perfcache::curve_for_model(model);
+            let hit = crate::perfcache::hit_rate_memo(&curve, bytes);
             ServiceProfile::build_with_cache(model.spec(), node, workers.max(1), ways, hit)
         }
     }
@@ -137,7 +140,7 @@ pub fn solve_hps(
     assert_eq!(tenants.len(), prefetch_overlap.len());
     let curves: Vec<Option<HitCurve>> = tenants
         .iter()
-        .map(|t| t.cache_bytes.map(|_| HitCurve::for_model(t.model)))
+        .map(|t| t.cache_bytes.map(|_| crate::perfcache::curve_for_model(t.model)))
         .collect();
 
     // Offered miss demand of every cached tenant, resolved as one group
@@ -153,7 +156,7 @@ pub fn solve_hps(
                 spec.row_bytes(),
                 spec.row_accesses_per_item() as f64,
                 t.arrival_qps,
-                curve.hit_rate(bytes),
+                crate::perfcache::hit_rate_memo(curve, bytes),
             ));
             cached_idx.push(i);
         }
@@ -173,7 +176,7 @@ pub fn solve_hps(
                 node,
                 t.workers.max(1),
                 t.ways,
-                curves[i].as_ref().unwrap().hit_rate(bytes),
+                crate::perfcache::hit_rate_memo(curves[i].as_ref().unwrap(), bytes),
                 path,
                 prefetch_overlap[i],
             ),

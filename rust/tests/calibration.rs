@@ -111,6 +111,48 @@ fn affinity_floor_prunes_no_optimal_group() {
 }
 
 #[test]
+fn demand_beam_scoring_costs_no_plan_quality() {
+    // ROADMAP item 2: the demand-aware beam ranking (`--beam-score
+    // demand`) reorders which extensions survive the beam, so it must be
+    // calibrated like the beam itself — against the affinity ranking
+    // with the beam forced on every candidate set.  Bound: the demand
+    // plan meets every target with at most the documented 10%-rounded-up
+    // (or +1) server overhead, in both directions — neither ranking is
+    // allowed to be categorically worse than the other at seed scale.
+    use hera::hera::BeamScore;
+    let targets = scaled_targets(&STORE, 0.4);
+    for max_group in [2, 3, 4] {
+        let plan = |score: BeamScore| {
+            ClusterScheduler::new(&STORE, &MATRIX)
+                .with_max_group(max_group)
+                .with_exhaustive_limit(0)
+                .with_beam_score(score)
+                .schedule(&targets)
+                .unwrap()
+        };
+        let affinity = plan(BeamScore::Affinity);
+        let demand = plan(BeamScore::Demand);
+        assert!(affinity.meets(&targets));
+        assert!(demand.meets(&targets));
+        let bound = |n: usize| (((n as f64) * 1.1).ceil() as usize).max(n + 1);
+        assert!(
+            demand.num_servers() <= bound(affinity.num_servers()),
+            "max_group {max_group}: demand scoring used {} servers, \
+             affinity {} — demand ranking regressed",
+            demand.num_servers(),
+            affinity.num_servers()
+        );
+        assert!(
+            affinity.num_servers() <= bound(demand.num_servers()),
+            "max_group {max_group}: affinity scoring used {} servers, \
+             demand {}",
+            affinity.num_servers(),
+            demand.num_servers()
+        );
+    }
+}
+
+#[test]
 fn floor_headroom_over_deployed_grown_groups() {
     // Measure the calibration headroom: the weakest internal pair of
     // any grown (size >= 3) group the default scheduler deploys.  The

@@ -1,0 +1,251 @@
+//! Property suite for the fast placement-search path (`perfcache`):
+//!
+//! * the bracketed Illinois search returns the **bit-identical** grid
+//!   point the legacy fixed-grid bisection returns, for randomized
+//!   threshold oracles (with clean, adversarial, and absent margins)
+//!   and for the real coupled-solver oracle behind `evaluate_group`;
+//! * the Erlang-C delay table is within 1e-9 of the exact recurrence
+//!   across its domain, exact at the saturation edge, and falls back to
+//!   the exact evaluation (bit-equal) outside the tabulated domain;
+//! * the HitCurve LUT is within 1e-9 everywhere, exact at the empty and
+//!   full-residency endpoints, and monotone;
+//! * the exact hit-rate memo is bit-identical to `HitCurve::hit_rate`.
+
+use std::sync::Mutex;
+
+use hera::alloc::ResidencyPolicy;
+use hera::config::{ModelId, NodeConfig};
+use hera::embedcache::HitCurve;
+use hera::hera::{evaluate_group, AffinityMatrix};
+use hera::perfcache::{
+    bracket_scale, curve_for_model, erlang_c_exact, erlang_c_fast, hit_rate_lut, hit_rate_memo,
+    set_solver_mode, Probe, SolverMode,
+};
+use hera::profiler::ProfileStore;
+use hera::rng::{Rng, Xoshiro256};
+use once_cell::sync::Lazy;
+
+static STORE: Lazy<ProfileStore> =
+    Lazy::new(|| ProfileStore::build(&NodeConfig::paper_default()));
+static MATRIX: Lazy<AffinityMatrix> = Lazy::new(|| AffinityMatrix::build(&STORE));
+
+/// The solver mode is process-global and the tests in this binary run
+/// on parallel threads: every test that *sets* the mode serializes here
+/// and restores the ambient mode on exit (even on panic).
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+struct ModeGuard(SolverMode);
+
+impl Drop for ModeGuard {
+    fn drop(&mut self) {
+        set_solver_mode(self.0);
+    }
+}
+
+fn with_mode<R>(mode: SolverMode, f: impl FnOnce() -> R) -> R {
+    let _lock = MODE_LOCK.lock().unwrap();
+    let _restore = ModeGuard(set_solver_mode(mode));
+    f()
+}
+
+/// Verbatim legacy search: 12 (or `iters`) rounds of `0.5 * (lo + hi)`
+/// bisection on the boolean verdict alone.
+fn slow_bisect(iters: u32, mut feasible: impl FnMut(f64) -> bool) -> f64 {
+    let mut lo = 0.0;
+    let mut hi = 1.0;
+    for _ in 0..iters {
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[test]
+fn fast_search_matches_bisection_on_randomized_thresholds() {
+    // Margin oracles handed to the fast path, from well-behaved to
+    // actively hostile: the advisory margin must never change the
+    // answer, only the probe placement.
+    let margins: [fn(f64, f64) -> f64; 5] = [
+        // Clean signed distance, no margin at all, wrong sign
+        // everywhere, absurd magnitude, and lying on one half.
+        |s, t| t - s,
+        |_, _| f64::NAN,
+        |s, t| s - t,
+        |s, t| (t - s) * 1e18,
+        |s, t| if s < 0.5 { 1.0 } else { t - s },
+    ];
+    let mut rng = Xoshiro256::seed_from(0x5eed_501e);
+    for iters in [1u32, 4, 12, 20] {
+        let n: u64 = 1 << iters;
+        for trial in 0..200 {
+            // Include the degenerate thresholds (never / always feasible
+            // on the probed grid) alongside random interior ones.
+            let jstar = match trial {
+                0 => 0,
+                1 => n - 1,
+                _ => rng.next_below(n),
+            };
+            let sstar = jstar as f64 / n as f64;
+            let expect = slow_bisect(iters, |s| s <= sstar);
+            for m in margins {
+                let got = bracket_scale(iters, |s| Probe {
+                    feasible: s <= sstar,
+                    margin: m(s, sstar),
+                });
+                assert_eq!(
+                    got.to_bits(),
+                    expect.to_bits(),
+                    "iters {iters} jstar {jstar}: fast {got} vs bisection {expect}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_and_slow_modes_agree_on_the_real_solver_oracle() {
+    // The acceptance bar for the tentpole: with the fast solver on, the
+    // coupled-solver scale search inside `evaluate_group` lands on the
+    // same dyadic grid point, so every placement field is bit-identical.
+    let models: Vec<ModelId> = ["dlrm_a", "dlrm_d", "ncf", "wnd"]
+        .iter()
+        .map(|n| ModelId::from_name(n).unwrap())
+        .collect();
+    let mut groups: Vec<Vec<ModelId>> = Vec::new();
+    for i in 0..models.len() {
+        for j in (i + 1)..models.len() {
+            groups.push(vec![models[i], models[j]]);
+        }
+    }
+    groups.push(vec![models[1], models[2], models[3]]);
+    for policy in [ResidencyPolicy::Optimistic, ResidencyPolicy::Cached] {
+        for group in &groups {
+            let slow = with_mode(SolverMode::Off, || {
+                evaluate_group(&STORE, &MATRIX, group, policy)
+            });
+            let fast = with_mode(SolverMode::On, || {
+                evaluate_group(&STORE, &MATRIX, group, policy)
+            });
+            assert_eq!(slow.tenants.len(), fast.tenants.len());
+            for (s, f) in slow.tenants.iter().zip(&fast.tenants) {
+                assert_eq!(s.model, f.model);
+                assert_eq!(s.rv.workers, f.rv.workers, "{policy:?} {group:?}");
+                assert_eq!(s.rv.ways, f.rv.ways, "{policy:?} {group:?}");
+                assert_eq!(
+                    s.qps.to_bits(),
+                    f.qps.to_bits(),
+                    "{policy:?} {group:?}: qps {} vs {}",
+                    s.qps,
+                    f.qps
+                );
+                assert_eq!(
+                    s.rv.cache_bytes().map(f64::to_bits),
+                    f.rv.cache_bytes().map(f64::to_bits),
+                    "{policy:?} {group:?}: residency"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn erlang_table_is_tight_across_the_domain_and_exact_at_the_edges() {
+    with_mode(SolverMode::On, || {
+        let mut rng = Xoshiro256::seed_from(7);
+        for c in [1usize, 2, 3, 4, 8, 16, 32] {
+            let cf = c as f64;
+            for _ in 0..400 {
+                let a = rng.range_f64(1e-6, 0.995) * cf;
+                let fast = erlang_c_fast(c, a);
+                let exact = erlang_c_exact(c, a);
+                assert!(
+                    (fast - exact).abs() <= 1e-9,
+                    "c {c} a {a}: table {fast} vs exact {exact}"
+                );
+            }
+            // The saturation clamp's landing spot is the top knot, which
+            // stores the exact evaluation.
+            let top = 0.995 * cf;
+            assert!(
+                (erlang_c_fast(c, top) - erlang_c_exact(c, top)).abs() <= 1e-12,
+                "c {c}: top knot must be (near-)exact"
+            );
+            // Off the tabulated domain the fast path *is* the exact
+            // recurrence: bit-equal, not merely close.
+            for a in [0.0, 0.999 * cf, cf, 1.5 * cf] {
+                assert_eq!(
+                    erlang_c_fast(c, a).to_bits(),
+                    erlang_c_exact(c, a).to_bits(),
+                    "c {c} a {a}: off-domain fallback must be exact"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn hitcurve_lut_is_tight_exact_at_endpoints_and_monotone() {
+    with_mode(SolverMode::On, || {
+        let mut rng = Xoshiro256::seed_from(11);
+        let mut curves: Vec<HitCurve> = ModelId::all().map(HitCurve::for_model).collect();
+        // Synthetic shapes off Table 1: an integer-exact small head, a
+        // huge smooth-tail universe row, and a near-uniform skew.
+        curves.push(HitCurve::new(100.0, 4, 128.0, 0.8));
+        curves.push(HitCurve::new(5e7, 16, 64.0, 1.1));
+        curves.push(HitCurve::new(1e4, 8, 256.0, 0.05));
+        for curve in &curves {
+            let full = curve.full_bytes();
+            // Exact endpoints: empty and full residency.
+            assert_eq!(hit_rate_lut(curve, 0.0).to_bits(), 0.0f64.to_bits());
+            assert_eq!(hit_rate_lut(curve, full).to_bits(), 1.0f64.to_bits());
+            assert_eq!(hit_rate_lut(curve, 1.5 * full).to_bits(), 1.0f64.to_bits());
+            let mut bytes: Vec<f64> = (0..300).map(|_| rng.range_f64(0.0, full)).collect();
+            for b in &bytes {
+                let lut = hit_rate_lut(curve, *b);
+                let exact = curve.hit_rate(*b);
+                assert!(
+                    (lut - exact).abs() <= 1e-9,
+                    "curve {:?} bytes {b}: lut {lut} vs exact {exact}",
+                    curve.skew()
+                );
+            }
+            bytes.sort_by(f64::total_cmp);
+            let mut prev = 0.0f64;
+            for b in &bytes {
+                let v = hit_rate_lut(curve, *b);
+                assert!(
+                    v >= prev - 1e-12,
+                    "curve {:?}: lut non-monotone at bytes {b}",
+                    curve.skew()
+                );
+                prev = prev.max(v);
+            }
+        }
+    });
+}
+
+#[test]
+fn hit_rate_memo_and_curve_cache_are_bit_identical_to_exact() {
+    with_mode(SolverMode::On, || {
+        let mut rng = Xoshiro256::seed_from(23);
+        for id in ModelId::all() {
+            let fresh = HitCurve::for_model(id);
+            let cached = curve_for_model(id);
+            assert_eq!(cached.rows_per_table().to_bits(), fresh.rows_per_table().to_bits());
+            assert_eq!(cached.n_tables().to_bits(), fresh.n_tables().to_bits());
+            assert_eq!(cached.row_bytes().to_bits(), fresh.row_bytes().to_bits());
+            assert_eq!(cached.skew().to_bits(), fresh.skew().to_bits());
+            for _ in 0..100 {
+                let b = rng.range_f64(0.0, 1.2 * fresh.full_bytes());
+                let exact = fresh.hit_rate(b);
+                // Miss and hit must both reproduce the exact bits.
+                assert_eq!(hit_rate_memo(&cached, b).to_bits(), exact.to_bits());
+                assert_eq!(hit_rate_memo(&cached, b).to_bits(), exact.to_bits());
+            }
+        }
+    });
+}
