@@ -26,7 +26,7 @@ import shutil
 import sys
 from pathlib import Path
 
-RESIDENCIES = ("optimistic", "strict", "cached")
+RESIDENCIES = ("optimistic", "strict", "cached", "mixed")
 
 # Per-mode search-cost counter deltas reported by the solver document
 # (must mirror `benchsnap::SOLVER_COUNTERS`).

@@ -41,6 +41,33 @@ impl ResidencyMode {
         }
     }
 
+    /// Canonical `u64` cache-key encoding of this mode, used by
+    /// [`crate::hera::cluster::GroupMemo`] and any other hashing path
+    /// instead of ad-hoc float comparison.
+    ///
+    /// `Full` maps to `u64::MAX`; `Cached(b)` maps to `b.to_bits()` after
+    /// canonicalizing the payload: every NaN collapses to the standard
+    /// quiet-NaN bit pattern and `-0.0` collapses to `+0.0`, so two modes
+    /// that compare equal (or are both NaN-sized, i.e. equally invalid)
+    /// can never key distinct cache entries.  No canonicalized finite or
+    /// NaN payload produces `u64::MAX` (that pattern is itself a NaN and
+    /// is re-canonicalized), so `Cached` can never alias `Full`.
+    pub fn key_bits(self) -> u64 {
+        match self {
+            ResidencyMode::Full => u64::MAX,
+            ResidencyMode::Cached(b) => {
+                if b.is_nan() {
+                    f64::NAN.to_bits()
+                } else if b == 0.0 {
+                    // +0.0 and -0.0 compare equal; key them equal too.
+                    0.0f64.to_bits()
+                } else {
+                    b.to_bits()
+                }
+            }
+        }
+    }
+
     /// Per-worker DRAM footprint of `model` under this residency: full
     /// tables + FC weights when resident, hot tier + FC weights when
     /// cached.  The single source of truth for capacity accounting —
@@ -76,6 +103,128 @@ pub enum ResidencyPolicy {
     /// Every tenant is served through its min-cache-for-SLA hot tier and
     /// the joint (cache + FC weight) footprint must fit node DRAM.
     Cached,
+}
+
+/// A per-tenant residency assignment for one co-located group — the
+/// N-mode generalization of [`ResidencyPolicy`].
+///
+/// `modes[i]` is the residency of the group's `i`-th tenant (aligned
+/// with the member order handed to the evaluator).  The two flags carry
+/// the policy semantics the three uniform assignments used to imply:
+/// `enforce_dram` runs the joint-DRAM shrink loop, and `dedup` credits
+/// shared embedding tables once per node (see [`dedup_savings`]) inside
+/// that fit check.  The [`ResidencyAssignment::from_policy`] constructor
+/// reproduces each uniform policy bit-for-bit, which is what keeps the
+/// `parity_group` / `parity_schedule` / `parity_hps` suites pinned.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResidencyAssignment {
+    /// Per-tenant residency, aligned with the group's member order.
+    pub modes: Vec<ResidencyMode>,
+    /// Enforce the joint node-DRAM fit (shrink workers until it holds).
+    pub enforce_dram: bool,
+    /// Credit cross-tenant shared-table dedup in the DRAM fit.
+    pub dedup: bool,
+}
+
+impl ResidencyAssignment {
+    /// The uniform assignment a [`ResidencyPolicy`] denotes for
+    /// `models`.  `min_cache` supplies each model's min-cache-for-SLA
+    /// hot-tier size (only consulted under [`ResidencyPolicy::Cached`]).
+    pub fn from_policy(
+        policy: ResidencyPolicy,
+        models: &[ModelId],
+        mut min_cache: impl FnMut(ModelId) -> f64,
+    ) -> ResidencyAssignment {
+        let modes = models
+            .iter()
+            .map(|&m| match policy {
+                ResidencyPolicy::Cached => ResidencyMode::Cached(min_cache(m)),
+                _ => ResidencyMode::Full,
+            })
+            .collect();
+        ResidencyAssignment {
+            modes,
+            enforce_dram: policy != ResidencyPolicy::Optimistic,
+            dedup: false,
+        }
+    }
+
+    /// A mixed (per-tenant) assignment: joint-DRAM enforced, shared-table
+    /// dedup credited — the accounting the mode-assignment search uses.
+    pub fn mixed(modes: Vec<ResidencyMode>) -> ResidencyAssignment {
+        ResidencyAssignment {
+            modes,
+            enforce_dram: true,
+            dedup: true,
+        }
+    }
+
+    /// Whether every tenant runs the same kind of mode (all `Full` or
+    /// all `Cached`) — uniform assignments are the ones a single
+    /// [`ResidencyPolicy`] could have expressed.
+    pub fn is_uniform(&self) -> bool {
+        self.modes
+            .windows(2)
+            .all(|w| w[0].cache_bytes().is_some() == w[1].cache_bytes().is_some())
+    }
+
+    /// Canonical per-tenant [`ResidencyMode::key_bits`] vector, used to
+    /// key memo entries on the mode vector.
+    pub fn key_bits(&self) -> Vec<u64> {
+        self.modes.iter().map(|m| m.key_bits()).collect()
+    }
+}
+
+/// DRAM bytes saved on one node by deduplicating shared embedding
+/// tables across *fully-resident* co-tenants.
+///
+/// Models carrying the same [`crate::config::ModelSpec::shared_tables`]
+/// group id draw their embedding rows from one common table pool.  When
+/// two or more such models are co-located fully resident, the node keeps
+/// a single shared copy of that pool — sized by the largest member's
+/// table bytes — instead of every worker of every member replicating its
+/// own tables; each worker still carries its private FC weights.  The
+/// savings for one shared group g is therefore
+///
+/// ```text
+///   Σ_{i ∈ g, Full} workers_i · emb_bytes_i  −  max_{i ∈ g, Full} emb_bytes_i
+/// ```
+///
+/// and groups with fewer than two fully-resident co-located members save
+/// nothing.  Cached tenants never participate: their hot tiers are
+/// per-tenant sized and per-worker private by construction.
+pub fn dedup_savings<I>(tenants: I) -> f64
+where
+    I: IntoIterator<Item = (ModelId, usize, ResidencyMode)>,
+{
+    // (group id, Σ workers·emb bytes, max emb bytes, member count)
+    let mut groups: Vec<(u32, f64, f64, usize)> = Vec::new();
+    for (model, workers, mode) in tenants {
+        if mode != ResidencyMode::Full {
+            continue;
+        }
+        let Some(gid) = model.spec().shared_tables else {
+            continue;
+        };
+        let emb = model.spec().emb_gb * 1e9;
+        if emb <= 0.0 {
+            continue;
+        }
+        let contrib = workers as f64 * emb;
+        match groups.iter_mut().find(|g| g.0 == gid) {
+            Some(g) => {
+                g.1 += contrib;
+                g.2 = g.2.max(emb);
+                g.3 += 1;
+            }
+            None => groups.push((gid, contrib, emb, 1)),
+        }
+    }
+    groups
+        .iter()
+        .filter(|g| g.3 >= 2)
+        .map(|g| g.1 - g.2)
+        .sum()
 }
 
 /// One tenant's resource slice of a node.
@@ -202,9 +351,28 @@ impl Placement {
         self.tenants.iter().map(|t| t.qps).sum()
     }
 
-    /// Combined DRAM bytes of all tenants.
+    /// Combined DRAM bytes of all tenants, charged naively — every
+    /// worker of every tenant replicates its own tables.  This is the
+    /// seed's accounting; dedup-aware capacity checks go through
+    /// [`Placement::footprint_bytes`].
     pub fn dram_bytes(&self) -> f64 {
         self.tenants.iter().map(TenantAlloc::dram_bytes).sum()
+    }
+
+    /// DRAM bytes saved on this node by shared-table dedup across its
+    /// fully-resident co-tenants (see [`dedup_savings`]).
+    pub fn dedup_savings_bytes(&self) -> f64 {
+        dedup_savings(
+            self.tenants
+                .iter()
+                .map(|t| (t.model, t.rv.workers, t.rv.residency)),
+        )
+    }
+
+    /// Dedup-aware DRAM footprint: the naive per-tenant sum minus the
+    /// shared-table bytes charged once per node.
+    pub fn footprint_bytes(&self) -> f64 {
+        self.dram_bytes() - self.dedup_savings_bytes()
     }
 
     /// Budget sum of all tenant slices (workers, ways, hot-tier bytes).
@@ -356,6 +524,107 @@ mod tests {
             }],
         };
         assert!(!too_many_ways.fits_node(&node));
+    }
+
+    #[test]
+    fn key_bits_cannot_alias_distinct_modes() {
+        // Signed zeros compare equal and must key equal.
+        assert_eq!(
+            ResidencyMode::Cached(0.0).key_bits(),
+            ResidencyMode::Cached(-0.0).key_bits()
+        );
+        // Every NaN payload collapses to one key — including the payload
+        // whose raw bits are u64::MAX, which must not alias `Full`.
+        let weird_nan = f64::from_bits(u64::MAX);
+        assert!(weird_nan.is_nan());
+        assert_eq!(
+            ResidencyMode::Cached(weird_nan).key_bits(),
+            ResidencyMode::Cached(f64::NAN).key_bits()
+        );
+        assert_ne!(
+            ResidencyMode::Cached(weird_nan).key_bits(),
+            ResidencyMode::Full.key_bits()
+        );
+        // Distinct finite payloads key distinct; equal payloads equal.
+        assert_ne!(
+            ResidencyMode::Cached(1e9).key_bits(),
+            ResidencyMode::Cached(2e9).key_bits()
+        );
+        assert_eq!(
+            ResidencyMode::Cached(1e9).key_bits(),
+            ResidencyMode::Cached(1e9).key_bits()
+        );
+        assert_ne!(
+            ResidencyMode::Cached(1e9).key_bits(),
+            ResidencyMode::Full.key_bits()
+        );
+    }
+
+    #[test]
+    fn uniform_assignments_carry_policy_semantics() {
+        let models = [id("ncf"), id("dlrm_b")];
+        let opt =
+            ResidencyAssignment::from_policy(ResidencyPolicy::Optimistic, &models, |_| 1e9);
+        assert!(!opt.enforce_dram && !opt.dedup && opt.is_uniform());
+        assert!(opt.modes.iter().all(|m| *m == ResidencyMode::Full));
+        let strict =
+            ResidencyAssignment::from_policy(ResidencyPolicy::Strict, &models, |_| 1e9);
+        assert!(strict.enforce_dram && !strict.dedup && strict.is_uniform());
+        let cached =
+            ResidencyAssignment::from_policy(ResidencyPolicy::Cached, &models, |_| 2e9);
+        assert!(cached.enforce_dram && cached.is_uniform());
+        assert!(cached.modes.iter().all(|m| *m == ResidencyMode::Cached(2e9)));
+        let mixed = ResidencyAssignment::mixed(vec![
+            ResidencyMode::Full,
+            ResidencyMode::Cached(2e9),
+        ]);
+        assert!(mixed.enforce_dram && mixed.dedup && !mixed.is_uniform());
+        assert_eq!(
+            mixed.key_bits(),
+            vec![u64::MAX, ResidencyMode::Cached(2e9).key_bits()]
+        );
+    }
+
+    #[test]
+    fn dedup_credits_shared_tables_once_per_node() {
+        // wnd and din share a table group (config::models); ncf does not.
+        let (wnd, din, ncf) = (id("wnd"), id("din"), id("ncf"));
+        assert_eq!(wnd.spec().shared_tables, din.spec().shared_tables);
+        assert!(wnd.spec().shared_tables.is_some());
+        assert!(ncf.spec().shared_tables.is_none());
+        let t = |m: ModelId, w: usize, mode: ResidencyMode| TenantAlloc {
+            model: m,
+            rv: ResourceVector {
+                workers: w,
+                ways: 3,
+                residency: mode,
+            },
+            qps: 1.0,
+        };
+        let p = Placement {
+            tenants: vec![
+                t(wnd, 5, ResidencyMode::Full),
+                t(din, 6, ResidencyMode::Full),
+                t(ncf, 5, ResidencyMode::Full),
+            ],
+        };
+        let (ew, ed) = (wnd.spec().emb_gb * 1e9, din.spec().emb_gb * 1e9);
+        let expect = 5.0 * ew + 6.0 * ed - ew.max(ed);
+        assert!((p.dedup_savings_bytes() - expect).abs() < 1.0);
+        assert!((p.footprint_bytes() - (p.dram_bytes() - expect)).abs() < 1.0);
+        // A lone shared-group member saves nothing; a cached member does
+        // not participate in the dedup pool.
+        let solo_member = Placement {
+            tenants: vec![t(wnd, 5, ResidencyMode::Full), t(ncf, 5, ResidencyMode::Full)],
+        };
+        assert_eq!(solo_member.dedup_savings_bytes(), 0.0);
+        let cached_out = Placement {
+            tenants: vec![
+                t(wnd, 5, ResidencyMode::Full),
+                t(din, 6, ResidencyMode::Cached(1e9)),
+            ],
+        };
+        assert_eq!(cached_out.dedup_savings_bytes(), 0.0);
     }
 
     #[test]

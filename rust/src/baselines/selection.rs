@@ -33,6 +33,11 @@ pub struct SelectionOpts {
     /// Beam-extension ranking for the Hera scheduler's large-pool
     /// search (ignored by the random baselines, which never beam).
     pub beam_score: BeamScore,
+    /// Per-tenant mode-assignment search (`--residency mixed`): every
+    /// co-located group is deployed under the best per-tenant
+    /// [`crate::alloc::ResidencyMode`] vector the search finds, with
+    /// shared-table dedup credited; `residency` is ignored while set.
+    pub mixed: bool,
 }
 
 impl Default for SelectionOpts {
@@ -41,6 +46,7 @@ impl Default for SelectionOpts {
             residency: ResidencyPolicy::default(),
             max_group: 2,
             beam_score: BeamScore::default(),
+            mixed: false,
         }
     }
 }
@@ -123,6 +129,7 @@ impl SelectionPolicy {
         match self {
             SelectionPolicy::Hera => ClusterScheduler::new(store, matrix)
                 .with_residency(opts.residency)
+                .with_mixed_residency(opts.mixed)
                 .with_max_group(opts.max_group)
                 .with_beam_score(opts.beam_score)
                 .schedule(targets),
@@ -245,7 +252,14 @@ fn schedule_random(
             continue;
         }
         let members = &groups[rng.next_below(groups.len() as u64) as usize];
-        let s: Placement = memo.evaluate(store, matrix, members, opts.residency);
+        // The RNG draw sequence is identical either way — `mixed` only
+        // changes how a drawn group is deployed, so baseline comparisons
+        // against the mixed Hera scheduler stay apples-to-apples.
+        let s: Placement = if opts.mixed {
+            memo.evaluate_mixed(store, matrix, members, None)
+        } else {
+            memo.evaluate(store, matrix, members, opts.residency)
+        };
         // A degenerate group that cannot serve any member would loop
         // forever; fall back to solo for the first member.
         if s.tenants.iter().all(|t| t.qps <= 0.0) {
@@ -399,6 +413,32 @@ mod tests {
             for m in ModelId::all() {
                 assert!(
                     (legacy.serviced[m.index()] - opted.serviced[m.index()]).abs() < 1e-9
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_selection_meets_targets_with_honest_fit() {
+        // `--residency mixed` end-to-end through the selection layer:
+        // both the Hera scheduler and the random baseline deploy
+        // mode-assigned groups, every server fits node DRAM under the
+        // dedup-aware footprint, and targets are still met.
+        let targets = scaled_targets(&STORE, 1.2);
+        let opts = SelectionOpts {
+            mixed: true,
+            ..Default::default()
+        };
+        for policy in [SelectionPolicy::Hera, SelectionPolicy::Random] {
+            let plan = policy
+                .schedule_with(&STORE, &MATRIX, &targets, 5, opts)
+                .unwrap();
+            assert!(plan.meets(&targets), "{} misses targets", policy.name());
+            for s in &plan.servers {
+                assert!(
+                    s.footprint_bytes() <= STORE.node.dram_capacity_gb * 1e9,
+                    "{}: mixed plan deploys an over-subscribed server {s}",
+                    policy.name()
                 );
             }
         }

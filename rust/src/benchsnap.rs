@@ -259,6 +259,15 @@ pub fn run(opts: &SnapshotOpts) -> anyhow::Result<(Value, Value, Value)> {
             .schedule(&targets_uni)
             .unwrap()
     });
+    bs.run(&format!("schedule_{n_uni}_g{g}_mixed"), || {
+        ClusterScheduler::new(&store_uni, &matrix_uni)
+            .with_mixed_residency(true)
+            .with_max_group(g)
+            .with_eval_threads(threads)
+            .with_beam_score(opts.beam_score)
+            .schedule(&targets_uni)
+            .unwrap()
+    });
     bs.report();
 
     // ---- Plan-quality metrics (computed once, untimed) ----------------
@@ -302,6 +311,22 @@ pub fn run(opts: &SnapshotOpts) -> anyhow::Result<(Value, Value, Value)> {
         &format!("universe_{n_uni}_cached_g{g}"),
         n_uni,
         "cached",
+        g,
+        &plan,
+        &targets_uni,
+        memo.len(),
+    ));
+
+    let mut memo = GroupMemo::new();
+    let plan = ClusterScheduler::new(&store_uni, &matrix_uni)
+        .with_mixed_residency(true)
+        .with_max_group(g)
+        .with_eval_threads(threads)
+        .schedule_with_memo(&targets_uni, &mut memo)?;
+    plans.push(plan_json(
+        &format!("universe_{n_uni}_mixed_g{g}"),
+        n_uni,
+        "mixed",
         g,
         &plan,
         &targets_uni,
@@ -450,7 +475,13 @@ mod tests {
             assert!(!obs.req("metrics").unwrap().as_array().unwrap().is_empty());
         }
         let plans = sched.req("plans").unwrap().as_array().unwrap();
-        assert_eq!(plans.len(), 3);
+        assert_eq!(plans.len(), 4);
+        assert!(
+            plans
+                .iter()
+                .any(|p| p.req("residency").unwrap().as_str() == Some("mixed")),
+            "mixed universe plan row present"
+        );
         for p in plans {
             assert!(p.req("servers").unwrap().as_usize().unwrap() > 0);
             assert!(p.req("serviced_qps").unwrap().as_f64().unwrap() > 0.0);

@@ -46,6 +46,14 @@ pub struct ModelSpec {
     /// `embedcache` hot-tier hit curve; production traces show strong
     /// access skew — HugeCTR HPS, Hercules).
     pub skew: f64,
+    /// Deterministic shared-table group id: models carrying the same id
+    /// draw their embedding rows from one common table pool (e.g. two
+    /// generations of the same ranker, or CTR models sharing a
+    /// user-behaviour catalog), so fully-resident co-tenants on one node
+    /// need only one copy of the pool (see [`crate::alloc::dedup_savings`]).
+    /// `None` means the tables are private.  Synthetic universe models
+    /// inherit their archetype's group id verbatim.
+    pub shared_tables: Option<u32>,
 }
 
 /// Compact model identifier — index into the global model registry.
@@ -103,6 +111,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         fc_mb: 0.2,
         sla_ms: 100.0,
         skew: 1.05,
+        shared_tables: Some(0),
     },
     ModelSpec {
         name: "dlrm_b",
@@ -118,6 +127,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         fc_mb: 0.5,
         sla_ms: 400.0,
         skew: 1.1,
+        shared_tables: Some(0),
     },
     ModelSpec {
         name: "dlrm_c",
@@ -133,6 +143,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         fc_mb: 12.0,
         sla_ms: 100.0,
         skew: 1.05,
+        shared_tables: None,
     },
     ModelSpec {
         name: "dlrm_d",
@@ -148,6 +159,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         fc_mb: 0.2,
         sla_ms: 100.0,
         skew: 1.0,
+        shared_tables: None,
     },
     ModelSpec {
         name: "ncf",
@@ -163,6 +175,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         fc_mb: 0.6,
         sla_ms: 5.0,
         skew: 0.9,
+        shared_tables: None,
     },
     ModelSpec {
         name: "dien",
@@ -178,6 +191,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         fc_mb: 0.2,
         sla_ms: 35.0,
         skew: 1.2,
+        shared_tables: Some(1),
     },
     ModelSpec {
         name: "din",
@@ -193,6 +207,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         fc_mb: 0.2,
         sla_ms: 100.0,
         skew: 1.2,
+        shared_tables: Some(1),
     },
     ModelSpec {
         name: "wnd",
@@ -208,6 +223,7 @@ pub static MODELS: [ModelSpec; N_MODELS] = [
         fc_mb: 8.0,
         sla_ms: 25.0,
         skew: 1.1,
+        shared_tables: Some(1),
     },
 ];
 
@@ -449,6 +465,22 @@ mod tests {
             a.row_accesses_per_item() as f64 * a.row_bytes(),
             a.emb_bytes_per_item()
         );
+    }
+
+    #[test]
+    fn shared_table_groups_are_deterministic() {
+        // The dedup seams the scheduler relies on: the 64-dim social
+        // rankers share one pool, the 32-dim CTR models another, and the
+        // remaining zoo keeps private tables.
+        let gid = |n: &str| ModelId::from_name(n).unwrap().spec().shared_tables;
+        assert_eq!(gid("dlrm_a"), Some(0));
+        assert_eq!(gid("dlrm_b"), Some(0));
+        assert_eq!(gid("dien"), Some(1));
+        assert_eq!(gid("din"), Some(1));
+        assert_eq!(gid("wnd"), Some(1));
+        for n in ["dlrm_c", "dlrm_d", "ncf"] {
+            assert_eq!(gid(n), None, "{n} tables are private");
+        }
     }
 
     #[test]

@@ -86,6 +86,10 @@ pub fn generate_universe(spec: &UniverseSpec) -> Vec<ModelId> {
         let fc_mb = arch.fc_mb * rng.range_f64(spec.fc_scale.0, spec.fc_scale.1);
         let name: &'static str =
             Box::leak(format!("syn{stamp}_{i}_{}", arch.name).into_boxed_str());
+        // The archetype spread also carries `shared_tables` verbatim:
+        // synthetic models deterministically join their archetype's
+        // shared-table pool (no RNG draw, so the fixed draw order above
+        // is untouched and old seeds reproduce bit-for-bit).
         specs.push(ModelSpec {
             name,
             domain: "synthetic",
@@ -139,6 +143,13 @@ mod tests {
             assert!(m.flops_per_item() > 0.0);
             assert!(m.worker_bytes() > 0.0);
             assert_eq!(ModelId::from_name(m.name), Some(*id));
+            // Shared-table pools are inherited from the archetype the
+            // name records, never invented per-model.
+            let arch = m.name.rsplit('_').next().unwrap();
+            let arch_full = ModelId::all()
+                .find(|a| m.name.ends_with(a.name()))
+                .unwrap_or_else(|| panic!("{}: unknown archetype {arch}", m.name));
+            assert_eq!(m.shared_tables, arch_full.spec().shared_tables, "{}", m.name);
         }
     }
 

@@ -12,8 +12,8 @@
 //! + leftover solo node), in normalized units per node.
 
 use crate::alloc::{Placement, ResidencyPolicy};
-use crate::config::ModelId;
-use crate::hera::cluster::GroupMemo;
+use crate::config::{generate_universe, ModelId, UniverseSpec};
+use crate::hera::cluster::{scaled_targets, BeamScore, ClusterScheduler, GroupMemo};
 use crate::hera::AffinityMatrix;
 use crate::profiler::ProfileStore;
 
@@ -53,6 +53,33 @@ pub fn sweep_groups_with_memo(
     max_size: usize,
     memo: &mut GroupMemo,
 ) -> Vec<Placement> {
+    subsets(models, max_size)
+        .iter()
+        .map(|members| memo.evaluate(store, matrix, members, policy))
+        .collect()
+}
+
+/// [`sweep_groups`] under the per-tenant mode-assignment search: every
+/// subset is deployed by [`GroupMemo::evaluate_mixed`], so each group
+/// gets the best residency-mode vector the search finds (with
+/// shared-table dedup credited) instead of one uniform policy.
+pub fn sweep_groups_mixed(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    models: &[ModelId],
+    max_size: usize,
+) -> Vec<Placement> {
+    let mut memo = GroupMemo::new();
+    subsets(models, max_size)
+        .iter()
+        .map(|members| memo.evaluate_mixed(store, matrix, members, None))
+        .collect()
+}
+
+/// Every non-empty subset of `models` of at most `max_size` members, in
+/// the sweep's canonical increasing-bitmask order (`max_size = 0` means
+/// no cap).
+fn subsets(models: &[ModelId], max_size: usize) -> Vec<Vec<ModelId>> {
     assert!(
         (1..=8).contains(&models.len()),
         "sweep needs 1..=8 models, got {}",
@@ -64,13 +91,14 @@ pub fn sweep_groups_with_memo(
         if mask.count_ones() as usize > cap {
             continue;
         }
-        let members: Vec<ModelId> = models
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| mask & (1 << i) != 0)
-            .map(|(_, &m)| m)
-            .collect();
-        out.push(memo.evaluate(store, matrix, &members, policy));
+        out.push(
+            models
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| mask & (1 << i) != 0)
+                .map(|(_, &m)| m)
+                .collect(),
+        );
     }
     out
 }
@@ -201,6 +229,209 @@ pub fn group_sweep(ctx: &FigureContext) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The three uniform policies the mixed search competes against.
+const PURE_POLICIES: [(ResidencyPolicy, &str); 3] = [
+    (ResidencyPolicy::Optimistic, "optimistic"),
+    (ResidencyPolicy::Strict, "strict"),
+    (ResidencyPolicy::Cached, "cached"),
+];
+
+/// Whether the mixed deployment is strictly better than a pure one:
+/// honest fit first (a mixed plan that fits beats a pure plan that
+/// would OOM), then aggregate QPS, then fewer deployed bytes at equal
+/// QPS (the shared-table dedup credit).
+fn mixed_beats(mixed: &Placement, pure: &Placement, cap: f64) -> bool {
+    let (fit_m, fit_p) = (mixed.footprint_bytes() <= cap, pure.dram_bytes() <= cap);
+    if fit_m != fit_p {
+        return fit_m;
+    }
+    let (qm, qp) = (mixed.total_qps(), pure.total_qps());
+    if (qm - qp).abs() > 1e-6 {
+        return qm > qp;
+    }
+    mixed.footprint_bytes() < pure.dram_bytes() - 1e-6
+}
+
+/// The `mixed` figure: per-tenant residency-mode assignment vs the three
+/// uniform policies, at seed scale (every subset of the shared-table
+/// trio NCF+WnD+DIN and of the big-table sharing pair DLRM(A)+DLRM(B))
+/// and at cluster scale (a full synthetic-universe schedule under each
+/// residency axis).  Writes `mixed_residency.csv`; the `beats_all_pure`
+/// column flags mixed deployments strictly better than *every* uniform
+/// policy, `dedup_gb` makes the shared-table savings visible.
+pub fn mixed_residency(ctx: &FigureContext) -> anyhow::Result<()> {
+    let cap = ctx.store.node.dram_capacity_gb * 1e9;
+    let mut rows = Vec::new();
+    let row = |scope: &str,
+               label: &str,
+               policy: &str,
+               tenants: usize,
+               servers: usize,
+               agg_qps: f64,
+               norm_pct: f64,
+               deployed: f64,
+               dedup: f64,
+               fits: bool,
+               beats: bool|
+     -> Vec<String> {
+        vec![
+            scope.to_string(),
+            label.to_string(),
+            policy.to_string(),
+            tenants.to_string(),
+            servers.to_string(),
+            fmt(agg_qps),
+            fmt(norm_pct),
+            fmt(deployed / 1e9),
+            fmt(dedup / 1e9),
+            if fits { "1" } else { "0" }.to_string(),
+            if beats { "1" } else { "0" }.to_string(),
+        ]
+    };
+
+    // ---- Seed scale: the shared-table trio (WnD+DIN share pool 1) and
+    // the big-table sharing pair (DLRM(A)+DLRM(B) share pool 0, which
+    // over-subscribes the node without the dedup credit). -------------
+    let mut memo = GroupMemo::new();
+    let mut seed_mixed_wins = 0usize;
+    for names in [&["ncf", "wnd", "din"][..], &["dlrm_a", "dlrm_b"][..]] {
+        let models: Vec<ModelId> = names
+            .iter()
+            .map(|n| ModelId::from_name(n).unwrap())
+            .collect();
+        for members in subsets(&models, 0) {
+            let label = members
+                .iter()
+                .map(|m| m.name())
+                .collect::<Vec<_>>()
+                .join("+");
+            let pures: Vec<(Placement, &str)> = PURE_POLICIES
+                .iter()
+                .map(|&(p, tag)| (memo.evaluate(&ctx.store, &ctx.matrix, &members, p), tag))
+                .collect();
+            let mixed = memo.evaluate_mixed(&ctx.store, &ctx.matrix, &members, None);
+            for (p, tag) in &pures {
+                rows.push(row(
+                    "seed",
+                    &label,
+                    tag,
+                    p.tenants.len(),
+                    1,
+                    p.total_qps(),
+                    normalized_qps_pct(&ctx.store, p),
+                    p.dram_bytes(),
+                    0.0,
+                    p.dram_bytes() <= cap,
+                    false,
+                ));
+            }
+            let beats = pures.iter().all(|(p, _)| mixed_beats(&mixed, p, cap));
+            seed_mixed_wins += usize::from(beats);
+            rows.push(row(
+                "seed",
+                &label,
+                "mixed",
+                mixed.tenants.len(),
+                1,
+                mixed.total_qps(),
+                normalized_qps_pct(&ctx.store, &mixed),
+                mixed.footprint_bytes(),
+                mixed.dedup_savings_bytes(),
+                mixed.footprint_bytes() <= cap,
+                beats,
+            ));
+        }
+    }
+
+    // ---- Cluster scale: one synthetic-universe schedule per residency
+    // axis (archetype shared-table pools carry into the universe). -----
+    let n_uni = if ctx.fast { 12 } else { 200 };
+    let threads = crate::par::default_threads();
+    let ids = generate_universe(&UniverseSpec::new(n_uni, 42));
+    let store = ProfileStore::build_for_with_threads(&ctx.store.node, &ids, threads);
+    let targets = scaled_targets(&store, 0.4);
+    let target_sum: f64 = targets.iter().sum();
+    let label = format!("universe_{n_uni}");
+    let mut pure_plans = Vec::new();
+    for &(policy, tag) in &PURE_POLICIES {
+        let matrix = AffinityMatrix::build_with_threads(&store, policy, threads);
+        let plan = ClusterScheduler::new(&store, &matrix)
+            .with_residency(policy)
+            .with_max_group(3)
+            .with_eval_threads(threads)
+            .with_beam_score(BeamScore::auto_for(n_uni))
+            .schedule(&targets)?;
+        pure_plans.push((plan, tag));
+    }
+    let matrix_opt = AffinityMatrix::build_with_threads(&store, ResidencyPolicy::Optimistic, threads);
+    let mixed_plan = ClusterScheduler::new(&store, &matrix_opt)
+        .with_mixed_residency(true)
+        .with_max_group(3)
+        .with_eval_threads(threads)
+        .with_beam_score(BeamScore::auto_for(n_uni))
+        .schedule(&targets)?;
+    for (plan, tag) in &pure_plans {
+        let deployed: f64 = plan.servers.iter().map(Placement::dram_bytes).sum();
+        rows.push(row(
+            "universe",
+            &label,
+            tag,
+            n_uni,
+            plan.num_servers(),
+            plan.serviced.iter().sum(),
+            100.0 * plan.serviced.iter().sum::<f64>() / target_sum.max(1e-9),
+            deployed,
+            0.0,
+            plan.servers.iter().all(|s| s.dram_bytes() <= cap),
+            false,
+        ));
+    }
+    let mixed_deployed: f64 = mixed_plan.servers.iter().map(Placement::footprint_bytes).sum();
+    let mixed_dedup: f64 = mixed_plan
+        .servers
+        .iter()
+        .map(Placement::dedup_savings_bytes)
+        .sum();
+    // At cluster scale "strictly better" is fewer servers for the same
+    // met targets, or the same servers deployed in fewer honest bytes.
+    let cluster_beats = pure_plans.iter().all(|(p, _)| {
+        let pure_deployed: f64 = p.servers.iter().map(Placement::dram_bytes).sum();
+        mixed_plan.num_servers() < p.num_servers()
+            || (mixed_plan.num_servers() == p.num_servers()
+                && mixed_deployed < pure_deployed - 1e-6)
+    });
+    rows.push(row(
+        "universe",
+        &label,
+        "mixed",
+        n_uni,
+        mixed_plan.num_servers(),
+        mixed_plan.serviced.iter().sum(),
+        100.0 * mixed_plan.serviced.iter().sum::<f64>() / target_sum.max(1e-9),
+        mixed_deployed,
+        mixed_dedup,
+        mixed_plan.servers.iter().all(|s| s.footprint_bytes() <= cap),
+        cluster_beats,
+    ));
+    println!(
+        "  mixed beats all three pure policies on {seed_mixed_wins} seed group(s); \
+         universe_{n_uni}: {} servers (mixed) vs {} (best pure), dedup {:.2} GB",
+        mixed_plan.num_servers(),
+        pure_plans
+            .iter()
+            .map(|(p, _)| p.num_servers())
+            .min()
+            .unwrap_or(0),
+        mixed_dedup / 1e9
+    );
+    ctx.write_csv(
+        "mixed_residency.csv",
+        "scope,members,policy,tenants,servers,agg_qps,norm_qps_pct,deployed_gb,dedup_gb,fits,beats_all_pure",
+        &rows,
+    )?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,6 +465,56 @@ mod tests {
         let capped = sweep_groups(&STORE, &MATRIX, &trio, ResidencyPolicy::Optimistic, 2);
         assert_eq!(capped.len(), 6, "the triple is excluded at max_size 2");
         assert!(capped.iter().all(|p| p.tenants.len() <= 2));
+    }
+
+    #[test]
+    fn mixed_sweep_never_trails_the_pure_sweeps() {
+        // Subset-by-subset, the mode-assignment sweep must match or beat
+        // each uniform-policy sweep on (honest fit, aggregate QPS).
+        let trio = [id("ncf"), id("wnd"), id("din")];
+        let cap = STORE.node.dram_capacity_gb * 1e9;
+        let mixed = sweep_groups_mixed(&STORE, &MATRIX, &trio, 0);
+        for policy in [
+            ResidencyPolicy::Optimistic,
+            ResidencyPolicy::Strict,
+            ResidencyPolicy::Cached,
+        ] {
+            let pure = sweep_groups(&STORE, &MATRIX, &trio, policy, 0);
+            for (m, p) in mixed.iter().zip(&pure) {
+                assert_eq!(m.models(), p.models(), "same subset order");
+                let (fit_m, fit_p) = (m.footprint_bytes() <= cap, p.dram_bytes() <= cap);
+                assert!(fit_m >= fit_p, "{policy:?}: {m} loses fit to {p}");
+                if fit_m == fit_p {
+                    assert!(
+                        m.total_qps() >= p.total_qps() - 1e-6,
+                        "{policy:?}: {m} loses qps to {p}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_figure_shows_dominance_and_dedup() {
+        let dir = std::env::temp_dir().join("hera_mixedfig_test");
+        let ctx = FigureContext::new(&dir, true);
+        mixed_residency(&ctx).unwrap();
+        let text = std::fs::read_to_string(dir.join("mixed_residency.csv")).unwrap();
+        assert!(text.starts_with("scope,members,policy"));
+        // At least one mixed deployment strictly beats every uniform
+        // policy (beats_all_pure is the last column) ...
+        let wins = text
+            .lines()
+            .filter(|l| l.contains(",mixed,") && l.ends_with(",1"))
+            .count();
+        assert!(wins >= 1, "no mixed row beats all pures:\n{text}");
+        // ... and the shared-table dedup savings are visible in the CSV.
+        let dedup_positive = text.lines().filter(|l| l.contains(",mixed,")).any(|l| {
+            let cols: Vec<&str> = l.split(',').collect();
+            cols[8].parse::<f64>().unwrap_or(0.0) > 0.0
+        });
+        assert!(dedup_positive, "no dedup savings visible:\n{text}");
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

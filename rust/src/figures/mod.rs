@@ -15,7 +15,9 @@ mod cluster_figs;
 pub use cache_figs::{sweep_points, CachePoint};
 pub use hps_figs::{sweep_hps_points, HpsPoint};
 pub use emu::{emu_pair_analytic, emu_sweep_curve, measured_pair_qps_sim};
-pub use group_figs::{normalized_qps_pct, sweep_groups, sweep_groups_with_memo};
+pub use group_figs::{
+    normalized_qps_pct, sweep_groups, sweep_groups_mixed, sweep_groups_with_memo,
+};
 
 use std::path::{Path, PathBuf};
 
@@ -98,6 +100,7 @@ impl FigureContext {
             "group" => group_figs::group_sweep(self),
             "group-scaling" => cluster_figs::group_scaling(self),
             "strict" => cluster_figs::strict_delta(self),
+            "mixed" => group_figs::mixed_residency(self),
             other => anyhow::bail!("unknown figure id {other:?}"),
         }
     }
@@ -106,7 +109,7 @@ impl FigureContext {
         for id in [
             "table1", "table2", "3", "4", "5", "6", "7", "9", "10", "11", "12",
             "13", "14", "15", "16", "17", "cache", "hps", "group",
-            "group-scaling", "strict",
+            "group-scaling", "strict", "mixed",
         ] {
             println!("== figure {id} ==");
             self.run(id)?;

@@ -27,7 +27,7 @@
 
 use once_cell::sync::Lazy;
 
-use crate::alloc::ResidencyPolicy;
+use crate::alloc::{ResidencyMode, ResidencyPolicy};
 use crate::config::ModelId;
 use crate::node::for_each_ways_split;
 use crate::obs::{names, Histogram, BUILD_BUCKETS_S};
@@ -91,18 +91,41 @@ pub fn group_affinity(
     models: &[ModelId],
     policy: ResidencyPolicy,
 ) -> GroupAffinity {
+    // The uniform-policy mode vector; delegation keeps the arithmetic
+    // bit-identical to the pre-refactor policy-keyed scorer.
+    let modes: Vec<ResidencyMode> = models
+        .iter()
+        .map(|&m| match policy {
+            ResidencyPolicy::Cached => ResidencyMode::Cached(store.min_cache_for_sla(m)),
+            _ => ResidencyMode::Full,
+        })
+        .collect();
+    group_affinity_modes(store, models, &modes)
+}
+
+/// [`group_affinity`] generalized to a per-tenant [`ResidencyMode`]
+/// vector (`modes[i]` belongs to `models[i]`): mixed-residency groups
+/// score each member under its *own* hot-tier retention — a cached
+/// big-table tenant is discounted while its fully-resident co-tenants
+/// are not.  Uniform mode vectors reproduce the policy scorer
+/// bit-for-bit (it delegates here).
+pub fn group_affinity_modes(
+    store: &ProfileStore,
+    models: &[ModelId],
+    modes: &[ResidencyMode],
+) -> GroupAffinity {
     let node = &store.node;
     let n = models.len();
     assert!(n >= 1 && n <= node.llc_ways, "one way per tenant required");
+    assert_eq!(modes.len(), n, "one residency mode per member");
 
     // Hot-tier QPS retention per member; 1.0 at full residency.
     let factors: Vec<f64> = models
         .iter()
-        .map(|&m| match policy {
-            ResidencyPolicy::Cached => {
-                store.cache_qps_factor(m, store.min_cache_for_sla(m))
-            }
-            _ => 1.0,
+        .zip(modes)
+        .map(|(&m, mode)| match mode {
+            ResidencyMode::Cached(b) => store.cache_qps_factor(m, *b),
+            ResidencyMode::Full => 1.0,
         })
         .collect();
     let cache = factors.iter().sum::<f64>() / n as f64;
@@ -465,6 +488,42 @@ mod tests {
         );
         // Retention-scaled demand can only shrink: CoAff_DRAM never drops.
         assert!(big.dram >= opt.get(id("dlrm_b"), id("dlrm_d")).dram - 1e-12);
+    }
+
+    #[test]
+    fn mode_vector_scorer_brackets_the_uniform_policies() {
+        // Uniform mode vectors delegate bit-for-bit; a genuinely mixed
+        // vector discounts only its cached members, so its mean retention
+        // sits strictly between the all-resident and all-cached scores
+        // whenever the cached member pays a real hot-tier penalty.
+        let models = [id("dlrm_b"), id("ncf")];
+        let full = group_affinity(&STORE, &models, ResidencyPolicy::Optimistic);
+        let cached = group_affinity(&STORE, &models, ResidencyPolicy::Cached);
+        let full_modes =
+            group_affinity_modes(&STORE, &models, &[ResidencyMode::Full, ResidencyMode::Full]);
+        assert_eq!(full, full_modes, "uniform Full must delegate exactly");
+        let cached_modes = group_affinity_modes(
+            &STORE,
+            &models,
+            &[
+                ResidencyMode::Cached(STORE.min_cache_for_sla(models[0])),
+                ResidencyMode::Cached(STORE.min_cache_for_sla(models[1])),
+            ],
+        );
+        assert_eq!(cached, cached_modes, "uniform Cached must delegate exactly");
+        let mixed = group_affinity_modes(
+            &STORE,
+            &models,
+            &[
+                ResidencyMode::Cached(STORE.min_cache_for_sla(models[0])),
+                ResidencyMode::Full,
+            ],
+        );
+        assert!(mixed.cache <= full.cache + 1e-12);
+        assert!(mixed.cache + 1e-12 >= cached.cache);
+        if cached.cache < 1.0 - 1e-9 {
+            assert!(mixed.cache > cached.cache, "ncf keeps full retention");
+        }
     }
 
     #[test]

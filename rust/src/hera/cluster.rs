@@ -32,7 +32,10 @@ use std::path::Path;
 use anyhow::Context;
 use once_cell::sync::Lazy;
 
-use crate::alloc::{Placement, ResidencyMode, ResidencyPolicy, ResourceVector, TenantAlloc};
+use crate::alloc::{
+    dedup_savings, Placement, ResidencyAssignment, ResidencyMode, ResidencyPolicy,
+    ResourceVector, TenantAlloc,
+};
 use crate::config::{ModelId, NodeConfig};
 use crate::hps::{TenantMissDemand, TierStack, TIER_UTIL_CEILING};
 use crate::json::{parse, Value};
@@ -40,7 +43,7 @@ use crate::obs::{names, Counter};
 use crate::profiler::ProfileStore;
 use crate::server_sim::analytic::{solve, solve_hps, AnalyticTenant};
 
-use super::affinity::{group_affinity, AffinityMatrix};
+use super::affinity::{group_affinity_modes, AffinityMatrix};
 
 // Scheduler search counters in the global obs registry.  Statics rather
 // than struct fields so the all-pub `ClusterScheduler` / `GroupMemo`
@@ -56,6 +59,10 @@ static BEAM_PRUNED: Lazy<Counter> =
     Lazy::new(|| crate::obs::global().counter(names::BEAM_PRUNED_TOTAL, &[]));
 static GROWN_DISPLACEMENTS: Lazy<Counter> =
     Lazy::new(|| crate::obs::global().counter(names::GROWN_DISPLACEMENTS_TOTAL, &[]));
+static MIXED_ASSIGNMENTS: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::MIXED_ASSIGNMENTS_TOTAL, &[]));
+static DEDUP_SAVED: Lazy<Counter> =
+    Lazy::new(|| crate::obs::global().counter(names::DEDUP_BYTES_SAVED_TOTAL, &[]));
 
 /// The scheduler's output: server list + per-model serviced QPS, the
 /// latter indexed by the store's slot order (`== ModelId::index()` for
@@ -190,8 +197,12 @@ fn evaluate_group_inner(
     }
 }
 
-/// [`evaluate_group`] after canonical ordering — the single evaluator
-/// body shared by every policy and group size.
+/// [`evaluate_group`] after canonical ordering: build the uniform
+/// [`ResidencyAssignment`] the policy denotes and hand it to the
+/// assignment-driven evaluator body.  The uniform constructors carry the
+/// exact legacy semantics (residency vector, DRAM enforcement flag, no
+/// dedup credit), so policy evaluations stay bit-for-bit with the
+/// pre-refactor evaluator (`tests/parity_group.rs`).
 fn evaluate_group_canonical(
     store: &ProfileStore,
     matrix: &AffinityMatrix,
@@ -200,7 +211,6 @@ fn evaluate_group_canonical(
     hps: Option<&TierStack>,
     scratch: &mut EvalScratch,
 ) -> Placement {
-    let node = &store.node;
     if models.len() == 1 {
         // A group of one is a dedicated server; under `Cached` it still
         // honors the policy (hot tier instead of full residency).
@@ -209,22 +219,40 @@ fn evaluate_group_canonical(
             _ => evaluate_solo(store, models[0]),
         };
     }
-    let n = models.len();
+    let assign =
+        ResidencyAssignment::from_policy(policy, models, |m| store.min_cache_for_sla(m));
+    evaluate_group_assigned_canonical(store, matrix, models, &assign, hps, scratch)
+}
 
-    // Residency + per-worker DRAM footprint per tenant.
-    let residency: Vec<ResidencyMode> = models
-        .iter()
-        .map(|&m| match policy {
-            ResidencyPolicy::Cached => ResidencyMode::Cached(store.min_cache_for_sla(m)),
-            _ => ResidencyMode::Full,
-        })
-        .collect();
+/// The single evaluator body shared by every residency assignment and
+/// group size: per-tenant worker caps off each tenant's *own* mode, the
+/// assignment-gated joint-DRAM shrink, the mode-vector Algorithm-1 ways
+/// split, per-mode standalone rates, and the coupled proportional-scaling
+/// search.
+fn evaluate_group_assigned_canonical(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    models: &[ModelId],
+    assign: &ResidencyAssignment,
+    hps: Option<&TierStack>,
+    scratch: &mut EvalScratch,
+) -> Placement {
+    let node = &store.node;
+    if models.len() == 1 {
+        return match assign.modes[0] {
+            ResidencyMode::Cached(bytes) => evaluate_solo_cached_bytes(store, models[0], bytes),
+            ResidencyMode::Full => evaluate_solo(store, models[0]),
+        };
+    }
+    let n = models.len();
+    assert_eq!(assign.modes.len(), n, "one residency mode per tenant");
+    let residency: &[ResidencyMode] = &assign.modes;
 
     // Worker caps: the profiled OOM wall at full residency; behind a hot
     // tier the wall moves to the cache-aware footprint.
     let caps: Vec<usize> = models
         .iter()
-        .zip(&residency)
+        .zip(residency)
         .map(|(&m, r)| match r {
             ResidencyMode::Full => store.profile(m).max_workers,
             ResidencyMode::Cached(_) => node.capacity_limit(r.worker_bytes(m)),
@@ -237,16 +265,28 @@ fn evaluate_group_canonical(
         split_cores_n(node.cores, &caps)
     };
 
-    // Joint-DRAM enforcement (Strict + Cached): shrink the widest tenant
-    // until the whole group fits node DRAM.
-    if policy != ResidencyPolicy::Optimistic {
+    // Joint-DRAM enforcement (Strict + Cached + every mixed assignment):
+    // shrink the widest tenant until the whole group fits node DRAM.
+    // With dedup accounting on, shared tables among fully-resident
+    // co-tenants are charged once per node, so a sharing group fits at
+    // worker counts the naive sum would shrink.
+    if assign.enforce_dram {
         let fits = |w: &[usize]| -> bool {
-            let bytes: f64 = w
+            let mut bytes: f64 = w
                 .iter()
                 .zip(models)
-                .zip(&residency)
+                .zip(residency)
                 .map(|((&wi, &m), r)| wi as f64 * r.worker_bytes(m))
                 .sum();
+            if assign.dedup {
+                bytes -= dedup_savings(
+                    models
+                        .iter()
+                        .zip(w)
+                        .zip(residency)
+                        .map(|((&m, &wi), &r)| (m, wi, r)),
+                );
+            }
             bytes <= node.dram_capacity_gb * 1e9
         };
         while !fits(&workers) {
@@ -267,13 +307,14 @@ fn evaluate_group_canonical(
 
     // LLC partition: the pairwise Algorithm-1 matrix for two tenants
     // (whatever policy it was scored under — parity tests pass the seed's
-    // full-residency matrix), the policy-aware N-ary generalization
-    // beyond.
+    // full-residency matrix), the mode-vector N-ary generalization
+    // beyond (for uniform assignments this is exactly the policy-aware
+    // split the pre-refactor evaluator used).
     let ways: Vec<usize> = if n == 2 {
         let (ka, kb) = matrix.get(models[0], models[1]).best_partition;
         vec![ka, kb]
     } else {
-        group_affinity(store, models, policy).split
+        group_affinity_modes(store, models, residency).split
     };
 
     // Standalone sustainable rates.  Full residency reads the profiled
@@ -438,8 +479,14 @@ pub fn evaluate_solo(store: &ProfileStore, m: ModelId) -> Placement {
 /// cache-aware footprint instead of the full tables, which matters for
 /// big-table models on small-DRAM nodes.
 pub fn evaluate_solo_cached(store: &ProfileStore, m: ModelId) -> Placement {
+    evaluate_solo_cached_bytes(store, m, store.min_cache_for_sla(m))
+}
+
+/// [`evaluate_solo_cached`] at an explicit hot-tier size — the per-tenant
+/// building block mixed assignments size their cached tenants with.
+pub fn evaluate_solo_cached_bytes(store: &ProfileStore, m: ModelId, bytes: f64) -> Placement {
     let node = &store.node;
-    let residency = ResidencyMode::Cached(store.min_cache_for_sla(m));
+    let residency = ResidencyMode::Cached(bytes);
     let workers = node
         .capacity_limit(residency.worker_bytes(m))
         .min(node.cores)
@@ -456,6 +503,243 @@ pub fn evaluate_solo_cached(store: &ProfileStore, m: ModelId) -> Placement {
     }
 }
 
+/// Evaluate a group under an explicit per-tenant [`ResidencyAssignment`]
+/// (`assign.modes[i]` belongs to `models[i]`).  Like [`evaluate_group`],
+/// the evaluation runs in canonical sorted order — the mode vector is
+/// permuted alongside the members — and tenants come back in the
+/// caller's order.
+pub fn evaluate_group_assigned(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    models: &[ModelId],
+    assign: &ResidencyAssignment,
+) -> Placement {
+    evaluate_group_assigned_inner(
+        store,
+        matrix,
+        models,
+        assign,
+        None,
+        &mut EvalScratch::default(),
+    )
+}
+
+/// [`evaluate_group_assigned`] with hot-tier misses costed through a
+/// hierarchical parameter server (see [`evaluate_group_hps`]).
+pub fn evaluate_group_assigned_hps(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    models: &[ModelId],
+    assign: &ResidencyAssignment,
+    stack: &TierStack,
+) -> Placement {
+    evaluate_group_assigned_inner(
+        store,
+        matrix,
+        models,
+        assign,
+        Some(stack),
+        &mut EvalScratch::default(),
+    )
+}
+
+fn evaluate_group_assigned_inner(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    models: &[ModelId],
+    assign: &ResidencyAssignment,
+    hps: Option<&TierStack>,
+    scratch: &mut EvalScratch,
+) -> Placement {
+    assert!(!models.is_empty(), "a group needs at least one tenant");
+    assert!(
+        models.len() <= crate::server_sim::MAX_TENANTS,
+        "at most {} tenants per node",
+        crate::server_sim::MAX_TENANTS
+    );
+    assert_eq!(assign.modes.len(), models.len(), "one residency mode per tenant");
+    let mut order: Vec<usize> = (0..models.len()).collect();
+    order.sort_by_key(|&i| models[i]);
+    let sorted: Vec<ModelId> = order.iter().map(|&i| models[i]).collect();
+    let sorted_assign = ResidencyAssignment {
+        modes: order.iter().map(|&i| assign.modes[i]).collect(),
+        ..*assign
+    };
+    let canonical =
+        evaluate_group_assigned_canonical(store, matrix, &sorted, &sorted_assign, hps, scratch);
+    let mut tenants: Vec<Option<TenantAlloc>> = vec![None; models.len()];
+    for (&slot, t) in order.iter().zip(canonical.tenants) {
+        tenants[slot] = Some(t);
+    }
+    Placement {
+        tenants: tenants
+            .into_iter()
+            .map(|t| t.expect("every slot filled"))
+            .collect(),
+    }
+}
+
+/// Per-tenant mode-assignment search: the best placement for `models`
+/// over the three uniform policies *and* a greedy ladder of mixed
+/// assignments.
+///
+/// Candidates, in deterministic order:
+///
+/// 1. Uniform `Optimistic`, `Strict`, `Cached` — evaluated through the
+///    exact policy paths, so every pure-policy placement the figure
+///    sweeps report is in the candidate set verbatim.
+/// 2. A greedy ladder starting from all-`Full` with DRAM enforcement and
+///    shared-table dedup accounting on, then flipping the tenant with
+///    the largest per-worker footprint to its min-cache-for-SLA hot tier
+///    (sized through `stack` when an hps topology is attached), one
+///    tenant per rung until every tenant is cached.
+///
+/// Selection is lexicographic: placements whose dedup-aware footprint
+/// fits node DRAM beat ones that do not, then higher aggregate QPS, then
+/// smaller footprint, then fewer cached tenants, then candidate order.
+/// The three pure policies are always in the pool, so the winner is
+/// never worse than the best uniform policy under that order — the
+/// dominance invariant `tests/prop_mixed.rs` pins.
+pub fn evaluate_group_mixed(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    models: &[ModelId],
+    hps: Option<&TierStack>,
+) -> Placement {
+    assert!(!models.is_empty(), "a group needs at least one tenant");
+    assert!(
+        models.len() <= crate::server_sim::MAX_TENANTS,
+        "at most {} tenants per node",
+        crate::server_sim::MAX_TENANTS
+    );
+    let mut order: Vec<usize> = (0..models.len()).collect();
+    order.sort_by_key(|&i| models[i]);
+    let sorted: Vec<ModelId> = order.iter().map(|&i| models[i]).collect();
+    let canonical =
+        evaluate_group_mixed_canonical(store, matrix, &sorted, hps, &mut EvalScratch::default());
+    let mut tenants: Vec<Option<TenantAlloc>> = vec![None; models.len()];
+    for (&slot, t) in order.iter().zip(canonical.tenants) {
+        tenants[slot] = Some(t);
+    }
+    Placement {
+        tenants: tenants
+            .into_iter()
+            .map(|t| t.expect("every slot filled"))
+            .collect(),
+    }
+}
+
+fn evaluate_group_mixed_canonical(
+    store: &ProfileStore,
+    matrix: &AffinityMatrix,
+    models: &[ModelId],
+    hps: Option<&TierStack>,
+    scratch: &mut EvalScratch,
+) -> Placement {
+    let node = &store.node;
+    let n = models.len();
+    // Hot-tier sizing for ladder rungs: min cache for SLA, resolved
+    // against the tier stack's miss costs when one is attached (each
+    // tenant nominally carries an even share of its standalone max load,
+    // matching the scheduler's admissibility probe).
+    let tier = |m: ModelId| match hps {
+        Some(stack) => store.min_cache_for_sla_with(
+            m,
+            stack,
+            store.profile(m).max_load() / n as f64,
+        ),
+        None => store.min_cache_for_sla(m),
+    };
+
+    let mut cands: Vec<Placement> = Vec::with_capacity(3 + n + 1);
+    for policy in [
+        ResidencyPolicy::Optimistic,
+        ResidencyPolicy::Strict,
+        ResidencyPolicy::Cached,
+    ] {
+        cands.push(evaluate_group_canonical(store, matrix, models, policy, hps, scratch));
+    }
+    let mut modes = vec![ResidencyMode::Full; n];
+    loop {
+        let assign = ResidencyAssignment::mixed(modes.clone());
+        cands.push(evaluate_group_assigned_canonical(
+            store, matrix, models, &assign, hps, scratch,
+        ));
+        // Flip the fully-resident tenant with the largest per-worker
+        // footprint (ties: lowest canonical index) to its hot tier.
+        let mut widest: Option<usize> = None;
+        for i in 0..n {
+            if modes[i] != ResidencyMode::Full {
+                continue;
+            }
+            let wb = ResidencyMode::Full.worker_bytes(models[i]);
+            if widest.map_or(true, |j| wb > ResidencyMode::Full.worker_bytes(models[j])) {
+                widest = Some(i);
+            }
+        }
+        match widest {
+            Some(i) => modes[i] = ResidencyMode::Cached(tier(models[i])),
+            None => break,
+        }
+    }
+
+    // Lexicographic selection: DRAM fit, then aggregate QPS, then
+    // smaller footprint, then fewer cached tenants.  Each candidate is
+    // judged under the accounting it would actually *deploy* with — the
+    // pure policies reserve their naive per-tenant sum (they do not know
+    // about shared tables), ladder rungs reserve the dedup-aware
+    // footprint.  Strict comparisons keep the earliest candidate on
+    // ties, so uniform winners come out through the exact pure-policy
+    // placements and the search is deterministic.
+    let cap = node.dram_capacity_gb * 1e9;
+    let deployed_bytes = |idx: usize, p: &Placement| -> f64 {
+        if idx < 3 {
+            p.dram_bytes()
+        } else {
+            p.footprint_bytes()
+        }
+    };
+    let cached_count =
+        |p: &Placement| p.tenants.iter().filter(|t| t.rv.cache_bytes().is_some()).count();
+    let mut best = 0;
+    for i in 1..cands.len() {
+        let (bytes_b, bytes_i) = (
+            deployed_bytes(best, &cands[best]),
+            deployed_bytes(i, &cands[i]),
+        );
+        let (fit_b, fit_i) = (bytes_b <= cap, bytes_i <= cap);
+        let better = if fit_i != fit_b {
+            fit_i
+        } else {
+            let (q_b, q_i) = (cands[best].total_qps(), cands[i].total_qps());
+            if q_i != q_b {
+                q_i > q_b
+            } else if bytes_i != bytes_b {
+                bytes_i < bytes_b
+            } else {
+                cached_count(&cands[i]) < cached_count(&cands[best])
+            }
+        };
+        if better {
+            best = i;
+        }
+    }
+    // Observation only (never read back into the search): a winner past
+    // the three pure candidates strictly beat every uniform policy —
+    // the search produced a deployment (mode mix or dedup-enabled
+    // residency) no single policy yields — and the dedup rule's savings
+    // on whatever won.
+    if best >= 3 {
+        MIXED_ASSIGNMENTS.inc();
+    }
+    let winner = cands.swap_remove(best);
+    let saved = winner.dedup_savings_bytes();
+    if saved > 0.0 {
+        DEDUP_SAVED.add(saved as u64);
+    }
+    winner
+}
+
 /// Memoized group evaluation, keyed by the *sorted* member list plus the
 /// residency policy.  [`evaluate_group`] is permutation-invariant and
 /// deterministic, so one entry serves every argument order; the same
@@ -468,9 +752,22 @@ pub fn evaluate_solo_cached(store: &ProfileStore, m: ModelId) -> Placement {
 /// call binds the memo to its stack fingerprint (or to the flat world),
 /// and later runs against a *different* topology are refused instead of
 /// silently replaying stale admissibility decisions.
+/// What a memo entry was evaluated *as*: one of the three uniform
+/// policies (the legacy key space, byte-compatible on disk), an explicit
+/// per-tenant mode vector (keyed by [`ResidencyMode::key_bits`], aligned
+/// with the sorted member list; `ResidencyAssignment::mixed` semantics —
+/// DRAM enforcement and dedup accounting on), or the result of the
+/// [`evaluate_group_mixed`] mode-assignment *search*.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum MemoKey {
+    Policy(ResidencyPolicy),
+    Modes(Vec<u64>),
+    Mixed,
+}
+
 #[derive(Debug, Default)]
 pub struct GroupMemo {
-    entries: HashMap<(Vec<ModelId>, ResidencyPolicy), Placement>,
+    entries: HashMap<(Vec<ModelId>, MemoKey), Placement>,
     /// `None` = not yet bound; `Some(None)` = bound to the flat world
     /// (no hps stack); `Some(Some(fp))` = bound to
     /// [`TierStack::fingerprint`] `fp`.
@@ -522,7 +819,7 @@ impl GroupMemo {
     ) -> Placement {
         let mut key: Vec<ModelId> = models.to_vec();
         key.sort();
-        let stored = match self.entries.entry((key.clone(), policy)) {
+        let stored = match self.entries.entry((key.clone(), MemoKey::Policy(policy))) {
             Entry::Occupied(e) => {
                 MEMO_HITS.inc();
                 e.into_mut()
@@ -541,7 +838,77 @@ impl GroupMemo {
         }
     }
 
-    /// Distinct (group, policy) evaluations performed so far.
+    /// Evaluate (or recall) `models` under an explicit per-tenant mode
+    /// vector (`modes[i]` belongs to `models[i]`;
+    /// `ResidencyAssignment::mixed` semantics).  Keyed by the sorted
+    /// member list plus [`ResidencyMode::key_bits`] in the same order —
+    /// the canonical f64-bits encoding, so no two distinct mode vectors
+    /// can collide on one entry.
+    pub fn evaluate_assigned(
+        &mut self,
+        store: &ProfileStore,
+        matrix: &AffinityMatrix,
+        models: &[ModelId],
+        modes: &[ResidencyMode],
+    ) -> Placement {
+        assert_eq!(modes.len(), models.len(), "one residency mode per tenant");
+        let mut order: Vec<usize> = (0..models.len()).collect();
+        order.sort_by_key(|&i| models[i]);
+        let key: Vec<ModelId> = order.iter().map(|&i| models[i]).collect();
+        let sorted: Vec<ResidencyMode> = order.iter().map(|&i| modes[i]).collect();
+        let assign = ResidencyAssignment::mixed(sorted);
+        let stored = match self.entries.entry((key.clone(), MemoKey::Modes(assign.key_bits()))) {
+            Entry::Occupied(e) => {
+                MEMO_HITS.inc();
+                e.into_mut()
+            }
+            Entry::Vacant(v) => {
+                MEMO_MISSES.inc();
+                let p = evaluate_group_assigned(store, matrix, &key, &assign);
+                v.insert(p)
+            }
+        };
+        Placement {
+            tenants: models
+                .iter()
+                .map(|&m| *stored.get(m).expect("every member was evaluated"))
+                .collect(),
+        }
+    }
+
+    /// Evaluate (or recall) the [`evaluate_group_mixed`] mode-assignment
+    /// search for `models`.  One entry per member set — the search is
+    /// deterministic, so the winning assignment is a pure function of
+    /// the group and the (store, matrix, stack) the memo is scoped to.
+    pub fn evaluate_mixed(
+        &mut self,
+        store: &ProfileStore,
+        matrix: &AffinityMatrix,
+        models: &[ModelId],
+        hps: Option<&TierStack>,
+    ) -> Placement {
+        let mut key: Vec<ModelId> = models.to_vec();
+        key.sort();
+        let stored = match self.entries.entry((key.clone(), MemoKey::Mixed)) {
+            Entry::Occupied(e) => {
+                MEMO_HITS.inc();
+                e.into_mut()
+            }
+            Entry::Vacant(v) => {
+                MEMO_MISSES.inc();
+                let p = evaluate_group_mixed(store, matrix, &key, hps);
+                v.insert(p)
+            }
+        };
+        Placement {
+            tenants: models
+                .iter()
+                .map(|&m| *stored.get(m).expect("every member was evaluated"))
+                .collect(),
+        }
+    }
+
+    /// Distinct (group, key) evaluations performed so far.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -567,7 +934,9 @@ impl GroupMemo {
         for g in groups {
             let mut key = g.clone();
             key.sort();
-            if !self.entries.contains_key(&(key.clone(), policy)) && !misses.contains(&key) {
+            if !self.entries.contains_key(&(key.clone(), MemoKey::Policy(policy)))
+                && !misses.contains(&key)
+            {
                 misses.push(key);
             }
         }
@@ -579,7 +948,41 @@ impl GroupMemo {
             |scratch, key| evaluate_group_inner(store, matrix, key, policy, None, scratch),
         );
         for (key, p) in misses.into_iter().zip(placements) {
-            self.entries.insert((key, policy), p);
+            self.entries.insert((key, MemoKey::Policy(policy)), p);
+        }
+    }
+
+    /// [`GroupMemo::prefetch`] for the mode-assignment search: run the
+    /// not-yet-memoized [`evaluate_group_mixed`] searches in parallel.
+    /// The search is deterministic, so prefetching only moves work off
+    /// the serial selection loop.
+    pub fn prefetch_mixed(
+        &mut self,
+        store: &ProfileStore,
+        matrix: &AffinityMatrix,
+        groups: &[Vec<ModelId>],
+        hps: Option<&TierStack>,
+        threads: usize,
+    ) {
+        let mut misses: Vec<Vec<ModelId>> = Vec::new();
+        for g in groups {
+            let mut key = g.clone();
+            key.sort();
+            if !self.entries.contains_key(&(key.clone(), MemoKey::Mixed))
+                && !misses.contains(&key)
+            {
+                misses.push(key);
+            }
+        }
+        MEMO_MISSES.add(misses.len() as u64);
+        let placements = crate::par::parallel_map_with(
+            &misses,
+            threads,
+            EvalScratch::default,
+            |scratch, key| evaluate_group_mixed_canonical(store, matrix, key, hps, scratch),
+        );
+        for (key, p) in misses.into_iter().zip(placements) {
+            self.entries.insert((key, MemoKey::Mixed), p);
         }
     }
 
@@ -600,11 +1003,11 @@ impl GroupMemo {
             },
         );
         let mut entries = Value::object();
-        for ((models, policy), placement) in &self.entries {
+        for ((models, memo_key), placement) in &self.entries {
             let key = format!(
                 "{}|{}",
                 models.iter().map(|m| m.name()).collect::<Vec<_>>().join("+"),
-                policy_tag(*policy)
+                memo_key_tag(memo_key)
             );
             let tenants: Vec<Value> = placement
                 .tenants
@@ -657,8 +1060,8 @@ impl GroupMemo {
         for (key, tenants_v) in obj {
             let (names, tag) = key
                 .rsplit_once('|')
-                .with_context(|| format!("memo key {key:?} missing policy tag"))?;
-            let policy = policy_from_tag(tag)?;
+                .with_context(|| format!("memo key {key:?} missing residency tag"))?;
+            let memo_key = memo_key_from_tag(tag)?;
             let mut models = Vec::new();
             for name in names.split('+') {
                 models.push(
@@ -695,7 +1098,13 @@ impl GroupMemo {
                 },
                 "memo entry {key:?}: tenants do not match the key"
             );
-            memo.entries.insert((models, policy), Placement { tenants });
+            if let MemoKey::Modes(bits) = &memo_key {
+                anyhow::ensure!(
+                    bits.len() == models.len(),
+                    "memo entry {key:?}: mode vector does not match the member count"
+                );
+            }
+            memo.entries.insert((models, memo_key), Placement { tenants });
         }
         Ok(memo)
     }
@@ -720,12 +1129,39 @@ fn policy_tag(policy: ResidencyPolicy) -> &'static str {
     }
 }
 
-fn policy_from_tag(tag: &str) -> anyhow::Result<ResidencyPolicy> {
+/// Serialized memo-key tags.  The three policy tags are the legacy key
+/// space — files written before the per-tenant refactor carry only
+/// those and keep loading byte-compatibly.  Mode-vector entries encode
+/// [`ResidencyMode::key_bits`] as fixed-width hex
+/// (`modes:<16 hex>+<16 hex>+...`), aligned with the sorted member list.
+fn memo_key_tag(key: &MemoKey) -> String {
+    match key {
+        MemoKey::Policy(p) => policy_tag(*p).to_string(),
+        MemoKey::Mixed => "mixed".to_string(),
+        MemoKey::Modes(bits) => format!(
+            "modes:{}",
+            bits.iter().map(|b| format!("{b:016x}")).collect::<Vec<_>>().join("+")
+        ),
+    }
+}
+
+fn memo_key_from_tag(tag: &str) -> anyhow::Result<MemoKey> {
+    if let Some(hex) = tag.strip_prefix("modes:") {
+        let mut bits = Vec::new();
+        for h in hex.split('+') {
+            bits.push(
+                u64::from_str_radix(h, 16)
+                    .with_context(|| format!("bad mode bits {h:?} in memo key"))?,
+            );
+        }
+        return Ok(MemoKey::Modes(bits));
+    }
     match tag {
-        "optimistic" => Ok(ResidencyPolicy::Optimistic),
-        "strict" => Ok(ResidencyPolicy::Strict),
-        "cached" => Ok(ResidencyPolicy::Cached),
-        _ => anyhow::bail!("unknown residency policy tag {tag:?}"),
+        "optimistic" => Ok(MemoKey::Policy(ResidencyPolicy::Optimistic)),
+        "strict" => Ok(MemoKey::Policy(ResidencyPolicy::Strict)),
+        "cached" => Ok(MemoKey::Policy(ResidencyPolicy::Cached)),
+        "mixed" => Ok(MemoKey::Mixed),
+        _ => anyhow::bail!("unknown residency tag {tag:?} in memo key"),
     }
 }
 
@@ -815,6 +1251,21 @@ impl BeamScore {
             _ => None,
         }
     }
+
+    /// The scale-aware default behind the CLI's `--beam-score auto`:
+    /// `Demand` from 200-model universes up, `Affinity` below.  Seed
+    /// scale stays on the exhaustive path anyway (`exhaustive_limit`),
+    /// so `Affinity` there is bit-parity by construction; at 200+ the
+    /// beam is engaged and demand ranking recovers plans the affinity
+    /// ranking leaves on the table (`tests/calibration.rs` measures the
+    /// gap both ways).
+    pub fn auto_for(n_models: usize) -> BeamScore {
+        if n_models >= 200 {
+            BeamScore::Demand
+        } else {
+            BeamScore::Affinity
+        }
+    }
 }
 
 /// Hera's cluster scheduler (Algorithm 2), group-native.
@@ -863,6 +1314,13 @@ pub struct ClusterScheduler<'a> {
     /// Beam-extension ranking (see [`BeamScore`]).  [`BeamScore::Affinity`]
     /// (default) reproduces the pre-scoring beam bit-for-bit.
     pub beam_score: BeamScore,
+    /// Per-tenant mode-assignment search: when set, every co-located
+    /// group is evaluated through [`evaluate_group_mixed`] — the best of
+    /// the three uniform policies and the greedy mixed ladder, with
+    /// shared-table dedup accounting — and Step-B/solo servers take the
+    /// better of full and cached residency.  `false` (default) keeps the
+    /// single-policy paths bit-for-bit.
+    pub mixed: bool,
 }
 
 impl<'a> ClusterScheduler<'a> {
@@ -879,6 +1337,7 @@ impl<'a> ClusterScheduler<'a> {
             eval_threads: crate::par::default_threads(),
             hps: None,
             beam_score: BeamScore::default(),
+            mixed: false,
         }
     }
 
@@ -935,6 +1394,43 @@ impl<'a> ClusterScheduler<'a> {
         self
     }
 
+    /// Enable the per-tenant mode-assignment search (see the `mixed`
+    /// field).  The `residency` policy is ignored while set.
+    pub fn with_mixed_residency(mut self, mixed: bool) -> Self {
+        self.mixed = mixed;
+        self
+    }
+
+    /// One group evaluation, through whichever residency axis this
+    /// scheduler is configured with: the mode-assignment search under
+    /// `mixed`, the single `residency` policy otherwise.
+    fn eval_group(&self, memo: &mut GroupMemo, models: &[ModelId]) -> Placement {
+        if self.mixed {
+            memo.evaluate_mixed(self.store, self.matrix, models, self.hps.as_ref())
+        } else {
+            memo.evaluate(self.store, self.matrix, models, self.residency)
+        }
+    }
+
+    /// The dedicated-server evaluation Step B (and Step A's no-partner
+    /// fallback) deploys: under `mixed`, the better of full residency
+    /// and the min-cache hot tier — for a big-table model the cached
+    /// worker cap can sit far above the full-residency OOM wall, which
+    /// is exactly where mixed plans beat `Optimistic` at universe scale.
+    /// Ties keep full residency.
+    fn eval_solo(&self, m: ModelId) -> Placement {
+        let full = evaluate_solo(self.store, m);
+        if !self.mixed {
+            return full;
+        }
+        let cached = evaluate_solo_cached(self.store, m);
+        if cached.qps_for(m) > full.qps_for(m) {
+            cached
+        } else {
+            full
+        }
+    }
+
     /// Whether a grown candidate group survives pruning: every internal
     /// pair must clear the affinity floor, and (outside the seed's
     /// DRAM-blind `Optimistic` accounting) the group must fit node DRAM
@@ -948,7 +1444,24 @@ impl<'a> ClusterScheduler<'a> {
                 }
             }
         }
-        if self.residency != ResidencyPolicy::Optimistic {
+        if self.mixed {
+            // The cheapest assignment the mode search can fall back to
+            // must fit at one worker per tenant: everything cached at
+            // its min tier, or everything resident with shared tables
+            // deduplicated — whichever is smaller.
+            let cap = self.store.node.dram_capacity_gb * 1e9;
+            let cached: f64 = group
+                .iter()
+                .map(|&m| {
+                    ResidencyMode::Cached(self.store.min_cache_for_sla(m)).worker_bytes(m)
+                })
+                .sum();
+            let full: f64 = group.iter().map(|&m| m.spec().worker_bytes()).sum::<f64>()
+                - dedup_savings(group.iter().map(|&m| (m, 1, ResidencyMode::Full)));
+            if cached.min(full) > cap {
+                return false;
+            }
+        } else if self.residency != ResidencyPolicy::Optimistic {
             let bytes: f64 = group
                 .iter()
                 .map(|&m| match self.residency {
@@ -963,11 +1476,14 @@ impl<'a> ClusterScheduler<'a> {
                 return false;
             }
         }
-        // Tier fit: under `Cached` with an hps stack attached, the
-        // group's aggregate miss traffic at nominal operating points
-        // (each member at its standalone max load, split evenly across
-        // the group) must keep every tier under its utilization ceiling.
-        if let (Some(stack), ResidencyPolicy::Cached) = (&self.hps, self.residency) {
+        // Tier fit: under `Cached` (or the mode search, which may cache
+        // any tenant) with an hps stack attached, the group's aggregate
+        // miss traffic at nominal operating points (each member at its
+        // standalone max load, split evenly across the group) must keep
+        // every tier under its utilization ceiling.
+        if let (Some(stack), true) =
+            (&self.hps, self.mixed || self.residency == ResidencyPolicy::Cached)
+        {
             let curves: Vec<_> = group
                 .iter()
                 .map(|&m| self.store.hit_curve(m))
@@ -1207,15 +1723,25 @@ impl<'a> ClusterScheduler<'a> {
         // incumbent (later improvements displace a candidate, not it).
         let mut incumbent_standing = true;
         let candidates = self.candidate_groups(anchor, pool, min_add, max_add, serviced, targets);
-        memo.prefetch(
-            self.store,
-            self.matrix,
-            &candidates,
-            self.residency,
-            self.eval_threads,
-        );
+        if self.mixed {
+            memo.prefetch_mixed(
+                self.store,
+                self.matrix,
+                &candidates,
+                self.hps.as_ref(),
+                self.eval_threads,
+            );
+        } else {
+            memo.prefetch(
+                self.store,
+                self.matrix,
+                &candidates,
+                self.residency,
+                self.eval_threads,
+            );
+        }
         for group in &candidates {
-            let p = memo.evaluate(self.store, self.matrix, group, self.residency);
+            let p = self.eval_group(memo, group);
             // A grown group must still serve the anchor — a candidate
             // that starves it (e.g. joint-DRAM shrink to a zero-QPS
             // slice) could otherwise win on its partners' useful QPS and
@@ -1291,7 +1817,7 @@ impl<'a> ClusterScheduler<'a> {
                     .filter(|&m| plan.serviced[slot(m)] < targets[slot(m)])
                     .collect();
                 if needy.is_empty() || self.max_group < 2 {
-                    let server = evaluate_solo(self.store, mi);
+                    let server = self.eval_solo(mi);
                     let q = server.qps_for(mi);
                     anyhow::ensure!(q > 0.0, "model {mi} has zero isolated max load");
                     plan.serviced[slot(mi)] += q;
@@ -1302,8 +1828,7 @@ impl<'a> ClusterScheduler<'a> {
                     .matrix
                     .best_partner(mi, &needy)
                     .ok_or_else(|| anyhow::anyhow!("no partner for {mi}"))?;
-                let pair =
-                    memo.evaluate(self.store, self.matrix, &[mi, mj], self.residency);
+                let pair = self.eval_group(memo, &[mi, mj]);
                 // Candidate groups {mi} ∪ S beyond the affinity pair: S of
                 // size >= 2 so the paper's pair choice is never second-
                 // guessed by a different partner, only *extended*.
@@ -1336,7 +1861,7 @@ impl<'a> ClusterScheduler<'a> {
                     plan.servers.len() < self.max_servers,
                     "server budget exhausted for {m}"
                 );
-                let solo = evaluate_solo(self.store, m);
+                let solo = self.eval_solo(m);
                 let server = if self.max_group > 2 {
                     let needy: Vec<ModelId> = high
                         .iter()
@@ -1951,5 +2476,164 @@ mod tests {
                 plan.serviced[m.index()]
             );
         }
+    }
+
+    #[test]
+    fn mixed_search_never_loses_to_any_pure_policy() {
+        // The dominance invariant the mode search holds by construction:
+        // all three uniform policies are in the candidate pool, so the
+        // winner is at least as good under (deployable DRAM fit, then
+        // aggregate QPS).  `tests/prop_mixed.rs` sweeps this over random
+        // groups; here the canonical seed groups are pinned.
+        let cap = STORE.node.dram_capacity_gb * 1e9;
+        for group in [
+            vec![id("ncf"), id("wnd"), id("din")],
+            vec![id("dlrm_b"), id("dlrm_d")],
+            vec![id("dlrm_a"), id("dlrm_b")],
+            vec![id("dlrm_b"), id("ncf")],
+            vec![id("dlrm_b")],
+        ] {
+            let mixed = evaluate_group_mixed(&STORE, &MATRIX, &group, None);
+            let fit_m = mixed.footprint_bytes() <= cap;
+            for policy in [
+                ResidencyPolicy::Optimistic,
+                ResidencyPolicy::Strict,
+                ResidencyPolicy::Cached,
+            ] {
+                let pure = evaluate_group(&STORE, &MATRIX, &group, policy);
+                let fit_p = pure.dram_bytes() <= cap;
+                assert!(
+                    fit_m >= fit_p,
+                    "{group:?}: mixed must fit whenever {policy:?} does"
+                );
+                if fit_m == fit_p {
+                    assert!(
+                        mixed.total_qps() >= pure.total_qps() - 1e-9,
+                        "{group:?}: mixed {} < {policy:?} {}",
+                        mixed.total_qps(),
+                        pure.total_qps()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_trio_rides_the_optimistic_allocation_with_dedup_credit() {
+        // ncf+wnd+din fits DRAM outright, so the mode search lands on the
+        // exact optimistic placement (bit-for-bit — the uniform candidate
+        // goes through the pure-policy path) and the win over the pure
+        // policies is the footprint: wnd and din share embedding pool 1,
+        // so the deployment reserves strictly less DRAM than the naive
+        // per-tenant sum every pure policy charges.
+        let trio = [id("ncf"), id("wnd"), id("din")];
+        let mixed = evaluate_group_mixed(&STORE, &MATRIX, &trio, None);
+        let opt = evaluate_group(&STORE, &MATRIX, &trio, ResidencyPolicy::Optimistic);
+        assert_eq!(mixed, opt);
+        assert!(mixed.dedup_savings_bytes() > 0.0, "{mixed}");
+        assert!(mixed.footprint_bytes() < mixed.dram_bytes(), "{mixed}");
+    }
+
+    #[test]
+    fn dedup_resurrects_an_oversubscribed_sharing_pair() {
+        // dlrm_a and dlrm_b share embedding pool 0.  At full residency
+        // the pair oversubscribes DRAM naively (8x2GB + 8x25GB of tables
+        // alone), so Optimistic is undeployable, Strict sheds workers and
+        // Cached pays retention — but charging the shared tables once per
+        // node the full-worker allocation fits outright, and the mode
+        // search deploys it.
+        let pair = [id("dlrm_a"), id("dlrm_b")];
+        let cap = STORE.node.dram_capacity_gb * 1e9;
+        let opt = evaluate_group(&STORE, &MATRIX, &pair, ResidencyPolicy::Optimistic);
+        assert!(opt.dram_bytes() > cap, "naive accounting oversubscribes: {opt}");
+        let mixed = evaluate_group_mixed(&STORE, &MATRIX, &pair, None);
+        assert!(mixed.footprint_bytes() <= cap, "{mixed}");
+        assert_eq!(
+            mixed.total().workers,
+            opt.total().workers,
+            "dedup keeps every worker the optimistic fiction promised"
+        );
+        assert!(
+            mixed.tenants.iter().all(|t| t.rv.cache_bytes().is_none()),
+            "sharing makes full residency the winning mode: {mixed}"
+        );
+        let strict = evaluate_group(&STORE, &MATRIX, &pair, ResidencyPolicy::Strict);
+        let cached = evaluate_group(&STORE, &MATRIX, &pair, ResidencyPolicy::Cached);
+        assert!(
+            mixed.total_qps() > strict.total_qps()
+                && mixed.total_qps() > cached.total_qps(),
+            "mixed {} must strictly beat strict {} and cached {}",
+            mixed.total_qps(),
+            strict.total_qps(),
+            cached.total_qps()
+        );
+    }
+
+    #[test]
+    fn memo_mode_and_mixed_keys_round_trip() {
+        let mut memo = GroupMemo::new();
+        let wnd = id("wnd");
+        let din = id("din");
+        let modes = [
+            ResidencyMode::Full,
+            ResidencyMode::Cached(STORE.min_cache_for_sla(din)),
+        ];
+        let a = memo.evaluate_assigned(&STORE, &MATRIX, &[wnd, din], &modes);
+        assert_eq!(memo.len(), 1);
+        // The reversed member order (modes permuted alongside) hits the
+        // same canonical entry.
+        let b = memo.evaluate_assigned(&STORE, &MATRIX, &[din, wnd], &[modes[1], modes[0]]);
+        assert_eq!(memo.len(), 1);
+        for m in [wnd, din] {
+            assert_eq!(a.get(m).unwrap().rv, b.get(m).unwrap().rv);
+            assert_eq!(a.get(m).unwrap().qps.to_bits(), b.get(m).unwrap().qps.to_bits());
+        }
+        // Mode-vector, mixed-search and policy entries coexist.
+        memo.evaluate_mixed(&STORE, &MATRIX, &[wnd, din], None);
+        memo.evaluate(&STORE, &MATRIX, &[wnd, din], ResidencyPolicy::Optimistic);
+        assert_eq!(memo.len(), 3);
+        // The JSON envelope round-trips every key kind bit-for-bit.
+        let json = memo.to_json();
+        let mut back = GroupMemo::from_json(&json).unwrap();
+        assert_eq!(back.len(), 3);
+        let replay = back.evaluate_assigned(&STORE, &MATRIX, &[wnd, din], &modes);
+        assert_eq!(back.len(), 3, "reloaded mode-vector entry must hit");
+        assert_eq!(replay, a);
+        // Unknown residency tags are rejected, not misread.
+        let mut bad = crate::json::Value::object();
+        bad.set("wnd+din|turbo", crate::json::Value::Array(Vec::new()));
+        let err = GroupMemo::from_json(&bad);
+        assert!(err.is_err(), "unknown tag must fail the load");
+    }
+
+    #[test]
+    fn mixed_scheduler_meets_targets_with_honest_deployments() {
+        let targets = scaled_targets(&STORE, 1.0);
+        let mut memo = GroupMemo::new();
+        let sched = ClusterScheduler::new(&STORE, &MATRIX)
+            .with_mixed_residency(true)
+            .with_max_group(3);
+        let plan = sched.schedule_with_memo(&targets, &mut memo).unwrap();
+        assert!(plan.meets(&targets));
+        // Every deployed server fits DRAM under dedup-aware accounting —
+        // the mixed axis never ships the optimistic fiction.
+        let cap = STORE.node.dram_capacity_gb * 1e9;
+        for s in &plan.servers {
+            assert!(s.footprint_bytes() <= cap, "undeployable server {s}");
+        }
+        // Deterministic under a shared memo.
+        let again = sched.schedule_with_memo(&targets, &mut memo).unwrap();
+        assert_eq!(plan.num_servers(), again.num_servers());
+        for (x, y) in plan.servers.iter().zip(&again.servers) {
+            assert_eq!(x, y, "mixed plans must replay bit-for-bit");
+        }
+    }
+
+    #[test]
+    fn beam_score_auto_switches_at_universe_scale() {
+        assert_eq!(BeamScore::auto_for(8), BeamScore::Affinity);
+        assert_eq!(BeamScore::auto_for(199), BeamScore::Affinity);
+        assert_eq!(BeamScore::auto_for(200), BeamScore::Demand);
+        assert_eq!(BeamScore::auto_for(1000), BeamScore::Demand);
     }
 }

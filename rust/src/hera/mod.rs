@@ -23,13 +23,15 @@ pub mod affinity;
 pub mod cluster;
 pub mod rmu;
 
-pub use crate::alloc::{Placement, ResidencyMode, ResidencyPolicy, ResourceVector, TenantAlloc};
+pub use crate::alloc::{
+    Placement, ResidencyAssignment, ResidencyMode, ResidencyPolicy, ResourceVector, TenantAlloc,
+};
 pub use affinity::{
-    best_group_partition, co_location_affinity, group_affinity, AffinityMatrix, CoAff,
-    GroupAffinity,
+    best_group_partition, co_location_affinity, group_affinity, group_affinity_modes,
+    AffinityMatrix, CoAff, GroupAffinity,
 };
 pub use cluster::{
-    enumerate_groups, evaluate_group, evaluate_group_hps, BeamScore, ClusterPlan,
-    ClusterScheduler, GroupMemo,
+    enumerate_groups, evaluate_group, evaluate_group_assigned, evaluate_group_hps,
+    evaluate_group_mixed, BeamScore, ClusterPlan, ClusterScheduler, GroupMemo, MemoKey,
 };
 pub use rmu::HeraRmu;

@@ -13,15 +13,19 @@
 //!   ways across *all* tenants against the 3-D QPS[model][workers][ways]
 //!   table and applies the argmax (the paper partitions pairs; the
 //!   N-ary search covers larger groups);
-//! * `adjust_cache_partition` — the third knob: when every co-located
-//!   tenant serves embeddings through an `embedcache` hot tier, the
-//!   combined DRAM cache budget is re-split on a quantized grid *and*
+//! * `adjust_cache_partition` — the third knob: when at least two
+//!   co-located tenants serve embeddings through an `embedcache` hot
+//!   tier, their combined DRAM cache budget is re-split on a quantized
+//!   grid *and*
 //!   re-sized against free node DRAM (a scale ladder grows the total
 //!   when capacity is idle, shrinks it when the node is over-committed),
 //!   arg-maxing aggregate QPS after scaling each tenant's table entry by
 //!   its hit-curve-derived cache factor
 //!   (`ProfileStore::cache_qps_factor`); per-tenant tiers are capped at
 //!   the full table size and every candidate must fit node DRAM.
+//!   Fully-resident partners in a mixed-residency group are skipped, not
+//!   a bail-out: their fixed worker footprint is charged against the
+//!   node and their allocation is never touched by this knob.
 //!
 //! Implemented as a [`Controller`] so it plugs straight into the
 //! discrete-event simulation (and mirrors how the real coordinator calls
@@ -228,6 +232,15 @@ impl<'a> HeraRmu<'a> {
         if rv.cache_bytes() != s.alloc.cache_bytes() {
             self.obs.decisions_cache.inc();
         }
+        // Publish the residency in force after this decision (hot-tier
+        // bytes; 0 = fully resident) so journal entries can be joined to
+        // the tenant's mode at decision time.
+        crate::obs::global()
+            .gauge(
+                names::RESIDENCY_MODE,
+                &[("model", s.model.name().to_string())],
+            )
+            .set(rv.cache_bytes().unwrap_or(0.0));
         let predicted = self.predict_qps(s.model, &rv);
         let sla_s = s.model.spec().sla_ms / 1e3;
         let mut f = Value::object();
@@ -307,53 +320,71 @@ impl<'a> HeraRmu<'a> {
     }
 
     /// `adjust_cache_partition` — the cache knob: re-split *and re-size*
-    /// the combined hot-tier budget across the cached tenant slice,
-    /// arg-maxing aggregate QPS with each tenant's table entry scaled by
-    /// its hit-curve cache factor.  The total budget is no longer fixed:
-    /// a ladder of scale factors lets the slice grow into free node DRAM
-    /// (free DRAM buys hit rate for nothing) or shrink when the node is
-    /// over-committed; every candidate must fit node DRAM at the
-    /// candidate worker counts, and each tenant's tier is capped at its
-    /// full table size (bytes beyond the tables buy nothing).  `tenants`
-    /// carries the candidate workers/ways and the *current* hot tier in
-    /// its residency; returns `None` when any tenant is fully resident
-    /// (nothing to trade) or the budget is too small to split.
+    /// the combined hot-tier budget across the *cached* tenants of the
+    /// slice, arg-maxing aggregate QPS with each tenant's table entry
+    /// scaled by its hit-curve cache factor.  Fully-resident tenants are
+    /// skipped, not a bail-out: under a mixed-residency placement the
+    /// knob trades bytes among the cached subset while the resident
+    /// tenants' fixed worker footprint is charged against node DRAM and
+    /// their allocation is left alone.  The total budget is no longer
+    /// fixed: a ladder of scale factors lets the slice grow into free
+    /// node DRAM (free DRAM buys hit rate for nothing) or shrink when
+    /// the node is over-committed; every candidate must fit node DRAM at
+    /// the candidate worker counts, and each tenant's tier is capped at
+    /// its full table size (bytes beyond the tables buy nothing).
+    /// `tenants` carries the candidate workers/ways and the *current*
+    /// hot tier in its residency; returns the new tiers as
+    /// `(tenant index, bytes)` pairs, or `None` when fewer than two
+    /// tenants are cached or the budget is too small to split.
     fn adjust_cache_partition(
         &self,
         tenants: &[(ModelId, ResourceVector)],
-    ) -> Option<Vec<f64>> {
+    ) -> Option<Vec<(usize, f64)>> {
         const STEPS: usize = 8;
         // Per-monitor-tick growth/shrink ladder for the combined budget.
         const SCALES: [f64; 6] = [0.5, 0.75, 1.0, 1.25, 1.5, 2.0];
-        let n = tenants.len();
-        let current: Vec<f64> = tenants
+        let cached: Vec<(usize, ModelId, ResourceVector)> = tenants
             .iter()
-            .map(|(_, rv)| rv.cache_bytes())
-            .collect::<Option<Vec<f64>>>()?;
+            .enumerate()
+            .filter_map(|(i, &(m, rv))| rv.cache_bytes().map(|_| (i, m, rv)))
+            .collect();
+        let n = cached.len();
+        let current: Vec<f64> = cached
+            .iter()
+            .map(|(_, _, rv)| rv.cache_bytes().unwrap())
+            .collect();
         let budget: f64 = current.iter().sum();
         let min = crate::embedcache::MIN_CACHE_BYTES;
         if n < 2 || n > STEPS || budget < n as f64 * min {
             return None;
         }
-        let full: Vec<f64> = tenants
+        let full: Vec<f64> = cached
             .iter()
-            .map(|&(m, _)| self.store.hit_curve(m).full_bytes())
+            .map(|&(_, m, _)| self.store.hit_curve(m).full_bytes())
             .collect();
+        // Resident tenants keep their whole-table footprint no matter
+        // what the knob does; every candidate must fit around it.
+        let resident_dram: f64 = tenants
+            .iter()
+            .filter(|(_, rv)| rv.cache_bytes().is_none())
+            .map(|&(m, rv)| rv.workers as f64 * m.spec().worker_bytes())
+            .sum();
         // Per-worker tier bytes cost `workers` bytes of node DRAM each;
         // the FC weights ride along regardless of the tier size.
         let fits = |xs: &[f64]| -> bool {
-            let dram: f64 = tenants
+            let dram: f64 = cached
                 .iter()
                 .zip(xs)
-                .map(|(&(m, rv), &x)| rv.workers as f64 * (x + m.spec().fc_bytes()))
-                .sum();
+                .map(|(&(_, m, rv), &x)| rv.workers as f64 * (x + m.spec().fc_bytes()))
+                .sum::<f64>()
+                + resident_dram;
             dram <= self.store.node.dram_capacity_gb * 1e9
         };
         let score = |xs: &[f64]| -> f64 {
-            tenants
+            cached
                 .iter()
                 .zip(xs)
-                .map(|(&(m, rv), &x)| {
+                .map(|(&(_, m, rv), &x)| {
                     self.store.profile(m).qps_at(rv.workers, rv.ways)
                         * self.store.cache_qps_factor(m, x)
                 })
@@ -398,7 +429,7 @@ impl<'a> HeraRmu<'a> {
             // tiers (the worker knob may still relieve the node).
             return None;
         }
-        Some(best)
+        Some(cached.iter().zip(best).map(|(&(i, _, _), x)| (i, x)).collect())
     }
 
     /// `adjust_LLC_partition` (Algorithm 3 line 28): argmax of aggregate
@@ -466,9 +497,15 @@ impl Controller for HeraRmu<'_> {
         // For a cached group the hot tier is a knob of its own: a tenant
         // can sit at its worker argmax and still be fixable by moving
         // cache bytes, so an out-of-band window proceeds to the
-        // re-partition stage even with no worker change.
-        let cached_group = stats.len() >= 2
-            && stats.iter().all(|s| s.alloc.cache_bytes().is_some());
+        // re-partition stage even with no worker change.  Two cached
+        // tenants are enough — mixed-residency placements co-locate
+        // cached and fully-resident tenants on one node, and the knob
+        // trades bytes within the cached subset only.
+        let cached_group = stats
+            .iter()
+            .filter(|s| s.alloc.cache_bytes().is_some())
+            .count()
+            >= 2;
         if !any_change && !(cached_group && any_trigger) {
             return Vec::new();
         }
@@ -511,9 +548,9 @@ impl Controller for HeraRmu<'_> {
                 stats.iter().map(|s| s.alloc.ways).collect()
             };
             // Third knob: re-split the hot-tier DRAM budget for the new
-            // allocation when every tenant is cache-served.
+            // allocation across the cache-served tenants.
             let cache_split = if cached_group {
-                let cached_slice: Vec<(ModelId, ResourceVector)> = stats
+                let slice_rv: Vec<(ModelId, ResourceVector)> = stats
                     .iter()
                     .enumerate()
                     .map(|(i, s)| {
@@ -527,26 +564,34 @@ impl Controller for HeraRmu<'_> {
                         )
                     })
                     .collect();
-                self.adjust_cache_partition(&cached_slice)
+                self.adjust_cache_partition(&slice_rv)
             } else {
                 None
             };
-            // A re-split is applied to ALL tenants or none — emitting a
-            // subset would leave the slice's combined budget incoherent.
-            // Below 2% movement on every tier it is churn, not a
-            // decision.
+            // A re-split is applied to ALL cached tenants or none —
+            // emitting a subset would leave their combined budget
+            // incoherent.  Below 2% movement on every tier it is churn,
+            // not a decision.  Fully-resident tenants never appear in the
+            // split and never receive a tier.
             let cache_moved = match &cache_split {
-                Some(xs) => stats.iter().zip(xs).any(|(s, &x)| {
-                    let cur = s.alloc.cache_bytes().unwrap_or(0.0);
+                Some(xs) => xs.iter().any(|&(i, x)| {
+                    let cur = stats[i].alloc.cache_bytes().unwrap_or(0.0);
                     (x - cur).abs() > 0.02 * cur.max(1.0)
                 }),
                 None => false,
             };
             for (i, s) in stats.iter().enumerate() {
                 let (w, k) = (desired[i], ways[i]);
-                if w != s.alloc.workers || k != s.alloc.ways || cache_moved {
-                    let residency = match (&cache_split, cache_moved) {
-                        (Some(xs), true) => ResidencyMode::Cached(xs[i]),
+                let split_x = cache_split
+                    .as_ref()
+                    .and_then(|xs| xs.iter().find(|&&(j, _)| j == i))
+                    .map(|&(_, x)| x);
+                if w != s.alloc.workers
+                    || k != s.alloc.ways
+                    || (cache_moved && split_x.is_some())
+                {
+                    let residency = match (split_x, cache_moved) {
+                        (Some(x), true) => ResidencyMode::Cached(x),
                         _ => s.alloc.residency,
                     };
                     let rv = ResourceVector {
@@ -981,6 +1026,72 @@ mod tests {
         ];
         for c in rmu.on_monitor(1.0, &s) {
             assert_eq!(c.rv.cache_bytes(), None);
+        }
+    }
+
+    #[test]
+    fn cache_knob_trades_within_the_cached_subset_of_a_mixed_group() {
+        // Mixed-residency node: dlrm_b and ncf cache-served, din fully
+        // resident.  The cache knob must re-split the cached pair's
+        // budget (big starving table wins) without ever handing the
+        // resident tenant a tier, and the residency gauge must mirror
+        // each decision.
+        let mut rmu = HeraRmu::new(&STORE);
+        let mut a = stats(id("dlrm_b"), 4, 4, 0.800, 200.0);
+        a.alloc = ResourceVector::cached(4, 4, 1e9);
+        a.window_hit_rate = STORE.hit_curve(id("dlrm_b")).hit_rate(1e9);
+        let mut b = stats(id("ncf"), 4, 4, 0.004, 2000.0);
+        b.alloc = ResourceVector::cached(4, 4, 1e9);
+        let c = stats(id("din"), 4, 3, 0.004, 100.0);
+        let changes = rmu.on_monitor(1.0, &[a, b, c]);
+        let x = changes
+            .iter()
+            .find(|ch| ch.tenant == 0)
+            .and_then(|ch| ch.rv.cache_bytes())
+            .expect("violating cached tenant gets a re-split");
+        let y = changes
+            .iter()
+            .find(|ch| ch.tenant == 1)
+            .and_then(|ch| ch.rv.cache_bytes())
+            .expect("re-splits apply to the whole cached subset");
+        assert!(x > y, "the big table wins the split: {x:.3e} vs {y:.3e}");
+        for ch in changes.iter().filter(|ch| ch.tenant == 2) {
+            assert_eq!(
+                ch.rv.cache_bytes(),
+                None,
+                "resident tenant must never gain a tier: {ch:?}"
+            );
+        }
+        // Every candidate fit around the resident tenant's whole-table
+        // footprint.
+        let models = [id("dlrm_b"), id("ncf"), id("din")];
+        let mut w = [4usize; 3];
+        let mut tier = [Some(1e9), Some(1e9), None];
+        for ch in &changes {
+            w[ch.tenant] = ch.rv.workers;
+            tier[ch.tenant] = ch.rv.cache_bytes();
+        }
+        let dram: f64 = models
+            .iter()
+            .zip(&w)
+            .zip(&tier)
+            .map(|((&m, &wi), t)| match t {
+                Some(bytes) => wi as f64 * (bytes + m.spec().fc_bytes()),
+                None => wi as f64 * m.spec().worker_bytes(),
+            })
+            .sum();
+        assert!(dram <= STORE.node.dram_capacity_gb * 1e9, "{dram:.3e}");
+        // The residency gauge reflects the modes in force: hot-tier
+        // bytes for the cached pair, 0 for the resident tenant (din is
+        // resident in every rmu test, so the global gauge is stable).
+        let gauge = |name: &str| {
+            crate::obs::global()
+                .gauge(names::RESIDENCY_MODE, &[("model", name.to_string())])
+                .get()
+        };
+        assert!(gauge("dlrm_b") > 0.0, "cached tenant publishes its tier");
+        if changes.iter().any(|ch| ch.tenant == 2) {
+            assert_eq!(gauge("din"), 0.0, "resident tenant publishes 0");
         }
     }
 

@@ -78,14 +78,14 @@ USAGE: hera <subcommand> [flags]
   golden                                           verify python<->rust numerics
   serve    --models a,b --workers n,m --qps x,y [--secs S] [--http 127.0.0.1:8080]
   simulate --models a,b --workers n,m --ways p,q --qps x,y [--secs S]
-  cluster  [--target QPS] [--policy name] [--residency optimistic|strict|cached] [--max-group N]
-           [--fast-solver on|off|auto] [--beam-score affinity|demand]
+  cluster  [--target QPS] [--policy name] [--residency optimistic|strict|cached|mixed] [--max-group N]
+           [--fast-solver on|off|auto] [--beam-score auto|affinity|demand]
   group-sweep [--models a,b,c] [--residency MODE] [--max-group N]  evaluate N-tenant co-location
   cache-sweep [--model m] [--workers N] [--ways K] [--load-frac F] [--points P]
   hps-sweep [--model m] [--workers N] [--ways K] [--cache-frac F] [--points P]  tiered-miss-path load sweep
   bench-engine [--models a,b] [--batch B] [--iters N]
   bench-snapshot [--out DIR] [--universe N] [--seed S] [--max-group G] [--threads T] [--target-frac F]
-                 [--fast-solver on|off|auto] [--beam-score affinity|demand]
+                 [--fast-solver on|off|auto] [--beam-score auto|affinity|demand]
   obs-dump  [--out DIR] [--secs S] [--seed N]          RMU scenario -> registry snapshot + audit JSONL
   obs-serve [--http ADDR] [--secs S] [--serve-secs S]  RMU scenario, then export GET /metrics"
     );
@@ -294,27 +294,39 @@ fn parse_fast_solver(args: &Args) -> anyhow::Result<SolverMode> {
     Ok(mode)
 }
 
-/// Shared `--beam-score affinity|demand` flag (ROADMAP item 2's
-/// demand-aware beam ranking; `affinity` is the bit-parity default).
-fn parse_beam_score(args: &Args) -> anyhow::Result<BeamScore> {
-    let raw = args.get_or("beam-score", "affinity");
-    BeamScore::parse(raw)
-        .ok_or_else(|| anyhow::anyhow!("unknown beam-score {raw:?} (affinity|demand)"))
+/// Shared `--beam-score auto|affinity|demand` flag (ROADMAP item 2's
+/// demand-aware beam ranking).  The default `auto` resolves against the
+/// model-pool size: `affinity` (the bit-parity seed ranking) below 200
+/// models, `demand` at universe scale, where the measured calibration
+/// (tests/calibration.rs) shows demand-ranked beams win.
+fn parse_beam_score(args: &Args, n_models: usize) -> anyhow::Result<BeamScore> {
+    match args.get_or("beam-score", "auto") {
+        "auto" => Ok(BeamScore::auto_for(n_models)),
+        raw => BeamScore::parse(raw).ok_or_else(|| {
+            anyhow::anyhow!("unknown beam-score {raw:?} (auto|affinity|demand)")
+        }),
+    }
 }
 
 /// Shared `--residency` flag (with `--cache-aware` kept as an alias for
-/// the cached mode).
-fn parse_residency(args: &Args) -> anyhow::Result<ResidencyPolicy> {
+/// the cached mode).  Returns the uniform policy plus a `mixed` flag:
+/// `--residency mixed` runs the per-tenant mode-assignment search, with
+/// the affinity matrix scored under the Optimistic baseline (the search
+/// re-scores each candidate mode vector itself).
+fn parse_residency(args: &Args) -> anyhow::Result<(ResidencyPolicy, bool)> {
     if args.has("cache-aware") {
-        return Ok(ResidencyPolicy::Cached);
+        return Ok((ResidencyPolicy::Cached, false));
     }
     let policy = match args.get_or("residency", "optimistic") {
         "optimistic" => ResidencyPolicy::Optimistic,
         "strict" => ResidencyPolicy::Strict,
         "cached" => ResidencyPolicy::Cached,
-        other => anyhow::bail!("unknown residency {other:?} (optimistic|strict|cached)"),
+        "mixed" => return Ok((ResidencyPolicy::Optimistic, true)),
+        other => {
+            anyhow::bail!("unknown residency {other:?} (optimistic|strict|cached|mixed)")
+        }
     };
-    Ok(policy)
+    Ok((policy, false))
 }
 
 fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
@@ -325,10 +337,10 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         "hera-random" => SelectionPolicy::HeraRandom,
         _ => SelectionPolicy::Hera,
     };
-    let residency = parse_residency(args)?;
+    let (residency, mixed) = parse_residency(args)?;
     let max_group = parse_max_group(args, 2)?;
     let fast_solver = parse_fast_solver(args)?;
-    let beam_score = parse_beam_score(args)?;
+    let beam_score = parse_beam_score(args, N_MODELS)?;
     let store = ProfileStore::build(&NodeConfig::paper_default());
     // Cache-aware Algorithm 1: score the affinity matrix under the same
     // residency policy the scheduler deploys with.
@@ -339,11 +351,17 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         residency,
         max_group,
         beam_score,
+        mixed,
     };
     let plan = policy.schedule_with(&store, &matrix, &targets, 42, opts)?;
+    let residency_tag = if mixed {
+        "mixed".to_string()
+    } else {
+        format!("{residency:?}")
+    };
     println!(
         "{}: {} servers for {target:.0} QPS/model (scheduled in {:.1} ms, \
-         {residency:?} residency, groups up to {max_group}, solver {})",
+         {residency_tag} residency, groups up to {max_group}, solver {})",
         policy.name(),
         plan.num_servers(),
         t0.elapsed().as_secs_f64() * 1e3,
@@ -356,7 +374,21 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     if plan.num_servers() > 20 {
         println!("  ... {} more", plan.num_servers() - 20);
     }
+    if mixed {
+        print_mixed_counters();
+    }
     Ok(())
+}
+
+/// The mode-assignment observability summary printed by the mixed-mode
+/// CLI paths (CI smoke greps these key=value pairs).
+fn print_mixed_counters() {
+    let reg = hera::obs::global();
+    println!(
+        "mixed_assignments={} dedup_bytes_saved={}",
+        reg.counter(hera::obs::names::MIXED_ASSIGNMENTS_TOTAL, &[]).get(),
+        reg.counter(hera::obs::names::DEDUP_BYTES_SAVED_TOTAL, &[]).get(),
+    );
 }
 
 fn cmd_group_sweep(args: &Args) -> anyhow::Result<()> {
@@ -373,12 +405,17 @@ fn cmd_group_sweep(args: &Args) -> anyhow::Result<()> {
             ModelId::from_name(n).ok_or_else(|| anyhow::anyhow!("unknown model {n}"))
         })
         .collect::<anyhow::Result<_>>()?;
-    let residency = parse_residency(args)?;
+    let (residency, mixed) = parse_residency(args)?;
     let max_group = parse_max_group(args, names.len().min(8))?;
     let store = ProfileStore::build(&NodeConfig::paper_default());
     let matrix = AffinityMatrix::build_with_policy(&store, residency);
+    let label = if mixed {
+        "mixed".to_string()
+    } else {
+        format!("{residency:?}")
+    };
     println!(
-        "group sweep over {{{}}} ({residency:?} residency): every subset of \
+        "group sweep over {{{}}} ({label} residency): every subset of \
          <= {max_group} members as one node",
         names.join(",")
     );
@@ -386,21 +423,37 @@ fn cmd_group_sweep(args: &Args) -> anyhow::Result<()> {
         "{:>28} {:>10} {:>8} {:>9} {:>5}  allocation",
         "members", "agg qps", "norm %", "dram GB", "fits"
     );
-    for p in hera::figures::sweep_groups(&store, &matrix, &models, residency, max_group) {
+    let placements = if mixed {
+        hera::figures::sweep_groups_mixed(&store, &matrix, &models, max_group)
+    } else {
+        hera::figures::sweep_groups(&store, &matrix, &models, residency, max_group)
+    };
+    for p in placements {
         let members = p
             .models()
             .iter()
             .map(|m| m.name())
             .collect::<Vec<_>>()
             .join("+");
+        // Under mixed residency the deployed footprint credits
+        // shared-table dedup — that is what the node actually reserves.
+        let bytes = if mixed { p.footprint_bytes() } else { p.dram_bytes() };
+        let fits = if mixed {
+            bytes <= store.node.dram_capacity_gb * 1e9
+        } else {
+            p.fits_node(&store.node)
+        };
         println!(
             "{:>28} {:>10.1} {:>8.1} {:>9.2} {:>5}  {p}",
             members,
             p.total_qps(),
             hera::figures::normalized_qps_pct(&store, &p),
-            p.dram_bytes() / 1e9,
-            if p.fits_node(&store.node) { "yes" } else { "NO" },
+            bytes / 1e9,
+            if fits { "yes" } else { "NO" },
         );
+    }
+    if mixed {
+        print_mixed_counters();
     }
     Ok(())
 }
@@ -616,6 +669,17 @@ fn run_obs_scenario(secs: f64, seed: u64) -> anyhow::Result<hera::obs::EventJour
         )
         .set(rmu.prefetch_overlap(i));
     }
+    // Per-tenant residency in force at scenario end (hot-tier bytes;
+    // 0 = fully resident) — the RMU also refreshes this gauge on every
+    // decision, so `/metrics` joins to the journal's `alloc_change`
+    // entries by model at any point in the run.
+    for o in &out {
+        reg.gauge(
+            hera::obs::names::RESIDENCY_MODE,
+            &[("model", o.model.name().to_string())],
+        )
+        .set(o.final_cache_bytes.unwrap_or(0.0));
+    }
     Ok(rmu.journal)
 }
 
@@ -652,15 +716,18 @@ fn cmd_obs_serve(args: &Args) -> anyhow::Result<()> {
 fn cmd_bench_snapshot(args: &Args) -> anyhow::Result<()> {
     let out = Path::new(args.get_or("out", "results"));
     std::fs::create_dir_all(out)?;
+    let universe = args.get_usize("universe", 200)?;
     let opts = SnapshotOpts {
-        universe: args.get_usize("universe", 200)?,
+        universe,
         seed: args.get_usize("seed", 42)? as u64,
         max_group: args.get_usize("max-group", 3)?,
         threads: args.get_usize("threads", hera::par::default_threads())?,
         target_frac: args.get_f64("target-frac", 0.4)?,
         bench_secs: None,
         fast_solver: parse_fast_solver(args)?,
-        beam_score: parse_beam_score(args)?,
+        // `auto` resolves here, against the universe size — the snapshot
+        // documents record the resolved tag.
+        beam_score: parse_beam_score(args, universe)?,
     };
     let (affinity, schedule, solver) = hera::benchsnap::run(&opts)?;
     let aff_path = out.join("BENCH_affinity.json");

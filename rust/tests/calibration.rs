@@ -153,6 +153,53 @@ fn demand_beam_scoring_costs_no_plan_quality() {
 }
 
 #[test]
+fn auto_beam_score_resolves_by_pool_size_with_seed_parity() {
+    // ISSUE 10: `--beam-score auto` resolves Demand only at >= 200
+    // models — below that the demand ranking buys nothing (the
+    // `demand_beam_scoring_costs_no_plan_quality` bound above shows the
+    // two rankings are within the documented envelope of each other at
+    // seed scale, so auto keeps the bit-stable Affinity default) while
+    // at universe scale the demand ranking is what keeps the beam from
+    // drowning in low-yield extensions (the BENCH_*.json trajectory).
+    use hera::hera::BeamScore;
+    assert_eq!(BeamScore::auto_for(8), BeamScore::Affinity);
+    assert_eq!(BeamScore::auto_for(199), BeamScore::Affinity);
+    assert_eq!(BeamScore::auto_for(200), BeamScore::Demand);
+    assert_eq!(BeamScore::auto_for(1000), BeamScore::Demand);
+
+    // At seed scale the auto plan must be bit-identical to the explicit
+    // Affinity plan — auto is a resolution rule, not a fourth ranking.
+    let targets = scaled_targets(&STORE, 0.4);
+    let plan = |score: BeamScore| {
+        ClusterScheduler::new(&STORE, &MATRIX)
+            .with_max_group(3)
+            .with_exhaustive_limit(0)
+            .with_beam_score(score)
+            .schedule(&targets)
+            .unwrap()
+    };
+    let auto = plan(BeamScore::auto_for(STORE.len()));
+    let affinity = plan(BeamScore::Affinity);
+    assert_eq!(auto.num_servers(), affinity.num_servers());
+    assert_eq!(auto.serviced, affinity.serviced);
+    for (a, b) in auto.servers.iter().zip(&affinity.servers) {
+        for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
+            assert!(
+                ta.model == tb.model && ta.rv == tb.rv && ta.qps == tb.qps,
+                "auto beam diverged from affinity at seed scale: \
+                 {:?} {:?}/{} vs {:?} {:?}/{}",
+                ta.model,
+                ta.rv,
+                ta.qps,
+                tb.model,
+                tb.rv,
+                tb.qps
+            );
+        }
+    }
+}
+
+#[test]
 fn floor_headroom_over_deployed_grown_groups() {
     // Measure the calibration headroom: the weakest internal pair of
     // any grown (size >= 3) group the default scheduler deploys.  The

@@ -1,0 +1,130 @@
+//! Property tests for mixed-residency placements (ISSUE 10):
+//!
+//! * dominance — the per-tenant mode-assignment search never loses to
+//!   any of the three uniform policies under the deployment order it
+//!   selects with (DRAM fit first, then aggregate QPS): the pure
+//!   policies are always in its candidate pool, so the winner fits
+//!   whenever any pure policy fits and sustains at least the best
+//!   fitting pure policy's aggregate QPS;
+//! * uniform bit-parity — `evaluate_group_assigned` under the uniform
+//!   [`ResidencyAssignment`] a policy denotes reproduces
+//!   `evaluate_group` under that policy bit-for-bit, which is the
+//!   contract that keeps the legacy parity suites pinned while the
+//!   mixed path shares its evaluator;
+//! * accounting coherence — a mixed placement's dedup-aware footprint
+//!   is exactly its naive DRAM sum minus its (non-negative) dedup
+//!   savings.
+//!
+//! Uses the seeded driver in `hera::testutil` (proptest substitute —
+//! failures print a replay seed).
+
+use hera::alloc::{ResidencyAssignment, ResidencyPolicy};
+use hera::config::{ModelId, NodeConfig, N_MODELS};
+use hera::hera::cluster::{evaluate_group, evaluate_group_assigned, evaluate_group_mixed};
+use hera::hera::AffinityMatrix;
+use hera::profiler::ProfileStore;
+use hera::prop_assert;
+use hera::rng::{Rng, Xoshiro256};
+use hera::testutil::{check, default_cases};
+use once_cell::sync::Lazy;
+
+static STORE: Lazy<ProfileStore> =
+    Lazy::new(|| ProfileStore::build(&NodeConfig::paper_default()));
+static MATRIX: Lazy<AffinityMatrix> = Lazy::new(|| AffinityMatrix::build(&STORE));
+
+/// `k` distinct random models, in random order.
+fn random_group(rng: &mut Xoshiro256, k: usize) -> Vec<ModelId> {
+    let mut pool: Vec<ModelId> = ModelId::all().collect();
+    // Fisher-Yates prefix shuffle.
+    for i in 0..k {
+        let j = i + rng.next_below((N_MODELS - i) as u64) as usize;
+        pool.swap(i, j);
+    }
+    pool.truncate(k);
+    pool
+}
+
+fn random_policy(rng: &mut Xoshiro256) -> ResidencyPolicy {
+    match rng.next_below(3) {
+        0 => ResidencyPolicy::Optimistic,
+        1 => ResidencyPolicy::Strict,
+        _ => ResidencyPolicy::Cached,
+    }
+}
+
+#[test]
+fn prop_mixed_never_loses_to_a_pure_policy() {
+    check("mixed_dominates_pure", default_cases(), |rng| {
+        let k = 1 + rng.next_below(4) as usize; // 1..=4 tenants
+        let group = random_group(rng, k);
+        let cap = STORE.node.dram_capacity_gb * 1e9;
+        let mixed = evaluate_group_mixed(&STORE, &MATRIX, &group, None);
+
+        // Accounting coherence of the winner.
+        let savings = mixed.dedup_savings_bytes();
+        prop_assert!(savings >= 0.0, "negative dedup savings {savings}");
+        prop_assert!(
+            (mixed.footprint_bytes() - (mixed.dram_bytes() - savings)).abs() < 1e-3,
+            "footprint {} != dram {} - savings {savings}",
+            mixed.footprint_bytes(),
+            mixed.dram_bytes()
+        );
+
+        // Each pure policy deploys with its naive per-tenant DRAM sum;
+        // the mixed winner deploys with its dedup-aware footprint.
+        let fit_m = mixed.footprint_bytes() <= cap;
+        for policy in [
+            ResidencyPolicy::Optimistic,
+            ResidencyPolicy::Strict,
+            ResidencyPolicy::Cached,
+        ] {
+            let pure = evaluate_group(&STORE, &MATRIX, &group, policy);
+            let fit_p = pure.dram_bytes() <= cap;
+            prop_assert!(
+                fit_m || !fit_p,
+                "{group:?}: mixed misses DRAM ({:.3e} B) while {policy:?} \
+                 fits ({:.3e} B)",
+                mixed.footprint_bytes(),
+                pure.dram_bytes()
+            );
+            // When the pure policy fits, so does the winner (it beat the
+            // pure candidate on the fit key) and QPS decides; when
+            // nothing fits, QPS decides among the unfit candidates.
+            if fit_p || !fit_m {
+                prop_assert!(
+                    mixed.total_qps() + 1e-9 >= pure.total_qps(),
+                    "{group:?}: mixed {} QPS < {policy:?} {} QPS",
+                    mixed.total_qps(),
+                    pure.total_qps()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_uniform_assignment_is_bit_identical_to_its_policy() {
+    check("uniform_assignment_parity", default_cases(), |rng| {
+        let k = 1 + rng.next_below(4) as usize; // 1..=4 tenants
+        let group = random_group(rng, k);
+        let policy = random_policy(rng);
+        let assign =
+            ResidencyAssignment::from_policy(policy, &group, |m| STORE.min_cache_for_sla(m));
+        prop_assert!(assign.is_uniform(), "from_policy must be uniform");
+        let via_assign = evaluate_group_assigned(&STORE, &MATRIX, &group, &assign);
+        let via_policy = evaluate_group(&STORE, &MATRIX, &group, policy);
+        for (a, b) in via_assign.tenants.iter().zip(&via_policy.tenants) {
+            prop_assert!(
+                a.model == b.model && a.rv == b.rv && a.qps == b.qps,
+                "{:?} under {policy:?}: assigned {:?}/{} vs policy {:?}/{}",
+                a.model,
+                a.rv,
+                a.qps,
+                b.rv,
+                b.qps
+            );
+        }
+        Ok(())
+    });
+}
